@@ -1,0 +1,7 @@
+"""Make `python/` importable when pytest runs from the repo root
+(`pytest python/tests/` and `cd python && pytest tests/` both work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,63 @@
+//! DCT image compression (paper §V-A / Fig. 11 / Table VI column "DCT").
+//!
+//! Runs the 8x8 integer DCT compress->reconstruct pipeline on the 256x256
+//! test scene through three backends — exact PE, approximate PE at a sweep
+//! of k, and the AOT PJRT artifact — reporting PSNR/SSIM of each
+//! approximate reconstruction **against the exact design's output**
+//! (the paper's metric), plus PSNR vs the original.
+//!
+//! ```bash
+//! cargo run --release --example dct_compression [-- out_dir]
+//! ```
+
+use axsys::apps::dct;
+use axsys::apps::image::{psnr, scene, ssim, write_pgm};
+use axsys::apps::{SystolicGemm, WordGemm};
+use axsys::pe::word::PeConfig;
+use axsys::runtime::{Runtime, TensorI32};
+use axsys::Family;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "out".into());
+    std::fs::create_dir_all(&out)?;
+    let img = scene(256, 256);
+    write_pgm(std::path::Path::new(&out).join("dct_input.pgm").as_path(), &img)?;
+
+    let mut exact = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
+    let (r_exact, _) = dct::pipeline(&mut exact, &img);
+    println!("exact pipeline vs original: PSNR {:.2} dB",
+             psnr(&img.data, &r_exact.data));
+    write_pgm(std::path::Path::new(&out).join("dct_exact.pgm").as_path(),
+              &r_exact)?;
+
+    println!("\n{:<4} {:>10} {:>8}   (approx vs exact — paper Table VI)",
+             "k", "PSNR(dB)", "SSIM");
+    for k in [2u32, 4, 6, 8] {
+        let mut g = SystolicGemm::new(
+            PeConfig::new(8, true, Family::Proposed, k), 8);
+        let (r, _) = dct::pipeline(&mut g, &img);
+        println!("{:<4} {:>10.2} {:>8.4}", k,
+                 psnr(&r_exact.data, &r.data), ssim(&r_exact.data, &r.data));
+        write_pgm(std::path::Path::new(&out)
+                  .join(format!("dct_k{k}.pgm")).as_path(), &r)?;
+    }
+
+    // cross-check with the AOT artifact (full pipeline lowered from JAX)
+    let dir = Runtime::default_artifacts_dir();
+    if dir.join("dct256.hlo.txt").exists() {
+        let rt = Runtime::new(&dir)?;
+        let outs = rt.run("dct256", &[
+            TensorI32::new(vec![256, 256], img.to_i32()),
+            TensorI32::scalar1(2),
+        ])?;
+        let recon: Vec<u8> = outs[0].data.iter()
+            .map(|&v| v.clamp(0, 255) as u8).collect();
+        let mut g = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 2) };
+        let (r2, _) = dct::pipeline(&mut g, &img);
+        anyhow::ensure!(recon == r2.data,
+                        "PJRT DCT pipeline must match the Rust pipeline");
+        println!("\nPJRT dct256 artifact matches the Rust pipeline bit-for-bit (k=2)");
+    }
+    println!("images written to {out}/");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end serving driver (the repo's E2E validation workload).
+//!
+//! Drives the GEMM coordinator with a closed-loop synthetic client fleet:
+//! mixed-size matmul requests at several approximation levels, executed
+//! on a chosen backend (word / systolic / pjrt), reporting throughput,
+//! latency percentiles and — for the cycle-accurate backend — simulated
+//! cycles and the hardware model's energy estimate for both the exact
+//! and the approximate configuration (the paper's headline energy story).
+//!
+//! ```bash
+//! cargo run --release --example serve_gemm -- [requests] [workers] [backend]
+//! ```
+
+use std::time::Instant;
+
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::hw::sa_metrics;
+use axsys::pe::{Design, Signedness};
+use axsys::Family;
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+fn run_fleet(backend: BackendKind, workers: usize, requests: usize, k: u32)
+             -> (f64, Vec<f64>, axsys::coordinator::ServiceStats) {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        backend,
+        ..Default::default()
+    });
+    let mut rng = Lcg(0xDECAF + k as u64);
+    let t0 = Instant::now();
+    let mut ids = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let m = 8 + (rng.next() % 56) as usize;
+        let kk = 8 + (rng.next() % 24) as usize;
+        let nn = 8 + (rng.next() % 56) as usize;
+        let a: Vec<i64> = (0..m * kk)
+            .map(|_| (rng.next() as i64 & 255) - 128).collect();
+        let b: Vec<i64> = (0..kk * nn)
+            .map(|_| (rng.next() as i64 & 255) - 128).collect();
+        ids.push(coord.submit(GemmRequest { a, b, m, kk, nn, k }));
+    }
+    let mut lats: Vec<f64> = ids.into_iter()
+        .map(|id| coord.wait(id).latency_us).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = coord.stats();
+    coord.shutdown();
+    (wall, lats, stats)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(128);
+    let workers: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(4);
+    let backend = match args.get(2).map(String::as_str) {
+        Some("word") => BackendKind::Word,
+        Some("pjrt") => BackendKind::Pjrt,
+        _ => BackendKind::Systolic,
+    };
+    let k = 7u32;
+    println!("serve_gemm: {requests} requests, {workers} workers, {backend:?}, k={k}");
+
+    let (wall, lats, stats) = run_fleet(backend, workers, requests, k);
+    let pct = |p: f64| lats[(p * (lats.len() - 1) as f64) as usize];
+    println!("  wall {:.3}s -> {:.1} req/s, {:.1} tiles/s", wall,
+             requests as f64 / wall, stats.tiles as f64 / wall);
+    println!("  latency µs: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+             pct(0.50), pct(0.90), pct(0.99), stats.max_latency_us);
+
+    if stats.sim_cycles > 0 {
+        // the paper's energy story: same workload, exact vs approximate SA
+        let exact = Design::proposed_exact(8, Signedness::Signed);
+        let conv = Design::conventional_exact(8, Signedness::Signed);
+        let apx = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
+        let cyc = stats.sim_cycles as f64;
+        let uj = |d: &Design| cyc * 4.0 * sa_metrics(d, 8).power_uw * 1e-9;
+        let (e6, ep, ea) = (uj(&conv), uj(&exact), uj(&apx));
+        println!("  simulated {} cycles / {} MACs on the 8x8 SA", stats.sim_cycles,
+                 stats.sim_macs);
+        println!("  energy estimate @250MHz: exact[6] {:.2} µJ | proposed exact \
+                  {:.2} µJ (-{:.1}%) | proposed approx {:.2} µJ (-{:.1}%)",
+                 e6, ep, (1.0 - ep / e6) * 100.0, ea, (1.0 - ea / e6) * 100.0);
+    }
+}

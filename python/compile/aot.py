@@ -1,0 +1,181 @@
+"""AOT compile path: lower every L2 pipeline to HLO **text** artifacts.
+
+Run once by ``make artifacts``; Python never executes at request time.
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all inputs int32; ``k`` is a shape-(1,) runtime scalar):
+  gemm64.hlo.txt      (64,64) @ (64,64), k        -> (64,64)
+  axmm_b16.hlo.txt    (16,8,8) @ (16,8,8), k      -> (16,8,8)   [SA tiles]
+  dct256.hlo.txt      (256,256) image, k          -> recon, coeffs
+  edge256.hlo.txt     (256,256) image, k          -> (254,254) edge map
+  bdcn128.hlo.txt     (128,128) image, k          -> (128,128) edge map
+plus golden input/output vectors (raw little-endian i32 ``.bin`` + a
+manifest) that the Rust runtime tests replay, the deterministic test
+scenes as PGM, and the build-time-trained BDCN weights.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bdcn, image, model
+from .kernels.axmm import axmm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default dump elides big
+    # literals as `constant({...})`, which the Rust-side HLO text parser
+    # then mis-reads as empty — DCT matrices / CNN weights would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _write_bin(path: str, arr) -> None:
+    np.asarray(arr, dtype="<i4").tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Exported computations. Every fn takes int32 arrays + k as shape (1,) i32
+# and returns a tuple (lowered with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+def fn_gemm64(a, b, k):
+    return (axmm(a, b, k[0]),)
+
+
+def fn_axmm_b16(a, b, k):
+    f = jax.vmap(lambda x, y: axmm(x, y, k[0], bm=8, bn=8))
+    return (f(a, b),)
+
+
+def fn_dct256(img, k):
+    recon, coeff = model.dct_pipeline(img, k[0], h=256, w=256)
+    return (recon, coeff)
+
+
+def fn_edge256(img, k):
+    return (model.edge_pipeline(img, k[0]),)
+
+
+def make_fn_bdcn(qparams, h=128, w=128):
+    def fn_bdcn(img, k):
+        return (bdcn.forward_int8(qparams, img, k[0]),)
+    return fn_bdcn
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    golden_dir = os.path.join(outdir, "golden")
+    img_dir = os.path.join(outdir, "images")
+    os.makedirs(golden_dir, exist_ok=True)
+    os.makedirs(img_dir, exist_ok=True)
+
+    print("[aot] test scenes")
+    scene256 = image.scene(256, 256)
+    scene128 = image.scene(128, 128)
+    image.write_pgm(os.path.join(img_dir, "scene256.pgm"), scene256)
+    image.write_pgm(os.path.join(img_dir, "scene128.pgm"), scene128)
+    image.write_pgm(os.path.join(img_dir, "texture64.pgm"),
+                    image.texture(64, 64))
+
+    print("[aot] bdcn weights (train-on-first-build)")
+    qparams = bdcn.get_or_train_qparams(outdir)
+    bdcn.export_qparams_txt(os.path.join(outdir, "bdcn_weights.txt"), qparams)
+    fn_bdcn = make_fn_bdcn(qparams)
+
+    rng = np.random.default_rng(42)
+    a64 = rng.integers(-128, 128, (64, 64), dtype=np.int32)
+    b64 = rng.integers(-128, 128, (64, 64), dtype=np.int32)
+    at = rng.integers(-128, 128, (16, 8, 8), dtype=np.int32)
+    bt = rng.integers(-128, 128, (16, 8, 8), dtype=np.int32)
+    img256 = scene256.astype(np.int32)
+    img128 = scene128.astype(np.int32)
+
+    jobs = [
+        ("gemm64", fn_gemm64,
+         [_spec((64, 64)), _spec((64, 64)), _spec((1,))],
+         [a64, b64]),
+        ("axmm_b16", fn_axmm_b16,
+         [_spec((16, 8, 8)), _spec((16, 8, 8)), _spec((1,))],
+         [at, bt]),
+        ("dct256", fn_dct256,
+         [_spec((256, 256)), _spec((1,))],
+         [img256]),
+        ("edge256", fn_edge256,
+         [_spec((256, 256)), _spec((1,))],
+         [img256]),
+        ("bdcn128", fn_bdcn,
+         [_spec((128, 128)), _spec((1,))],
+         [img128]),
+    ]
+
+    manifest = []
+    for name, fn, specs, inputs in jobs:
+        print(f"[aot] lowering {name}")
+        lowered = jax.jit(fn).lower(*specs)
+        _write(os.path.join(outdir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+
+        # goldens at two approximation levels
+        jfn = jax.jit(fn)
+        for k in (0, 6):
+            karr = np.array([k], dtype=np.int32)
+            outs = jfn(*inputs, karr)
+            case = f"{name}_k{k}"
+            for i, arr in enumerate(inputs):
+                _write_bin(os.path.join(golden_dir, f"{case}_in{i}.bin"), arr)
+            _write_bin(os.path.join(golden_dir, f"{case}_k.bin"), karr)
+            for i, arr in enumerate(outs):
+                _write_bin(os.path.join(golden_dir, f"{case}_out{i}.bin"),
+                           np.array(arr))
+            shapes_in = ";".join("x".join(map(str, np.asarray(x).shape))
+                                 for x in inputs)
+            shapes_out = ";".join("x".join(map(str, np.asarray(o).shape))
+                                  for o in outs)
+            manifest.append(f"{case} {name}.hlo.txt {len(inputs)} "
+                            f"{shapes_in} {k} {len(outs)} {shapes_out}")
+        del jfn
+
+    with open(os.path.join(golden_dir, "manifest.txt"), "w") as f:
+        f.write("# case hlo n_inputs in_shapes k n_outputs out_shapes\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest: {len(manifest)} golden cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output artifact (legacy Makefile arg; the whole "
+                         "directory containing it is built)")
+    ap.add_argument("--outdir", default=None)
+    args = ap.parse_args()
+    outdir = args.outdir or (os.path.dirname(args.out) if args.out else None)
+    if not outdir:
+        outdir = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+    build(outdir)
+
+
+if __name__ == "__main__":
+    main()

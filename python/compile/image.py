@@ -1,0 +1,103 @@
+"""Deterministic procedural test scenes (integer-only math).
+
+The paper evaluates on standard photographs we cannot redistribute
+(DESIGN.md §2 substitution).  These scenes are specified with *pure integer
+arithmetic* so the Rust side (`rust/src/apps/image.rs`) reproduces them
+bit-for-bit — a strong cross-language golden for the application pipelines.
+
+Scene layout (h x w, uint8):
+  * base: horizontal gradient  v = (x * 255) / (w - 1)
+  * top third: 16x16 checkerboard (224 / 32)
+  * three filled disks (smooth-ish luminance steps)
+  * diagonal stripes band in the lower quarter
+  * a dark frame border (2 px)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def scene(h: int = 256, w: int = 256) -> np.ndarray:
+    """The canonical test image; must match axsys::apps::image::scene."""
+    y = np.arange(h).reshape(-1, 1)
+    x = np.arange(w).reshape(1, -1)
+    v = (x * 255) // (w - 1)
+    v = np.broadcast_to(v, (h, w)).copy()
+
+    checker = (((x // 16) + (y // 16)) % 2 == 0)
+    top = np.broadcast_to(y < h // 3, (h, w))
+    v[top & checker] = 224
+    v[top & ~checker] = 32
+
+    for (cy, cx, r, val) in ((h // 2, w // 4, h // 8, 200),
+                             (h // 2, w // 2, h // 10, 90),
+                             ((5 * h) // 8, (3 * w) // 4, h // 7, 150)):
+        d = (y - cy) ** 2 + (x - cx) ** 2
+        v[d < r * r] = val
+
+    band = np.broadcast_to(y >= (3 * h) // 4, (h, w))
+    stripes = (((x + y) // 8) % 2 == 0)
+    v[band & stripes] = 240
+    v[band & ~stripes] = 16
+
+    v[:2, :] = 8
+    v[-2:, :] = 8
+    v[:, :2] = 8
+    v[:, -2:] = 8
+    return v.astype(np.uint8)
+
+
+def texture(h: int = 64, w: int = 64, seed: int = 1234) -> np.ndarray:
+    """Seeded pseudo-random texture via an explicit LCG (reproducible in
+    Rust without pulling in numpy's generator)."""
+    out = np.empty(h * w, dtype=np.uint8)
+    state = np.uint64(seed)
+    a = np.uint64(6364136223846793005)
+    c = np.uint64(1442695040888963407)
+    with np.errstate(over="ignore"):
+        for i in range(h * w):
+            state = state * a + c
+            out[i] = np.uint8((state >> np.uint64(33)) & np.uint64(0xFF))
+    return out.reshape(h, w)
+
+
+def write_pgm(path: str, img: np.ndarray) -> None:
+    """Binary PGM (P5) writer."""
+    img = np.asarray(img, dtype=np.uint8)
+    h, w = img.shape
+    with open(path, "wb") as f:
+        f.write(f"P5\n{w} {h}\n255\n".encode())
+        f.write(img.tobytes())
+
+
+def read_pgm(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:2] == b"P5"
+    parts = data.split(b"\n", 3)
+    w, h = map(int, parts[1].split())
+    assert parts[2].strip() == b"255"
+    return np.frombuffer(parts[3][: h * w], dtype=np.uint8).reshape(h, w)
+
+
+def psnr(a: np.ndarray, b: np.ndarray, peak: float = 255.0) -> float:
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    mse = np.mean((a - b) ** 2)
+    if mse == 0:
+        return float("inf")
+    return 10.0 * np.log10(peak * peak / mse)
+
+
+def ssim(a: np.ndarray, b: np.ndarray, peak: float = 255.0) -> float:
+    """Global (single-window) SSIM — matches the Rust implementation."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    c1 = (0.01 * peak) ** 2
+    c2 = (0.03 * peak) ** 2
+    mu_a, mu_b = a.mean(), b.mean()
+    va, vb = a.var(), b.var()
+    cov = ((a - mu_a) * (b - mu_b)).mean()
+    return float(((2 * mu_a * mu_b + c1) * (2 * cov + c2))
+                 / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))

@@ -1,0 +1,94 @@
+"""Pallas kernel: tiled bit-exact approximate matmul (Layer 1).
+
+The hot-spot of the paper's system — GEMM through the approximate PE grid —
+expressed as a Pallas kernel.  Cell semantics are imported from ``ref`` so
+there is exactly one source of truth; what this file adds is the *schedule*:
+an (M, N) output tiling whose blocks stream through VMEM via BlockSpec while
+the K reduction runs as a ``fori_loop`` of word-level bit-plane updates.
+
+Hardware adaptation (DESIGN.md §5): the paper targets an ASIC systolic
+array.  On a TPU-shaped machine the same insight — approximation as cheaper
+bit-plane arithmetic — maps each partial-product row to full-width VPU
+bitwise ops over the packed uint32 accumulator planes, with the output tile
+resident in VMEM.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md), so real-TPU
+performance is estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default output tile. 32x32 int32/uint32 state = 5 planes * 4 KiB = 20 KiB
+# of VMEM per tile (a, b slices + s/kc/out), far under the ~16 MiB budget;
+# chosen so the bit-plane ops stay on full (8,128)-lane registers.
+DEF_BM = 32
+DEF_BN = 32
+
+
+def _kernel(ae_ref, be_ref, km_ref, o_ref, *, kk: int, n: int, w: int,
+            signed: bool, family: str):
+    """One (bm, bn) output tile: carry-save fold over the K dimension."""
+    kmask = km_ref[0, 0]
+    bm, bn = o_ref.shape
+    s0 = jnp.zeros((bm, bn), jnp.uint32)
+    k0 = jnp.zeros((bm, bn), jnp.uint32)
+
+    def body(t, carry):
+        s, kc = carry
+        a_col = ae_ref[:, pl.dslice(t, 1)]   # (bm, 1)
+        b_row = be_ref[pl.dslice(t, 1), :]   # (1, bn)
+        return ref.mac_step(a_col, b_row, s, kc, kmask, n, w, signed, family)
+
+    s, kc = lax.fori_loop(0, kk, body, (s0, k0))
+    o_ref[...] = ref.resolve(s, kc, w)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "w", "signed", "family", "bm", "bn"))
+def axmm(A, B, k, n: int = ref.DEF_N, w: int = ref.DEF_W, signed: bool = True,
+         family: str = "proposed", bm: int = DEF_BM, bn: int = DEF_BN):
+    """Approximate matmul ``A @ B`` through the paper's PE, Pallas-tiled.
+
+    A: int32 (M, K'), B: int32 (K', N'), k: runtime approximation level
+    (number of approximate LSB columns).  Bit-identical to ``ref.axmm_ref``.
+    """
+    A = jnp.asarray(A, jnp.int32)
+    B = jnp.asarray(B, jnp.int32)
+    m, kk = A.shape
+    kb, nn = B.shape
+    assert kk == kb, f"inner dims mismatch: {kk} vs {kb}"
+    bm = min(bm, m)
+    bn = min(bn, nn)
+    # pad M, N up to tile multiples (padded rows/cols sliced off below)
+    mp = (m + bm - 1) // bm * bm
+    np_ = (nn + bn - 1) // bn * bn
+    ae = ref.encode(A, n)
+    be = ref.encode(B, n)
+    if mp != m:
+        ae = jnp.pad(ae, ((0, mp - m), (0, 0)))
+    if np_ != nn:
+        be = jnp.pad(be, ((0, 0), (0, np_ - nn)))
+    km = ref.kmask_of(k).reshape(1, 1)
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kk=kk, n=n, w=w, signed=signed,
+                          family=family),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((kk, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ae, be, km)
+    return out[:m, :nn]

@@ -1,0 +1,263 @@
+"""Pure-jnp oracle for the approximate systolic-array PE (VLSID'26 repro).
+
+This module is the **bit-exact reference semantics** for every layer of the
+stack: the Rust PE model, the Rust netlist evaluation, and the Pallas kernel
+in ``axmm.py`` are all required (and tested) to agree with it bit-for-bit.
+
+PE microarchitecture (DESIGN.md §1/§3): an N x N grid of PPC/NPPC cells
+folds the Baugh-Wooley partial products of ``a*b`` directly into a W-bit
+carry-save accumulator ``(S, K)``.  Row ``j`` of the grid is one 3:2
+compressor layer restricted to bit span ``[j, j+N)``; carries escaping the
+top of a span are merged with an exact adder (the PE's small merge logic).
+The ``k`` least-significant columns use *approximate* cells.
+
+Cell families (paper Table I + reconstructed baselines, DESIGN.md §2):
+
+* ``proposed`` — the paper's approximate PPC/NPPC (normative Table I):
+    PPC : C = p,                S = (Sin|Cin) & ~p
+    NPPC: C = (Sin|Cin) & ~p,   S = ~(Sin|Cin) | p      (p = a_i & b_j)
+* ``axsa5``   — Waris et al. AxSA (TC'21) [5]: carry-elided compressor —
+  exact 3-input XOR sum, carry output removed (C = 0).
+* ``sips12``  — Waris et al. SiPS'19 [12]: XNOR-based inexact cell,
+    S = ~(x ^ Sin), C = Cin.
+* ``nano6``   — Chen/Lombardi NANOARCH'15 [6]: inexact cell,
+    S = ~Sin, C = x & Cin.
+
+The exact cells are full adders on ``p`` (PPC) / ``~p`` (NPPC); Baugh-Wooley
+sign handling adds the width-W correction constant per multiplication.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FAMILIES = ("proposed", "axsa5", "sips12", "nano6")
+
+# Default widths: operand bits N, accumulator bits W (guard bits allow
+# >= 2^(W-2N) accumulations without overflow).
+DEF_N = 8
+DEF_W = 24
+
+
+def acc_width(n: int) -> int:
+    """Default accumulator width for N-bit operands (8 guard bits)."""
+    return 2 * n + 8
+
+
+def bw_const(n: int, w: int) -> int:
+    """Baugh-Wooley correction constant at accumulator width ``w``.
+
+    ``a*b = grid_core + 2^N - 2^(2N-1)`` and ``-2^(2N-1) mod 2^W`` is ones
+    on bits [2N-1, W).
+    """
+    return ((1 << n) | (((1 << (w - (2 * n - 1))) - 1) << (2 * n - 1))) & ((1 << w) - 1)
+
+
+def nppc_mask(n: int, j: int, signed: bool) -> int:
+    """Bit positions (absolute weights) of NPPC cells in row ``j``."""
+    if not signed:
+        return 0
+    if j < n - 1:
+        return 1 << (n - 1 + j)
+    return ((1 << (n - 1)) - 1) << j
+
+
+# ---------------------------------------------------------------------------
+# Scalar (pure python int) model — mirrors rust/src/pe/word.rs exactly.
+# Used for golden-vector generation and slow cross-checks.
+# ---------------------------------------------------------------------------
+
+def mac_scalar(a: int, b: int, s: int, kc: int, k: int, n: int = DEF_N,
+               w: int = DEF_W, signed: bool = True,
+               family: str = "proposed") -> tuple[int, int]:
+    """One fused MAC folding ``a*b`` into carry-save accumulator (s, kc).
+
+    ``a``/``b`` are N-bit encodings (two's complement for signed); the
+    returned state satisfies ``resolve(s,kc) == old + a*b (mod 2^W)`` when
+    the PE is exact (k == 0).
+    """
+    mw = (1 << w) - 1
+    au = a & ((1 << n) - 1)
+    s &= mw
+    kc &= mw
+    if signed:
+        kc = (kc + bw_const(n, w)) & mw  # injected via grid tie-offs; bits
+        # land above column N-1 >= k, i.e. always in the exact region.
+    amask = (1 << k) - 1
+    for j in range(n):
+        span = (((1 << n) - 1) << j) & mw
+        p = ((au << j) & mw) if ((b >> j) & 1) else 0
+        nm = nppc_mask(n, j, signed)
+        x = (p ^ nm) & mw
+        aa = span & amask
+        ee = span & ~amask & mw
+        osk = s | kc
+        if family == "proposed":
+            ap, an = aa & ~nm, aa & nm
+            s_a = ((osk & ~x) & ap) | (((~osk) | ~x) & an)
+            c_a = (x & ap) | ((osk & x) & an)
+            k_pass = 0
+        elif family == "sips12":
+            s_a = (~(x ^ s)) & aa
+            c_a = kc & aa
+            k_pass = 0
+        elif family == "nano6":
+            s_a = (~s) & aa
+            c_a = (x & kc) & aa
+            k_pass = 0
+        elif family == "axsa5":
+            s_a = (x ^ s ^ kc) & aa   # exact sum, carry elided
+            c_a = 0
+            k_pass = 0
+        else:
+            raise ValueError(f"unknown family {family!r}")
+        s_e = (x ^ s ^ kc) & ee
+        c_e = ((x & s) | (x & kc) | (s & kc)) & ee
+        s = ((s_a | s_e) | (s & ~span)) & mw
+        kc = (((((c_a | c_e) & mw) << 1) | k_pass) + (kc & ~span & mw)) & mw
+    return s, kc
+
+
+def resolve_scalar(s: int, kc: int, w: int = DEF_W) -> int:
+    """Drain the carry-save accumulator to a signed integer."""
+    v = (s + kc) & ((1 << w) - 1)
+    return v - (1 << w) if v >= (1 << (w - 1)) else v
+
+
+def mac_value_scalar(a: int, b: int, c: int, k: int, n: int = DEF_N,
+                     w: int = DEF_W, signed: bool = True,
+                     family: str = "proposed") -> int:
+    """Full resolved ``a*b + c`` through the (possibly approximate) PE."""
+    s, kc = mac_scalar(a & ((1 << n) - 1), b & ((1 << n) - 1),
+                       c & ((1 << w) - 1), 0, k, n, w, signed, family)
+    return resolve_scalar(s, kc, w)
+
+
+def matmul_scalar(A, B, k: int, n: int = DEF_N, w: int = DEF_W,
+                  signed: bool = True, family: str = "proposed"):
+    """Reference integer matmul through the approximate PE (numpy, slow)."""
+    A = np.asarray(A, dtype=np.int64)
+    B = np.asarray(B, dtype=np.int64)
+    m, kk = A.shape
+    kk2, nn = B.shape
+    assert kk == kk2
+    out = np.zeros((m, nn), dtype=np.int64)
+    mask = (1 << n) - 1
+    for i in range(m):
+        for jj in range(nn):
+            s = kc = 0
+            for t in range(kk):
+                s, kc = mac_scalar(int(A[i, t]) & mask, int(B[t, jj]) & mask,
+                                   s, kc, k, n, w, signed, family)
+            out[i, jj] = resolve_scalar(s, kc, w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Vectorized jnp model — identical math on uint32 words (requires W <= 32).
+# ---------------------------------------------------------------------------
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def mac_step(a_enc, b_enc, s, kc, kmask, n: int = DEF_N, w: int = DEF_W,
+             signed: bool = True, family: str = "proposed",
+             inject: bool = True):
+    """Vectorized fused MAC: fold ``a*b`` into carry-save state (s, kc).
+
+    All arrays uint32 and broadcast-compatible; ``kmask = (1<<k)-1`` as a
+    uint32 scalar (runtime approximation level).  Returns (s', kc').
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}")
+    mw = _u32((1 << w) - 1)
+    au = a_enc & _u32((1 << n) - 1)
+    s = s & mw
+    kc = kc & mw
+    if signed and inject:
+        kc = (kc + _u32(bw_const(n, w))) & mw
+    for j in range(n):
+        span = _u32((((1 << n) - 1) << j) & ((1 << w) - 1))
+        bj = (b_enc >> _u32(j)) & _u32(1)
+        p = jnp.where(bj != 0, (au << _u32(j)) & mw, _u32(0))
+        nm = _u32(nppc_mask(n, j, signed))
+        x = (p ^ nm) & mw
+        aa = span & kmask
+        ee = span & (~kmask) & mw
+        osk = s | kc
+        if family == "proposed":
+            ap, an = aa & (~nm), aa & nm
+            s_a = ((osk & ~x) & ap) | (((~osk) | (~x)) & an)
+            c_a = (x & ap) | ((osk & x) & an)
+            k_pass = _u32(0)
+        elif family == "sips12":
+            s_a = (~(x ^ s)) & aa
+            c_a = kc & aa
+            k_pass = _u32(0)
+        elif family == "nano6":
+            s_a = (~s) & aa
+            c_a = (x & kc) & aa
+            k_pass = _u32(0)
+        else:  # axsa5: exact sum, carry elided
+            s_a = (x ^ s ^ kc) & aa
+            c_a = _u32(0)
+            k_pass = _u32(0)
+        s_e = (x ^ s ^ kc) & ee
+        c_e = ((x & s) | (x & kc) | (s & kc)) & ee
+        s = ((s_a | s_e) | (s & (~span))) & mw
+        kc = (((((c_a | c_e) & mw) << _u32(1)) | k_pass) + (kc & (~span) & mw)) & mw
+    return s, kc
+
+
+def encode(v, n: int = DEF_N):
+    """int array -> N-bit two's-complement encoding (uint32)."""
+    return jnp.asarray(v, jnp.int32).astype(jnp.uint32) & _u32((1 << n) - 1)
+
+
+def decode(v, w: int = DEF_W):
+    """W-bit value (uint32) -> signed int32 via sign extension."""
+    v = jnp.asarray(v, jnp.uint32) & _u32((1 << w) - 1)
+    sign = v >> _u32(w - 1)
+    ext = jnp.where(sign != 0, _u32((0xFFFFFFFF ^ ((1 << w) - 1)) & 0xFFFFFFFF),
+                    _u32(0))
+    return (v | ext).astype(jnp.int32)
+
+
+def resolve(s, kc, w: int = DEF_W):
+    """Drain carry-save state to signed int32 (exact W-bit adder)."""
+    return decode((s + kc) & _u32((1 << w) - 1), w)
+
+
+def kmask_of(k):
+    """Runtime approximation level k -> column mask (1<<k)-1 as uint32."""
+    return (_u32(1) << jnp.asarray(k, jnp.uint32)) - _u32(1)
+
+
+def axmm_ref(A, B, k, n: int = DEF_N, w: int = DEF_W, signed: bool = True,
+             family: str = "proposed"):
+    """Approximate matmul oracle: int32 (M,K') @ (K',N') -> int32 (M,N').
+
+    ``k`` may be a traced scalar (runtime approximation level).
+    Pure jnp, untiled — the Pallas kernel in ``axmm.py`` must match this
+    bit-for-bit.
+    """
+    A = jnp.asarray(A, jnp.int32)
+    B = jnp.asarray(B, jnp.int32)
+    m, kk = A.shape
+    _, nn = B.shape
+    kmask = kmask_of(k)
+    ae = encode(A, n)   # (m, kk)
+    be = encode(B, n)   # (kk, nn)
+    s = jnp.zeros((m, nn), jnp.uint32)
+    kc = jnp.zeros((m, nn), jnp.uint32)
+    for t in range(kk):  # static unroll: kk is a trace-time constant
+        s, kc = mac_step(ae[:, t:t + 1], be[t:t + 1, :], s, kc, kmask,
+                         n, w, signed, family)
+    return resolve(s, kc, w)
+
+
+def exact_matmul(A, B):
+    """Exact int32 oracle (what the k=0 PE must reproduce mod 2^W)."""
+    return jnp.asarray(A, jnp.int32) @ jnp.asarray(B, jnp.int32)

@@ -1,0 +1,135 @@
+"""Layer 2: application compute graphs built on the L1 approximate-GEMM.
+
+Every matrix product in these models routes through the Pallas kernel
+(`kernels.axmm.axmm`), so the whole pipeline lowers to a single HLO module
+with the approximation level ``k`` as a *runtime* scalar input.
+
+Pipelines (paper §V):
+  * 8x8 integer-scaled DCT (HEVC-style coefficients [18]) forward +
+    reconstruction — image compression proxy.
+  * Laplacian kernel edge detection via im2col + GEMM.
+(The CNN edge detector lives in ``bdcn.py``.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.axmm import axmm
+
+# HEVC 8-point integer DCT matrix (Meher et al. [18]); entries fit int8.
+DCT8 = np.array([
+    [64, 64, 64, 64, 64, 64, 64, 64],
+    [89, 75, 50, 18, -18, -50, -75, -89],
+    [83, 36, -36, -83, -83, -36, 36, 83],
+    [75, -18, -89, -50, 50, 89, 18, -75],
+    [64, -64, -64, 64, 64, -64, -64, 64],
+    [50, -89, 18, 75, -75, -18, 89, -50],
+    [36, -83, 83, -36, -36, 83, -83, 36],
+    [18, -50, 75, -89, 89, -75, 50, -18],
+], dtype=np.int32)
+
+# Right-shift schedule for the four GEMM stages (fwd x2, inv x2).  The
+# matrix gain is ||C row||^2 ~= 2^15 per transform pair, so the shifts must
+# sum to 30 to make forward+inverse unity-gain; the split keeps every
+# intermediate inside the signed 8-bit PE operand range (see
+# tests/test_model.py::test_dct_intermediates_fit_int8).
+DCT_SHIFTS = (9, 9, 6, 6)
+
+# 8-neighbour Laplacian (sums to zero -> invariant to the -128 centering).
+LAPLACIAN = np.array([[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], dtype=np.int32)
+
+
+def _rshift_round(v, s: int):
+    """Arithmetic right shift with round-to-nearest (ties away from zero
+    for non-negatives — the hardware's adder-based rounding)."""
+    return (v + (1 << (s - 1))) >> s if s > 0 else v
+
+
+def _clip8(v):
+    return jnp.clip(v, -128, 127)
+
+
+def _to_blocks(img):
+    """(H, W) -> (nb*8, 8) stacked 8x8 blocks (row-major block order)."""
+    h, w = img.shape
+    nbh, nbw = h // 8, w // 8
+    b = img.reshape(nbh, 8, nbw, 8).transpose(0, 2, 1, 3).reshape(-1, 8, 8)
+    return b.reshape(-1, 8)
+
+
+def _from_blocks(b, h: int, w: int):
+    nbh, nbw = h // 8, w // 8
+    return (b.reshape(nbh, nbw, 8, 8).transpose(0, 2, 1, 3).reshape(h, w))
+
+
+def _blockwise_left(mat, blocks, k, **ax):
+    """Per-block ``mat @ block`` for stacked blocks (nb*8, 8).
+
+    Implemented as one wide GEMM: transpose each block so the contraction
+    runs over the stacked axis — blocks laid side by side: (8, nb*8).
+    """
+    nb = blocks.shape[0] // 8
+    wide = blocks.reshape(nb, 8, 8).transpose(1, 0, 2).reshape(8, nb * 8)
+    out = axmm(jnp.asarray(mat, jnp.int32), wide, k, **ax)   # (8, nb*8)
+    return out.reshape(8, nb, 8).transpose(1, 0, 2).reshape(nb * 8, 8)
+
+
+def _blockwise_right(blocks, mat, k, **ax):
+    """Per-block ``block @ mat`` — a single tall GEMM (nb*8, 8) @ (8, 8)."""
+    return axmm(blocks, jnp.asarray(mat, jnp.int32), k, **ax)
+
+
+def dct_forward(img, k, shifts=DCT_SHIFTS):
+    """Centered image -> int8 DCT coefficient blocks (stacked nb*8 x 8)."""
+    x = _to_blocks(jnp.asarray(img, jnp.int32) - 128)
+    t = _blockwise_left(DCT8, x, k)
+    t = _clip8(_rshift_round(t, shifts[0]))
+    y = _blockwise_right(t, DCT8.T, k)
+    return _clip8(_rshift_round(y, shifts[1]))
+
+
+def dct_inverse(coeff, k, h: int, w: int, shifts=DCT_SHIFTS):
+    """int8 coefficient blocks -> reconstructed uint8-range image."""
+    t = _blockwise_left(DCT8.T, coeff, k)
+    t = _clip8(_rshift_round(t, shifts[2]))
+    x = _blockwise_right(t, DCT8, k)
+    x = _rshift_round(x, shifts[3])
+    return jnp.clip(_from_blocks(x, h, w) + 128, 0, 255)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w"))
+def dct_pipeline(img, k, h: int = 256, w: int = 256):
+    """Full compress->reconstruct pipeline. Returns (recon, coeffs)."""
+    c = dct_forward(img, k)
+    r = dct_inverse(c, k, h, w)
+    return r, _from_blocks(c, h, w)
+
+
+def _im2col3(img):
+    """(H, W) -> ((H-2)*(W-2), 9) patches of the 3x3 neighbourhood."""
+    h, w = img.shape
+    cols = [img[dy:h - 2 + dy, dx:w - 2 + dx].reshape(-1, 1)
+            for dy in range(3) for dx in range(3)]
+    return jnp.concatenate(cols, axis=1)
+
+
+@jax.jit
+def edge_pipeline(img, k):
+    """Laplacian edge detection: uint8 image -> uint8-range edge map."""
+    x = _im2col3(jnp.asarray(img, jnp.int32) - 128)          # (P, 9)
+    kern = LAPLACIAN.reshape(9, 1)
+    y = axmm(x, jnp.asarray(kern, jnp.int32), k, bm=256)     # (P, 1)
+    h, w = img.shape
+    e = jnp.abs(y.reshape(h - 2, w - 2))
+    return jnp.clip(_rshift_round(e, 2), 0, 255)
+
+
+@jax.jit
+def gemm_pipeline(a, b, k):
+    """Raw approximate GEMM (the coordinator's tile artifact)."""
+    return axmm(a, b, k)

@@ -1,0 +1,104 @@
+"""AOT artifact sanity: HLO text quality + golden manifest consistency."""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+EXPECTED_ARTIFACTS = ["gemm64", "axmm_b16", "dct256", "edge256", "bdcn128"]
+
+
+def _need_artifacts():
+    if not os.path.exists(os.path.join(ART, "golden", "manifest.txt")):
+        pytest.skip("run `make artifacts` first")
+
+
+def test_all_artifacts_present():
+    _need_artifacts()
+    for name in EXPECTED_ARTIFACTS:
+        p = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(p), name
+
+
+def test_no_elided_constants():
+    """Regression for the `constant({...})` bug: the default HLO dump
+    elides large literals, which the Rust-side parser silently reads as
+    empty — DCT matrices and CNN weights vanished (bit-exactness broke).
+    """
+    _need_artifacts()
+    for name in EXPECTED_ARTIFACTS:
+        text = open(os.path.join(ART, f"{name}.hlo.txt")).read()
+        assert "constant({...})" not in text, name
+        assert "{...}" not in text, name
+
+
+def test_hlo_is_parseable_text():
+    _need_artifacts()
+    for name in EXPECTED_ARTIFACTS:
+        text = open(os.path.join(ART, f"{name}.hlo.txt")).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # k must be a runtime parameter, not folded away
+        assert "parameter(" in text, name
+
+
+def test_manifest_matches_files():
+    _need_artifacts()
+    lines = [l for l in open(os.path.join(ART, "golden", "manifest.txt"))
+             if l.strip() and not l.startswith("#")]
+    assert len(lines) == 10  # 5 artifacts x k in {0, 6}
+    for line in lines:
+        f = line.split()
+        case, hlo, n_in = f[0], f[1], int(f[2])
+        assert os.path.exists(os.path.join(ART, hlo))
+        for i in range(n_in):
+            assert os.path.exists(
+                os.path.join(ART, "golden", f"{case}_in{i}.bin")), case
+        n_out = int(f[5])
+        for i in range(n_out):
+            assert os.path.exists(
+                os.path.join(ART, "golden", f"{case}_out{i}.bin")), case
+
+
+def test_golden_shapes_consistent():
+    _need_artifacts()
+    for line in open(os.path.join(ART, "golden", "manifest.txt")):
+        if line.startswith("#") or not line.strip():
+            continue
+        f = line.split()
+        case = f[0]
+        out_shapes = [tuple(map(int, g.split("x"))) for g in f[6].split(";")]
+        for i, shape in enumerate(out_shapes):
+            data = np.fromfile(
+                os.path.join(ART, "golden", f"{case}_out{i}.bin"), dtype="<i4")
+            assert data.size == int(np.prod(shape)), (case, i)
+
+
+def test_goldens_match_live_models():
+    """Replay two golden cases against the live Python models — catches
+    drift between committed artifacts and the current code."""
+    _need_artifacts()
+    from compile import model
+    a = np.fromfile(os.path.join(ART, "golden", "gemm64_k6_in0.bin"),
+                    dtype="<i4").reshape(64, 64).astype(np.int32)
+    b = np.fromfile(os.path.join(ART, "golden", "gemm64_k6_in1.bin"),
+                    dtype="<i4").reshape(64, 64).astype(np.int32)
+    want = np.fromfile(os.path.join(ART, "golden", "gemm64_k6_out0.bin"),
+                       dtype="<i4").reshape(64, 64)
+    got = np.array(model.gemm_pipeline(a, b, 6))
+    assert (got == want).all()
+
+    img = np.fromfile(os.path.join(ART, "golden", "edge256_k0_in0.bin"),
+                      dtype="<i4").reshape(256, 256).astype(np.int32)
+    want = np.fromfile(os.path.join(ART, "golden", "edge256_k0_out0.bin"),
+                       dtype="<i4").reshape(254, 254)
+    got = np.array(model.edge_pipeline(img.astype(np.uint8), 0))
+    assert (got == want).all()
+
+
+def test_pgm_images_exported():
+    _need_artifacts()
+    assert glob.glob(os.path.join(ART, "images", "*.pgm"))

@@ -1,0 +1,88 @@
+"""BDCN-lite: quantization, integer inference, cascade error damping."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import bdcn, image
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def qparams():
+    p = os.path.join(ART, "bdcn_weights.npz")
+    if not os.path.exists(p):
+        pytest.skip("run `make artifacts` first (trains the CNN)")
+    return bdcn.load_qparams(p)
+
+
+def test_weights_are_int8(qparams):
+    for blk in qparams:
+        for name in ("w1", "w2", "side"):
+            w = blk[name]
+            assert w.dtype == np.int32
+            assert np.abs(w).max() <= 127
+            assert blk[name + "_scale"] > 0
+
+
+def test_architecture_shapes(qparams):
+    assert len(qparams) == bdcn.N_BLOCKS
+    assert qparams[0]["w1"].shape == (3, 3, 1, bdcn.CHANNELS)
+    for blk in qparams[1:]:
+        assert blk["w1"].shape == (3, 3, bdcn.CHANNELS, bdcn.CHANNELS)
+    for blk in qparams:
+        assert blk["side"].shape == (1, 1, bdcn.CHANNELS, 1)
+
+
+def test_txt_export_roundtrip(qparams, tmp_path):
+    p = str(tmp_path / "w.txt")
+    bdcn.export_qparams_txt(p, qparams)
+    text = open(p).read().strip().splitlines()
+    assert len(text) == bdcn.N_BLOCKS * 3
+    first = text[0].split()
+    assert first[0] == "b0_w1"
+    dims = list(map(int, first[1:5]))
+    vals = list(map(int, first[5:]))
+    assert len(vals) == int(np.prod(dims))
+    assert (np.array(vals).reshape(dims) == qparams[0]["w1"]).all()
+
+
+def test_inference_deterministic(qparams):
+    img = image.scene(32, 32)
+    a = np.array(bdcn.forward_int8(qparams, img, 3))
+    b = np.array(bdcn.forward_int8(qparams, img, 3))
+    assert (a == b).all()
+    assert a.min() >= 0 and a.max() <= 255
+
+
+def test_cascade_dampens_error_vs_kernel(qparams):
+    """The paper's core §V-B observation: the CNN cascade (late blocks
+    exact) tolerates approximation far better than the Laplacian kernel."""
+    from compile import model
+    img = image.scene(48, 48)
+    cnn0 = np.array(bdcn.forward_int8(qparams, img, 0))
+    cnn8 = np.array(bdcn.forward_int8(qparams, img, 8))
+    lap0 = np.array(model.edge_pipeline(img, 0))
+    lap8 = np.array(model.edge_pipeline(img, 8))
+    cnn_psnr = image.psnr(cnn0, cnn8)
+    lap_psnr = image.psnr(lap0, lap8)
+    assert cnn_psnr > lap_psnr + 5.0, (cnn_psnr, lap_psnr)
+
+
+def test_quality_monotone_in_k(qparams):
+    img = image.scene(32, 32)
+    e0 = np.array(bdcn.forward_int8(qparams, img, 0))
+    p2 = image.psnr(e0, np.array(bdcn.forward_int8(qparams, img, 2)))
+    p8 = image.psnr(e0, np.array(bdcn.forward_int8(qparams, img, 8)))
+    assert p2 >= p8
+    assert p2 > 25.0
+
+
+def test_training_converges_quickly():
+    """Sanity on the build-time training loop (few steps only)."""
+    params, losses = bdcn.train(steps=25)
+    assert losses[-1] < losses[0]
+    q = bdcn.quantize(params)
+    assert len(q) == bdcn.N_BLOCKS

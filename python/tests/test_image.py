@@ -1,0 +1,64 @@
+"""Image utilities + cross-language identity with the Rust implementation."""
+
+import os
+
+import numpy as np
+
+from compile import image
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_scene_deterministic():
+    assert (image.scene(64, 64) == image.scene(64, 64)).all()
+
+
+def test_scene_structure():
+    s = image.scene(256, 256)
+    assert s.shape == (256, 256)
+    assert s[0, 0] == 8 and s[255, 255] == 8           # border
+    assert (s[:85] == 224).any() and (s[:85] == 32).any()  # checker
+    assert (s[200:] == 240).any() and (s[200:] == 16).any()  # stripes
+
+
+def test_texture_lcg_reproducible():
+    a = image.texture(16, 16, seed=1234)
+    b = image.texture(16, 16, seed=1234)
+    c = image.texture(16, 16, seed=77)
+    assert (a == b).all()
+    assert (a != c).any()
+
+
+def test_pgm_roundtrip(tmp_path):
+    img = image.scene(32, 48)
+    p = str(tmp_path / "t.pgm")
+    image.write_pgm(p, img)
+    back = image.read_pgm(p)
+    assert (back == img).all()
+
+
+def test_exported_scene_matches_generator():
+    """artifacts/images/scene256.pgm (consumed by Rust) is the generator
+    output — the cross-language golden."""
+    p = os.path.join(ART, "images", "scene256.pgm")
+    if not os.path.exists(p):
+        import pytest
+        pytest.skip("run `make artifacts` first")
+    assert (image.read_pgm(p) == image.scene(256, 256)).all()
+
+
+def test_psnr_ssim_identities():
+    img = image.scene(32, 32)
+    assert image.psnr(img, img) == float("inf")
+    assert abs(image.ssim(img, img) - 1.0) < 1e-12
+    noisy = img.copy()
+    noisy[::3, ::3] = np.clip(noisy[::3, ::3].astype(int) + 15, 0, 255)
+    assert 15 < image.psnr(img, noisy) < 60
+    assert image.ssim(img, noisy) < 1.0
+
+
+def test_psnr_symmetry():
+    a = image.scene(16, 16)
+    b = image.texture(16, 16)
+    assert abs(image.psnr(a, b) - image.psnr(b, a)) < 1e-9
+    assert abs(image.ssim(a, b) - image.ssim(b, a)) < 1e-12

@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas kernel vs pure-jnp ref vs exact oracle.
+
+This is the CORE correctness signal for the compile path: everything the
+Rust side executes (HLO artifacts) lowers from these functions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.axmm import axmm
+
+
+def rand_mat(rng, m, n, lo=-128, hi=128):
+    return rng.integers(lo, hi, (m, n), dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Table I: the paper's normative truth tables for the approximate cells.
+# ---------------------------------------------------------------------------
+
+# rows: (a, b, Cin, Sin) -> (C, S) approx PPC / approx NPPC (paper Table I)
+TABLE_I_PPC = {
+    (0, 0, 0, 0): (0, 0), (0, 0, 0, 1): (0, 1), (0, 0, 1, 0): (0, 1),
+    (0, 0, 1, 1): (0, 1), (0, 1, 0, 0): (0, 0), (0, 1, 0, 1): (0, 1),
+    (0, 1, 1, 0): (0, 1), (0, 1, 1, 1): (0, 1), (1, 0, 0, 0): (0, 0),
+    (1, 0, 0, 1): (0, 1), (1, 0, 1, 0): (0, 1), (1, 0, 1, 1): (0, 1),
+    (1, 1, 0, 0): (1, 0), (1, 1, 0, 1): (1, 0), (1, 1, 1, 0): (1, 0),
+    (1, 1, 1, 1): (1, 0),
+}
+TABLE_I_NPPC = {
+    (0, 0, 0, 0): (0, 1), (0, 0, 0, 1): (1, 0), (0, 0, 1, 0): (1, 0),
+    (0, 0, 1, 1): (1, 0), (0, 1, 0, 0): (0, 1), (0, 1, 0, 1): (1, 0),
+    (0, 1, 1, 0): (1, 0), (0, 1, 1, 1): (1, 0), (1, 0, 0, 0): (0, 1),
+    (1, 0, 0, 1): (1, 0), (1, 0, 1, 0): (1, 0), (1, 0, 1, 1): (1, 0),
+    (1, 1, 0, 0): (0, 1), (1, 1, 0, 1): (0, 1), (1, 1, 1, 0): (0, 1),
+    (1, 1, 1, 1): (0, 1),
+}
+
+
+def proposed_ppc(a, b, cin, sin):
+    p = a & b
+    return p, (sin | cin) & (1 - p)
+
+
+def proposed_nppc(a, b, cin, sin):
+    p = a & b
+    return (sin | cin) & (1 - p), (1 - (sin | cin)) | p
+
+
+@pytest.mark.parametrize("key", sorted(TABLE_I_PPC))
+def test_table1_ppc(key):
+    a, b, cin, sin = key
+    assert proposed_ppc(a, b, cin, sin) == TABLE_I_PPC[key]
+
+
+@pytest.mark.parametrize("key", sorted(TABLE_I_NPPC))
+def test_table1_nppc(key):
+    a, b, cin, sin = key
+    assert proposed_nppc(a, b, cin, sin) == TABLE_I_NPPC[key]
+
+
+def test_table1_error_cases():
+    """Paper §III-B: exactly 5 erroneous rows, EDs -1,-1,-1,+1,-1."""
+    errs = {}
+    for (a, b, cin, sin), (c, s) in TABLE_I_PPC.items():
+        exact = (a & b) + cin + sin
+        ed = (2 * c + s) - exact
+        if ed != 0:
+            errs[(a, b, cin, sin)] = ed
+    assert errs == {(0, 0, 1, 1): -1, (0, 1, 1, 1): -1, (1, 0, 1, 1): -1,
+                    (1, 1, 0, 0): +1, (1, 1, 1, 1): -1}
+
+
+def test_table1_nppc_matches_exact_complement():
+    """Exact NPPC is FA(~p, Cin, Sin); approx NPPC EDs mirror the PPC's."""
+    for (a, b, cin, sin), (c, s) in TABLE_I_NPPC.items():
+        exact = (1 - (a & b)) + cin + sin
+        assert (2 * c + s) - exact in (-1, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Exact PE == integer arithmetic.
+# ---------------------------------------------------------------------------
+
+def test_exact_mac_exhaustive_4bit_signed():
+    for a in range(-8, 8):
+        for b in range(-8, 8):
+            for c in (0, 1, -7, 100, -100):
+                y = ref.mac_value_scalar(a & 15, b & 15, c & 0xFFFF, 0,
+                                         n=4, w=16)
+                assert y == a * b + c, (a, b, c)
+
+
+def test_exact_mac_exhaustive_4bit_unsigned():
+    for a in range(16):
+        for b in range(16):
+            y = ref.mac_value_scalar(a, b, 37, 0, n=4, w=16, signed=False)
+            assert y == a * b + 37
+
+
+@given(st.integers(-128, 127), st.integers(-128, 127),
+       st.integers(-60000, 60000))
+@settings(max_examples=300, deadline=None)
+def test_exact_mac_8bit_prop(a, b, c):
+    y = ref.mac_value_scalar(a & 255, b & 255, c & 0xFFFFFF, 0)
+    assert y == a * b + c
+
+
+def test_exact_matmul_matches_oracle():
+    rng = np.random.default_rng(1)
+    A, B = rand_mat(rng, 13, 8), rand_mat(rng, 8, 9)
+    y = np.array(ref.axmm_ref(A, B, 0))
+    assert (y == A.astype(np.int64) @ B).all()
+
+
+# ---------------------------------------------------------------------------
+# Approximate properties.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ref.FAMILIES)
+def test_k0_is_exact(family):
+    rng = np.random.default_rng(2)
+    A, B = rand_mat(rng, 8, 8), rand_mat(rng, 8, 8)
+    y = np.array(ref.axmm_ref(A, B, 0, family=family))
+    assert (y == A.astype(np.int64) @ B).all()
+
+
+def test_error_monotone_in_k():
+    rng = np.random.default_rng(3)
+    A, B = rand_mat(rng, 16, 16), rand_mat(rng, 16, 16)
+    exact = A.astype(np.int64) @ B
+    meds = []
+    for k in (0, 2, 4, 6, 8):
+        y = np.array(ref.axmm_ref(A, B, k)).astype(np.int64)
+        meds.append(np.abs(y - exact).mean())
+    assert meds[0] == 0
+    assert all(meds[i] <= meds[i + 1] + 1e-9 for i in range(len(meds) - 1))
+
+
+def test_nmed_regression_lock_k6_signed():
+    """Spot-lock the proposed design's error level (cf. paper Table V)."""
+    rng = np.random.default_rng(4)
+    a = rng.integers(-128, 128, 4096, dtype=np.int32)
+    b = rng.integers(-128, 128, 4096, dtype=np.int32)
+    y = np.array(ref.axmm_ref(a.reshape(-1, 1), b.reshape(1, -1), 6))
+    exact = a.reshape(-1, 1).astype(np.int64) @ b.reshape(1, -1)
+    nmed = np.abs(y - exact).mean() / (1 << 14)
+    assert 0.001 < nmed < 0.004, nmed  # paper: 0.0022
+
+
+@pytest.mark.parametrize("family", ref.FAMILIES)
+def test_families_bounded_error_k4(family):
+    rng = np.random.default_rng(5)
+    A, B = rand_mat(rng, 12, 8), rand_mat(rng, 8, 12)
+    exact = A.astype(np.int64) @ B
+    y = np.array(ref.axmm_ref(A, B, 4, family=family)).astype(np.int64)
+    # k=4 approximates weights < 16; accumulated over K=8 with carries the
+    # deviation stays well under 2^11 per output.
+    assert np.abs(y - exact).max() < (1 << 11)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs ref — bit identity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ref.FAMILIES)
+@pytest.mark.parametrize("k", [0, 3, 7])
+def test_pallas_matches_ref(family, k):
+    rng = np.random.default_rng(6)
+    A, B = rand_mat(rng, 16, 8), rand_mat(rng, 8, 16)
+    yr = np.array(ref.axmm_ref(A, B, k, family=family))
+    yp = np.array(axmm(A, B, k, family=family))
+    assert (yr == yp).all()
+
+
+@given(m=st.integers(1, 40), kk=st.integers(1, 12), nn=st.integers(1, 40),
+       k=st.integers(0, 8), seed=st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_pallas_matches_ref_shapes(m, kk, nn, k, seed):
+    """Hypothesis sweep over shapes (incl. ragged tiles) and k."""
+    rng = np.random.default_rng(seed)
+    A, B = rand_mat(rng, m, kk), rand_mat(rng, kk, nn)
+    yr = np.array(ref.axmm_ref(A, B, k))
+    yp = np.array(axmm(A, B, k))
+    assert (yr == yp).all()
+
+
+@given(k=st.integers(0, 8), seed=st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_pallas_tile_size_invariance(k, seed):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(seed)
+    A, B = rand_mat(rng, 24, 8), rand_mat(rng, 8, 24)
+    y1 = np.array(axmm(A, B, k, bm=8, bn=8))
+    y2 = np.array(axmm(A, B, k, bm=32, bn=16))
+    assert (y1 == y2).all()
+
+
+def test_unsigned_path():
+    rng = np.random.default_rng(7)
+    A = rng.integers(0, 256, (9, 8), dtype=np.int32)
+    B = rng.integers(0, 256, (8, 9), dtype=np.int32)
+    y = np.array(ref.axmm_ref(A, B, 0, signed=False))
+    assert (y == A.astype(np.int64) @ B).all()
+    yp = np.array(axmm(A, B, 5, signed=False))
+    yr = np.array(ref.axmm_ref(A, B, 5, signed=False))
+    assert (yp == yr).all()
+
+
+# ---------------------------------------------------------------------------
+# Scalar model (golden generator) vs jnp model.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ref.FAMILIES)
+def test_scalar_matches_jnp(family):
+    rng = np.random.default_rng(8)
+    A, B = rand_mat(rng, 6, 5), rand_mat(rng, 5, 7)
+    for k in (0, 1, 5, 8):
+        ys = ref.matmul_scalar(A, B, k, family=family)
+        yj = np.array(ref.axmm_ref(A, B, k, family=family))
+        assert (ys == yj).all()
+
+
+@given(a=st.integers(-128, 127), b=st.integers(-128, 127),
+       k=st.integers(0, 10), fam=st.sampled_from(ref.FAMILIES))
+@settings(max_examples=200, deadline=None)
+def test_scalar_mac_bounded_deviation(a, b, k, fam):
+    """|approx - exact| for one MAC is bounded by the approximated span."""
+    y = ref.mac_value_scalar(a & 255, b & 255, 0, k, family=fam)
+    # every approximate column can be off by at most ~N cells' worth
+    bound = (1 << (k + 1)) * 8 + (1 << k)
+    assert abs(y - a * b) <= bound, (a, b, k, fam, y, a * b)

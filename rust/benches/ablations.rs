@@ -1,0 +1,199 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! A. accumulator guard bits (W = 2N+G): overflow rate vs accumulation
+//!    depth — justifies the default G = 8;
+//! B. coordinator batch size: throughput vs batching granularity;
+//! C. systolic array geometry: tiles/s and utilization for one workload;
+//! D. chunked-K accumulation (the PJRT serving mode) vs monolithic
+//!    approximate accumulation: quality cost of splitting the reduction;
+//! E. quality-vs-energy Pareto across k for the DCT workload.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use std::time::Instant;
+
+use axsys::apps::image::{psnr, scene};
+use axsys::apps::{dct, WordGemm};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::hw;
+use axsys::pe::word::{mac_step_planned, MacPlan, PeConfig};
+use axsys::pe::{Design, Signedness};
+use axsys::systolic::Systolic;
+use axsys::Family;
+
+fn ints(seed: u64, len: usize) -> Vec<i64> {
+    let mut s = seed | 1;
+    (0..len).map(|_| {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s as i64 & 255) - 128
+    }).collect()
+}
+
+fn main() {
+    guard_bits();
+    batch_size();
+    array_geometry();
+    chunked_k();
+    pareto();
+}
+
+/// A. guard bits: fraction of random length-L dot products that overflow
+/// a (2N+G)-bit accumulator.
+fn guard_bits() {
+    println!("=== Ablation A: accumulator guard bits (8-bit operands) ===");
+    println!("{:>3} {:>8} {:>12} {:>12} {:>12}", "G", "W", "L=64", "L=256", "L=1024");
+    for g in [2u32, 4, 8, 12] {
+        print!("{:>3} {:>8}", g, 16 + g);
+        for chain in [64usize, 256, 1024] {
+            let mut cfg = PeConfig::new(8, true, Family::Proposed, 0);
+            cfg.w = 16 + g;
+            let plan = MacPlan::new(&cfg);
+            let mut overflows = 0;
+            let mut s0 = 99u64;
+            let mut rnd = || {
+                s0 ^= s0 << 13;
+                s0 ^= s0 >> 7;
+                s0 ^= s0 << 17;
+                s0
+            };
+            let samples = 300;
+            for _ in 0..samples {
+                let mut s = 0u64;
+                let mut kc = 0u64;
+                let mut exact = 0i64;
+                for _ in 0..chain {
+                    let a = (rnd() as i64 & 255) - 128;
+                    let b = (rnd() as i64 & 255) - 128;
+                    let (s2, k2) = mac_step_planned(&plan, cfg.encode(a),
+                                                    cfg.encode(b), s, kc);
+                    s = s2;
+                    kc = k2;
+                    exact += a * b;
+                }
+                let y = cfg.decode(s.wrapping_add(kc) & cfg.word_mask());
+                if y != exact {
+                    overflows += 1;
+                }
+            }
+            print!(" {:>11.1}%", overflows as f64 / samples as f64 * 100.0);
+        }
+        println!();
+    }
+    println!("(G = 8 default: zero overflow through L = 256, the largest\n\
+              reduction any shipped pipeline performs)\n");
+}
+
+/// B. worker batch size vs coordinator throughput.
+fn batch_size() {
+    println!("=== Ablation B: coordinator batch size (word backend) ===");
+    let (m, kk, nn) = (64usize, 16usize, 64usize);
+    let a = ints(1, m * kk);
+    let b = ints(2, kk * nn);
+    println!("{:>6} {:>12}", "batch", "req/s");
+    for batch in [1usize, 4, 16, 64] {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, batch, backend: BackendKind::Word, ..Default::default()
+        });
+        let t0 = Instant::now();
+        let reqs = 24;
+        let ids: Vec<u64> = (0..reqs).map(|_| c.submit(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn, k: 7,
+        })).collect();
+        for id in ids {
+            c.wait(id);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:>6} {:>12.1}", batch, reqs as f64 / dt);
+        c.shutdown();
+    }
+    println!();
+}
+
+/// C. array geometry: same GEMM, different SA shapes.
+fn array_geometry() {
+    println!("=== Ablation C: systolic geometry for a 32x32x32 GEMM ===");
+    let (m, kk, nn) = (32usize, 32usize, 32usize);
+    let a = ints(3, m * kk);
+    let b = ints(4, kk * nn);
+    println!("{:>8} {:>10} {:>10} {:>12} {:>10}", "array", "tiles",
+             "cycles", "macs/cycle", "wall µs");
+    for (r, c) in [(4usize, 4usize), (8, 8), (16, 16), (4, 16), (16, 4)] {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 7);
+        let mut sa = Systolic::new(cfg, r, c);
+        let t0 = Instant::now();
+        let (_, st) = sa.gemm(&a, &b, m, kk, nn);
+        let wall = t0.elapsed().as_secs_f64() * 1e6;
+        println!("{:>8} {:>10} {:>10} {:>12.1} {:>10.0}",
+                 format!("{r}x{c}"), st.tiles, st.total_cycles(),
+                 st.macs as f64 / st.total_cycles() as f64, wall);
+    }
+    println!("(bigger arrays amortize the 3N-2 skew fill; utilization =\n\
+              macs/cycle / PEs shows the fill/drain tax on small tiles)\n");
+}
+
+/// D. chunked-K (PJRT serving mode) vs monolithic accumulation quality.
+fn chunked_k() {
+    println!("=== Ablation D: chunked-K accumulation (approximate requests) ===");
+    let (m, kk, nn) = (16usize, 64usize, 16usize);
+    let a = ints(5, m * kk);
+    let b = ints(6, kk * nn);
+    let exact: Vec<i64> = (0..m).flat_map(|i| (0..nn).map(move |j| (i, j)))
+        .map(|(i, j)| (0..kk).map(|t| a[i * kk + t] * b[t * nn + j]).sum())
+        .collect();
+    println!("{:>2} {:>16} {:>16}", "k", "monolithic MED", "chunked-8 MED");
+    for k in [2u32, 5, 8] {
+        let cfg = PeConfig::new(8, true, Family::Proposed, k);
+        let mono = axsys::pe::word::matmul(&cfg, &a, &b, m, kk, nn);
+        // chunked: split K into 8-chunks, each through the PE, sum outside
+        let mut chunked = vec![0i64; m * nn];
+        for c0 in (0..kk).step_by(8) {
+            let cw = (kk - c0).min(8);
+            let ac: Vec<i64> = (0..m).flat_map(
+                |i| a[i * kk + c0..i * kk + c0 + cw].to_vec()).collect();
+            let bc: Vec<i64> = (c0..c0 + cw).flat_map(
+                |t| b[t * nn..(t + 1) * nn].to_vec()).collect();
+            let part = axsys::pe::word::matmul(&cfg, &ac, &bc, m, cw, nn);
+            for (o, p) in chunked.iter_mut().zip(part) {
+                *o += p;
+            }
+        }
+        let med = |y: &[i64]| y.iter().zip(&exact)
+            .map(|(&v, &e)| (v - e).abs() as f64)
+            .sum::<f64>() / y.len() as f64;
+        println!("{:>2} {:>16.1} {:>16.1}", k, med(&mono), med(&chunked));
+    }
+    println!("(chunking resets the approximate carry-save walk every 8 MACs\n\
+              — slightly different error, same magnitude; k=0 identical)\n");
+}
+
+/// E. DCT quality-vs-energy Pareto (the deployment decision the paper
+/// motivates).
+fn pareto() {
+    println!("=== Ablation E: DCT quality vs SA energy across k ===");
+    let img = scene(128, 128);
+    let mk = |k: u32| WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
+    let (exact, _) = dct::pipeline(&mut mk(0), &img);
+    println!("{:>2} {:>10} {:>14} {:>12}", "k", "PSNR dB", "SA PDP (fJ)",
+             "energy -%");
+    let base = hw::sa_metrics(&Design::proposed_exact(8, Signedness::Signed), 8)
+        .pdp_fj;
+    for k in 0..=8u32 {
+        let (r, _) = dct::pipeline(&mut mk(k), &img);
+        let d = if k == 0 {
+            Design::proposed_exact(8, Signedness::Signed)
+        } else {
+            Design::approximate(8, Signedness::Signed, Family::Proposed, k)
+        };
+        let pdp = hw::sa_metrics(&d, 8).pdp_fj;
+        let p = psnr(&exact.data, &r.data);
+        println!("{:>2} {:>10.2} {:>14.1} {:>11.1}%", k,
+                 if p.is_finite() { p } else { 99.99 }, pdp,
+                 (1.0 - pdp / base) * 100.0);
+    }
+    println!("(k = 2-4 is the paper's sweet spot: >44 dB at measurable\n\
+              energy savings)");
+}

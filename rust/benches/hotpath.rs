@@ -1,0 +1,150 @@
+//! Hot-path performance benchmarks (the §Perf deliverable).
+//!
+//! Measures every layer the request path touches:
+//!   L3: word-level MAC + GEMM, cycle-accurate SA stepping, netlist
+//!       evaluation, coordinator end-to-end throughput;
+//!   runtime: PJRT execution of the AOT artifacts (gemm64 / axmm_b16 /
+//!       full DCT pipeline).
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+//! Results are recorded in EXPERIMENTS.md §Perf (before/after log).
+
+use axsys::bench::{black_box, run};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::netlist::random_vectors;
+use axsys::pe::netlist_builder::pe_netlists;
+use axsys::pe::word::{mac_step, matmul, PeConfig};
+use axsys::pe::{Design, Signedness};
+use axsys::runtime::{Runtime, TensorI32};
+use axsys::systolic::Systolic;
+use axsys::Family;
+
+fn ints(seed: u64, len: usize) -> Vec<i64> {
+    let mut s = seed | 1;
+    (0..len).map(|_| {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s as i64 & 255) - 128
+    }).collect()
+}
+
+fn main() {
+    let cfg = PeConfig::new(8, true, Family::Proposed, 7);
+    let cfg0 = PeConfig::new(8, true, Family::Proposed, 0);
+
+    // L3 kernel: single fused MAC (the innermost hot function)
+    let mut s = 0u64;
+    let mut kc = 0u64;
+    let m = run("word::mac_step (1 MAC, k=7)", 200, || {
+        let (s2, k2) = mac_step(black_box(&cfg), black_box(0x5A), black_box(0xC3),
+                                black_box(s), black_box(kc));
+        s = s2;
+        kc = k2;
+    });
+    println!("    -> {:.1} M MAC/s", 1e3 / m.median_ns);
+
+    // L3: functional GEMM 64x64x64
+    let a = ints(1, 64 * 64);
+    let b = ints(2, 64 * 64);
+    let g = run("word::matmul 64x64x64 (k=7)", 400, || {
+        black_box(matmul(black_box(&cfg), &a, &b, 64, 64, 64));
+    });
+    println!("    -> {:.1} M MAC/s",
+             (64.0 * 64.0 * 64.0) / g.median_ns * 1e3);
+
+    // exact config for comparison (same path, different masks)
+    run("word::matmul 64x64x64 (k=0)", 400, || {
+        black_box(matmul(black_box(&cfg0), &a, &b, 64, 64, 64));
+    });
+
+    // L3: cycle-accurate systolic tile stream
+    let mut sa = Systolic::square(cfg, 8);
+    let at = ints(3, 8 * 8);
+    let bt = ints(4, 8 * 8);
+    let t = run("systolic 8x8 tile (K=8)", 300, || {
+        black_box(sa.run_tile(black_box(&at), black_box(&bt), 8));
+    });
+    println!("    -> {:.2} M cycle-steps/s (22 cycles x 64 PEs per tile)",
+             22.0 * 64.0 / t.median_ns * 1e3);
+
+    // L3: gate-level netlist evaluation (hardware-model hot loop)
+    let nets = pe_netlists(&Design::approximate_default(
+        8, Signedness::Signed, Family::Proposed), 24);
+    let vecs = random_vectors(nets.grid.inputs.len(), 64, 3);
+    let mut scratch = Vec::new();
+    let n = run("netlist eval PE grid (64 vectors)", 300, || {
+        for v in &vecs {
+            black_box(nets.grid.eval_into(black_box(v), &mut scratch));
+        }
+    });
+    println!("    -> {:.1} M gate-evals/s",
+             64.0 * nets.grid.gates.len() as f64 / n.median_ns * 1e3);
+
+    // coordinator end-to-end (word backend, 4 workers)
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Word, ..Default::default()
+    });
+    let c = run("coordinator 16 reqs 64x64x64 (4 workers)", 800, || {
+        let ids: Vec<u64> = (0..16).map(|i| {
+            coord.submit(GemmRequest {
+                a: a.clone(), b: b.clone(), m: 64, kk: 64, nn: 64,
+                k: (i % 8) as u32,
+            })
+        }).collect();
+        for id in ids {
+            black_box(coord.wait(id));
+        }
+    });
+    println!("    -> {:.0} req/s end-to-end", 16.0 / (c.median_ns * 1e-9));
+    coord.shutdown();
+
+    // PJRT: AOT artifact execution
+    let dir = Runtime::default_artifacts_dir();
+    if dir.join("gemm64.hlo.txt").exists() {
+        let rt = Runtime::new(&dir).expect("runtime");
+        let exe = rt.load("gemm64").expect("gemm64");
+        let a32: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+        let b32: Vec<i32> = b.iter().map(|&v| v as i32).collect();
+        let inputs = [
+            TensorI32::new(vec![64, 64], a32),
+            TensorI32::new(vec![64, 64], b32),
+            TensorI32::scalar1(7),
+        ];
+        let p = run("PJRT gemm64 (AOT pallas, k=7)", 800, || {
+            black_box(rt.execute_i32(&exe, &inputs).expect("exec"));
+        });
+        println!("    -> {:.1} M MAC/s via XLA",
+                 (64.0 * 64.0 * 64.0) / p.median_ns * 1e3);
+
+        let exe_b = rt.load("axmm_b16").expect("axmm_b16");
+        let ta: Vec<i32> = (0..16 * 64).map(|i| ((i * 37) % 255) as i32 - 127).collect();
+        let tb: Vec<i32> = (0..16 * 64).map(|i| ((i * 91) % 255) as i32 - 127).collect();
+        let inputs_b = [
+            TensorI32::new(vec![16, 8, 8], ta),
+            TensorI32::new(vec![16, 8, 8], tb),
+            TensorI32::scalar1(7),
+        ];
+        run("PJRT axmm_b16 (16 SA tiles)", 500, || {
+            black_box(rt.execute_i32(&exe_b, &inputs_b).expect("exec"));
+        });
+
+        if dir.join("dct256.hlo.txt").exists() {
+            let exe_d = rt.load("dct256").expect("dct256");
+            let img = axsys::apps::image::scene(256, 256);
+            let inputs_d = [
+                TensorI32::new(vec![256, 256], img.to_i32()),
+                TensorI32::scalar1(2),
+            ];
+            let d = run("PJRT dct256 full pipeline (k=2)", 1500, || {
+                black_box(rt.execute_i32(&exe_d, &inputs_d).expect("exec"));
+            });
+            println!("    -> {:.1} Mpix/s through 4 approximate GEMM stages",
+                     (256.0 * 256.0) / d.median_ns * 1e3);
+        }
+    } else {
+        println!("(PJRT benches skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,264 @@
+//! Regenerates every TABLE of the paper's evaluation (II, III, IV, V, VI)
+//! side by side with the published values.
+//!
+//! Absolute numbers come from our calibrated 90 nm-class model (one anchor:
+//! the conventional exact PPC, Table II row 1) — everything else is
+//! composed structurally, so the *relative* story (who wins, by what
+//! factor) is genuine model output. See EXPERIMENTS.md for the recorded
+//! comparison and deviations.
+//!
+//! ```bash
+//! cargo bench --bench paper_tables [-- --table2|--table3|--table4|--table5|--table6|--headline]
+//! ```
+
+use axsys::apps::image::{psnr, scene, ssim};
+use axsys::apps::{bdcn, dct, edge, WordGemm};
+use axsys::error::table5_row;
+use axsys::hw;
+use axsys::pe::word::PeConfig;
+use axsys::pe::{Design, Signedness};
+use axsys::runtime::Runtime;
+use axsys::Family;
+
+fn want(flag: &str) -> bool {
+    let args: Vec<String> = std::env::args().collect();
+    let any = args.iter().any(|a| a.starts_with("--table") || a == "--headline");
+    !any || args.iter().any(|a| a == flag)
+}
+
+fn main() {
+    if want("--table2") {
+        table2();
+    }
+    if want("--table3") {
+        table3();
+    }
+    if want("--table4") {
+        table4();
+    }
+    if want("--table5") {
+        table5();
+    }
+    if want("--table6") {
+        table6();
+    }
+    if want("--headline") {
+        headline();
+    }
+}
+
+// paper Table II (area µm², power µW, delay ps, PDP aJ), [PPC, NPPC]
+const PAPER_T2: [(&str, [f64; 4], [f64; 4]); 5] = [
+    ("Exact [6]", [25.81, 1.03, 262.0, 269.86], [24.92, 0.99, 238.0, 235.62]),
+    ("Prop Ext", [24.98, 0.99, 255.0, 252.45], [23.47, 0.99, 216.0, 213.84]),
+    ("Design [6]", [13.32, 0.64, 187.0, 119.04], [12.54, 0.61, 156.0, 95.16]),
+    ("Design [5]", [14.13, 0.58, 157.0, 91.06], [13.22, 0.60, 148.0, 88.80]),
+    ("Prop Apx", [10.19, 0.44, 110.0, 48.40], [9.40, 0.37, 147.0, 54.39]),
+];
+
+fn table2() {
+    println!("=== Table II: PPC/NPPC cell metrics (ours, then paper) ===");
+    println!("{:<12} | {:>30} | {:>30}", "design",
+             "PPC: area power delay PDP", "NPPC: area power delay PDP");
+    for (row, paper) in hw::table2().iter().zip(PAPER_T2.iter()) {
+        let f = |m: &hw::HwMetrics| {
+            format!("{:6.2} {:5.2} {:5.0} {:7.1}", m.area_um2, m.power_uw,
+                    m.delay_ns * 1e3, m.pdp_fj * 1e3)
+        };
+        let fp = |p: &[f64; 4]| {
+            format!("{:6.2} {:5.2} {:5.0} {:7.1}", p[0], p[1], p[2], p[3])
+        };
+        println!("{:<12} | {} | {}", row.label, f(&row.ppc), f(&row.nppc));
+        println!("{:<12} | {} | {}", "  (paper)", fp(&paper.1), fp(&paper.2));
+    }
+    // headline cell claims
+    let rows = hw::table2();
+    let exact = &rows[0];
+    let prop_e = &rows[1];
+    let d5 = &rows[3];
+    let prop_a = &rows[4];
+    println!("\ncell-level energy savings:");
+    println!("  proposed exact vs [6]:    {:5.1}%  (paper:  6.4%)",
+             (1.0 - prop_e.ppc.pdp_fj / exact.ppc.pdp_fj) * 100.0);
+    println!("  proposed approx vs [5]:   {:5.1}%  (paper: 46.8%)",
+             (1.0 - prop_a.ppc.pdp_fj / d5.ppc.pdp_fj) * 100.0);
+    println!();
+}
+
+// paper Table III, signed PADP (x1e3 µm²·fJ) for the key rows
+const PAPER_T3_SIGNED_PADP: [(&str, u32, f64); 10] = [
+    ("Design [6] exact", 4, 21.82),
+    ("Design [6] exact", 8, 1162.39),
+    ("Proposed exact", 4, 17.06),
+    ("Proposed exact", 8, 879.02),
+    ("HA-FSA [10]", 8, 1662.1),
+    ("Gemmini [13]", 8, 1763.7),
+    ("Design [6] approx", 8, 1171.47),
+    ("Design [12] approx", 8, 966.75),
+    ("Design [5] approx", 8, 431.93),
+    ("Proposed approx", 8, 334.66),
+];
+
+fn table3() {
+    println!("=== Table III: PE metrics (signed; ours + paper PADP) ===");
+    println!("{:<22} {:>2}  {:>8} {:>7} {:>6} {:>9}  {:>9}",
+             "design", "N", "area", "power", "delay", "PADP", "paperPADP");
+    for row in hw::table3() {
+        let paper = PAPER_T3_SIGNED_PADP.iter()
+            .find(|(l, n, _)| row.label.starts_with(l) && *n == row.n)
+            .map(|(_, _, v)| format!("{v:9.1}"))
+            .unwrap_or_else(|| "        -".into());
+        if let Some(m) = row.signed {
+            println!("{:<22} {:>2}  {:>8.1} {:>7.1} {:>6.2} {:>9.1}  {}",
+                     row.label, row.n, m.area_um2, m.power_uw, m.delay_ns,
+                     m.padp, paper);
+        }
+    }
+    println!();
+}
+
+// paper Table IV: 8-bit signed PDP (pJ) per size, rows = exact [6] /
+// prop exact / approx [5] / prop approx
+const PAPER_T4_8B: [(usize, [f64; 4]); 4] = [
+    (3, [21.44, 19.53, 11.50, 9.36]),
+    (4, [40.58, 37.62, 23.46, 19.35]),
+    (8, [179.78, 150.15, 71.40, 56.18]),
+    (16, [1037.71, 891.30, 510.00, 386.50]),
+];
+
+fn table4() {
+    println!("=== Table IV: SA @250MHz, 8-bit signed (PDP pJ, ours|paper) ===");
+    let designs: [(&str, Design); 4] = [
+        ("Exact [6]", Design { n: 8, signed: Signedness::Signed,
+                               family: Family::Proposed, k: 0,
+                               optimized_exact: false }),
+        ("Proposed Exact", Design::proposed_exact(8, Signedness::Signed)),
+        ("Approx. [5]", Design::approximate_default(
+            8, Signedness::Signed, Family::Axsa5)),
+        ("Proposed Approx.", Design::approximate_default(
+            8, Signedness::Signed, Family::Proposed)),
+    ];
+    print!("{:<18}", "design");
+    for (size, _) in PAPER_T4_8B {
+        print!(" {:>17}", format!("{size}x{size}"));
+    }
+    println!();
+    for (di, (label, d)) in designs.iter().enumerate() {
+        print!("{label:<18}");
+        for (size, paper) in PAPER_T4_8B.iter() {
+            let m = hw::sa_metrics(d, *size);
+            print!(" {:>8.2}|{:<8.2}", m.pdp_fj / 1e3, paper[di]);
+        }
+        println!();
+    }
+    println!();
+}
+
+// paper Table V (signed): proposed k=2..8 + baselines at k=6
+const PAPER_T5_SIGNED: [(&str, u32, f64, f64); 8] = [
+    ("Proposed", 2, 0.0001, 0.0037),
+    ("Proposed", 4, 0.0004, 0.0130),
+    ("Proposed", 5, 0.0006, 0.0286),
+    ("Proposed", 6, 0.0022, 0.0481),
+    ("Proposed", 8, 0.0081, 0.2418),
+    ("Design [5]", 6, 0.0033, 0.0626),
+    ("Design [6]", 6, 0.0079, 0.1064),
+    ("Design [12]", 6, 0.0046, 0.0758),
+];
+
+fn table5() {
+    println!("=== Table V: 8-bit PE error metrics (ours + paper signed cols) ===");
+    println!("{:<12} {:>2} | {:>7} {:>7} | {:>7} {:>7} | {:>7} {:>7}",
+             "design", "k", "NMED(u)", "MRED(u)", "NMED(s)", "MRED(s)",
+             "pNMEDs", "pMREDs");
+    let families = [("Proposed", Family::Proposed),
+                    ("Design [5]", Family::Axsa5),
+                    ("Design [6]", Family::Nano6),
+                    ("Design [12]", Family::Sips12)];
+    for (label, fam) in families {
+        let ks: &[u32] = if fam == Family::Proposed { &[2, 4, 5, 6, 8] } else { &[6] };
+        for &k in ks {
+            let (u, s) = table5_row(fam, k, 8);
+            let paper = PAPER_T5_SIGNED.iter()
+                .find(|(l, pk, _, _)| *l == label && *pk == k);
+            let (pn, pm) = paper
+                .map(|(_, _, n, m)| (format!("{n:7.4}"), format!("{m:7.4}")))
+                .unwrap_or(("      -".into(), "      -".into()));
+            println!("{:<12} {:>2} | {:>7.4} {:>7.4} | {:>7.4} {:>7.4} | {} {}",
+                     label, k, u.nmed, u.mred, s.nmed, s.mred, pn, pm);
+        }
+    }
+    println!();
+}
+
+// paper Table VI (proposed rows): k -> (DCT psnr/ssim, edge, bdcn)
+const PAPER_T6: [(u32, [f64; 6]); 4] = [
+    (2, [45.97, 0.991, 30.45, 0.910, 75.98, 1.0]),
+    (4, [38.21, 0.955, 20.51, 0.894, 68.55, 1.0]),
+    (6, [35.67, 0.923, 12.76, 0.678, 51.52, 0.999]),
+    (8, [28.43, 0.872, 11.41, 0.651, 34.60, 0.995]),
+];
+
+fn table6() {
+    println!("=== Table VI: application quality, proposed PE (ours|paper) ===");
+    let img = scene(256, 256);
+    let img128 = scene(128, 128);
+    let mk = |k: u32| WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
+    let (dct_exact, _) = dct::pipeline(&mut mk(0), &img);
+    let edge_exact = edge::pipeline(&mut mk(0), &img);
+    let weights = Runtime::default_artifacts_dir().join("bdcn_weights.txt");
+    let blocks = bdcn::load_weights(&weights).ok();
+    let bdcn_exact = blocks.as_ref().map(|b| bdcn::forward_word(b, &img128, 0));
+
+    println!("{:<3} {:>24} {:>24} {:>24}", "k",
+             "DCT psnr ssim | paper", "EDGE psnr ssim | paper",
+             "BDCN psnr ssim | paper");
+    for (k, p) in PAPER_T6 {
+        let (r, _) = dct::pipeline(&mut mk(k), &img);
+        let e = edge::pipeline(&mut mk(k), &img);
+        let dctm = (psnr(&dct_exact.data, &r.data), ssim(&dct_exact.data, &r.data));
+        let edgem = (psnr(&edge_exact.data, &e.data),
+                     ssim(&edge_exact.data, &e.data));
+        let bdcnm = match (&blocks, &bdcn_exact) {
+            (Some(b), Some(ex)) => {
+                let out = bdcn::forward_word(b, &img128, k);
+                (psnr(&ex.data, &out.data), ssim(&ex.data, &out.data))
+            }
+            _ => (f64::NAN, f64::NAN),
+        };
+        println!("{:<3} {:>6.2} {:>5.3}|{:>5.1} {:>4.2}  {:>6.2} {:>5.3}|{:>5.1} \
+                  {:>4.2}  {:>6.2} {:>5.3}|{:>5.1} {:>4.2}",
+                 k, dctm.0, dctm.1, p[0], p[1], edgem.0, edgem.1, p[2], p[3],
+                 bdcnm.0, bdcnm.1, p[4], p[5]);
+    }
+    println!();
+}
+
+fn headline() {
+    println!("=== Headline claims (ours | paper) ===");
+    let conv8 = Design { n: 8, signed: Signedness::Signed,
+                         family: Family::Proposed, k: 0, optimized_exact: false };
+    let prop8 = Design::proposed_exact(8, Signedness::Signed);
+    let apx8 = Design::approximate_default(8, Signedness::Signed, Family::Proposed);
+    let d5 = Design::approximate_default(8, Signedness::Signed, Family::Axsa5);
+
+    let sa = |d: &Design| hw::sa_metrics(d, 8);
+    let e0 = sa(&conv8).pdp_fj;
+    println!("8x8 SA energy saving, proposed exact  vs [6]: {:5.1}% | paper 16%",
+             (1.0 - sa(&prop8).pdp_fj / e0) * 100.0);
+    println!("8x8 SA energy saving, proposed approx vs [6]: {:5.1}% | paper 68%",
+             (1.0 - sa(&apx8).pdp_fj / e0) * 100.0);
+    let pe = |d: &Design| hw::pe_metrics(d).pdp_fj;
+    println!("8-bit signed PE saving, prop exact vs [6]:    {:5.1}% | paper 24.37%",
+             (1.0 - pe(&prop8) / pe(&conv8)) * 100.0);
+    println!("8-bit signed PE saving, prop approx vs [5]:   {:5.1}% | paper 22.51%",
+             (1.0 - pe(&apx8) / pe(&d5)) * 100.0);
+    let s16 = |d: &Design| hw::sa_metrics(d, 16).pdp_fj;
+    println!("16x16 SA PDP, prop approx vs exact [6]:       {:5.1}% | paper 62.7%",
+             (1.0 - s16(&apx8) / s16(&conv8)) * 100.0);
+    println!("16x16 SA PDP, prop approx vs approx [5]:      {:5.1}% | paper 24.2%",
+             (1.0 - s16(&apx8) / s16(&d5)) * 100.0);
+    let gem = hw::conventional_mac_metrics(8, false);
+    println!("PE PADP saving vs Gemmini-style MAC [13]:     {:5.1}% | paper 65.45%",
+             (1.0 - hw::pe_metrics(&prop8).padp / gem.padp) * 100.0);
+}

@@ -1,0 +1,176 @@
+//! BDCN-lite CNN edge detection (paper §V-B, CNN-based path).
+//!
+//! Runs the int8-quantized cascade network trained at artifact-build time
+//! (`python/compile/bdcn.py`) through the approximate GEMM backend:
+//! blocks 0-1 approximate (level k), blocks 2-3 exact — the paper's
+//! Fig. 12 hybrid scheme. Bit-identical to `bdcn.forward_int8`.
+
+use std::path::Path;
+
+use super::image::Image;
+use super::Gemm;
+
+pub const N_BLOCKS: usize = 4;
+/// Accumulator requant shifts (bdcn.DEFAULT_SHIFTS).
+pub const SHIFT_W1: u32 = 7;
+pub const SHIFT_W2: u32 = 9;
+pub const SHIFT_SIDE: u32 = 8;
+
+/// One conv tensor: HWIO layout (kh, kw, cin, cout), int8 values in i64.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: [usize; 4],
+    pub data: Vec<i64>,
+}
+
+/// Quantized weights of one cascade block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub w1: Tensor,
+    pub w2: Tensor,
+    pub side: Tensor,
+}
+
+/// Parse `artifacts/bdcn_weights.txt` (see `bdcn.export_qparams_txt`).
+pub fn load_weights(path: &Path) -> anyhow::Result<Vec<Block>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut tensors = std::collections::HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let name = match it.next() {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        let dims: Vec<usize> = (0..4)
+            .map(|_| it.next().unwrap().parse().unwrap())
+            .collect();
+        let data: Vec<i64> = it.map(|v| v.parse().unwrap()).collect();
+        anyhow::ensure!(data.len() == dims.iter().product::<usize>(),
+                        "tensor {name}: bad length");
+        tensors.insert(name, Tensor { shape: [dims[0], dims[1], dims[2], dims[3]], data });
+    }
+    let mut blocks = Vec::new();
+    for i in 0..N_BLOCKS {
+        blocks.push(Block {
+            w1: tensors.remove(&format!("b{i}_w1"))
+                .ok_or_else(|| anyhow::anyhow!("missing b{i}_w1"))?,
+            w2: tensors.remove(&format!("b{i}_w2"))
+                .ok_or_else(|| anyhow::anyhow!("missing b{i}_w2"))?,
+            side: tensors.remove(&format!("b{i}_side"))
+                .ok_or_else(|| anyhow::anyhow!("missing b{i}_side"))?,
+        });
+    }
+    Ok(blocks)
+}
+
+/// SAME-padding integer conv via im2col + GEMM.
+/// `x`: (h, w, cin) int values; returns raw int32-range accumulators
+/// (h, w, cout). Feature order matches `bdcn._conv_q`.
+fn conv(g: &mut dyn Gemm, x: &[i64], h: usize, w: usize, wq: &Tensor)
+        -> Vec<i64> {
+    let [kh, kw, cin, cout] = wq.shape;
+    let (ph, pw) = (kh / 2, kw / 2);
+    let feat = kh * kw * cin;
+    let mut mat = vec![0i64; h * w * feat];
+    for dy in 0..kh {
+        for dx in 0..kw {
+            for y in 0..h {
+                let sy = y as isize + dy as isize - ph as isize;
+                if sy < 0 || sy >= h as isize {
+                    continue; // zero padding
+                }
+                for x_ in 0..w {
+                    let sx = x_ as isize + dx as isize - pw as isize;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    let src = (sy as usize * w + sx as usize) * cin;
+                    let dst = (y * w + x_) * feat + (dy * kw + dx) * cin;
+                    mat[dst..dst + cin]
+                        .copy_from_slice(&x[src..src + cin]);
+                }
+            }
+        }
+    }
+    g.gemm(&mat, &wq.data, h * w, feat, cout)
+}
+
+/// Requantize an accumulator to a ReLU-clipped int8 activation.
+#[inline]
+fn requant(v: i64, shift: u32) -> i64 {
+    ((v + (1i64 << (shift - 1))) >> shift).clamp(0, 127)
+}
+
+/// Full quantized forward pass. `g_approx` runs blocks 0-1 (level k baked
+/// into its PE config); `g_exact` runs blocks 2-3.
+pub fn forward(g_approx: &mut dyn Gemm, g_exact: &mut dyn Gemm,
+               blocks: &[Block], img: &Image) -> Image {
+    let (h, w) = (img.h, img.w);
+    let mut x: Vec<i64> = img.data.iter().map(|&v| v as i64 - 128).collect();
+    let mut cin = 1usize;
+    let mut side_acc = vec![0i64; h * w];
+    for (bi, blk) in blocks.iter().enumerate() {
+        let g: &mut dyn Gemm = if bi < 2 { g_approx } else { g_exact };
+        debug_assert_eq!(cin, blk.w1.shape[2]);
+        let a1 = conv(g, &x, h, w, &blk.w1);
+        let c1 = blk.w1.shape[3];
+        let x1: Vec<i64> = a1.iter().map(|&v| requant(v, SHIFT_W1)).collect();
+        let a2 = conv(g, &x1, h, w, &blk.w2);
+        let c2 = blk.w2.shape[3];
+        let x2: Vec<i64> = a2.iter().map(|&v| requant(v, SHIFT_W2)).collect();
+        let s = conv(g, &x2, h, w, &blk.side); // cout = 1
+        for (acc, &v) in side_acc.iter_mut().zip(s.iter()) {
+            *acc += v;
+        }
+        x = x2;
+        cin = c2;
+        let _ = c1;
+    }
+    let mut out = Image::new(h, w);
+    for (o, &v) in out.data.iter_mut().zip(side_acc.iter()) {
+        let e = (v + (1i64 << (SHIFT_SIDE - 1))) >> SHIFT_SIDE;
+        *o = (e + 128).clamp(0, 255) as u8;
+    }
+    out
+}
+
+/// Convenience: forward pass with word-level backends at level `k`.
+pub fn forward_word(blocks: &[Block], img: &Image, k: u32) -> Image {
+    use crate::apps::WordGemm;
+    use crate::pe::word::PeConfig;
+    use crate::Family;
+    let mut ga = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
+    let mut ge = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
+    forward(&mut ga, &mut ge, blocks, img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::image::{psnr, scene};
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/bdcn_weights.txt");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn weights_load_and_run() {
+        let Some(p) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let blocks = load_weights(&p).unwrap();
+        assert_eq!(blocks.len(), N_BLOCKS);
+        assert_eq!(blocks[0].w1.shape, [3, 3, 1, 8]);
+        let img = scene(32, 32);
+        let e0 = forward_word(&blocks, &img, 0);
+        let e2 = forward_word(&blocks, &img, 2);
+        let e8 = forward_word(&blocks, &img, 8);
+        let p2 = psnr(&e0.data, &e2.data);
+        let p8 = psnr(&e0.data, &e8.data);
+        assert!(p2 >= p8, "cascade quality must degrade with k: {p2} vs {p8}");
+        assert!(p2 > 25.0, "k=2 CNN PSNR too low: {p2}");
+    }
+}

@@ -1,0 +1,178 @@
+//! 8x8 integer-scaled DCT image compression (paper §V-A).
+//!
+//! Bit-identical mirror of `python/compile/model.py`: HEVC integer
+//! coefficients, the (9,9,6,6) shift schedule, int8 coefficient storage,
+//! forward + reconstruction through the approximate GEMM backend.
+
+use super::image::Image;
+use super::{clip8, rshift_round, Gemm};
+
+/// HEVC 8-point integer DCT matrix (fits int8).
+pub const DCT8: [[i64; 8]; 8] = [
+    [64, 64, 64, 64, 64, 64, 64, 64],
+    [89, 75, 50, 18, -18, -50, -75, -89],
+    [83, 36, -36, -83, -83, -36, 36, 83],
+    [75, -18, -89, -50, 50, 89, 18, -75],
+    [64, -64, -64, 64, 64, -64, -64, 64],
+    [50, -89, 18, 75, -75, -18, 89, -50],
+    [36, -83, 83, -36, -36, 83, -83, 36],
+    [18, -50, 75, -89, 89, -75, 50, -18],
+];
+
+/// Stage shift schedule (model.py DCT_SHIFTS).
+pub const SHIFTS: [u32; 4] = [9, 9, 6, 6];
+
+fn dct_mat() -> Vec<i64> {
+    DCT8.iter().flatten().copied().collect()
+}
+
+fn dct_mat_t() -> Vec<i64> {
+    let mut t = vec![0i64; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            t[j * 8 + i] = DCT8[i][j];
+        }
+    }
+    t
+}
+
+/// (H, W) image -> stacked 8x8 blocks (nb*8 x 8, row-major block order).
+fn to_blocks(img: &[i64], h: usize, w: usize) -> Vec<i64> {
+    let (nbh, nbw) = (h / 8, w / 8);
+    let mut out = vec![0i64; h * w];
+    for bi in 0..nbh {
+        for bj in 0..nbw {
+            let base = (bi * nbw + bj) * 64;
+            for r in 0..8 {
+                for c in 0..8 {
+                    out[base + r * 8 + c] = img[(bi * 8 + r) * w + bj * 8 + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn from_blocks(blocks: &[i64], h: usize, w: usize) -> Vec<i64> {
+    let (nbh, nbw) = (h / 8, w / 8);
+    let mut out = vec![0i64; h * w];
+    for bi in 0..nbh {
+        for bj in 0..nbw {
+            let base = (bi * nbw + bj) * 64;
+            for r in 0..8 {
+                for c in 0..8 {
+                    out[(bi * 8 + r) * w + bj * 8 + c] = blocks[base + r * 8 + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-block `mat(8x8) @ block`: one wide GEMM with blocks side by side —
+/// identical contraction order to model.py's `_blockwise_left`.
+fn blockwise_left(g: &mut dyn Gemm, mat: &[i64], blocks: &[i64]) -> Vec<i64> {
+    let nb = blocks.len() / 64;
+    let mut wide = vec![0i64; 64 * nb]; // (8, nb*8)
+    for t in 0..nb {
+        for r in 0..8 {
+            for c in 0..8 {
+                wide[r * (nb * 8) + t * 8 + c] = blocks[t * 64 + r * 8 + c];
+            }
+        }
+    }
+    let out = g.gemm(mat, &wide, 8, 8, nb * 8);
+    let mut res = vec![0i64; 64 * nb];
+    for t in 0..nb {
+        for r in 0..8 {
+            for c in 0..8 {
+                res[t * 64 + r * 8 + c] = out[r * (nb * 8) + t * 8 + c];
+            }
+        }
+    }
+    res
+}
+
+/// Per-block `block @ mat(8x8)`: one tall GEMM (nb*8 x 8) @ (8 x 8).
+fn blockwise_right(g: &mut dyn Gemm, blocks: &[i64], mat: &[i64]) -> Vec<i64> {
+    g.gemm(blocks, mat, blocks.len() / 8, 8, 8)
+}
+
+/// Forward DCT: centered image -> int8 coefficient blocks.
+pub fn forward(g: &mut dyn Gemm, img: &Image) -> Vec<i64> {
+    let centered: Vec<i64> = img.data.iter().map(|&v| v as i64 - 128).collect();
+    let x = to_blocks(&centered, img.h, img.w);
+    let t = blockwise_left(g, &dct_mat(), &x);
+    let t: Vec<i64> = t.iter().map(|&v| clip8(rshift_round(v, SHIFTS[0]))).collect();
+    let y = blockwise_right(g, &t, &dct_mat_t());
+    y.iter().map(|&v| clip8(rshift_round(v, SHIFTS[1]))).collect()
+}
+
+/// Inverse DCT: int8 coefficient blocks -> reconstructed image.
+pub fn inverse(g: &mut dyn Gemm, coeff: &[i64], h: usize, w: usize) -> Image {
+    let t = blockwise_left(g, &dct_mat_t(), coeff);
+    let t: Vec<i64> = t.iter().map(|&v| clip8(rshift_round(v, SHIFTS[2]))).collect();
+    let x = blockwise_right(g, &t, &dct_mat());
+    let x: Vec<i64> = x.iter().map(|&v| rshift_round(v, SHIFTS[3])).collect();
+    let flat = from_blocks(&x, h, w);
+    let mut img = Image::new(h, w);
+    for (o, &v) in img.data.iter_mut().zip(flat.iter()) {
+        *o = (v + 128).clamp(0, 255) as u8;
+    }
+    img
+}
+
+/// Full compress -> reconstruct pipeline; returns (reconstruction, coeffs).
+pub fn pipeline(g: &mut dyn Gemm, img: &Image) -> (Image, Vec<i64>) {
+    let c = forward(g, img);
+    let r = inverse(g, &c, img.h, img.w);
+    (r, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::image::{psnr, scene};
+    use crate::apps::WordGemm;
+    use crate::pe::word::PeConfig;
+    use crate::Family;
+
+    fn word(k: u32) -> WordGemm {
+        WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) }
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        let img: Vec<i64> = (0..(16 * 24) as i64).collect();
+        assert_eq!(from_blocks(&to_blocks(&img, 16, 24), 16, 24), img);
+    }
+
+    #[test]
+    fn exact_reconstruction_high_quality() {
+        let img = scene(64, 64);
+        let (recon, _) = pipeline(&mut word(0), &img);
+        let p = psnr(&img.data, &recon.data);
+        assert!(p > 38.0, "exact DCT pipeline PSNR {p}");
+    }
+
+    #[test]
+    fn approx_vs_exact_quality_ordering() {
+        let img = scene(64, 64);
+        let (exact, _) = pipeline(&mut word(0), &img);
+        let mut prev = f64::INFINITY;
+        for k in [2u32, 4, 6, 8] {
+            let (r, _) = pipeline(&mut word(k), &img);
+            let p = psnr(&exact.data, &r.data);
+            assert!(p <= prev + 1.0, "k={k}: PSNR {p} vs prev {prev}");
+            assert!(p > 15.0, "k={k} unusable: {p}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn coefficients_are_int8() {
+        let img = scene(64, 64);
+        let c = forward(&mut word(0), &img);
+        assert!(c.iter().all(|&v| (-128..=127).contains(&v)));
+    }
+}

@@ -1,0 +1,76 @@
+//! Laplacian-kernel edge detection via im2col + approximate GEMM
+//! (paper §V-B, kernel-based path). Mirrors `model.edge_pipeline`.
+
+use super::image::Image;
+use super::{rshift_round, Gemm};
+
+/// 8-neighbour Laplacian (sums to zero — invariant to the -128 centering).
+pub const LAPLACIAN: [i64; 9] = [-1, -1, -1, -1, 8, -1, -1, -1, -1];
+
+/// uint8 image -> uint8-range edge map of size (h-2) x (w-2).
+pub fn pipeline(g: &mut dyn Gemm, img: &Image) -> Image {
+    let (h, w) = (img.h, img.w);
+    let (oh, ow) = (h - 2, w - 2);
+    // im2col: (P, 9) patches, column order (dy, dx) — matches _im2col3
+    let p = oh * ow;
+    let mut mat = vec![0i64; p * 9];
+    for dy in 0..3 {
+        for dx in 0..3 {
+            let col = dy * 3 + dx;
+            for y in 0..oh {
+                for x in 0..ow {
+                    mat[(y * ow + x) * 9 + col] =
+                        img.at(y + dy, x + dx) as i64 - 128;
+                }
+            }
+        }
+    }
+    let y = g.gemm(&mat, &LAPLACIAN, p, 9, 1);
+    let mut out = Image::new(oh, ow);
+    for (o, &v) in out.data.iter_mut().zip(y.iter()) {
+        *o = rshift_round(v.abs(), 2).clamp(0, 255) as u8;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::image::{psnr, scene};
+    use crate::apps::WordGemm;
+    use crate::pe::word::PeConfig;
+    use crate::Family;
+
+    fn word(k: u32) -> WordGemm {
+        WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) }
+    }
+
+    #[test]
+    fn exact_edges_detect_structure() {
+        let img = scene(64, 64);
+        let e = pipeline(&mut word(0), &img);
+        assert_eq!((e.h, e.w), (62, 62));
+        // checkerboard + disks must produce a meaningful number of edges
+        let frac = e.data.iter().filter(|&&v| v > 32).count() as f64
+            / e.data.len() as f64;
+        assert!(frac > 0.02 && frac < 0.6, "{frac}");
+    }
+
+    #[test]
+    fn flat_region_no_edges() {
+        let mut img = Image::new(16, 16);
+        img.data.fill(77);
+        let e = pipeline(&mut word(0), &img);
+        assert!(e.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn quality_degrades_with_k() {
+        let img = scene(64, 64);
+        let exact = pipeline(&mut word(0), &img);
+        let p2 = psnr(&exact.data, &pipeline(&mut word(2), &img).data);
+        let p8 = psnr(&exact.data, &pipeline(&mut word(8), &img).data);
+        assert!(p2 > p8, "k=2 ({p2}) should beat k=8 ({p8})");
+        assert!(p2 > 20.0, "k=2 PSNR too low: {p2}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Image utilities: deterministic procedural test scenes (bit-identical
+//! to `python/compile/image.py` — integer-only math), PGM I/O, PSNR and
+//! SSIM quality metrics.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Grayscale image, row-major u8.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(h: usize, w: usize) -> Self {
+        Image { h, w, data: vec![0; h * w] }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize) -> u8 {
+        self.data[y * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, v: u8) {
+        self.data[y * self.w + x] = v;
+    }
+
+    pub fn to_i64(&self) -> Vec<i64> {
+        self.data.iter().map(|&v| v as i64).collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+}
+
+/// The canonical test scene; must match `compile.image.scene` exactly.
+pub fn scene(h: usize, w: usize) -> Image {
+    let mut img = Image::new(h, w);
+    for y in 0..h {
+        for x in 0..w {
+            let mut v = ((x * 255) / (w - 1)) as i64;
+            if y < h / 3 {
+                v = if ((x / 16) + (y / 16)) % 2 == 0 { 224 } else { 32 };
+            }
+            img.set(y, x, v as u8);
+        }
+    }
+    let disks: [(i64, i64, i64, u8); 3] = [
+        ((h / 2) as i64, (w / 4) as i64, (h / 8) as i64, 200),
+        ((h / 2) as i64, (w / 2) as i64, (h / 10) as i64, 90),
+        (((5 * h) / 8) as i64, ((3 * w) / 4) as i64, (h / 7) as i64, 150),
+    ];
+    for y in 0..h {
+        for x in 0..w {
+            for &(cy, cx, r, val) in &disks {
+                let d = (y as i64 - cy).pow(2) + (x as i64 - cx).pow(2);
+                if d < r * r {
+                    img.set(y, x, val);
+                }
+            }
+        }
+    }
+    for y in (3 * h) / 4..h {
+        for x in 0..w {
+            let v = if ((x + y) / 8) % 2 == 0 { 240 } else { 16 };
+            img.set(y, x, v);
+        }
+    }
+    for y in 0..h {
+        for x in 0..w {
+            if y < 2 || y >= h - 2 || x < 2 || x >= w - 2 {
+                img.set(y, x, 8);
+            }
+        }
+    }
+    img
+}
+
+/// Seeded LCG texture; must match `compile.image.texture`.
+pub fn texture(h: usize, w: usize, seed: u64) -> Image {
+    let mut img = Image::new(h, w);
+    let mut state = seed;
+    for i in 0..h * w {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        img.data[i] = ((state >> 33) & 0xFF) as u8;
+    }
+    img
+}
+
+/// Binary PGM (P5) writer.
+pub fn write_pgm(path: &Path, img: &Image) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.w, img.h)?;
+    f.write_all(&img.data)?;
+    Ok(())
+}
+
+/// Binary PGM (P5) reader.
+pub fn read_pgm(path: &Path) -> std::io::Result<Image> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    parse_pgm(&buf).ok_or_else(|| std::io::Error::new(
+        std::io::ErrorKind::InvalidData, format!("bad PGM: {}", path.display())))
+}
+
+fn parse_pgm(buf: &[u8]) -> Option<Image> {
+    // P5\n<w> <h>\n255\n<data> with optional comment lines
+    let mut pos = 0usize;
+    let mut tokens = Vec::new();
+    while tokens.len() < 4 && pos < buf.len() {
+        // skip whitespace
+        while pos < buf.len() && buf[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if pos < buf.len() && buf[pos] == b'#' {
+            while pos < buf.len() && buf[pos] != b'\n' {
+                pos += 1;
+            }
+            continue;
+        }
+        let start = pos;
+        while pos < buf.len() && !buf[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        tokens.push(&buf[start..pos]);
+    }
+    if tokens.len() < 4 || tokens[0] != b"P5" {
+        return None;
+    }
+    let w: usize = std::str::from_utf8(tokens[1]).ok()?.parse().ok()?;
+    let h: usize = std::str::from_utf8(tokens[2]).ok()?.parse().ok()?;
+    if tokens[3] != b"255" {
+        return None;
+    }
+    pos += 1; // single whitespace after maxval
+    let data = buf.get(pos..pos + h * w)?.to_vec();
+    Some(Image { h, w, data })
+}
+
+/// Peak signal-to-noise ratio in dB against a 255 peak. `f64::INFINITY`
+/// for identical inputs (the paper reports this as "Inf"/ideal).
+pub fn psnr(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mse: f64 = a.iter().zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>() / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+/// Global (single-window) SSIM — matches `compile.image.ssim`.
+pub fn ssim(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let c1 = (0.01f64 * 255.0).powi(2);
+    let c2 = (0.03f64 * 255.0).powi(2);
+    let mu_a = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mu_b = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let va = a.iter().map(|&v| (v as f64 - mu_a).powi(2)).sum::<f64>() / n;
+    let vb = b.iter().map(|&v| (v as f64 - mu_b).powi(2)).sum::<f64>() / n;
+    let cov = a.iter().zip(b)
+        .map(|(&x, &y)| (x as f64 - mu_a) * (y as f64 - mu_b))
+        .sum::<f64>() / n;
+    ((2.0 * mu_a * mu_b + c1) * (2.0 * cov + c2))
+        / ((mu_a * mu_a + mu_b * mu_b + c1) * (va + vb + c2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_is_deterministic_and_structured() {
+        let a = scene(64, 64);
+        let b = scene(64, 64);
+        assert_eq!(a, b);
+        // border
+        assert_eq!(a.at(0, 0), 8);
+        assert_eq!(a.at(63, 63), 8);
+        // checkerboard region exists
+        assert!(a.data.iter().any(|&v| v == 224));
+        assert!(a.data.iter().any(|&v| v == 32));
+    }
+
+    #[test]
+    fn texture_reproducible() {
+        assert_eq!(texture(8, 8, 1234), texture(8, 8, 1234));
+        assert_ne!(texture(8, 8, 1234).data, texture(8, 8, 999).data);
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = scene(32, 48);
+        let dir = std::env::temp_dir().join("axsys_test_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        write_pgm(&p, &img).unwrap();
+        let back = read_pgm(&p).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn psnr_ssim_identities() {
+        let img = scene(32, 32);
+        assert!(psnr(&img.data, &img.data).is_infinite());
+        assert!((ssim(&img.data, &img.data) - 1.0).abs() < 1e-12);
+        let mut noisy = img.data.clone();
+        for (i, v) in noisy.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v = v.saturating_add(10);
+            }
+        }
+        let p = psnr(&img.data, &noisy);
+        assert!(p > 20.0 && p < 60.0, "{p}");
+        assert!(ssim(&img.data, &noisy) < 1.0);
+    }
+}

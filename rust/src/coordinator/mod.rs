@@ -1,0 +1,562 @@
+//! GEMM request coordinator — the serving layer of the stack.
+//!
+//! Arbitrary integer GEMM requests are tiled to the systolic array's
+//! output geometry, queued with backpressure, executed by a worker pool
+//! (std threads + channels; each worker owns its device — a cycle-accurate
+//! SA simulator, the fast word-level model, or a PJRT executable running
+//! the AOT `axmm_b16` artifact), and reassembled in submission-independent
+//! order. Results are deterministic regardless of worker count or
+//! batching (tested).
+//!
+//! PJRT note: tiles streamed through `axmm_b16` carry K in chunks of 8
+//! whose partial results are summed outside the PE; for k = 0 this is
+//! bit-identical to the monolithic array, for k > 0 it is the "chunked
+//! accumulation" deployment mode (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::pe::word::{matmul, PeConfig};
+use crate::runtime::{Runtime, TensorI32};
+use crate::systolic::{SaStats, Systolic};
+use crate::Family;
+
+/// Which device each worker instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Fast word-level functional model.
+    Word,
+    /// Cycle-accurate systolic-array simulator (tracks cycles/toggles).
+    Systolic,
+    /// PJRT CPU execution of the AOT `axmm_b16` artifact.
+    Pjrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub backend: BackendKind,
+    /// PE configuration (family + width); the request's `k` overrides
+    /// `pe.k` per submission.
+    pub family: Family,
+    pub n_bits: u32,
+    /// Systolic tile geometry (square).
+    pub sa_size: usize,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+    /// Max tiles a worker pulls per batch.
+    pub batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            backend: BackendKind::Word,
+            family: Family::Proposed,
+            n_bits: 8,
+            sa_size: 8,
+            queue_depth: 256,
+            batch: 16,
+        }
+    }
+}
+
+/// One GEMM request: `C(m x nn) = A(m x kk) @ B(kk x nn)` at level `k`.
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+    pub m: usize,
+    pub kk: usize,
+    pub nn: usize,
+    pub k: u32,
+}
+
+/// Completed response.
+#[derive(Clone, Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub out: Vec<i64>,
+    pub m: usize,
+    pub nn: usize,
+    pub latency_us: f64,
+    pub tiles: u64,
+    pub sa_stats: SaStats,
+}
+
+struct Pending {
+    out: Vec<i64>,
+    m: usize,
+    nn: usize,
+    remaining: usize,
+    t_submit: Instant,
+    stats: SaStats,
+    done: Option<GemmResponse>,
+}
+
+struct TileJob {
+    req_id: u64,
+    /// output tile origin
+    ti: usize,
+    tj: usize,
+    th: usize,
+    tw: usize,
+    /// row-major panels: a is th x kk, b is kk x tw
+    a_panel: Vec<i64>,
+    b_panel: Vec<i64>,
+    kk: usize,
+    k: u32,
+}
+
+type Shared = Arc<(Mutex<HashMap<u64, Pending>>, Condvar)>;
+
+/// Aggregate service statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub tiles: u64,
+    pub total_latency_us: f64,
+    pub max_latency_us: f64,
+    pub sim_cycles: u64,
+    pub sim_macs: u64,
+    pub sim_toggles: u64,
+}
+
+/// The coordinator: tiler + bounded queue + worker pool + reassembly.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    tx: Option<SyncSender<TileJob>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Shared,
+    next_id: AtomicU64,
+    stats: Arc<Mutex<ServiceStats>>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = sync_channel::<TileJob>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let shared: Shared = Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            let stats = stats.clone();
+            let wcfg = cfg.clone();
+            workers.push(std::thread::Builder::new()
+                .name(format!("axsys-worker-{wid}"))
+                .spawn(move || worker_loop(wcfg, rx, shared, stats))
+                .expect("spawn worker"));
+        }
+        Coordinator { cfg, tx: Some(tx), workers, shared,
+                      next_id: AtomicU64::new(1), stats }
+    }
+
+    /// Submit a request; blocks only when the tile queue is full
+    /// (backpressure). Returns the request id.
+    pub fn submit(&self, req: GemmRequest) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let sa = self.cfg.sa_size;
+        let (m, kk, nn) = (req.m, req.kk, req.nn);
+        assert_eq!(req.a.len(), m * kk, "A shape");
+        assert_eq!(req.b.len(), kk * nn, "B shape");
+        let tiles_m = m.div_ceil(sa);
+        let tiles_n = nn.div_ceil(sa);
+        {
+            let (lock, _) = &*self.shared;
+            lock.lock().unwrap().insert(id, Pending {
+                out: vec![0; m * nn],
+                m,
+                nn,
+                remaining: tiles_m * tiles_n,
+                t_submit: Instant::now(),
+                stats: SaStats::default(),
+                done: None,
+            });
+        }
+        let tx = self.tx.as_ref().expect("coordinator shut down");
+        for bi in 0..tiles_m {
+            for bj in 0..tiles_n {
+                let ti = bi * sa;
+                let tj = bj * sa;
+                let th = (m - ti).min(sa);
+                let tw = (nn - tj).min(sa);
+                let mut a_panel = vec![0i64; th * kk];
+                for i in 0..th {
+                    a_panel[i * kk..(i + 1) * kk]
+                        .copy_from_slice(&req.a[(ti + i) * kk..(ti + i + 1) * kk]);
+                }
+                let mut b_panel = vec![0i64; kk * tw];
+                for t in 0..kk {
+                    for j in 0..tw {
+                        b_panel[t * tw + j] = req.b[t * nn + tj + j];
+                    }
+                }
+                let mut job = TileJob { req_id: id, ti, tj, th, tw,
+                                        a_panel, b_panel, kk, k: req.k };
+                // blocking send = backpressure
+                loop {
+                    match tx.try_send(job) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(j)) => {
+                            job = j;
+                            std::thread::yield_now();
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            panic!("worker pool gone");
+                        }
+                    }
+                }
+            }
+        }
+        id
+    }
+
+    /// Block until a request completes and take its response.
+    pub fn wait(&self, id: u64) -> GemmResponse {
+        let (lock, cvar) = &*self.shared;
+        let mut map = lock.lock().unwrap();
+        loop {
+            if let Some(p) = map.get_mut(&id) {
+                if let Some(resp) = p.done.take() {
+                    map.remove(&id);
+                    return resp;
+                }
+            } else {
+                panic!("unknown request {id}");
+            }
+            map = cvar.wait(map).unwrap();
+        }
+    }
+
+    /// Submit and wait (simple synchronous call).
+    pub fn call(&self, req: GemmRequest) -> GemmResponse {
+        let id = self.submit(req);
+        self.wait(id)
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+enum Device {
+    Word(PeConfig),
+    Systolic(Box<Systolic>),
+    Pjrt {
+        rt: Runtime,
+        exe: std::sync::Arc<crate::runtime::Executable>,
+    },
+}
+
+fn make_device(cfg: &CoordinatorConfig) -> Device {
+    match cfg.backend {
+        BackendKind::Word => {
+            Device::Word(PeConfig::new(cfg.n_bits, true, cfg.family, 0))
+        }
+        BackendKind::Systolic => {
+            let pc = PeConfig::new(cfg.n_bits, true, cfg.family, 0);
+            Device::Systolic(Box::new(Systolic::square(pc, cfg.sa_size)))
+        }
+        BackendKind::Pjrt => {
+            let rt = Runtime::new(&Runtime::default_artifacts_dir())
+                .expect("PJRT runtime");
+            let exe = rt.load("axmm_b16").expect("axmm_b16 artifact");
+            Device::Pjrt { rt, exe }
+        }
+    }
+}
+
+fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
+               shared: Shared, stats: Arc<Mutex<ServiceStats>>) {
+    let mut device = make_device(&cfg);
+    loop {
+        // pull a batch (first blocks, rest opportunistic)
+        let mut batch = Vec::with_capacity(cfg.batch);
+        {
+            let rxl = rx.lock().unwrap();
+            match rxl.recv() {
+                Ok(job) => batch.push(job),
+                Err(_) => return, // queue closed
+            }
+            while batch.len() < cfg.batch {
+                match rxl.try_recv() {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break,
+                }
+            }
+        }
+        let results = execute_batch(&cfg, &mut device, &batch);
+        // commit results
+        let (lock, cvar) = &*shared;
+        let mut map = lock.lock().unwrap();
+        for (job, (tile, tstats)) in batch.iter().zip(results) {
+            let p = map.get_mut(&job.req_id).expect("pending entry");
+            for i in 0..job.th {
+                for j in 0..job.tw {
+                    p.out[(job.ti + i) * p.nn + job.tj + j] = tile[i * job.tw + j];
+                }
+            }
+            p.stats.merge(&tstats);
+            p.remaining -= 1;
+            if p.remaining == 0 {
+                let latency_us = p.t_submit.elapsed().as_secs_f64() * 1e6;
+                let resp = GemmResponse {
+                    id: job.req_id,
+                    out: std::mem::take(&mut p.out),
+                    m: p.m,
+                    nn: p.nn,
+                    latency_us,
+                    tiles: p.stats.tiles.max(1),
+                    sa_stats: p.stats,
+                };
+                let mut s = stats.lock().unwrap();
+                s.requests += 1;
+                s.tiles += resp.sa_stats.tiles.max(1);
+                s.total_latency_us += latency_us;
+                s.max_latency_us = s.max_latency_us.max(latency_us);
+                s.sim_cycles += resp.sa_stats.total_cycles();
+                s.sim_macs += resp.sa_stats.macs;
+                s.sim_toggles += resp.sa_stats.toggles;
+                drop(s);
+                p.done = Some(resp);
+                cvar.notify_all();
+            }
+        }
+    }
+}
+
+fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
+                 batch: &[TileJob]) -> Vec<(Vec<i64>, SaStats)> {
+    match device {
+        Device::Word(pc) => batch.iter().map(|job| {
+            let mut pc2 = *pc;
+            pc2.k = job.k;
+            let out = matmul(&pc2, &job.a_panel, &job.b_panel,
+                             job.th, job.kk, job.tw);
+            (out, SaStats { tiles: 1, macs: (job.th * job.kk * job.tw) as u64,
+                            ..Default::default() })
+        }).collect(),
+        Device::Systolic(sa) => batch.iter().map(|job| {
+            let mut pc = sa.cfg;
+            pc.k = job.k;
+            if pc.k != sa.cfg.k {
+                **sa = Systolic::square(pc, cfg.sa_size);
+            }
+            sa.gemm(&job.a_panel, &job.b_panel, job.th, job.kk, job.tw)
+        }).collect(),
+        Device::Pjrt { rt, exe } => execute_batch_pjrt(rt, exe, batch),
+    }
+}
+
+/// Execute tiles on the AOT `axmm_b16` artifact: (16, 8, 8) @ (16, 8, 8)
+/// per call, K split into chunks of 8 with outside summation.
+fn execute_batch_pjrt(rt: &Runtime, exe: &crate::runtime::Executable,
+                      batch: &[TileJob]) -> Vec<(Vec<i64>, SaStats)> {
+    const B: usize = 16;
+    const T: usize = 8;
+    // flatten every (job, k-chunk) pair into slots
+    struct Slot {
+        job_idx: usize,
+    }
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut a_buf: Vec<i32> = Vec::new();
+    let mut b_buf: Vec<i32> = Vec::new();
+    let mut acc: Vec<Vec<i64>> = batch.iter()
+        .map(|_| vec![0i64; T * T])
+        .collect();
+    let mut k_level = 0i32;
+    for (ji, job) in batch.iter().enumerate() {
+        k_level = job.k as i32; // homogeneous within a batch in practice
+        let chunks = job.kk.div_ceil(T);
+        for c in 0..chunks {
+            slots.push(Slot { job_idx: ji });
+            // A chunk: T x T (zero-padded)
+            for i in 0..T {
+                for t in 0..T {
+                    let kidx = c * T + t;
+                    let v = if i < job.th && kidx < job.kk {
+                        job.a_panel[i * job.kk + kidx] as i32
+                    } else { 0 };
+                    a_buf.push(v);
+                }
+            }
+            for t in 0..T {
+                for j in 0..T {
+                    let kidx = c * T + t;
+                    let v = if j < job.tw && kidx < job.kk {
+                        job.b_panel[kidx * job.tw + j] as i32
+                    } else { 0 };
+                    b_buf.push(v);
+                }
+            }
+        }
+    }
+    // run in groups of B slots
+    let mut s = 0;
+    while s < slots.len() {
+        let g = (slots.len() - s).min(B);
+        let mut a_in = vec![0i32; B * T * T];
+        let mut b_in = vec![0i32; B * T * T];
+        a_in[..g * T * T].copy_from_slice(&a_buf[s * T * T..(s + g) * T * T]);
+        b_in[..g * T * T].copy_from_slice(&b_buf[s * T * T..(s + g) * T * T]);
+        let outs = rt.execute_i32(exe, &[
+            TensorI32::new(vec![B, T, T], a_in),
+            TensorI32::new(vec![B, T, T], b_in),
+            TensorI32::scalar1(k_level),
+        ]).expect("pjrt execute");
+        let out = &outs[0];
+        for gi in 0..g {
+            let slot = &slots[s + gi];
+            for e in 0..T * T {
+                acc[slot.job_idx][e] += out.data[gi * T * T + e] as i64;
+            }
+        }
+        s += g;
+    }
+    batch.iter().enumerate().map(|(ji, job)| {
+        let mut tile = vec![0i64; job.th * job.tw];
+        for i in 0..job.th {
+            for j in 0..job.tw {
+                tile[i * job.tw + j] = acc[ji][i * T + j];
+            }
+        }
+        (tile, SaStats { tiles: 1, macs: (job.th * job.kk * job.tw) as u64,
+                         ..Default::default() })
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ints(seed: u64, len: usize) -> Vec<i64> {
+        let mut s = seed | 1;
+        (0..len).map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as i64 & 255) - 128
+        }).collect()
+    }
+
+    fn exact(a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize) -> Vec<i64> {
+        let mut out = vec![0i64; m * nn];
+        for i in 0..m {
+            for j in 0..nn {
+                out[i * nn + j] = (0..kk).map(|t| a[i * kk + t] * b[t * nn + j]).sum();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exact_requests_match_integer_gemm() {
+        for backend in [BackendKind::Word, BackendKind::Systolic] {
+            let c = Coordinator::new(CoordinatorConfig {
+                backend, workers: 3, ..Default::default()
+            });
+            let (m, kk, nn) = (20, 16, 24);
+            let a = ints(1, m * kk);
+            let b = ints(2, kk * nn);
+            let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                            m, kk, nn, k: 0 });
+            assert_eq!(resp.out, exact(&a, &b, m, kk, nn), "{backend:?}");
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (m, kk, nn) = (33, 10, 17);
+        let a = ints(3, m * kk);
+        let b = ints(4, kk * nn);
+        let mut results = Vec::new();
+        for workers in [1usize, 2, 7] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers, backend: BackendKind::Word, ..Default::default()
+            });
+            let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                            m, kk, nn, k: 5 });
+            results.push(resp.out);
+            c.shutdown();
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0], results[2]);
+    }
+
+    #[test]
+    fn concurrent_requests_complete() {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend: BackendKind::Word, ..Default::default()
+        });
+        let mut ids = Vec::new();
+        for r in 0..12u64 {
+            let (m, kk, nn) = (8 + r as usize, 8, 9 + r as usize);
+            ids.push((r, c.submit(GemmRequest {
+                a: ints(r * 2 + 1, m * kk),
+                b: ints(r * 2 + 2, kk * nn),
+                m, kk, nn, k: (r % 8) as u32,
+            })));
+        }
+        for (_, id) in ids {
+            let resp = c.wait(id);
+            assert!(!resp.out.is_empty());
+        }
+        let s = c.stats();
+        assert_eq!(s.requests, 12);
+        assert!(s.tiles >= 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn systolic_backend_reports_cycles() {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2, backend: BackendKind::Systolic, ..Default::default()
+        });
+        let (m, kk, nn) = (16, 8, 16);
+        let resp = c.call(GemmRequest {
+            a: ints(5, m * kk), b: ints(6, kk * nn), m, kk, nn, k: 0,
+        });
+        assert!(resp.sa_stats.total_cycles() > 0);
+        assert!(resp.sa_stats.macs > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn approximate_requests_route_per_request_k() {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2, backend: BackendKind::Word, ..Default::default()
+        });
+        let (m, kk, nn) = (8, 8, 8);
+        let a = ints(7, m * kk);
+        let b = ints(8, kk * nn);
+        let r0 = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 0 });
+        let r7 = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 7 });
+        assert_eq!(r0.out, exact(&a, &b, m, kk, nn));
+        assert_ne!(r0.out, r7.out, "k=7 must differ from exact");
+        c.shutdown();
+    }
+}

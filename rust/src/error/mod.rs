@@ -1,0 +1,213 @@
+//! Error-metric engines: ED, MED, NMED, MRED (Liang/Han/Lombardi \[16\]).
+//!
+//! The paper evaluates 8-bit PEs over all 65 536 operand pairs (c = 0) —
+//! `exhaustive_metrics` reproduces that; `random_metrics` extends to
+//! accumulating MAC chains where the carry-save state interacts with the
+//! approximate columns.
+
+use crate::pe::word::{mac_step_planned, MacPlan, PeConfig};
+use crate::Family;
+
+/// Summary error metrics for one design point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorMetrics {
+    /// Mean error distance E\[|approx - exact|\].
+    pub med: f64,
+    /// MED normalized by the maximum output magnitude.
+    pub nmed: f64,
+    /// Mean relative error distance E\[|approx-exact| / |exact|\] over
+    /// non-zero exact outputs.
+    pub mred: f64,
+    /// Worst-case |ED| seen.
+    pub max_ed: u64,
+    /// Error rate: fraction of inputs with any deviation.
+    pub error_rate: f64,
+}
+
+/// Largest |product| used for NMED normalization.
+pub fn max_product(n: u32, signed: bool) -> f64 {
+    if signed {
+        // |(-2^(N-1)) * (-2^(N-1))| = 2^(2N-2)
+        (1u64 << (2 * n - 2)) as f64
+    } else {
+        let m = (1u64 << n) - 1;
+        (m * m) as f64
+    }
+}
+
+/// Exhaustive sweep over all operand pairs of one multiply (c = 0) —
+/// the paper's Table V setting. O(4^N): instant for N <= 8.
+pub fn exhaustive_metrics(cfg: &PeConfig) -> ErrorMetrics {
+    let n = cfg.n;
+    let (lo, hi): (i64, i64) = if cfg.signed {
+        (-(1i64 << (n - 1)), 1i64 << (n - 1))
+    } else {
+        (0, 1i64 << n)
+    };
+    let mut sed = 0f64;
+    let mut sred = 0f64;
+    let mut nz = 0u64;
+    let mut errs = 0u64;
+    let mut max_ed = 0u64;
+    let total = ((hi - lo) * (hi - lo)) as f64;
+    let plan = MacPlan::new(cfg);
+    for a in lo..hi {
+        for b in lo..hi {
+            let (s, k) = mac_step_planned(&plan, cfg.encode(a), cfg.encode(b), 0, 0);
+            let y = cfg.decode(s.wrapping_add(k) & cfg.word_mask());
+            let exact = a * b;
+            let ed = (y - exact).unsigned_abs();
+            if ed > 0 {
+                errs += 1;
+            }
+            max_ed = max_ed.max(ed);
+            sed += ed as f64;
+            if exact != 0 {
+                sred += ed as f64 / exact.abs() as f64;
+                nz += 1;
+            }
+        }
+    }
+    let med = sed / total;
+    ErrorMetrics {
+        med,
+        nmed: med / max_product(n, cfg.signed),
+        mred: if nz > 0 { sred / nz as f64 } else { 0.0 },
+        max_ed,
+        error_rate: errs as f64 / total,
+    }
+}
+
+/// Randomized sweep over accumulating dot products of length `chain`:
+/// measures how the approximate carry-save state behaves under real GEMM
+/// accumulation (not covered by the single-MAC exhaustive sweep).
+pub fn chained_metrics(cfg: &PeConfig, chain: usize, samples: usize,
+                       seed: u64) -> ErrorMetrics {
+    let mut state = seed | 1;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let half = 1i64 << (cfg.n - 1);
+    let mut sed = 0f64;
+    let mut sred = 0f64;
+    let mut nz = 0u64;
+    let mut errs = 0u64;
+    let mut max_ed = 0u64;
+    let plan = MacPlan::new(cfg);
+    for _ in 0..samples {
+        let mut s = 0u64;
+        let mut k = 0u64;
+        let mut exact = 0i64;
+        for _ in 0..chain {
+            let a = if cfg.signed {
+                (rnd() as i64 & (2 * half - 1)) - half
+            } else {
+                rnd() as i64 & (2 * half - 1)
+            };
+            let b = if cfg.signed {
+                (rnd() as i64 & (2 * half - 1)) - half
+            } else {
+                rnd() as i64 & (2 * half - 1)
+            };
+            let (s2, k2) = mac_step_planned(&plan, cfg.encode(a), cfg.encode(b), s, k);
+            s = s2;
+            k = k2;
+            exact += a * b;
+        }
+        let y = cfg.decode(s.wrapping_add(k) & cfg.word_mask());
+        let ed = (y - exact).unsigned_abs();
+        if ed > 0 {
+            errs += 1;
+        }
+        max_ed = max_ed.max(ed);
+        sed += ed as f64;
+        if exact != 0 {
+            sred += ed as f64 / exact.abs() as f64;
+            nz += 1;
+        }
+    }
+    let med = sed / samples as f64;
+    ErrorMetrics {
+        med,
+        nmed: med / (max_product(cfg.n, cfg.signed) * chain as f64),
+        mred: if nz > 0 { sred / nz as f64 } else { 0.0 },
+        max_ed,
+        error_rate: errs as f64 / samples as f64,
+    }
+}
+
+/// Table V row: metrics for a family at a given k (8-bit by default).
+pub fn table5_row(family: Family, k: u32, n: u32)
+                  -> (ErrorMetrics, ErrorMetrics) {
+    let unsigned = exhaustive_metrics(&PeConfig::new(n, false, family, k));
+    let signed = exhaustive_metrics(&PeConfig::new(n, true, family, k));
+    (unsigned, signed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_has_zero_error() {
+        for signed in [false, true] {
+            let cfg = PeConfig::new(8, signed, Family::Proposed, 0);
+            let m = exhaustive_metrics(&cfg);
+            assert_eq!(m.med, 0.0);
+            assert_eq!(m.error_rate, 0.0);
+            assert_eq!(m.max_ed, 0);
+        }
+    }
+
+    #[test]
+    fn nmed_monotone_in_k_proposed() {
+        let mut prev = -1.0;
+        for k in [0u32, 2, 4, 5, 6, 8] {
+            let m = exhaustive_metrics(&PeConfig::new(8, true, Family::Proposed, k));
+            assert!(m.nmed >= prev, "k={k}");
+            prev = m.nmed;
+        }
+    }
+
+    #[test]
+    fn proposed_matches_paper_table5_scale() {
+        // paper signed 8-bit: k=4 -> NMED 0.0004; k=6 -> 0.0022
+        let m4 = exhaustive_metrics(&PeConfig::new(8, true, Family::Proposed, 4));
+        assert!((0.0002..0.0008).contains(&m4.nmed), "{}", m4.nmed);
+        let m6 = exhaustive_metrics(&PeConfig::new(8, true, Family::Proposed, 6));
+        assert!((0.0015..0.0030).contains(&m6.nmed), "{}", m6.nmed);
+    }
+
+    #[test]
+    fn family_ordering_matches_paper_at_k6() {
+        // paper Table V (signed, k=6): proposed < [5] < [12] < [6]
+        let nmed = |f: Family| {
+            exhaustive_metrics(&PeConfig::new(8, true, f, 6)).nmed
+        };
+        let p = nmed(Family::Proposed);
+        let d5 = nmed(Family::Axsa5);
+        let d12 = nmed(Family::Sips12);
+        let d6 = nmed(Family::Nano6);
+        assert!(p < d5, "proposed {p} !< axsa5 {d5}");
+        assert!(d5 < d12, "axsa5 {d5} !< sips12 {d12}");
+        assert!(d12 < d6, "sips12 {d12} !< nano6 {d6}");
+    }
+
+    #[test]
+    fn chained_metrics_exact_zero() {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 0);
+        let m = chained_metrics(&cfg, 16, 200, 11);
+        assert_eq!(m.med, 0.0);
+    }
+
+    #[test]
+    fn chained_error_grows_with_chain() {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 6);
+        let short = chained_metrics(&cfg, 2, 400, 5).med;
+        let long = chained_metrics(&cfg, 32, 400, 5).med;
+        assert!(long > short);
+    }
+}

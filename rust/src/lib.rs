@@ -1,0 +1,86 @@
+//! # axsys — energy-efficient exact & approximate systolic arrays
+//!
+//! Reproduction of *"Energy Efficient Exact and Approximate Systolic Array
+//! Architecture for Matrix Multiplication"* (Jaswal, Krishna, Srinivasu —
+//! VLSID 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the approximate-GEMM Pallas
+//!   kernel — bit-exact word-level emulation of the paper's PPC/NPPC grid.
+//! * **Layer 2** (`python/compile/`): DCT, Laplacian-edge and BDCN-lite
+//!   pipelines in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate): the coordinator — gate-level hardware model,
+//!   cycle-accurate systolic-array simulator, error-metric engines, the
+//!   GEMM tiling/batching service, and a PJRT runtime that executes the
+//!   AOT artifacts. Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the experiment index):
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`cells`]     | PPC/NPPC truth-table cells, exact + approximate + baselines |
+//! | [`netlist`]   | gate-level netlists: evaluation, STA, toggle power |
+//! | [`tech`]      | 90 nm-class standard-cell library + calibration |
+//! | [`pe`]        | word-level PE functional model + PE netlist builders |
+//! | [`systolic`]  | cycle-accurate output-stationary systolic array |
+//! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |
+//! | [`hw`]        | metric composition cell→PE→SA (Tables II-IV, Fig 8) |
+//! | [`apps`]      | DCT / edge / BDCN pipelines + image I/O + PSNR/SSIM |
+//! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`]| GEMM request router: tiler, batcher, worker pool |
+//! | [`bench`]     | tiny criterion-free measurement harness |
+
+pub mod apps;
+pub mod bench;
+pub mod cells;
+pub mod coordinator;
+pub mod error;
+pub mod hw;
+pub mod netlist;
+pub mod pe;
+pub mod runtime;
+pub mod systolic;
+pub mod tech;
+
+/// Approximate-cell families evaluated throughout the paper.
+///
+/// `Proposed` is the paper's contribution (Table I); the other three are
+/// reconstructions of the baselines it compares against (DESIGN.md §2):
+/// * `Axsa5`  — Waris et al., IEEE TC 2021 \[5\]: carry-elided compressor
+///   (exact 3-input XOR sum, carry output removed).
+/// * `Sips12` — Waris et al., SiPS 2019 \[12\]: XNOR-based inexact cell.
+/// * `Nano6`  — Chen/Lombardi, NANOARCH 2015 \[6\]: inexact cell.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Family {
+    Proposed,
+    Axsa5,
+    Sips12,
+    Nano6,
+}
+
+impl Family {
+    pub const ALL: [Family; 4] =
+        [Family::Proposed, Family::Axsa5, Family::Sips12, Family::Nano6];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Proposed => "proposed",
+            Family::Axsa5 => "axsa5",
+            Family::Sips12 => "sips12",
+            Family::Nano6 => "nano6",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Label used in the paper's tables.
+    pub fn paper_label(self) -> &'static str {
+        match self {
+            Family::Proposed => "Proposed",
+            Family::Axsa5 => "Design [5]",
+            Family::Sips12 => "Design [12]",
+            Family::Nano6 => "Design [6]",
+        }
+    }
+}

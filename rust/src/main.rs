@@ -1,0 +1,375 @@
+//! axsys CLI — leader entrypoint for the approximate systolic-array stack.
+//!
+//! Subcommands:
+//!   selftest            cells/PE/SA invariants + golden cross-check
+//!   hw-report           regenerate Tables II-IV + Figs 8-10 data
+//!   error-sweep         Table V error metrics (NMED/MRED)
+//!   dct [--k K]         DCT pipeline on the SA simulator (+ PJRT check)
+//!   edge [--k K]        Laplacian edge detection
+//!   cnn [--k K]         BDCN-lite CNN edge detection
+//!   serve [...]         run the GEMM coordinator on a synthetic workload
+
+use std::path::PathBuf;
+
+use axsys::apps::image::{psnr, scene, ssim, write_pgm};
+use axsys::apps::{dct, edge, SystolicGemm, WordGemm};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::pe::word::PeConfig;
+use axsys::pe::{Design, Signedness};
+use axsys::runtime::{read_golden_bin, read_manifest, Runtime, TensorI32};
+use axsys::Family;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "selftest" => selftest(),
+        "hw-report" => hw_report(),
+        "error-sweep" => error_sweep(),
+        "dct" => app_dct(rest),
+        "edge" => app_edge(rest),
+        "cnn" => app_cnn(rest),
+        "serve" => serve(rest),
+        "emit-verilog" => emit_verilog(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!("axsys — energy-efficient exact/approximate systolic arrays (VLSID'26 repro)");
+    println!();
+    println!("usage: axsys <command> [options]");
+    println!("  selftest                     invariants + AOT golden cross-check");
+    println!("  hw-report                    Tables II-IV + Figs 8-10 (hardware model)");
+    println!("  error-sweep                  Table V NMED/MRED sweeps");
+    println!("  dct  [--k K] [--out dir]     DCT compression pipeline");
+    println!("  edge [--k K] [--out dir]     Laplacian edge detection");
+    println!("  cnn  [--k K] [--out dir]     BDCN-lite CNN edge detection");
+    println!("  serve [--backend word|systolic|pjrt] [--workers N] [--requests R]");
+    println!("  emit-verilog [--out dir]     export every cell + PE design as Verilog");
+}
+
+fn opt(rest: &[String], name: &str) -> Option<String> {
+    rest.iter().position(|a| a == name)
+        .and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn opt_k(rest: &[String]) -> u32 {
+    opt(rest, "--k").and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+
+fn out_dir(rest: &[String]) -> PathBuf {
+    PathBuf::from(opt(rest, "--out").unwrap_or_else(|| "out".into()))
+}
+
+// -------------------------------------------------------------------
+
+fn selftest() -> i32 {
+    println!("== cells: Table I truth tables ==");
+    use axsys::cells::{error_rate, CellKind};
+    for kind in [CellKind::PropApxPpc, CellKind::PropApxNppc] {
+        let (bad, total) = error_rate(kind);
+        println!("  {:<16} error rate {}/{}", kind.name(), bad, total);
+        assert_eq!((bad, total), (5, 16));
+    }
+
+    println!("== PE: exact == a*b+c (exhaustive 4-bit, random 8/16-bit) ==");
+    for n in [4u32, 8] {
+        let cfg = PeConfig::new(n, true, Family::Proposed, 0);
+        let half = 1i64 << (n - 1);
+        for a in (-half..half).step_by(3) {
+            for b in (-half..half).step_by(5) {
+                assert_eq!(axsys::pe::word::Pe::mac_value(&cfg, a, b, 77),
+                           a * b + 77);
+            }
+        }
+        println!("  n={n} signed OK");
+    }
+
+    println!("== systolic: 3N-2 latency + exact GEMM ==");
+    let cfg = PeConfig::new(8, true, Family::Proposed, 0);
+    let mut sa = axsys::systolic::Systolic::square(cfg, 8);
+    let a: Vec<i64> = (0..64).map(|i| (i * 37 % 255) - 127).collect();
+    let b: Vec<i64> = (0..64).map(|i| (i * 53 % 255) - 127).collect();
+    let (y, st) = sa.run_tile(&a, &b, 8);
+    assert_eq!(st.cycles, 22); // 3*8-2
+    for i in 0..8 {
+        for j in 0..8 {
+            let want: i64 = (0..8).map(|t| a[i * 8 + t] * b[t * 8 + j]).sum();
+            assert_eq!(y[i * 8 + j], want);
+        }
+    }
+    println!("  8x8 OK ({} cycles)", st.cycles);
+
+    println!("== runtime: AOT golden cross-check ==");
+    match golden_check() {
+        Ok(n) => println!("  {n} golden cases OK"),
+        Err(e) => {
+            println!("  SKIPPED/FAILED: {e:#}");
+            return 1;
+        }
+    }
+    println!("selftest PASSED");
+    0
+}
+
+fn golden_check() -> anyhow::Result<usize> {
+    let dir = Runtime::default_artifacts_dir();
+    let golden = dir.join("golden");
+    let cases = read_manifest(&golden)?;
+    let rt = Runtime::new(&dir)?;
+    println!("  PJRT platform: {}", rt.platform());
+    let mut checked = 0;
+    for case in &cases {
+        let mut inputs = Vec::new();
+        for (i, shape) in case.in_shapes.iter().enumerate() {
+            let data = read_golden_bin(
+                &golden.join(format!("{}_in{i}.bin", case.case)))?;
+            inputs.push(TensorI32::new(shape.clone(), data));
+        }
+        inputs.push(TensorI32::scalar1(case.k));
+        let outs = rt.run(&case.artifact, &inputs)?;
+        for (i, shape) in case.out_shapes.iter().enumerate() {
+            let want = read_golden_bin(
+                &golden.join(format!("{}_out{i}.bin", case.case)))?;
+            anyhow::ensure!(outs[i].dims == *shape,
+                            "{}: out{i} shape {:?} != {:?}",
+                            case.case, outs[i].dims, shape);
+            anyhow::ensure!(outs[i].data == want,
+                            "{}: out{i} data mismatch", case.case);
+        }
+        checked += 1;
+    }
+    Ok(checked)
+}
+
+// -------------------------------------------------------------------
+
+fn hw_report() -> i32 {
+    use axsys::hw;
+    println!("== Table II: cell-level (area µm² / power µW / delay ps / PDP aJ) ==");
+    for row in hw::table2() {
+        let p = row.ppc;
+        let n = row.nppc;
+        println!("  {:<12} PPC {:6.2} {:5.2} {:5.0} {:7.1}   NPPC {:6.2} {:5.2} {:5.0} {:7.1}",
+                 row.label, p.area_um2, p.power_uw, p.delay_ns * 1e3,
+                 p.pdp_fj * 1e3, n.area_um2, n.power_uw, n.delay_ns * 1e3,
+                 n.pdp_fj * 1e3);
+    }
+
+    println!("== Table III: PE-level (area µm² / power µW / delay ns / PADP) ==");
+    for row in hw::table3() {
+        let fmt = |m: Option<hw::HwMetrics>| match m {
+            Some(m) => format!("{:7.1} {:6.1} {:5.2} {:8.2}",
+                               m.area_um2, m.power_uw, m.delay_ns, m.padp),
+            None => format!("{:>28}", "-"),
+        };
+        println!("  {:<22} {}b  U[{}]  S[{}]", row.label, row.n,
+                 fmt(row.unsigned), fmt(row.signed));
+    }
+
+    println!("== Table IV: SA-level @250MHz (area mm² / power mW / delay ns / PDP pJ) ==");
+    for row in hw::table4() {
+        print!("  {:<22} {}b", row.label, row.n);
+        for (size, m) in row.sizes {
+            print!("  {}x{size}: {:.4} {:.2} {:.2} {:.2}", size,
+                   m.area_um2 / 1e6, m.power_uw / 1e3, m.delay_ns,
+                   m.pdp_fj / 1e3);
+        }
+        println!();
+    }
+
+    println!("== Fig 8: savings across sizes (8-bit signed) ==");
+    for p in hw::fig8(8) {
+        println!("  {0}x{0}: area -{1:.1}%  PDP -{2:.1}%  approx-vs-[5] PDP -{3:.1}%",
+                 p.size, p.area_saving_pct, p.pdp_saving_pct,
+                 p.approx_pdp_vs_best_pct);
+    }
+    println!("== Fig 9: PDP vs NMED (k = N-1) ==");
+    for p in hw::fig9() {
+        println!("  {:<12} PDP {:8.1} fJ  NMED {:.4}", p.label, p.pdp_fj, p.nmed);
+    }
+    println!("== Fig 10: PDP & MRED vs k ==");
+    for p in hw::fig10() {
+        println!("  k={}  PDP {:8.1} fJ  MRED {:.4}", p.k, p.pdp_fj, p.mred);
+    }
+    0
+}
+
+fn error_sweep() -> i32 {
+    use axsys::error::table5_row;
+    println!("== Table V: 8-bit PE error metrics ==");
+    println!("  {:<12} {:>2} | {:>8} {:>8} | {:>8} {:>8}",
+             "design", "k", "NMED(u)", "MRED(u)", "NMED(s)", "MRED(s)");
+    for k in [2u32, 4, 5, 6, 8] {
+        let (u, s) = table5_row(Family::Proposed, k, 8);
+        println!("  {:<12} {:>2} | {:>8.4} {:>8.4} | {:>8.4} {:>8.4}",
+                 "Proposed", k, u.nmed, u.mred, s.nmed, s.mred);
+    }
+    for f in [Family::Axsa5, Family::Nano6, Family::Sips12] {
+        let (u, s) = table5_row(f, 6, 8);
+        println!("  {:<12} {:>2} | {:>8.4} {:>8.4} | {:>8.4} {:>8.4}",
+                 f.paper_label(), 6, u.nmed, u.mred, s.nmed, s.mred);
+    }
+    0
+}
+
+// -------------------------------------------------------------------
+
+fn app_dct(rest: &[String]) -> i32 {
+    let k = opt_k(rest);
+    let dir = out_dir(rest);
+    std::fs::create_dir_all(&dir).unwrap();
+    let img = scene(256, 256);
+    let mut exact = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
+    let (r_exact, _) = dct::pipeline(&mut exact, &img);
+    let mut approx = SystolicGemm::new(PeConfig::new(8, true, Family::Proposed, k), 8);
+    let (r_apx, _) = dct::pipeline(&mut approx, &img);
+    let st = approx.stats.clone();
+    println!("DCT 256x256, k={k} (systolic 8x8 backend)");
+    println!("  exact-vs-original  PSNR {:6.2} dB", psnr(&img.data, &r_exact.data));
+    println!("  approx-vs-exact    PSNR {:6.2} dB  SSIM {:.4}",
+             psnr(&r_exact.data, &r_apx.data), ssim(&r_exact.data, &r_apx.data));
+    println!("  SA: {} tiles, {} cycles, {} MACs",
+             st.tiles, st.total_cycles(), st.macs);
+    write_pgm(&dir.join("dct_input.pgm"), &img).unwrap();
+    write_pgm(&dir.join(format!("dct_recon_k{k}.pgm")), &r_apx).unwrap();
+    println!("  wrote {}/dct_recon_k{k}.pgm", dir.display());
+    0
+}
+
+fn app_edge(rest: &[String]) -> i32 {
+    let k = opt_k(rest);
+    let dir = out_dir(rest);
+    std::fs::create_dir_all(&dir).unwrap();
+    let img = scene(256, 256);
+    let mut ge = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
+    let e_exact = edge::pipeline(&mut ge, &img);
+    let mut ga = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
+    let e_apx = edge::pipeline(&mut ga, &img);
+    println!("Laplacian edge 256x256, k={k}");
+    println!("  approx-vs-exact PSNR {:6.2} dB  SSIM {:.4}",
+             psnr(&e_exact.data, &e_apx.data), ssim(&e_exact.data, &e_apx.data));
+    write_pgm(&dir.join(format!("edge_k{k}.pgm")), &e_apx).unwrap();
+    0
+}
+
+fn app_cnn(rest: &[String]) -> i32 {
+    let k = opt_k(rest);
+    let dir = out_dir(rest);
+    std::fs::create_dir_all(&dir).unwrap();
+    let weights = Runtime::default_artifacts_dir().join("bdcn_weights.txt");
+    let blocks = match axsys::apps::bdcn::load_weights(&weights) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("cannot load {}: {e:#} (run `make artifacts`)",
+                      weights.display());
+            return 1;
+        }
+    };
+    let img = scene(128, 128);
+    let e0 = axsys::apps::bdcn::forward_word(&blocks, &img, 0);
+    let ek = axsys::apps::bdcn::forward_word(&blocks, &img, k);
+    println!("BDCN-lite edge 128x128, k={k} (blocks 1-2 approx, 3-4 exact)");
+    println!("  approx-vs-exact PSNR {:6.2} dB  SSIM {:.4}",
+             psnr(&e0.data, &ek.data), ssim(&e0.data, &ek.data));
+    write_pgm(&dir.join(format!("bdcn_k{k}.pgm")), &ek).unwrap();
+    0
+}
+
+fn emit_verilog(rest: &[String]) -> i32 {
+    use axsys::cells::CellKind;
+    use axsys::netlist::verilog::to_verilog;
+    use axsys::pe::netlist_builder::{cell_netlist, pe_netlists};
+    let dir = out_dir(rest).join("verilog");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut count = 0;
+    for kind in CellKind::ALL {
+        let nl = cell_netlist(kind);
+        let path = dir.join(format!("cell_{}.v", kind.name()));
+        std::fs::write(&path, to_verilog(&nl, kind.name())).unwrap();
+        count += 1;
+    }
+    for (label, d) in [
+        ("pe_exact6_8b_signed", Design::conventional_exact(8, Signedness::Signed)),
+        ("pe_prop_exact_8b_signed", Design::proposed_exact(8, Signedness::Signed)),
+        ("pe_prop_apx_8b_signed",
+         Design::approximate_default(8, Signedness::Signed, Family::Proposed)),
+        ("pe_prop_apx_4b_signed",
+         Design::approximate_default(4, Signedness::Signed, Family::Proposed)),
+        ("pe_prop_exact_8b_unsigned",
+         Design::proposed_exact(8, Signedness::Unsigned)),
+    ] {
+        let cfg = axsys::pe::word::PeConfig::from_design(&d);
+        let nets = pe_netlists(&d, cfg.w);
+        std::fs::write(dir.join(format!("{label}.v")),
+                       to_verilog(&nets.grid, label)).unwrap();
+        std::fs::write(dir.join(format!("{label}_merge.v")),
+                       to_verilog(&nets.merge, &format!("{label}_merge"))).unwrap();
+        count += 2;
+    }
+    println!("wrote {count} Verilog modules to {}", dir.display());
+    0
+}
+
+fn serve(rest: &[String]) -> i32 {
+    let backend = match opt(rest, "--backend").as_deref() {
+        Some("systolic") => BackendKind::Systolic,
+        Some("pjrt") => BackendKind::Pjrt,
+        _ => BackendKind::Word,
+    };
+    let workers: usize = opt(rest, "--workers")
+        .and_then(|v| v.parse().ok()).unwrap_or(4);
+    let requests: usize = opt(rest, "--requests")
+        .and_then(|v| v.parse().ok()).unwrap_or(64);
+    let k = opt_k(rest);
+    println!("serve: backend={backend:?} workers={workers} requests={requests} k={k}");
+    let c = Coordinator::new(CoordinatorConfig {
+        workers, backend, ..Default::default()
+    });
+    let mut seed = 1u64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    let t0 = std::time::Instant::now();
+    let mut ids = Vec::new();
+    for _ in 0..requests {
+        let m = 8 + (rnd() % 57) as usize;
+        let kk = 8 + (rnd() % 25) as usize;
+        let nn = 8 + (rnd() % 57) as usize;
+        let a: Vec<i64> = (0..m * kk).map(|_| (rnd() as i64 & 255) - 128).collect();
+        let b: Vec<i64> = (0..kk * nn).map(|_| (rnd() as i64 & 255) - 128).collect();
+        ids.push(c.submit(GemmRequest { a, b, m, kk, nn, k }));
+    }
+    for id in ids {
+        c.wait(id);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = c.stats();
+    println!("  {} requests in {:.3}s  ({:.1} req/s, {:.1} tiles/s)",
+             s.requests, wall, s.requests as f64 / wall, s.tiles as f64 / wall);
+    println!("  latency: mean {:.1} µs  max {:.1} µs",
+             s.total_latency_us / s.requests as f64, s.max_latency_us);
+    if s.sim_cycles > 0 {
+        let d = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
+        let sa_m = axsys::hw::sa_metrics(&d, 8);
+        let energy_uj = s.sim_cycles as f64 * 4.0 * sa_m.power_uw * 1e-9;
+        println!("  simulated: {} cycles, {} MACs, est. energy {:.2} µJ @250MHz",
+                 s.sim_cycles, s.sim_macs, energy_uj);
+    }
+    c.shutdown();
+    0
+}

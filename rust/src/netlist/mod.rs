@@ -1,0 +1,349 @@
+//! Gate-level netlists: construction, levelized evaluation, static timing
+//! and toggle-activity power — the "synthesis" substrate standing in for
+//! the paper's Cadence Genus flow (DESIGN.md §2).
+//!
+//! Netlists are DAGs built in topological order (a builder can only
+//! reference already-created nets), so evaluation is a single forward
+//! pass; static timing is the longest weighted path; dynamic power is
+//! per-gate toggle counting over simulated vector streams (the same
+//! first-order `α·C·V²·f` model synthesis power tools report).
+
+pub mod verilog;
+
+use crate::tech::{self, GateKind};
+
+/// Index of a net (the output of one gate) inside a [`Netlist`].
+pub type NetId = u32;
+
+/// Sentinel for unused gate input slots.
+const NONE: NetId = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub ins: [NetId; 3],
+}
+
+/// A combinational netlist plus its sequential boundary (DFF count).
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    /// Primary inputs (order = evaluation argument order).
+    pub inputs: Vec<NetId>,
+    /// Primary outputs.
+    pub outputs: Vec<NetId>,
+    /// D-flip-flops on the sequential boundary (registers); they are not
+    /// part of the combinational graph but count for area/power.
+    pub dffs: u32,
+    pub name: String,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    fn push(&mut self, kind: GateKind, ins: [NetId; 3]) -> NetId {
+        for &i in &ins {
+            debug_assert!(i == NONE || (i as usize) < self.gates.len(),
+                          "forward reference in netlist");
+        }
+        self.gates.push(Gate { kind, ins });
+        (self.gates.len() - 1) as NetId
+    }
+
+    pub fn input(&mut self) -> NetId {
+        let id = self.push(GateKind::Input, [NONE; 3]);
+        self.inputs.push(id);
+        id
+    }
+
+    pub fn const0(&mut self) -> NetId {
+        self.push(GateKind::Const0, [NONE; 3])
+    }
+
+    pub fn const1(&mut self) -> NetId {
+        self.push(GateKind::Const1, [NONE; 3])
+    }
+
+    pub fn inv(&mut self, a: NetId) -> NetId {
+        self.push(GateKind::Inv, [a, NONE, NONE])
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::And2, [a, b, NONE])
+    }
+
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Or2, [a, b, NONE])
+    }
+
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Nand2, [a, b, NONE])
+    }
+
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Nor2, [a, b, NONE])
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Xor2, [a, b, NONE])
+    }
+
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Xnor2, [a, b, NONE])
+    }
+
+    /// Majority-of-three as a single complex gate (CMOS mirror-adder
+    /// carry stage — the optimization the proposed exact cells use).
+    pub fn maj3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.push(GateKind::Maj3, [a, b, c])
+    }
+
+    /// 3-input XOR as two cascaded XOR2 (sum stage of a full adder).
+    pub fn xor3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        let t = self.xor2(a, b);
+        self.xor2(t, c)
+    }
+
+    /// Textbook full adder from discrete gates: returns (carry, sum).
+    pub fn full_adder(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let s = self.xor3(a, b, c);
+        let t1 = self.and2(a, b);
+        let t2 = self.and2(a, c);
+        let t3 = self.and2(b, c);
+        let t4 = self.or2(t1, t2);
+        let carry = self.or2(t4, t3);
+        (carry, s)
+    }
+
+    /// Mirror full adder: XOR sum path + single MAJ3 complex-gate carry.
+    pub fn mirror_adder(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let s = self.xor3(a, b, c);
+        let carry = self.maj3(a, b, c);
+        (carry, s)
+    }
+
+    /// Half adder: returns (carry, sum).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        (self.and2(a, b), self.xor2(a, b))
+    }
+
+    pub fn mark_output(&mut self, n: NetId) {
+        self.outputs.push(n);
+    }
+
+    pub fn add_dffs(&mut self, count: u32) {
+        self.dffs += count;
+    }
+
+    pub fn gate_count(&self) -> usize {
+        self.gates.iter()
+            .filter(|g| !matches!(g.kind,
+                GateKind::Input | GateKind::Const0 | GateKind::Const1))
+            .count()
+    }
+
+    // -- evaluation ---------------------------------------------------
+
+    /// Evaluate on one input vector; `values` is scratch storage reused
+    /// across calls (resized as needed). Returns output bits.
+    pub fn eval_into(&self, inputs: &[u8], values: &mut Vec<u8>) -> Vec<u8> {
+        assert_eq!(inputs.len(), self.inputs.len(), "{}", self.name);
+        values.clear();
+        values.reserve(self.gates.len());
+        let mut in_iter = 0usize;
+        for g in &self.gates {
+            let v = match g.kind {
+                GateKind::Input => {
+                    let v = inputs[in_iter];
+                    in_iter += 1;
+                    v
+                }
+                GateKind::Const0 => 0,
+                GateKind::Const1 => 1,
+                _ => {
+                    let a = values[g.ins[0] as usize];
+                    let b = if g.ins[1] == NONE { 0 } else { values[g.ins[1] as usize] };
+                    let c = if g.ins[2] == NONE { 0 } else { values[g.ins[2] as usize] };
+                    match g.kind {
+                        GateKind::Inv => a ^ 1,
+                        GateKind::And2 => a & b,
+                        GateKind::Or2 => a | b,
+                        GateKind::Nand2 => (a & b) ^ 1,
+                        GateKind::Nor2 => (a | b) ^ 1,
+                        GateKind::Xor2 => a ^ b,
+                        GateKind::Xnor2 => a ^ b ^ 1,
+                        GateKind::Maj3 => (a & b) | (a & c) | (b & c),
+                        _ => unreachable!(),
+                    }
+                }
+            };
+            values.push(v);
+        }
+        self.outputs.iter().map(|&o| values[o as usize]).collect()
+    }
+
+    pub fn eval(&self, inputs: &[u8]) -> Vec<u8> {
+        self.eval_into(inputs, &mut Vec::new())
+    }
+
+    // -- metrics ------------------------------------------------------
+
+    /// Cell area in µm² (gates + DFFs, calibrated library).
+    pub fn area(&self) -> f64 {
+        let lib = tech::LIB;
+        self.gates.iter().map(|g| lib.area(g.kind)).sum::<f64>()
+            + self.dffs as f64 * lib.dff_area
+    }
+
+    /// Static timing: critical combinational path in ps.
+    pub fn critical_path_ps(&self) -> f64 {
+        let lib = tech::LIB;
+        let mut arr = vec![0f64; self.gates.len()];
+        let mut worst = 0f64;
+        for (i, g) in self.gates.iter().enumerate() {
+            let mut t = 0f64;
+            for &inp in &g.ins {
+                if inp != NONE {
+                    t = t.max(arr[inp as usize]);
+                }
+            }
+            arr[i] = t + lib.delay_ps(g.kind);
+            if arr[i] > worst {
+                worst = arr[i];
+            }
+        }
+        worst + lib.dff_cq_ps
+    }
+
+    /// Simulate `vectors` consecutive input vectors and return
+    /// (dynamic+leakage power in µW, total toggles).
+    ///
+    /// `period_ns` is the clock period (paper Table IV runs at 250 MHz).
+    pub fn power_uw(&self, vectors: &[Vec<u8>], period_ns: f64) -> (f64, u64) {
+        let lib = tech::LIB;
+        let mut prev: Vec<u8> = Vec::new();
+        let mut scratch = Vec::new();
+        let mut energy_fj = 0f64;
+        let mut toggles = 0u64;
+        let mut all = vec![0u8; 0];
+        for v in vectors {
+            self.eval_into(v, &mut scratch);
+            all.clear();
+            all.extend_from_slice(&scratch);
+            if !prev.is_empty() {
+                for (i, g) in self.gates.iter().enumerate() {
+                    if all[i] != prev[i] {
+                        toggles += 1;
+                        energy_fj += lib.energy_fj(g.kind);
+                    }
+                }
+                // register clock + data activity (approx: half the DFFs
+                // toggle per cycle on random data)
+                energy_fj += self.dffs as f64 * lib.dff_energy_fj * 0.5;
+            }
+            std::mem::swap(&mut prev, &mut all);
+        }
+        let cycles = (vectors.len().max(2) - 1) as f64;
+        let leak_uw = self.gates.iter().map(|g| lib.leak_nw(g.kind)).sum::<f64>()
+            / 1000.0
+            + self.dffs as f64 * lib.dff_leak_nw / 1000.0;
+        // 1 fJ per 1 ns == 1e-15 J / 1e-9 s == 1e-6 W == 1 µW
+        let dyn_uw = energy_fj / (cycles * period_ns);
+        (dyn_uw + leak_uw, toggles)
+    }
+}
+
+/// Deterministic xorshift vector generator for activity simulation.
+pub fn random_vectors(n_inputs: usize, count: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut v = Vec::with_capacity(n_inputs);
+        for _ in 0..n_inputs {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            v.push((s & 1) as u8);
+        }
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut nl = Netlist::new("fa");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let (carry, sum) = nl.full_adder(a, b, c);
+        nl.mark_output(carry);
+        nl.mark_output(sum);
+        for v in 0..8u8 {
+            let bits = [(v >> 2) & 1, (v >> 1) & 1, v & 1];
+            let out = nl.eval(&bits);
+            let want = bits[0] + bits[1] + bits[2];
+            assert_eq!(out[0] * 2 + out[1], want);
+        }
+    }
+
+    #[test]
+    fn mirror_adder_equals_full_adder() {
+        let mut nl = Netlist::new("ma");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let (carry, sum) = nl.mirror_adder(a, b, c);
+        nl.mark_output(carry);
+        nl.mark_output(sum);
+        for v in 0..8u8 {
+            let bits = [(v >> 2) & 1, (v >> 1) & 1, v & 1];
+            let out = nl.eval(&bits);
+            assert_eq!(out[0] * 2 + out[1], bits.iter().sum::<u8>());
+        }
+    }
+
+    #[test]
+    fn mirror_adder_is_smaller_and_faster() {
+        let mut fa = Netlist::new("fa");
+        let i: Vec<_> = (0..3).map(|_| fa.input()).collect();
+        let (c, s) = fa.full_adder(i[0], i[1], i[2]);
+        fa.mark_output(c);
+        fa.mark_output(s);
+        let mut ma = Netlist::new("ma");
+        let i: Vec<_> = (0..3).map(|_| ma.input()).collect();
+        let (c, s) = ma.mirror_adder(i[0], i[1], i[2]);
+        ma.mark_output(c);
+        ma.mark_output(s);
+        assert!(ma.area() < fa.area());
+        assert!(ma.critical_path_ps() <= fa.critical_path_ps());
+    }
+
+    #[test]
+    fn power_positive_and_deterministic() {
+        let mut nl = Netlist::new("x");
+        let a = nl.input();
+        let b = nl.input();
+        let (c, s) = nl.half_adder(a, b);
+        nl.mark_output(c);
+        nl.mark_output(s);
+        let vecs = random_vectors(2, 200, 7);
+        let (p1, t1) = nl.power_uw(&vecs, 4.0);
+        let (p2, t2) = nl.power_uw(&vecs, 4.0);
+        assert!(p1 > 0.0);
+        assert_eq!(t1, t2);
+        assert!((p1 - p2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_vectors_deterministic() {
+        assert_eq!(random_vectors(8, 10, 1), random_vectors(8, 10, 1));
+        assert_ne!(random_vectors(8, 10, 1), random_vectors(8, 10, 2));
+    }
+}

@@ -1,0 +1,63 @@
+//! Processing-element models.
+//!
+//! * [`word`] — the fast word-level functional model (the hot path): one
+//!   fused MAC = N bit-plane row updates on a `u64` carry-save accumulator.
+//!   Bit-identical to `python/compile/kernels/ref.py` (tested against the
+//!   exported goldens) and to the gate-level netlists in [`netlist_builder`].
+//! * [`netlist_builder`] — constructs the full gate-level netlist of each
+//!   PE design (grid of PPC/NPPC cells + Kogge-Stone merge + operand
+//!   registers) for the hardware model in [`crate::hw`].
+
+pub mod netlist_builder;
+pub mod word;
+
+pub use word::{Pe, PeConfig};
+
+use crate::Family;
+
+/// Which arithmetic a PE implements.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Signedness {
+    /// All-PPC grid (paper Fig. 6a).
+    Unsigned,
+    /// Baugh-Wooley grid with NPPC cells on the sign row/column (Fig. 5/6b).
+    Signed,
+}
+
+/// A PE *design point* as it appears in the paper's tables: an operand
+/// width, a signedness, a cell family and an approximation level.
+#[derive(Clone, Copy, Debug)]
+pub struct Design {
+    pub n: u32,
+    pub signed: Signedness,
+    pub family: Family,
+    /// Number of approximate least-significant columns (0 = exact PE).
+    pub k: u32,
+    /// True for the paper's optimized exact cells ("Proposed" exact rows);
+    /// false for the conventional exact cells of \[6\]. Only affects the
+    /// hardware model — exact cells are functionally identical.
+    pub optimized_exact: bool,
+}
+
+impl Design {
+    pub fn proposed_exact(n: u32, signed: Signedness) -> Self {
+        Design { n, signed, family: Family::Proposed, k: 0, optimized_exact: true }
+    }
+
+    pub fn conventional_exact(n: u32, signed: Signedness) -> Self {
+        Design { n, signed, family: Family::Proposed, k: 0, optimized_exact: false }
+    }
+
+    pub fn approximate(n: u32, signed: Signedness, family: Family, k: u32) -> Self {
+        Design { n, signed, family, k, optimized_exact: true }
+    }
+
+    /// The paper's default approximation level k = N - 1.
+    pub fn approximate_default(n: u32, signed: Signedness, family: Family) -> Self {
+        Self::approximate(n, signed, family, n - 1)
+    }
+
+    pub fn is_signed(&self) -> bool {
+        self.signed == Signedness::Signed
+    }
+}

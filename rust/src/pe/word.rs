@@ -1,0 +1,561 @@
+//! Word-level PE functional model — the system's hot path.
+//!
+//! One fused MAC folds the N×N Baugh-Wooley partial-product grid into a
+//! W-bit carry-save accumulator `(s, k)` using N bit-plane row updates of
+//! full-width bitwise ops (the same formulation the L1 Pallas kernel uses
+//! on uint32 lanes; here on `u64`, so N up to 16 / W up to 48).
+//!
+//! Row `j` is a 3:2 compressor layer over bit span `[j, j+N)`:
+//!   * exact cells: `S' = X^S^K`, `C = maj(X,S,K)` (X carries the NPPC
+//!     complement, so PPC and NPPC share one expression);
+//!   * approximate cells (`w < k`) apply the family's Table-I semantics;
+//!   * bits outside the span pass through; carries escaping the span top
+//!     are merged with a value-preserving add (the PE's merge logic —
+//!     always exact, always above column N >= k).
+//!
+//! Invariant (tested exhaustively at N=4, randomized at N=8/16): with
+//! `k == 0` the resolved accumulator equals `c + Σ a·b  (mod 2^W)`.
+
+use super::{Design, Signedness};
+use crate::Family;
+
+/// Static configuration of one PE instance.
+#[derive(Clone, Copy, Debug)]
+pub struct PeConfig {
+    pub n: u32,
+    /// Accumulator width in bits (<= 48). Default `2n + 8`.
+    pub w: u32,
+    pub signed: bool,
+    pub family: Family,
+    pub k: u32,
+}
+
+impl PeConfig {
+    pub fn new(n: u32, signed: bool, family: Family, k: u32) -> Self {
+        PeConfig { n, w: 2 * n + 8, signed, family, k }
+    }
+
+    pub fn from_design(d: &Design) -> Self {
+        Self::new(d.n, d.signed == Signedness::Signed, d.family, d.k)
+    }
+
+    #[inline]
+    pub fn word_mask(&self) -> u64 {
+        (1u64 << self.w) - 1
+    }
+
+    /// Baugh-Wooley correction constant at width W (DESIGN.md §1):
+    /// `+2^N` plus ones on bits `[2N-1, W)` (the wrapped `-2^(2N-1)`).
+    #[inline]
+    pub fn bw_const(&self) -> u64 {
+        let n = self.n;
+        let w = self.w;
+        ((1u64 << n) | (((1u64 << (w - (2 * n - 1))) - 1) << (2 * n - 1)))
+            & self.word_mask()
+    }
+
+    /// NPPC (complemented-product) positions of row `j`, as absolute bit
+    /// weights: `i == N-1` for j < N-1, `i in 0..N-1` for the last row.
+    #[inline]
+    pub fn nppc_mask(&self, j: u32) -> u64 {
+        if !self.signed {
+            return 0;
+        }
+        let n = self.n;
+        if j < n - 1 {
+            1u64 << (n - 1 + j)
+        } else {
+            ((1u64 << (n - 1)) - 1) << j
+        }
+    }
+
+    /// Encode a signed/unsigned integer operand to its N-bit pattern.
+    #[inline]
+    pub fn encode(&self, v: i64) -> u64 {
+        (v as u64) & ((1u64 << self.n) - 1)
+    }
+
+    /// Sign-extend (or zero-extend) a W-bit accumulator value.
+    #[inline]
+    pub fn decode(&self, v: u64) -> i64 {
+        let v = v & self.word_mask();
+        if self.signed && (v >> (self.w - 1)) & 1 == 1 {
+            (v | !self.word_mask()) as i64
+        } else {
+            v as i64
+        }
+    }
+}
+
+/// One processing element: carry-save accumulator + the cell grid.
+#[derive(Clone, Debug)]
+pub struct Pe {
+    pub cfg: PeConfig,
+    plan: MacPlan,
+    /// Sum rail of the carry-save accumulator.
+    pub s: u64,
+    /// Carry rail.
+    pub k: u64,
+    /// Toggle count (Hamming distance of successive states) — the activity
+    /// proxy used by the energy model.
+    pub toggles: u64,
+    pub macs: u64,
+}
+
+impl Pe {
+    pub fn new(cfg: PeConfig) -> Self {
+        Pe { cfg, plan: MacPlan::new(&cfg), s: 0, k: 0, toggles: 0, macs: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.s = 0;
+        self.k = 0;
+    }
+
+    /// Fused MAC: fold `a*b` into the accumulator through the
+    /// (possibly approximate) cell grid. `a`, `b` are N-bit encodings.
+    #[inline]
+    pub fn mac(&mut self, a: u64, b: u64) {
+        let (s, k) = mac_step_planned(&self.plan, a, b, self.s, self.k);
+        self.toggles += (s ^ self.s).count_ones() as u64
+            + (k ^ self.k).count_ones() as u64;
+        self.s = s;
+        self.k = k;
+        self.macs += 1;
+    }
+
+    /// Drain: resolve the carry-save state with the exact merge adder.
+    #[inline]
+    pub fn resolve(&self) -> i64 {
+        self.cfg.decode(self.s.wrapping_add(self.k) & self.cfg.word_mask())
+    }
+
+    /// Convenience: full `a*b + c` through a fresh accumulator.
+    pub fn mac_value(cfg: &PeConfig, a: i64, b: i64, c: i64) -> i64 {
+        let mut pe = Pe::new(*cfg);
+        pe.s = (c as u64) & cfg.word_mask();
+        pe.mac(cfg.encode(a), cfg.encode(b));
+        pe.resolve()
+    }
+}
+
+/// The row-pipeline MAC update (pure function of the config).
+///
+/// Mirrors `ref.mac_scalar` / `ref.mac_step` exactly — any change here must
+/// be made in the Python oracle too (goldens enforce this).
+#[inline]
+pub fn mac_step(cfg: &PeConfig, a: u64, b: u64, s0: u64, k0: u64) -> (u64, u64) {
+    let n = cfg.n;
+    let mw = cfg.word_mask();
+    let au = a & ((1u64 << n) - 1);
+    let mut s = s0 & mw;
+    let mut kc = k0 & mw;
+    if cfg.signed {
+        kc = kc.wrapping_add(cfg.bw_const()) & mw;
+    }
+    let amask = (1u64 << cfg.k) - 1;
+    for j in 0..n {
+        let span = (((1u64 << n) - 1) << j) & mw;
+        let p = if (b >> j) & 1 == 1 { (au << j) & mw } else { 0 };
+        let nm = cfg.nppc_mask(j);
+        let x = (p ^ nm) & mw;
+        let aa = span & amask;
+        let ee = span & !amask & mw;
+        let osk = s | kc;
+        let (s_a, c_a, k_pass) = match cfg.family {
+            Family::Proposed => {
+                let ap = aa & !nm;
+                let an = aa & nm;
+                let s_a = ((osk & !x) & ap) | (((!osk) | !x) & an);
+                let c_a = (x & ap) | ((osk & x) & an);
+                (s_a, c_a, 0)
+            }
+            Family::Sips12 => ((!(x ^ s)) & aa, kc & aa, 0),
+            Family::Nano6 => ((!s) & aa, (x & kc) & aa, 0),
+            // AxSA [5]: carry-elided compressor — exact sum, no carry out
+            Family::Axsa5 => ((x ^ s ^ kc) & aa, 0, 0),
+        };
+        let s_e = (x ^ s ^ kc) & ee;
+        let c_e = ((x & s) | (x & kc) | (s & kc)) & ee;
+        s = ((s_a | s_e) | (s & !span)) & mw;
+        kc = ((((c_a | c_e) & mw) << 1) | k_pass).wrapping_add(kc & !span & mw)
+            & mw;
+    }
+    (s, kc)
+}
+
+/// Precomputed per-row masks for the hot MAC kernel (§Perf).
+///
+/// `mac_step` recomputes every span/NPPC/approx mask on each call; for
+/// GEMM-shaped workloads the configuration is fixed across millions of
+/// MACs, so [`MacPlan`] hoists them once. `mac_step_planned` is verified
+/// bit-identical to `mac_step` (see tests::planned_matches_spec).
+#[derive(Clone, Copy, Debug)]
+struct RowMasks {
+    nspan: u64,
+    nm: u64,
+    ap: u64,
+    an: u64,
+    aa: u64,
+    ee: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MacPlan {
+    pub cfg: PeConfig,
+    mw: u64,
+    bw: u64,
+    opmask: u64,
+    n_rows: usize,
+    rows: [RowMasks; 16],
+}
+
+impl MacPlan {
+    pub fn new(cfg: &PeConfig) -> Self {
+        let mw = cfg.word_mask();
+        let amask = (1u64 << cfg.k) - 1;
+        assert!(cfg.n <= 16, "operand width capped at 16 bits");
+        let mut rows = [RowMasks { nspan: mw, nm: 0, ap: 0, an: 0,
+                                   aa: 0, ee: 0 }; 16];
+        for j in 0..cfg.n {
+            let span = (((1u64 << cfg.n) - 1) << j) & mw;
+            let nm = cfg.nppc_mask(j);
+            let aa = span & amask;
+            rows[j as usize] = RowMasks {
+                nspan: !span & mw,
+                nm,
+                ap: aa & !nm,
+                an: aa & nm,
+                aa,
+                ee: span & !amask & mw,
+            };
+        }
+        MacPlan {
+            cfg: *cfg,
+            mw,
+            bw: if cfg.signed { cfg.bw_const() } else { 0 },
+            opmask: (1u64 << cfg.n) - 1,
+            n_rows: cfg.n as usize,
+            rows,
+        }
+    }
+
+    #[inline]
+    pub fn resolve(&self, s: u64, kc: u64) -> i64 {
+        self.cfg.decode(s.wrapping_add(kc) & self.mw)
+    }
+}
+
+/// Planned fused MAC — the optimized hot path. Bit-identical to
+/// [`mac_step`].
+#[inline]
+pub fn mac_step_planned(plan: &MacPlan, a: u64, b: u64, s0: u64, k0: u64)
+                        -> (u64, u64) {
+    match plan.cfg.family {
+        Family::Proposed => mac_rows::<0>(plan, a, b, s0, k0),
+        Family::Axsa5 => mac_rows::<1>(plan, a, b, s0, k0),
+        Family::Sips12 => mac_rows::<2>(plan, a, b, s0, k0),
+        Family::Nano6 => mac_rows::<3>(plan, a, b, s0, k0),
+    }
+}
+
+#[inline(always)]
+fn mac_rows<const FAM: u8>(plan: &MacPlan, a: u64, b: u64, s0: u64, k0: u64)
+                           -> (u64, u64) {
+    let mw = plan.mw;
+    let au = a & plan.opmask;
+    let mut s = s0 & mw;
+    let mut kc = (k0 & mw).wrapping_add(plan.bw) & mw;
+    for (j, rm) in plan.rows[..plan.n_rows].iter().enumerate() {
+        // branchless product row: all-ones mask when bit j of b is set
+        let sel = ((b >> j) & 1).wrapping_neg();
+        let p = (au << j) & sel & mw;
+        let x = (p ^ rm.nm) & mw;
+        let osk = s | kc;
+        let (s_a, c_a) = match FAM {
+            0 => (((osk & !x) & rm.ap) | (((!osk) | !x) & rm.an),
+                  (x & rm.ap) | ((osk & x) & rm.an)),
+            1 => ((x ^ s ^ kc) & rm.aa, 0),
+            2 => ((!(x ^ s)) & rm.aa, kc & rm.aa),
+            _ => ((!s) & rm.aa, (x & kc) & rm.aa),
+        };
+        let s_e = (x ^ s ^ kc) & rm.ee;
+        let c_e = ((x & s) | (x & kc) | (s & kc)) & rm.ee;
+        s = (s_a | s_e) | (s & rm.nspan);
+        kc = (((c_a | c_e) & mw) << 1).wrapping_add(kc & rm.nspan) & mw;
+    }
+    (s, kc)
+}
+
+/// Approximate matmul through the word-level PE (one logical PE per output
+/// element — the systolic simulator in [`crate::systolic`] models the
+/// physical array; this is the fast functional equivalent).
+pub fn matmul(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
+              nn: usize) -> Vec<i64> {
+    assert_eq!(a.len(), m * kk);
+    assert_eq!(b.len(), kk * nn);
+    if cfg.k == 0 {
+        // exact PE == integer MAC mod 2^W: skip the bit-plane walk
+        // entirely (§Perf: ~40x on exact-path workloads). The carry-save
+        // state is unobservable for k = 0, so this is bit-identical.
+        return matmul_exact_fast(cfg, a, b, m, kk, nn);
+    }
+    let plan = MacPlan::new(cfg);
+    let mut out = vec![0i64; m * nn];
+    // B transposed once: unit-stride inner loops (§Perf: ~15% on 64^3)
+    let mut bt = vec![0u64; kk * nn];
+    for t in 0..kk {
+        for j in 0..nn {
+            bt[j * kk + t] = cfg.encode(b[t * nn + j]);
+        }
+    }
+    let ae: Vec<u64> = a.iter().map(|&v| cfg.encode(v)).collect();
+    let row_job = |i: usize, out_row: &mut [i64]| {
+        let arow = &ae[i * kk..(i + 1) * kk];
+        for (j, o) in out_row.iter_mut().enumerate() {
+            let brow = &bt[j * kk..(j + 1) * kk];
+            let mut s = 0u64;
+            let mut kc = 0u64;
+            for t in 0..kk {
+                let (s2, k2) = mac_step_planned(&plan, arow[t], brow[t], s, kc);
+                s = s2;
+                kc = k2;
+            }
+            *o = plan.resolve(s, kc);
+        }
+    };
+    // parallelize across output rows for large problems (§Perf)
+    let work = m * nn * kk;
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get()).unwrap_or(1).min(8);
+    if work >= 1 << 16 && threads > 1 && m > 1 {
+        std::thread::scope(|scope| {
+            let chunk = m.div_ceil(threads);
+            for (ci, rows) in out.chunks_mut(chunk * nn).enumerate() {
+                let row_job = &row_job;
+                scope.spawn(move || {
+                    for (r, out_row) in rows.chunks_mut(nn).enumerate() {
+                        row_job(ci * chunk + r, out_row);
+                    }
+                });
+            }
+        });
+    } else {
+        for (i, out_row) in out.chunks_mut(nn).enumerate() {
+            row_job(i, out_row);
+        }
+    }
+    out
+}
+
+/// Exact-path GEMM: plain integer MACs wrapped to the PE's W-bit
+/// accumulator semantics (used by `matmul` when k == 0).
+fn matmul_exact_fast(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize,
+                     kk: usize, nn: usize) -> Vec<i64> {
+    let mask_n = (1u64 << cfg.n) - 1;
+    let dec_op = |v: i64| -> i64 {
+        // re-decode through the N-bit operand encoding (the hardware only
+        // sees N bits — matches the bit-plane path for out-of-range inputs)
+        let enc = (v as u64) & mask_n;
+        if cfg.signed && (enc >> (cfg.n - 1)) & 1 == 1 {
+            (enc | !mask_n) as i64
+        } else {
+            enc as i64
+        }
+    };
+    let ae: Vec<i64> = a.iter().map(|&v| dec_op(v)).collect();
+    let mut bt = vec![0i64; kk * nn];
+    for t in 0..kk {
+        for j in 0..nn {
+            bt[j * kk + t] = dec_op(b[t * nn + j]);
+        }
+    }
+    let mut out = vec![0i64; m * nn];
+    for i in 0..m {
+        let arow = &ae[i * kk..(i + 1) * kk];
+        for j in 0..nn {
+            let brow = &bt[j * kk..(j + 1) * kk];
+            let acc: i64 = arow.iter().zip(brow)
+                .map(|(&x, &y)| x.wrapping_mul(y))
+                .fold(0i64, |s, p| s.wrapping_add(p));
+            out[i * nn + j] = cfg.decode((acc as u64) & cfg.word_mask());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: u32, signed: bool, family: Family, k: u32) -> PeConfig {
+        PeConfig::new(n, signed, family, k)
+    }
+
+    #[test]
+    fn exact_mac_exhaustive_4bit_signed() {
+        let c4 = cfg(4, true, Family::Proposed, 0);
+        for a in -8i64..8 {
+            for b in -8i64..8 {
+                for c in [0i64, 1, -7, 100, -100, 30000, -30000] {
+                    assert_eq!(Pe::mac_value(&c4, a, b, c), a * b + c,
+                               "a={a} b={b} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_mac_exhaustive_4bit_unsigned() {
+        let c4 = cfg(4, false, Family::Proposed, 0);
+        for a in 0i64..16 {
+            for b in 0i64..16 {
+                assert_eq!(Pe::mac_value(&c4, a, b, 37), a * b + 37);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_mac_randomized_8_and_16bit() {
+        let mut state = 0x12345678u64;
+        let mut rnd = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        for n in [8u32, 16] {
+            let c = cfg(n, true, Family::Proposed, 0);
+            let half = 1i64 << (n - 1);
+            for _ in 0..2000 {
+                let a = (rnd() as i64 % (2 * half)) - half;
+                let b = (rnd() as i64 % (2 * half)) - half;
+                let acc = (rnd() as i64 % 100_000) - 50_000;
+                assert_eq!(Pe::mac_value(&c, a, b, acc), a * b + acc,
+                           "n={n} a={a} b={b} c={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn k0_exact_for_all_families() {
+        for family in Family::ALL {
+            let c = cfg(8, true, family, 0);
+            for (a, b) in [(-128i64, -128i64), (127, 127), (-77, 33), (5, -9)] {
+                assert_eq!(Pe::mac_value(&c, a, b, 0), a * b, "{family:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulation_over_many_macs_exact() {
+        let c = cfg(8, true, Family::Proposed, 0);
+        let mut pe = Pe::new(c);
+        let mut want = 0i64;
+        for i in 0..200i64 {
+            let a = (i * 37 % 255) - 127;
+            let b = (i * 91 % 255) - 127;
+            pe.mac(c.encode(a), c.encode(b));
+            want += a * b;
+        }
+        assert_eq!(pe.resolve(), want);
+    }
+
+    #[test]
+    fn approx_error_monotone_in_k() {
+        let mut prev = 0f64;
+        for k in [0u32, 2, 4, 6, 8] {
+            let c = cfg(8, true, Family::Proposed, k);
+            let mut sed = 0f64;
+            for a in (-128i64..128).step_by(5) {
+                for b in (-128i64..128).step_by(7) {
+                    sed += (Pe::mac_value(&c, a, b, 0) - a * b).abs() as f64;
+                }
+            }
+            assert!(sed >= prev, "k={k}: {sed} < {prev}");
+            prev = sed;
+        }
+    }
+
+    #[test]
+    fn planned_matches_spec() {
+        // the optimized kernel must be bit-identical to the readable spec
+        let mut state = 0xABCDEFu64;
+        let mut rnd = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for family in Family::ALL {
+            for signed in [false, true] {
+                for k in [0u32, 3, 8, 12] {
+                    let c = PeConfig::new(8, signed, family, k);
+                    let plan = MacPlan::new(&c);
+                    for _ in 0..200 {
+                        let a = rnd() & 0xFF;
+                        let b = rnd() & 0xFF;
+                        let s = rnd() & c.word_mask();
+                        let kc = rnd() & c.word_mask();
+                        assert_eq!(mac_step_planned(&plan, a, b, s, kc),
+                                   mac_step(&c, a, b, s, kc),
+                                   "{family:?} signed={signed} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn toggle_counter_advances() {
+        let c = cfg(8, true, Family::Proposed, 0);
+        let mut pe = Pe::new(c);
+        pe.mac(c.encode(57), c.encode(-33));
+        assert!(pe.toggles > 0);
+        assert_eq!(pe.macs, 1);
+    }
+
+    #[test]
+    fn exact_fast_path_matches_bitplane_path() {
+        // matmul(k=0) takes the integer fast path; it must equal the
+        // bit-plane walk exactly, including unsigned and wraparound cases
+        let a: Vec<i64> = (0..48).map(|i| ((i * 97) % 255) - 127).collect();
+        let b: Vec<i64> = (0..60).map(|i| ((i * 61) % 255) - 127).collect();
+        for signed in [true, false] {
+            let c = cfg(8, signed, Family::Proposed, 0);
+            let fast = matmul(&c, &a, &b, 4, 12, 5);
+            // bypass the fast path via the planned kernel
+            let plan = MacPlan::new(&c);
+            for i in 0..4 {
+                for j in 0..5 {
+                    let mut s = 0u64;
+                    let mut kc = 0u64;
+                    for t in 0..12 {
+                        let (s2, k2) = mac_step_planned(
+                            &plan, c.encode(a[i * 12 + t]),
+                            c.encode(b[t * 5 + j]), s, kc);
+                        s = s2;
+                        kc = k2;
+                    }
+                    assert_eq!(fast[i * 5 + j], plan.resolve(s, kc),
+                               "signed={signed} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_exact_matches_integer() {
+        let c = cfg(8, true, Family::Proposed, 0);
+        let a: Vec<i64> = (0..12).map(|i| ((i * 53) % 255) - 127).collect();
+        let b: Vec<i64> = (0..20).map(|i| ((i * 29) % 255) - 127).collect();
+        let y = matmul(&c, &a, &b, 3, 4, 5);
+        for i in 0..3 {
+            for j in 0..5 {
+                let mut want = 0i64;
+                for t in 0..4 {
+                    want += a[i * 4 + t] * b[t * 5 + j];
+                }
+                assert_eq!(y[i * 5 + j], want);
+            }
+        }
+    }
+}

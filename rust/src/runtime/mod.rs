@@ -1,0 +1,169 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the only bridge between Layer 3 and the Layer 1/2 compute
+//! graphs; Python never runs here. Interchange is HLO *text* (the
+//! xla_extension 0.5.1 bundled with the `xla` crate rejects jax >= 0.5's
+//! 64-bit-id protos; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Shape + data of one int32 tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorI32 { dims, data }
+    }
+
+    pub fn scalar1(v: i32) -> Self {
+        TensorI32 { dims: vec![1], data: vec![v] }
+    }
+}
+
+/// The PJRT CPU client plus a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location (repo-relative, overridable via env).
+    pub fn default_artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("AXSYS_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifacts>/<name>.hlo.txt` (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let entry = std::sync::Arc::new(Executable { exe, name: name.into() });
+        self.cache.lock().unwrap().insert(name.into(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Execute with int32 inputs; returns the int32 outputs of the
+    /// result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute_i32(&self, exe: &Executable, inputs: &[TensorI32])
+                       -> Result<Vec<TensorI32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = xla::Literal::vec1(&t.data);
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = lit.reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe.exe.execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", exe.name))?;
+        let tuple = result[0][0].to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let parts = tuple.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()
+                .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            out.push(TensorI32::new(dims, data));
+        }
+        Ok(out)
+    }
+
+    /// Load-and-run convenience.
+    pub fn run(&self, name: &str, inputs: &[TensorI32]) -> Result<Vec<TensorI32>> {
+        let exe = self.load(name)?;
+        self.execute_i32(&exe, inputs)
+    }
+}
+
+/// Read a golden `.bin` (raw little-endian i32) written by aot.py.
+pub fn read_golden_bin(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "ragged golden file {path:?}");
+    Ok(bytes.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// One golden case from `artifacts/golden/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct GoldenCase {
+    pub case: String,
+    pub artifact: String,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub k: i32,
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+/// Parse the golden manifest.
+pub fn read_manifest(dir: &Path) -> Result<Vec<GoldenCase>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+    let mut cases = Vec::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(f.len() == 7, "bad manifest line: {line}");
+        let parse_shapes = |s: &str| -> Vec<Vec<usize>> {
+            s.split(';')
+                .map(|g| g.split('x').map(|d| d.parse().unwrap()).collect())
+                .collect()
+        };
+        cases.push(GoldenCase {
+            case: f[0].into(),
+            artifact: f[1].trim_end_matches(".hlo.txt").into(),
+            in_shapes: parse_shapes(f[3]),
+            k: f[4].parse()?,
+            out_shapes: parse_shapes(f[6]),
+        });
+    }
+    Ok(cases)
+}

@@ -1,0 +1,275 @@
+//! Cycle-accurate output-stationary systolic array (paper Fig. 1).
+//!
+//! Operands enter skewed: row `i` of A is injected into the array's west
+//! edge delayed by `i` cycles, column `j` of B into the north edge delayed
+//! by `j`; every PE multiplies the operands registered at its inputs and
+//! folds the product into its local carry-save accumulator. For a square
+//! `size x size` GEMM with K = size the full result is available after
+//! `3*size - 2` cycles (the latency formula of \[11\], verified in tests).
+
+use crate::pe::word::{Pe, PeConfig};
+
+/// Execution statistics for one GEMM (or one tile stream).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SaStats {
+    /// Compute cycles (skew fill + K stream) across all tiles.
+    pub cycles: u64,
+    /// Drain cycles (result readout, pipelined column-wise).
+    pub drain_cycles: u64,
+    /// Total MAC operations executed by PEs.
+    pub macs: u64,
+    /// Total accumulator-bit toggles (activity proxy for energy).
+    pub toggles: u64,
+    /// Number of (rows x cols) output tiles processed.
+    pub tiles: u64,
+}
+
+impl SaStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles + self.drain_cycles
+    }
+
+    pub fn merge(&mut self, other: &SaStats) {
+        self.cycles += other.cycles;
+        self.drain_cycles += other.drain_cycles;
+        self.macs += other.macs;
+        self.toggles += other.toggles;
+        self.tiles += other.tiles;
+    }
+}
+
+/// An `rows x cols` output-stationary systolic array of word-level PEs.
+pub struct Systolic {
+    pub cfg: PeConfig,
+    pub rows: usize,
+    pub cols: usize,
+    pes: Vec<Pe>,
+    // operand registers between PEs (index [i][j])
+    a_reg: Vec<Option<u64>>,
+    b_reg: Vec<Option<u64>>,
+}
+
+impl Systolic {
+    pub fn new(cfg: PeConfig, rows: usize, cols: usize) -> Self {
+        Systolic {
+            cfg,
+            rows,
+            cols,
+            pes: vec![Pe::new(cfg); rows * cols],
+            a_reg: vec![None; rows * cols],
+            b_reg: vec![None; rows * cols],
+        }
+    }
+
+    pub fn square(cfg: PeConfig, size: usize) -> Self {
+        Self::new(cfg, size, size)
+    }
+
+    fn clear(&mut self) {
+        for pe in &mut self.pes {
+            pe.reset();
+        }
+        self.a_reg.fill(None);
+        self.b_reg.fill(None);
+    }
+
+    /// Stream one (rows x cols) output tile: `a_panel` is rows x kk
+    /// (row-major), `b_panel` kk x cols. Returns resolved outputs
+    /// (row-major rows x cols) and per-tile stats. Cycle-accurate:
+    /// simulates the skewed wavefront register by register.
+    pub fn run_tile(&mut self, a_panel: &[i64], b_panel: &[i64], kk: usize)
+                    -> (Vec<i64>, SaStats) {
+        assert_eq!(a_panel.len(), self.rows * kk);
+        assert_eq!(b_panel.len(), kk * self.cols);
+        self.clear();
+        let total_cycles = (self.rows - 1) + (self.cols - 1) + kk;
+        let mut stats = SaStats { tiles: 1, ..Default::default() };
+        let toggles0: u64 = self.pes.iter().map(|p| p.toggles).sum();
+        let macs0: u64 = self.pes.iter().map(|p| p.macs).sum();
+
+        for cycle in 0..total_cycles {
+            // shift operand registers east/south (reverse order so a value
+            // moves one hop per cycle)
+            for i in 0..self.rows {
+                for j in (1..self.cols).rev() {
+                    self.a_reg[i * self.cols + j] =
+                        self.a_reg[i * self.cols + j - 1];
+                }
+                // west edge injection for row i: element t = cycle - i
+                self.a_reg[i * self.cols] = cycle.checked_sub(i)
+                    .filter(|&t| t < kk)
+                    .map(|t| self.cfg.encode(a_panel[i * kk + t]));
+            }
+            for j in 0..self.cols {
+                for i in (1..self.rows).rev() {
+                    self.b_reg[i * self.cols + j] =
+                        self.b_reg[(i - 1) * self.cols + j];
+                }
+                self.b_reg[j] = cycle.checked_sub(j)
+                    .filter(|&t| t < kk)
+                    .map(|t| self.cfg.encode(b_panel[t * self.cols + j]));
+            }
+            // MAC wherever both operands are present
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    if let (Some(a), Some(b)) = (self.a_reg[i * self.cols + j],
+                                                 self.b_reg[i * self.cols + j]) {
+                        self.pes[i * self.cols + j].mac(a, b);
+                    }
+                }
+            }
+        }
+
+        let out: Vec<i64> = self.pes.iter().map(|p| p.resolve()).collect();
+        stats.cycles = total_cycles as u64;
+        // drain: one column per cycle through the merge adders
+        stats.drain_cycles = self.cols as u64;
+        stats.macs = self.pes.iter().map(|p| p.macs).sum::<u64>() - macs0;
+        stats.toggles = self.pes.iter().map(|p| p.toggles).sum::<u64>() - toggles0;
+        (out, stats)
+    }
+
+    /// Arbitrary GEMM `C = A(m x kk) @ B(kk x nn)`, tiled over the array.
+    /// Ragged edges are handled by zero-padding the panels (the padded
+    /// MACs multiply by zero through the same hardware path).
+    pub fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize,
+                nn: usize) -> (Vec<i64>, SaStats) {
+        assert_eq!(a.len(), m * kk);
+        assert_eq!(b.len(), kk * nn);
+        let mut out = vec![0i64; m * nn];
+        let mut stats = SaStats::default();
+        let mut a_panel = vec![0i64; self.rows * kk];
+        let mut b_panel = vec![0i64; kk * self.cols];
+        let mut ti = 0;
+        while ti < m {
+            let th = (m - ti).min(self.rows);
+            a_panel.fill(0);
+            for i in 0..th {
+                a_panel[i * kk..i * kk + kk]
+                    .copy_from_slice(&a[(ti + i) * kk..(ti + i) * kk + kk]);
+            }
+            let mut tj = 0;
+            while tj < nn {
+                let tw = (nn - tj).min(self.cols);
+                b_panel.fill(0);
+                for t in 0..kk {
+                    for j in 0..tw {
+                        b_panel[t * self.cols + j] = b[t * nn + tj + j];
+                    }
+                }
+                let (tile, ts) = self.run_tile(&a_panel, &b_panel, kk);
+                stats.merge(&ts);
+                for i in 0..th {
+                    for j in 0..tw {
+                        out[(ti + i) * nn + tj + j] = tile[i * self.cols + j];
+                    }
+                }
+                tj += tw;
+            }
+            ti += th;
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::word::matmul;
+    use crate::Family;
+
+    fn cfg(k: u32) -> PeConfig {
+        PeConfig::new(8, true, Family::Proposed, k)
+    }
+
+    fn ints(seed: u64, len: usize) -> Vec<i64> {
+        let mut s = seed | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as i64 & 255) - 128
+            })
+            .collect()
+    }
+
+    #[test]
+    fn latency_formula_3n_minus_2() {
+        // paper §II: N x N matmul on an N x N array takes 3N-2 cycles
+        for size in [3usize, 4, 8, 16] {
+            let mut sa = Systolic::square(cfg(0), size);
+            let a = ints(1, size * size);
+            let b = ints(2, size * size);
+            let (_, st) = sa.run_tile(&a, &b, size);
+            assert_eq!(st.cycles, (3 * size - 2) as u64, "size={size}");
+        }
+    }
+
+    #[test]
+    fn exact_square_matches_integer_matmul() {
+        let size = 8;
+        let mut sa = Systolic::square(cfg(0), size);
+        let a = ints(3, size * size);
+        let b = ints(4, size * size);
+        let (y, _) = sa.run_tile(&a, &b, size);
+        for i in 0..size {
+            for j in 0..size {
+                let want: i64 = (0..size).map(|t| a[i * size + t] * b[t * size + j]).sum();
+                assert_eq!(y[i * size + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_gemm_matches_word_matmul_all_families() {
+        // SA result must equal the functional word-level matmul for every
+        // family and k (the array adds scheduling, not arithmetic)
+        let (m, kk, nn) = (13usize, 9usize, 11usize);
+        let a = ints(5, m * kk);
+        let b = ints(6, kk * nn);
+        for family in Family::ALL {
+            for k in [0u32, 3, 7] {
+                let c = PeConfig::new(8, true, family, k);
+                let mut sa = Systolic::new(c, 4, 5);
+                let (y, st) = sa.gemm(&a, &b, m, kk, nn);
+                let want = matmul(&c, &a, &b, m, kk, nn);
+                assert_eq!(y, want, "{family:?} k={k}");
+                assert!(st.tiles >= 9); // ceil(13/4)*ceil(11/5) = 4*3
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_independent_of_array_shape() {
+        let (m, kk, nn) = (16usize, 8usize, 16usize);
+        let a = ints(7, m * kk);
+        let b = ints(8, kk * nn);
+        let c = cfg(5);
+        let (y1, _) = Systolic::new(c, 8, 8).gemm(&a, &b, m, kk, nn);
+        let (y2, _) = Systolic::new(c, 3, 5).gemm(&a, &b, m, kk, nn);
+        let (y3, _) = Systolic::new(c, 16, 2).gemm(&a, &b, m, kk, nn);
+        assert_eq!(y1, y2);
+        assert_eq!(y1, y3);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut sa = Systolic::square(cfg(0), 4);
+        let a = ints(9, 8 * 4);
+        let b = ints(10, 4 * 8);
+        let (_, st) = sa.gemm(&a, &b, 8, 4, 8);
+        assert_eq!(st.tiles, 4);
+        assert_eq!(st.macs, 4 * 16 * 4); // tiles * PEs * K
+        assert!(st.toggles > 0);
+    }
+
+    #[test]
+    fn zero_matrix_zero_toggles_on_sum_rail() {
+        let mut sa = Systolic::square(cfg(0), 4);
+        let a = vec![0i64; 16];
+        let b = vec![0i64; 16];
+        let (y, _) = sa.run_tile(&a, &b, 4);
+        assert!(y.iter().all(|&v| v == 0));
+    }
+}

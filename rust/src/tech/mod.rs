@@ -1,0 +1,117 @@
+//! 90 nm-class standard-cell library + calibration.
+//!
+//! The paper synthesizes with Cadence Genus on 90 nm UMC; neither is
+//! available here, so this module provides a first-order cell library
+//! whose *absolute* numbers are calibrated so the conventional exact PPC
+//! of \[6\] lands on the paper's Table II row (25.81 µm², 1.03 µW @
+//! random activity, 262 ps). Every other number in Tables II-IV is then
+//! *composed structurally* from netlists — never copied from the paper —
+//! so relative comparisons are genuine model output (DESIGN.md §2).
+//!
+//! Raw per-gate values are typical of published 90 nm libraries
+//! (fanout-of-4-ish delays, switching energies of a few fJ).
+
+/// Gate primitive kinds understood by the netlist evaluator.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GateKind {
+    Input,
+    Const0,
+    Const1,
+    Inv,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    /// Majority-of-3 complex gate (mirror-adder carry stage).
+    Maj3,
+}
+
+/// Per-kind parameters plus global calibration scale factors.
+pub struct Library {
+    /// (area µm², delay ps, switching energy fJ, leakage nW) per kind,
+    /// indexed in the order of [`GateKind`]'s data variants.
+    pub area_cal: f64,
+    pub delay_cal: f64,
+    pub energy_cal: f64,
+    pub leak_cal: f64,
+    pub dff_area: f64,
+    pub dff_energy_fj: f64,
+    pub dff_leak_nw: f64,
+    /// Clock-to-Q added once to every register-to-register path.
+    pub dff_cq_ps: f64,
+}
+
+/// Raw (uncalibrated) parameters: (area, delay_ps, energy_fj, leak_nw).
+fn raw(kind: GateKind) -> (f64, f64, f64, f64) {
+    match kind {
+        GateKind::Input | GateKind::Const0 | GateKind::Const1 => (0.0, 0.0, 0.0, 0.0),
+        GateKind::Inv => (1.6, 16.0, 0.45, 0.9),
+        GateKind::Nand2 => (2.3, 22.0, 0.70, 1.3),
+        GateKind::Nor2 => (2.3, 24.0, 0.72, 1.3),
+        GateKind::And2 => (3.1, 34.0, 0.95, 1.7),
+        GateKind::Or2 => (3.1, 36.0, 0.97, 1.7),
+        GateKind::Xor2 => (4.6, 52.0, 1.60, 2.4),
+        GateKind::Xnor2 => (4.6, 52.0, 1.60, 2.4),
+        // Mirror-adder carry stage as one complex gate: transistor-level
+        // it is only mildly cheaper than the discrete 3xAND2 + 2xOR2 carry
+        // (the paper's proposed-exact saving over [6] is ~3-6%).
+        GateKind::Maj3 => (14.0, 40.0, 1.80, 4.0),
+    }
+}
+
+impl Library {
+    pub fn area(&self, kind: GateKind) -> f64 {
+        raw(kind).0 * self.area_cal
+    }
+
+    pub fn delay_ps(&self, kind: GateKind) -> f64 {
+        raw(kind).1 * self.delay_cal
+    }
+
+    pub fn energy_fj(&self, kind: GateKind) -> f64 {
+        raw(kind).2 * self.energy_cal
+    }
+
+    pub fn leak_nw(&self, kind: GateKind) -> f64 {
+        raw(kind).3 * self.leak_cal
+    }
+}
+
+/// Calibration: chosen once so the conventional exact PPC cell reproduces
+/// paper Table II row 1 (see `hw::tests::table2_calibration_anchor`).
+pub const LIB: Library = Library {
+    area_cal: 0.928,
+    delay_cal: 1.553,
+    energy_cal: 0.301,
+    leak_cal: 0.301,
+    dff_area: 6.1 * 0.928,
+    dff_energy_fj: 1.9 * 0.301,
+    dff_leak_nw: 2.6 * 0.301,
+    dff_cq_ps: 45.0,
+};
+
+/// Clock period used throughout the paper's SA tables (250 MHz).
+pub const PERIOD_NS_250MHZ: f64 = 4.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_gate_costs() {
+        // complex gates cost more than simple ones
+        assert!(LIB.area(GateKind::Xor2) > LIB.area(GateKind::Nand2));
+        assert!(LIB.area(GateKind::Nand2) > LIB.area(GateKind::Inv));
+        assert!(LIB.delay_ps(GateKind::Xor2) > LIB.delay_ps(GateKind::Inv));
+        assert!(LIB.energy_fj(GateKind::Maj3) > LIB.energy_fj(GateKind::Inv));
+    }
+
+    #[test]
+    fn nand_cheaper_than_and() {
+        // the premise behind the paper's NAND-based NPPC
+        assert!(LIB.area(GateKind::Nand2) < LIB.area(GateKind::And2));
+        assert!(LIB.delay_ps(GateKind::Nand2) < LIB.delay_ps(GateKind::And2));
+    }
+}
