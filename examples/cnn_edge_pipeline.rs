@@ -52,7 +52,8 @@ fn main() -> anyhow::Result<()> {
               every k — the paper's Table VI pattern)");
 
     // PJRT cross-check: the full quantized CNN lowered from JAX
-    if dir.join("bdcn128.hlo.txt").exists() {
+    // (needs the pjrt feature compiled in)
+    if cfg!(feature = "pjrt") && dir.join("bdcn128.hlo.txt").exists() {
         let rt = Runtime::new(&dir)?;
         let outs = rt.run("bdcn128", &[
             TensorI32::new(vec![128, 128], img.to_i32()),

@@ -42,9 +42,10 @@ fn main() -> anyhow::Result<()> {
                   .join(format!("dct_k{k}.pgm")).as_path(), &r)?;
     }
 
-    // cross-check with the AOT artifact (full pipeline lowered from JAX)
+    // cross-check with the AOT artifact (full pipeline lowered from JAX;
+    // needs the pjrt feature compiled in)
     let dir = Runtime::default_artifacts_dir();
-    if dir.join("dct256.hlo.txt").exists() {
+    if cfg!(feature = "pjrt") && dir.join("dct256.hlo.txt").exists() {
         let rt = Runtime::new(&dir)?;
         let outs = rt.run("dct256", &[
             TensorI32::new(vec![256, 256], img.to_i32()),

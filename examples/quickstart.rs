@@ -49,9 +49,9 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(y_word, resp.out);
     coord.shutdown();
 
-    // 4. AOT Pallas kernel via PJRT (needs `make artifacts`)
+    // 4. AOT Pallas kernel via PJRT (needs `make artifacts` + `--features pjrt`)
     let dir = Runtime::default_artifacts_dir();
-    if dir.join("gemm64.hlo.txt").exists() {
+    if cfg!(feature = "pjrt") && dir.join("gemm64.hlo.txt").exists() {
         let rt = Runtime::new(&dir)?;
         // gemm64 is 64x64: embed our matrices in a zero-padded 64x64 pair
         let mut a64 = vec![0i32; 64 * 64];

@@ -2,10 +2,11 @@
 //!
 //! Drives the GEMM coordinator with a closed-loop synthetic client fleet:
 //! mixed-size matmul requests at several approximation levels, executed
-//! on a chosen backend (word / systolic / pjrt), reporting throughput,
-//! latency percentiles and — for the cycle-accurate backend — simulated
-//! cycles and the hardware model's energy estimate for both the exact
-//! and the approximate configuration (the paper's headline energy story).
+//! on a chosen backend (word / lut / systolic / pjrt), reporting
+//! throughput, latency percentiles, product-LUT cache activity and — for
+//! the cycle-accurate backend — simulated cycles and the hardware model's
+//! energy estimate for both the exact and the approximate configuration
+//! (the paper's headline energy story).
 //!
 //! ```bash
 //! cargo run --release --example serve_gemm -- [requests] [workers] [backend]
@@ -61,10 +62,16 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(128);
     let workers: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(4);
-    let backend = match args.get(2).map(String::as_str) {
-        Some("word") => BackendKind::Word,
-        Some("pjrt") => BackendKind::Pjrt,
-        _ => BackendKind::Systolic,
+    let backend = match args.get(2) {
+        Some(v) => match BackendKind::parse(v) {
+            Some(b) => b,
+            None => {
+                eprintln!("unknown backend '{v}' (expected {})",
+                          BackendKind::names());
+                std::process::exit(2);
+            }
+        },
+        None => BackendKind::Systolic,
     };
     let k = 7u32;
     println!("serve_gemm: {requests} requests, {workers} workers, {backend:?}, k={k}");
@@ -75,6 +82,10 @@ fn main() {
              requests as f64 / wall, stats.tiles as f64 / wall);
     println!("  latency µs: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
              pct(0.50), pct(0.90), pct(0.99), stats.max_latency_us);
+    if stats.lut_macs > 0 {
+        println!("  lut: {} MACs table-served, {} tables built, {} cache hits",
+                 stats.lut_macs, stats.lut_builds, stats.lut_cache_hits);
+    }
 
     if stats.sim_cycles > 0 {
         // the paper's energy story: same workload, exact vs approximate SA

@@ -11,9 +11,10 @@
 //! ```
 //! Results are recorded in EXPERIMENTS.md §Perf (before/after log).
 
-use axsys::bench::{black_box, run};
+use axsys::bench::{black_box, run, speedup};
 use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
 use axsys::netlist::random_vectors;
+use axsys::pe::lut::ProductLut;
 use axsys::pe::netlist_builder::pe_netlists;
 use axsys::pe::word::{mac_step, matmul, PeConfig};
 use axsys::pe::{Design, Signedness};
@@ -60,6 +61,36 @@ fn main() {
         black_box(matmul(black_box(&cfg0), &a, &b, 64, 64, 64));
     });
 
+    // lut_vs_word: the serving-scale comparison (issue acceptance gate:
+    // >= 5x on 256x256x256). Same arithmetic, table-driven vs bit-plane.
+    let cfg4 = PeConfig::new(8, true, Family::Proposed, 4);
+    let al = ints(5, 256 * 256);
+    let bl = ints(6, 256 * 256);
+    let lut4 = ProductLut::try_build(&cfg4).expect("lut k=4");
+    assert_eq!(lut4.matmul(&al, &bl, 256, 256, 256),
+               matmul(&cfg4, &al, &bl, 256, 256, 256),
+               "lut and word disagree — bench comparison would be invalid");
+    let w256 = run("word::matmul 256x256x256 (k=4)", 1500, || {
+        black_box(matmul(black_box(&cfg4), &al, &bl, 256, 256, 256));
+    });
+    let l256 = run("lut::matmul  256x256x256 (k=4)", 1500, || {
+        black_box(lut4.matmul(black_box(&al), &bl, 256, 256, 256));
+    });
+    let sx = speedup(&w256, &l256);
+    println!("    -> lut_vs_word: {:.1}x speedup ({:.1} -> {:.1} M MAC/s){}",
+             sx,
+             (256.0f64 * 256.0 * 256.0) / w256.median_ns * 1e3,
+             (256.0f64 * 256.0 * 256.0) / l256.median_ns * 1e3,
+             if sx >= 5.0 { "  [>=5x OK]" } else { "  [BELOW 5x TARGET]" });
+    let lut7 = ProductLut::try_build(&PeConfig::new(8, true, Family::Proposed, 7))
+        .expect("lut k=7");
+    let l7 = run("lut::matmul  256x256x256 (k=7)", 1500, || {
+        black_box(lut7.matmul(black_box(&al), &bl, 256, 256, 256));
+    });
+    println!("    -> k=7 table: {} states, {} KiB, {:.1} M MAC/s",
+             lut7.states(), lut7.table_bytes() / 1024,
+             (256.0f64 * 256.0 * 256.0) / l7.median_ns * 1e3);
+
     // L3: cycle-accurate systolic tile stream
     let mut sa = Systolic::square(cfg, 8);
     let at = ints(3, 8 * 8);
@@ -101,9 +132,28 @@ fn main() {
     println!("    -> {:.0} req/s end-to-end", 16.0 / (c.median_ns * 1e-9));
     coord.shutdown();
 
+    // coordinator end-to-end on the table-driven backend
+    let coord_lut = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Lut, ..Default::default()
+    });
+    let cl = run("coordinator 16 reqs 64x64x64 (4 workers, lut)", 800, || {
+        let ids: Vec<u64> = (0..16).map(|i| {
+            coord_lut.submit(GemmRequest {
+                a: a.clone(), b: b.clone(), m: 64, kk: 64, nn: 64,
+                k: (i % 8) as u32,
+            })
+        }).collect();
+        for id in ids {
+            black_box(coord_lut.wait(id));
+        }
+    });
+    println!("    -> {:.0} req/s end-to-end ({:.1}x vs word backend)",
+             16.0 / (cl.median_ns * 1e-9), speedup(&c, &cl));
+    coord_lut.shutdown();
+
     // PJRT: AOT artifact execution
     let dir = Runtime::default_artifacts_dir();
-    if dir.join("gemm64.hlo.txt").exists() {
+    if cfg!(feature = "pjrt") && dir.join("gemm64.hlo.txt").exists() {
         let rt = Runtime::new(&dir).expect("runtime");
         let exe = rt.load("gemm64").expect("gemm64");
         let a32: Vec<i32> = a.iter().map(|&v| v as i32).collect();

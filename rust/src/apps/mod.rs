@@ -35,6 +35,19 @@ impl Gemm for WordGemm {
     }
 }
 
+/// Table-driven backend: shared product-LUT tables, bit-identical to
+/// [`WordGemm`] (falls back to it for non-LUT-compilable design points).
+pub struct LutGemm {
+    pub cfg: PeConfig,
+}
+
+impl Gemm for LutGemm {
+    fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
+            -> Vec<i64> {
+        crate::pe::lut::matmul(&self.cfg, a, b, m, kk, nn)
+    }
+}
+
 /// Cycle-accurate backend: tiles through a real systolic array and
 /// accumulates cycle/energy statistics.
 pub struct SystolicGemm {
@@ -85,7 +98,10 @@ mod tests {
         let b: Vec<i64> = (0..55).map(|i| (i * 29 % 255) - 127).collect();
         let mut wg = WordGemm { cfg };
         let mut sg = SystolicGemm::new(cfg, 8);
-        assert_eq!(wg.gemm(&a, &b, 8, 5, 11), sg.gemm(&a, &b, 8, 5, 11));
+        let mut lg = LutGemm { cfg };
+        let w = wg.gemm(&a, &b, 8, 5, 11);
+        assert_eq!(w, sg.gemm(&a, &b, 8, 5, 11));
+        assert_eq!(w, lg.gemm(&a, &b, 8, 5, 11));
         assert!(sg.stats().unwrap().macs > 0);
     }
 

@@ -42,6 +42,11 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Median-time speedup of `fast` relative to `base` (>1 means faster).
+pub fn speedup(base: &Measurement, fast: &Measurement) -> f64 {
+    base.median_ns / fast.median_ns
+}
+
 /// Measure `f` with automatic iteration count targeting ~`budget_ms` of
 /// total sampling after a short warmup.
 pub fn run<F: FnMut()>(label: &str, budget_ms: u64, mut f: F) -> Measurement {

@@ -3,10 +3,12 @@
 //! Arbitrary integer GEMM requests are tiled to the systolic array's
 //! output geometry, queued with backpressure, executed by a worker pool
 //! (std threads + channels; each worker owns its device — a cycle-accurate
-//! SA simulator, the fast word-level model, or a PJRT executable running
+//! SA simulator, the word-level model, the table-driven product-LUT engine
+//! sharing process-wide tables via `Arc`, or a PJRT executable running
 //! the AOT `axmm_b16` artifact), and reassembled in submission-independent
 //! order. Results are deterministic regardless of worker count or
-//! batching (tested).
+//! batching (tested), and `Word`, `Lut` and `Systolic` are bit-identical
+//! to each other for every design point (`tests/backend_equiv.rs`).
 //!
 //! PJRT note: tiles streamed through `axmm_b16` carry K in chunks of 8
 //! whose partial results are summed outside the PE; for k = 0 this is
@@ -19,6 +21,7 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::{matmul, PeConfig};
 use crate::runtime::{Runtime, TensorI32};
 use crate::systolic::{SaStats, Systolic};
@@ -27,12 +30,39 @@ use crate::Family;
 /// Which device each worker instantiates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Fast word-level functional model.
+    /// Word-level functional model (bit-plane walk per MAC).
     Word,
+    /// Table-driven product-LUT engine (bit-identical to `Word`, fastest;
+    /// falls back to the word model for non-LUT-compilable design points).
+    Lut,
     /// Cycle-accurate systolic-array simulator (tracks cycles/toggles).
     Systolic,
     /// PJRT CPU execution of the AOT `axmm_b16` artifact.
     Pjrt,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] = [BackendKind::Word, BackendKind::Lut,
+                                       BackendKind::Systolic, BackendKind::Pjrt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Word => "word",
+            BackendKind::Lut => "lut",
+            BackendKind::Systolic => "systolic",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Self::ALL.into_iter().find(|b| b.name() == s)
+    }
+
+    /// `"word|lut|systolic|pjrt"` — for CLI error messages, derived from
+    /// [`Self::ALL`] so the advertised set can't drift from the parser.
+    pub fn names() -> String {
+        Self::ALL.map(|b| b.name()).join("|")
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -88,6 +118,16 @@ pub struct GemmResponse {
     pub sa_stats: SaStats,
 }
 
+impl GemmResponse {
+    /// Request-level MAC throughput implied by its end-to-end latency.
+    pub fn macs_per_sec(&self) -> f64 {
+        if self.latency_us <= 0.0 {
+            return 0.0;
+        }
+        self.sa_stats.macs as f64 / (self.latency_us * 1e-6)
+    }
+}
+
 struct Pending {
     out: Vec<i64>,
     m: usize,
@@ -124,6 +164,23 @@ pub struct ServiceStats {
     pub sim_cycles: u64,
     pub sim_macs: u64,
     pub sim_toggles: u64,
+    /// MACs served from product-LUT tables (vs bit-plane fallback).
+    pub lut_macs: u64,
+    /// Process-wide LUT cache hits observed at snapshot time.
+    pub lut_cache_hits: u64,
+    /// Process-wide LUT table builds observed at snapshot time.
+    pub lut_builds: u64,
+}
+
+impl ServiceStats {
+    /// Mean end-to-end request latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_latency_us / self.requests as f64
+        }
+    }
 }
 
 /// The coordinator: tiler + bounded queue + worker pool + reassembly.
@@ -138,6 +195,12 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
+        // fail in the caller's thread with the real reason, instead of
+        // letting every worker panic on the stub Runtime (which would
+        // surface as "worker pool gone" or a wait() hang)
+        assert!(cfg.backend != BackendKind::Pjrt || cfg!(feature = "pjrt"),
+                "BackendKind::Pjrt requires building with --features pjrt \
+                 (and the xla crate; see rust/src/runtime/mod.rs)");
         let (tx, rx) = sync_channel::<TileJob>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let shared: Shared = Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
@@ -241,7 +304,11 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> ServiceStats {
-        *self.stats.lock().unwrap()
+        let mut s = *self.stats.lock().unwrap();
+        let (hits, builds) = lut::cache_counters();
+        s.lut_cache_hits = hits;
+        s.lut_builds = builds;
+        s
     }
 
     /// Drain the queue and join all workers.
@@ -264,6 +331,16 @@ impl Drop for Coordinator {
 
 enum Device {
     Word(PeConfig),
+    Lut {
+        pc: PeConfig,
+        /// Per-worker memo of the process-wide shared tables, keyed by the
+        /// request's approximation level k (`None` = not LUT-compilable,
+        /// word-model fallback). The `Arc`s point into `lut::cached`'s
+        /// global map, so workers share one table per design point.
+        tables: HashMap<u32, Option<Arc<ProductLut>>>,
+        /// MACs served from tables since the last stats drain.
+        lut_macs: u64,
+    },
     Systolic(Box<Systolic>),
     Pjrt {
         rt: Runtime,
@@ -275,6 +352,13 @@ fn make_device(cfg: &CoordinatorConfig) -> Device {
     match cfg.backend {
         BackendKind::Word => {
             Device::Word(PeConfig::new(cfg.n_bits, true, cfg.family, 0))
+        }
+        BackendKind::Lut => {
+            Device::Lut {
+                pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
+                tables: HashMap::new(),
+                lut_macs: 0,
+            }
         }
         BackendKind::Systolic => {
             let pc = PeConfig::new(cfg.n_bits, true, cfg.family, 0);
@@ -309,6 +393,12 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
             }
         }
         let results = execute_batch(&cfg, &mut device, &batch);
+        if let Device::Lut { lut_macs, .. } = &mut device {
+            if *lut_macs > 0 {
+                stats.lock().unwrap().lut_macs += *lut_macs;
+                *lut_macs = 0;
+            }
+        }
         // commit results
         let (lock, cvar) = &*shared;
         let mut map = lock.lock().unwrap();
@@ -358,6 +448,25 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
                              job.th, job.kk, job.tw);
             (out, SaStats { tiles: 1, macs: (job.th * job.kk * job.tw) as u64,
                             ..Default::default() })
+        }).collect(),
+        Device::Lut { pc, tables, lut_macs } => batch.iter().map(|job| {
+            let mut pc2 = *pc;
+            pc2.k = job.k;
+            let table = tables.entry(job.k)
+                .or_insert_with(|| lut::cached(&pc2))
+                .clone();
+            let macs = (job.th * job.kk * job.tw) as u64;
+            let out = match table {
+                Some(t) => {
+                    *lut_macs += macs;
+                    t.matmul(&job.a_panel, &job.b_panel,
+                             job.th, job.kk, job.tw)
+                }
+                // non-LUT-compilable design point: bit-identical fallback
+                None => matmul(&pc2, &job.a_panel, &job.b_panel,
+                               job.th, job.kk, job.tw),
+            };
+            (out, SaStats { tiles: 1, macs, ..Default::default() })
         }).collect(),
         Device::Systolic(sa) => batch.iter().map(|job| {
             let mut pc = sa.cfg;
@@ -473,8 +582,18 @@ mod tests {
     }
 
     #[test]
+    fn backend_names_round_trip() {
+        for b in [BackendKind::Word, BackendKind::Lut, BackendKind::Systolic,
+                  BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
     fn exact_requests_match_integer_gemm() {
-        for backend in [BackendKind::Word, BackendKind::Systolic] {
+        for backend in [BackendKind::Word, BackendKind::Lut,
+                        BackendKind::Systolic] {
             let c = Coordinator::new(CoordinatorConfig {
                 backend, workers: 3, ..Default::default()
             });
@@ -547,16 +666,37 @@ mod tests {
 
     #[test]
     fn approximate_requests_route_per_request_k() {
+        for backend in [BackendKind::Word, BackendKind::Lut] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers: 2, backend, ..Default::default()
+            });
+            let (m, kk, nn) = (8, 8, 8);
+            let a = ints(7, m * kk);
+            let b = ints(8, kk * nn);
+            let r0 = c.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                          m, kk, nn, k: 0 });
+            let r7 = c.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                          m, kk, nn, k: 7 });
+            assert_eq!(r0.out, exact(&a, &b, m, kk, nn), "{backend:?}");
+            assert_ne!(r0.out, r7.out, "{backend:?}: k=7 must differ");
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn lut_backend_reports_lut_macs_and_cache_activity() {
         let c = Coordinator::new(CoordinatorConfig {
-            workers: 2, backend: BackendKind::Word, ..Default::default()
+            workers: 2, backend: BackendKind::Lut, ..Default::default()
         });
-        let (m, kk, nn) = (8, 8, 8);
-        let a = ints(7, m * kk);
-        let b = ints(8, kk * nn);
-        let r0 = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 0 });
-        let r7 = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 7 });
-        assert_eq!(r0.out, exact(&a, &b, m, kk, nn));
-        assert_ne!(r0.out, r7.out, "k=7 must differ from exact");
+        let (m, kk, nn) = (16, 8, 16);
+        let resp = c.call(GemmRequest {
+            a: ints(9, m * kk), b: ints(10, kk * nn), m, kk, nn, k: 3,
+        });
+        assert!(resp.macs_per_sec() > 0.0);
+        let s = c.stats();
+        assert_eq!(s.lut_macs, (m * kk * nn) as u64);
+        assert!(s.lut_builds >= 1);
+        assert!(s.mean_latency_us() > 0.0);
         c.shutdown();
     }
 }

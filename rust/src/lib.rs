@@ -20,14 +20,37 @@
 //! | [`cells`]     | PPC/NPPC truth-table cells, exact + approximate + baselines |
 //! | [`netlist`]   | gate-level netlists: evaluation, STA, toggle power |
 //! | [`tech`]      | 90 nm-class standard-cell library + calibration |
-//! | [`pe`]        | word-level PE functional model + PE netlist builders |
+//! | [`pe`]        | PE functional models ([`pe::word`] bit-plane walk, [`pe::lut`] product-LUT fast path) + PE netlist builders |
 //! | [`systolic`]  | cycle-accurate output-stationary systolic array |
 //! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |
 //! | [`hw`]        | metric composition cell→PE→SA (Tables II-IV, Fig 8) |
 //! | [`apps`]      | DCT / edge / BDCN pipelines + image I/O + PSNR/SSIM |
-//! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
 //! | [`coordinator`]| GEMM request router: tiler, batcher, worker pool |
 //! | [`bench`]     | tiny criterion-free measurement harness |
+//!
+//! ## Choosing a GEMM backend
+//!
+//! Four backends compute the same approximate arithmetic; pick by what
+//! you need to observe (all are request-selectable in [`coordinator`]):
+//!
+//! * [`coordinator::BackendKind::Lut`] — table-driven
+//!   ([`pe::lut`]): per-design-point product table + carry-save-window
+//!   automaton, built once and `Arc`-shared across workers. Bit-identical
+//!   to `Word` and the fastest path for serving (≥5× on large GEMMs, see
+//!   `benches/hotpath.rs` `lut_vs_word`). Use it whenever you only need
+//!   results. Design points it cannot compile (`n > 8`, `k > n`,
+//!   over-budget tables) transparently fall back to the word model.
+//! * [`coordinator::BackendKind::Word`] — the word-level bit-plane walk
+//!   ([`pe::word`]): no table build cost, works for every `n <= 16`, and
+//!   is the normative software model the Python oracle pins. Use it for
+//!   one-off calls, wide operands, or when auditing the LUT path.
+//! * [`coordinator::BackendKind::Systolic`] — cycle-accurate array
+//!   simulation: adds cycle/toggle/energy observability at ~1000× the
+//!   cost. Use it when the *hardware* numbers matter, not throughput.
+//! * [`coordinator::BackendKind::Pjrt`] — the AOT Pallas artifacts via
+//!   PJRT (requires the `pjrt` feature + artifacts; chunked-K deployment
+//!   mode, bit-identical only at `k = 0`).
 
 pub mod apps;
 pub mod bench;

@@ -31,6 +31,7 @@ fn main() {
         "edge" => app_edge(rest),
         "cnn" => app_cnn(rest),
         "serve" => serve(rest),
+        "lut-report" => lut_report(),
         "emit-verilog" => emit_verilog(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -55,7 +56,8 @@ fn print_help() {
     println!("  dct  [--k K] [--out dir]     DCT compression pipeline");
     println!("  edge [--k K] [--out dir]     Laplacian edge detection");
     println!("  cnn  [--k K] [--out dir]     BDCN-lite CNN edge detection");
-    println!("  serve [--backend word|systolic|pjrt] [--workers N] [--requests R]");
+    println!("  serve [--backend word|lut|systolic|pjrt] [--workers N] [--requests R]");
+    println!("  lut-report                   product-LUT table sizes per design point");
     println!("  emit-verilog [--out dir]     export every cell + PE design as Verilog");
 }
 
@@ -322,11 +324,36 @@ fn emit_verilog(rest: &[String]) -> i32 {
     0
 }
 
+fn lut_report() -> i32 {
+    use axsys::pe::lut::ProductLut;
+    println!("== product-LUT design points (8-bit signed) ==");
+    println!("  {:<12} {:>2} | {:>7} {:>12}", "family", "k", "states", "bytes");
+    for family in Family::ALL {
+        for k in [0u32, 2, 4, 6, 7] {
+            let cfg = PeConfig::new(8, true, family, k);
+            match ProductLut::try_build(&cfg) {
+                Some(lut) => println!("  {:<12} {:>2} | {:>7} {:>12}",
+                                      family.name(), k, lut.states(),
+                                      lut.table_bytes()),
+                None => println!("  {:<12} {:>2} | {:>7} {:>12}",
+                                 family.name(), k, "-", "word fallback"),
+            }
+        }
+    }
+    0
+}
+
 fn serve(rest: &[String]) -> i32 {
-    let backend = match opt(rest, "--backend").as_deref() {
-        Some("systolic") => BackendKind::Systolic,
-        Some("pjrt") => BackendKind::Pjrt,
-        _ => BackendKind::Word,
+    let backend = match opt(rest, "--backend") {
+        Some(v) => match BackendKind::parse(&v) {
+            Some(b) => b,
+            None => {
+                eprintln!("unknown backend '{v}' (expected {})",
+                          BackendKind::names());
+                return 2;
+            }
+        },
+        None => BackendKind::Word,
     };
     let workers: usize = opt(rest, "--workers")
         .and_then(|v| v.parse().ok()).unwrap_or(4);
@@ -362,7 +389,11 @@ fn serve(rest: &[String]) -> i32 {
     println!("  {} requests in {:.3}s  ({:.1} req/s, {:.1} tiles/s)",
              s.requests, wall, s.requests as f64 / wall, s.tiles as f64 / wall);
     println!("  latency: mean {:.1} µs  max {:.1} µs",
-             s.total_latency_us / s.requests as f64, s.max_latency_us);
+             s.mean_latency_us(), s.max_latency_us);
+    if s.lut_macs > 0 {
+        println!("  lut: {} MACs table-served, {} tables built, {} cache hits",
+                 s.lut_macs, s.lut_builds, s.lut_cache_hits);
+    }
     if s.sim_cycles > 0 {
         let d = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
         let sa_m = axsys::hw::sa_metrics(&d, 8);

@@ -1,0 +1,422 @@
+//! Product-LUT GEMM engine — the table-driven hot path.
+//!
+//! The PPC/NPPC processing elements are deterministic functions of at most
+//! 8-bit operands, so every `(family, n, k, signedness)` design point can be
+//! compiled once into lookup tables and then applied with plain integer adds
+//! (the trick EvoApproxLib-style flows use to make approximate multipliers
+//! fast enough for network-scale evaluation). Two tables are needed because
+//! the paper's PE is a *fused MAC*, not a bare multiplier:
+//!
+//! 1. **Product table** (`2^N x 2^N` i32): the exact signed product of each
+//!    encoded operand pair. For `k == 0` this alone reproduces the PE
+//!    (tested exhaustively in [`word`](super::word)).
+//! 2. **State automaton** (`states x 4^k` packed u32): for `k > 0` the
+//!    approximate cells read the live carry-save accumulator, so chained
+//!    MACs are *not* the sum of single-MAC products. But approximation is
+//!    confined to grid columns `< k`, carries only propagate upward, and
+//!    the Baugh-Wooley constant lands above column `N-1 >= k`; hence the
+//!    low `k` bits of the `(s, kc)` rails evolve autonomously from the low
+//!    `k` bits of the operands, and the *value deviation* of each MAC is a
+//!    function of that window alone. The automaton enumerates the window
+//!    states reachable from the reset accumulator (empirically tiny:
+//!    ~`2^(k-1)` for the proposed family, 2 for nano6) and stores, per
+//!    `(state, a_lo, b_lo)`, the deviation and the successor state.
+//!
+//! A MAC then costs two table reads and two adds:
+//! `acc += prod[a][b] + err(state, a_lo, b_lo); state = next(state, ..)`,
+//! which is bit-identical to the word-level bit-plane walk (differential
+//! suite: `tests/backend_equiv.rs`) and an order of magnitude faster
+//! (`cargo bench --bench hotpath`, `lut_vs_word`).
+//!
+//! Tables are built lazily and shared process-wide through [`cached`]
+//! (keyed by the [`PeConfig`] fields, `Arc`-shared across coordinator
+//! workers). Unsupported design points (`n > 8`, `k > n`, or a table over
+//! [`TABLE_BYTES_BUDGET`]) transparently fall back to [`word::matmul`]
+//! via [`matmul`] — same bits, just not table speed.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::word::{mac_step_planned, matmul as word_matmul, MacPlan, PeConfig};
+use crate::Family;
+
+/// Hard ceiling on a single automaton's size; larger design points fall
+/// back to the word-level path rather than ballooning resident memory.
+pub const TABLE_BYTES_BUDGET: usize = 64 << 20;
+
+/// Compiled lookup tables for one PE design point.
+pub struct ProductLut {
+    pub cfg: PeConfig,
+    /// `2^N x 2^N` exact signed products of decoded operand pairs,
+    /// indexed `(a_enc << N) | b_enc`.
+    prod: Vec<i32>,
+    /// Automaton, state-major: entry `(state << 2k) | (a_lo << k | b_lo)`
+    /// packs `err` (i16, high half) and the successor state index (u16,
+    /// low half). Empty when `k == 0` (the PE is exact and stateless).
+    trans: Vec<u32>,
+    n_states: usize,
+    /// Approximate-window width in bits (== `cfg.k`).
+    kb: u32,
+}
+
+impl ProductLut {
+    /// Whether a design point is LUT-compilable at all (size limits are
+    /// checked during the build, which can still return `None`).
+    pub fn supports(cfg: &PeConfig) -> bool {
+        cfg.n <= 8 && cfg.k <= cfg.n
+    }
+
+    /// Compile the tables for `cfg`. Returns `None` for unsupported or
+    /// over-budget design points (callers fall back to the word model).
+    pub fn try_build(cfg: &PeConfig) -> Option<Self> {
+        if !Self::supports(cfg) {
+            return None;
+        }
+        let n = cfg.n;
+        let size = 1usize << n;
+        // one authoritative operand decode, shared with the word path
+        let dec = |enc: u64| -> i64 { cfg.decode_operand(enc) };
+        let mut prod = vec![0i32; size * size];
+        for a in 0..size {
+            let da = dec(a as u64);
+            for b in 0..size {
+                prod[(a << n) | b] = (da * dec(b as u64)) as i32;
+            }
+        }
+        if cfg.k == 0 {
+            return Some(ProductLut { cfg: *cfg, prod, trans: Vec::new(),
+                                     n_states: 1, kb: 0 });
+        }
+
+        // Discover the reachable window states breadth-first from the
+        // reset accumulator, emitting one state-major transition row per
+        // state as it is dequeued.
+        let kb = cfg.k;
+        let kmask = (1u64 << kb) - 1;
+        let n_inputs = 1usize << (2 * kb);
+        let plan = MacPlan::new(cfg);
+        let mut states: Vec<(u64, u64)> = vec![(0, 0)];
+        let mut index: HashMap<(u64, u64), u16> = HashMap::new();
+        index.insert((0, 0), 0);
+        let mut trans: Vec<u32> = Vec::new();
+        let mut next_state = 0usize;
+        while next_state < states.len() {
+            let (s_lo, kc_lo) = states[next_state];
+            let t0 = (s_lo + kc_lo) as i64;
+            for a_lo in 0..(1u64 << kb) {
+                let base_a = dec(a_lo);
+                for b_lo in 0..(1u64 << kb) {
+                    let (s1, k1) = mac_step_planned(&plan, a_lo, b_lo,
+                                                    s_lo, kc_lo);
+                    let err = plan.resolve(s1, k1) - t0 - base_a * dec(b_lo);
+                    let Ok(err16) = i16::try_from(err) else {
+                        return None; // cannot pack; fall back
+                    };
+                    let st = (s1 & kmask, k1 & kmask);
+                    let idx = match index.get(&st) {
+                        Some(&i) => i,
+                        None => {
+                            if states.len() > u16::MAX as usize
+                                || (states.len() + 1) * n_inputs * 4
+                                    > TABLE_BYTES_BUDGET
+                            {
+                                return None;
+                            }
+                            let i = states.len() as u16;
+                            states.push(st);
+                            index.insert(st, i);
+                            i
+                        }
+                    };
+                    trans.push(((err16 as u16 as u32) << 16) | idx as u32);
+                }
+            }
+            next_state += 1;
+        }
+        Some(ProductLut { cfg: *cfg, prod, trans, n_states: states.len(), kb })
+    }
+
+    /// Number of reachable approximate-window states (1 when exact).
+    pub fn states(&self) -> usize {
+        self.n_states
+    }
+
+    /// Resident table footprint in bytes.
+    pub fn table_bytes(&self) -> usize {
+        self.prod.len() * 4 + self.trans.len() * 4
+    }
+
+    /// One resolved dot product `sum_t a[t]*b[t]` through the PE — the
+    /// LUT equivalent of streaming `kk` MACs into one accumulator.
+    /// Delegates to [`Self::matmul`] as a 1x1 GEMM so there is exactly
+    /// one implementation of the table walk.
+    pub fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+        assert_eq!(a.len(), b.len());
+        self.matmul(a, b, 1, a.len(), 1)[0]
+    }
+
+    /// Table-driven GEMM `C(m x nn) = A(m x kk) @ B(kk x nn)`:
+    /// cache-blocked over output columns (B panels stay L1-resident while
+    /// A rows stream), parallelized across output-row chunks for large
+    /// problems. Bit-identical to [`word::matmul`] on the same config.
+    pub fn matmul(&self, a: &[i64], b: &[i64], m: usize, kk: usize,
+                  nn: usize) -> Vec<i64> {
+        assert_eq!(a.len(), m * kk);
+        assert_eq!(b.len(), kk * nn);
+        let n = self.cfg.n as usize;
+        let ae: Vec<u16> = a.iter().map(|&v| self.cfg.encode(v) as u16).collect();
+        // B transposed once: unit-stride inner loops
+        let mut bt = vec![0u16; kk * nn];
+        for t in 0..kk {
+            for j in 0..nn {
+                bt[j * kk + t] = self.cfg.encode(b[t * nn + j]) as u16;
+            }
+        }
+        let mut out = vec![0i64; m * nn];
+        // block width: 32 B-columns x kk u16 ~ 64*kk bytes per panel sweep
+        const JB: usize = 32;
+        let row_chunk_job = |i0: usize, rows: &mut [i64]| {
+            let n_rows = rows.len() / nn.max(1);
+            let mut jb = 0;
+            while jb < nn {
+                let jw = (nn - jb).min(JB);
+                for r in 0..n_rows {
+                    let arow = &ae[(i0 + r) * kk..(i0 + r + 1) * kk];
+                    for j in jb..jb + jw {
+                        let brow = &bt[j * kk..(j + 1) * kk];
+                        let mut acc = 0i64;
+                        if self.trans.is_empty() {
+                            for t in 0..kk {
+                                let ai = arow[t] as usize;
+                                let bi = brow[t] as usize;
+                                acc += self.prod[(ai << n) | bi] as i64;
+                            }
+                        } else {
+                            let kb = self.kb as usize;
+                            let kmask = (1usize << kb) - 1;
+                            let mut st = 0usize;
+                            for t in 0..kk {
+                                let ai = arow[t] as usize;
+                                let bi = brow[t] as usize;
+                                acc += self.prod[(ai << n) | bi] as i64;
+                                let key = ((ai & kmask) << kb) | (bi & kmask);
+                                let e = self.trans[(st << (2 * kb)) | key];
+                                acc += (e >> 16) as i16 as i64;
+                                st = (e & 0xFFFF) as usize;
+                            }
+                        }
+                        rows[r * nn + j] = self.cfg.decode(acc as u64);
+                    }
+                }
+                jb += jw;
+            }
+        };
+        let work = m * nn * kk;
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get()).unwrap_or(1).min(8);
+        // Parallelize only problems that are both big and tall: coordinator
+        // workers call this per SA-sized tile (m <= 8) from an already-
+        // parallel pool, where per-call thread spawns would oversubscribe
+        // and cost more than the ~10 µs of work they fan out.
+        if work >= 1 << 18 && threads > 1 && m >= 2 * threads {
+            std::thread::scope(|scope| {
+                let chunk = m.div_ceil(threads);
+                for (ci, rows) in out.chunks_mut(chunk * nn).enumerate() {
+                    let row_chunk_job = &row_chunk_job;
+                    scope.spawn(move || row_chunk_job(ci * chunk, rows));
+                }
+            });
+        } else {
+            row_chunk_job(0, &mut out);
+        }
+        out
+    }
+}
+
+/// Cache key: every [`PeConfig`] field that changes the tables.
+type LutKey = (u32, u32, bool, Family, u32);
+
+fn key_of(cfg: &PeConfig) -> LutKey {
+    (cfg.n, cfg.w, cfg.signed, cfg.family, cfg.k)
+}
+
+struct LutCache {
+    tables: Mutex<HashMap<LutKey, Option<Arc<ProductLut>>>>,
+    hits: AtomicU64,
+    builds: AtomicU64,
+}
+
+fn cache() -> &'static LutCache {
+    static CACHE: OnceLock<LutCache> = OnceLock::new();
+    CACHE.get_or_init(|| LutCache {
+        tables: Mutex::new(HashMap::new()),
+        hits: AtomicU64::new(0),
+        builds: AtomicU64::new(0),
+    })
+}
+
+/// Fetch (building on first use) the shared tables for a design point.
+/// `None` means the point is not LUT-compilable — callers fall back to
+/// the word model. The returned `Arc` is shared across all workers.
+pub fn cached(cfg: &PeConfig) -> Option<Arc<ProductLut>> {
+    let c = cache();
+    if let Some(entry) = c.tables.lock().unwrap().get(&key_of(cfg)) {
+        c.hits.fetch_add(1, Ordering::Relaxed);
+        return entry.clone();
+    }
+    // build outside the lock (builds are idempotent; a racing duplicate
+    // build is wasted work, not an error)
+    let built = ProductLut::try_build(cfg).map(Arc::new);
+    c.builds.fetch_add(1, Ordering::Relaxed);
+    c.tables.lock().unwrap()
+        .entry(key_of(cfg))
+        .or_insert(built)
+        .clone()
+}
+
+/// Cumulative cache counters: `(hits, builds)` since process start.
+pub fn cache_counters() -> (u64, u64) {
+    let c = cache();
+    (c.hits.load(Ordering::Relaxed), c.builds.load(Ordering::Relaxed))
+}
+
+/// Table-driven GEMM with transparent fallback: uses the shared LUT when
+/// the design point supports it, the word-level bit-plane walk otherwise.
+/// Always bit-identical to [`word::matmul`].
+pub fn matmul(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
+              nn: usize) -> Vec<i64> {
+    match cached(cfg) {
+        Some(lut) => lut.matmul(a, b, m, kk, nn),
+        None => word_matmul(cfg, a, b, m, kk, nn),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ints(seed: u64, len: usize) -> Vec<i64> {
+        let mut s = seed | 1;
+        (0..len).map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as i64 & 255) - 128
+        }).collect()
+    }
+
+    #[test]
+    fn lut_matches_word_all_families_and_ks() {
+        let (m, kk, nn) = (9usize, 13usize, 7usize);
+        let a = ints(1, m * kk);
+        let b = ints(2, kk * nn);
+        for family in Family::ALL {
+            for signed in [true, false] {
+                for k in [0u32, 2, 4, 7] {
+                    let cfg = PeConfig::new(8, signed, family, k);
+                    let lut = ProductLut::try_build(&cfg)
+                        .expect("8-bit points are LUT-compilable");
+                    assert_eq!(lut.matmul(&a, &b, m, kk, nn),
+                               word_matmul(&cfg, &a, &b, m, kk, nn),
+                               "{family:?} signed={signed} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reachable_state_counts_are_tiny() {
+        // the whole point of the automaton: the window state space
+        // collapses (proposed ~2^(k-1), nano6 has 2 states at any k)
+        for (family, k, want_max) in [
+            (Family::Proposed, 7u32, 64usize),
+            (Family::Axsa5, 7, 128),
+            (Family::Sips12, 7, 128),
+            (Family::Nano6, 7, 2),
+        ] {
+            let cfg = PeConfig::new(8, true, family, k);
+            let lut = ProductLut::try_build(&cfg).unwrap();
+            assert!(lut.states() <= want_max,
+                    "{family:?}: {} states", lut.states());
+            assert!(lut.table_bytes() <= TABLE_BYTES_BUDGET);
+        }
+    }
+
+    #[test]
+    fn dot_matches_matmul_cell() {
+        let cfg = PeConfig::new(8, true, Family::Sips12, 5);
+        let lut = ProductLut::try_build(&cfg).unwrap();
+        let a = ints(3, 33);
+        let b = ints(4, 33);
+        let y = lut.matmul(&a, &b, 1, 33, 1);
+        assert_eq!(lut.dot(&a, &b), y[0]);
+    }
+
+    #[test]
+    fn unsupported_points_fall_back_bit_identically() {
+        // 16-bit operands exceed the product-table width: matmul() must
+        // transparently route to the word model
+        let cfg = PeConfig::new(16, true, Family::Proposed, 3);
+        assert!(!ProductLut::supports(&cfg));
+        assert!(ProductLut::try_build(&cfg).is_none());
+        let a = ints(5, 4 * 6);
+        let b = ints(6, 6 * 5);
+        assert_eq!(matmul(&cfg, &a, &b, 4, 6, 5),
+                   word_matmul(&cfg, &a, &b, 4, 6, 5));
+        // k beyond the operand width is also word-model territory
+        let cfg2 = PeConfig::new(8, true, Family::Proposed, 12);
+        assert!(ProductLut::try_build(&cfg2).is_none());
+        assert_eq!(matmul(&cfg2, &a, &b, 4, 6, 5),
+                   word_matmul(&cfg2, &a, &b, 4, 6, 5));
+    }
+
+    #[test]
+    fn cache_shares_one_arc_per_design_point() {
+        let cfg = PeConfig::new(8, true, Family::Axsa5, 3);
+        let t1 = cached(&cfg).unwrap();
+        let t2 = cached(&cfg).unwrap();
+        assert!(Arc::ptr_eq(&t1, &t2));
+        let (hits, _) = cache_counters();
+        assert!(hits >= 1);
+        // a different k is a different table
+        let cfg2 = PeConfig::new(8, true, Family::Axsa5, 4);
+        let t3 = cached(&cfg2).unwrap();
+        assert!(!Arc::ptr_eq(&t1, &t3));
+    }
+
+    #[test]
+    fn four_bit_designs_including_k_equals_n() {
+        // n=4 puts the Baugh-Wooley NPPC column inside the approximate
+        // window at k=4 — the automaton must still be exact
+        let (m, kk, nn) = (5usize, 11usize, 6usize);
+        let a: Vec<i64> = ints(7, m * kk).iter().map(|v| v % 8).collect();
+        let b: Vec<i64> = ints(8, kk * nn).iter().map(|v| v % 8).collect();
+        for family in Family::ALL {
+            for k in [0u32, 2, 3, 4] {
+                let cfg = PeConfig::new(4, true, family, k);
+                let lut = ProductLut::try_build(&cfg).unwrap();
+                assert_eq!(lut.matmul(&a, &b, m, kk, nn),
+                           word_matmul(&cfg, &a, &b, m, kk, nn),
+                           "{family:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_lut_equals_integer_gemm() {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 0);
+        let lut = ProductLut::try_build(&cfg).unwrap();
+        let (m, kk, nn) = (6usize, 9usize, 8usize);
+        let a = ints(11, m * kk);
+        let b = ints(12, kk * nn);
+        let y = lut.matmul(&a, &b, m, kk, nn);
+        for i in 0..m {
+            for j in 0..nn {
+                let want: i64 = (0..kk)
+                    .map(|t| a[i * kk + t] * b[t * nn + j]).sum();
+                assert_eq!(y[i * nn + j], want, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,13 +1,17 @@
 //! Processing-element models.
 //!
-//! * [`word`] — the fast word-level functional model (the hot path): one
-//!   fused MAC = N bit-plane row updates on a `u64` carry-save accumulator.
+//! * [`word`] — the word-level functional model: one fused MAC = N
+//!   bit-plane row updates on a `u64` carry-save accumulator.
 //!   Bit-identical to `python/compile/kernels/ref.py` (tested against the
 //!   exported goldens) and to the gate-level netlists in [`netlist_builder`].
+//! * [`lut`] — the table-driven hot path: per-design-point product tables
+//!   plus a tiny carry-save-window automaton, bit-identical to [`word`]
+//!   but an order of magnitude faster on GEMM-shaped workloads.
 //! * [`netlist_builder`] — constructs the full gate-level netlist of each
 //!   PE design (grid of PPC/NPPC cells + Kogge-Stone merge + operand
 //!   registers) for the hardware model in [`crate::hw`].
 
+pub mod lut;
 pub mod netlist_builder;
 pub mod word;
 

@@ -85,6 +85,21 @@ impl PeConfig {
             v as i64
         }
     }
+
+    /// Decode an N-bit operand encoding back to its integer value (the
+    /// hardware only sees N bits, so out-of-range inputs wrap here).
+    /// The single authority both the word and LUT paths rely on for
+    /// operand semantics.
+    #[inline]
+    pub fn decode_operand(&self, enc: u64) -> i64 {
+        let mask_n = (1u64 << self.n) - 1;
+        let enc = enc & mask_n;
+        if self.signed && (enc >> (self.n - 1)) & 1 == 1 {
+            (enc | !mask_n) as i64
+        } else {
+            enc as i64
+        }
+    }
 }
 
 /// One processing element: carry-save accumulator + the cell grid.
@@ -352,17 +367,7 @@ pub fn matmul(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
 /// accumulator semantics (used by `matmul` when k == 0).
 fn matmul_exact_fast(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize,
                      kk: usize, nn: usize) -> Vec<i64> {
-    let mask_n = (1u64 << cfg.n) - 1;
-    let dec_op = |v: i64| -> i64 {
-        // re-decode through the N-bit operand encoding (the hardware only
-        // sees N bits — matches the bit-plane path for out-of-range inputs)
-        let enc = (v as u64) & mask_n;
-        if cfg.signed && (enc >> (cfg.n - 1)) & 1 == 1 {
-            (enc | !mask_n) as i64
-        } else {
-            enc as i64
-        }
-    };
+    let dec_op = |v: i64| -> i64 { cfg.decode_operand(v as u64) };
     let ae: Vec<i64> = a.iter().map(|&v| dec_op(v)).collect();
     let mut bt = vec![0i64; kk * nn];
     for t in 0..kk {

@@ -6,18 +6,21 @@
 //! xla_extension 0.5.1 bundled with the `xla` crate rejects jax >= 0.5's
 //! 64-bit-id protos; the text parser reassigns ids — see
 //! /opt/xla-example/README.md and DESIGN.md §3).
+//!
+//! ## Feature gating
+//!
+//! The `xla` crate links the XLA C++ extension and cannot be built in the
+//! offline environment, so the PJRT client is compiled only with
+//! `--features pjrt` (which additionally requires adding `xla = "0.1"` to
+//! Cargo.toml on a machine that has the toolchain). Without the feature,
+//! [`Runtime::new`] returns an error and every artifact-dependent test and
+//! benchmark skips; the artifact manifest/golden helpers below work either
+//! way. The serving stack itself (Word / Systolic / Lut backends) has no
+//! PJRT dependency.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{Context, Result};
-
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+use anyhow::Result;
 
 /// Shape + data of one int32 tensor crossing the PJRT boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,89 +40,155 @@ impl TensorI32 {
     }
 }
 
-/// The PJRT CPU client plus a compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
+    use anyhow::{Context, Result};
+
+    use super::TensorI32;
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
+    /// The PJRT CPU client plus a compiled-executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts_dir: std::path::PathBuf,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                artifacts_dir: artifacts_dir.to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile `<artifacts>/<name>.hlo.txt` (cached).
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            let entry = std::sync::Arc::new(Executable { exe, name: name.into() });
+            self.cache.lock().unwrap().insert(name.into(), entry.clone());
+            Ok(entry)
+        }
+
+        /// Execute with int32 inputs; returns the int32 outputs of the
+        /// result tuple (aot.py lowers with `return_tuple=True`).
+        pub fn execute_i32(&self, exe: &Executable, inputs: &[TensorI32])
+                           -> Result<Vec<TensorI32>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for t in inputs {
+                let lit = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                let lit = lit.reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = exe.exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", exe.name))?;
+            let tuple = result[0][0].to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+            let parts = tuple.to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            let mut out = Vec::with_capacity(parts.len());
+            for lit in parts {
+                let shape = lit.array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                out.push(TensorI32::new(dims, data));
+            }
+            Ok(out)
+        }
+
+        /// Load-and-run convenience.
+        pub fn run(&self, name: &str, inputs: &[TensorI32])
+                   -> Result<Vec<TensorI32>> {
+            let exe = self.load(name)?;
+            self.execute_i32(&exe, inputs)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    use super::TensorI32;
+
+    /// Stub standing in for a compiled artifact; never constructed.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    /// Stub PJRT client: [`Runtime::new`] always errors, so the methods
+    /// below are unreachable but keep every caller compiling unchanged.
+    pub struct Runtime {}
+
+    impl Runtime {
+        pub fn new(_artifacts_dir: &Path) -> Result<Self> {
+            Err(anyhow::anyhow!(
+                "axsys was built without the `pjrt` feature; rebuild with \
+                 `--features pjrt` (and the xla crate) to run AOT artifacts"))
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".into()
+        }
+
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            Err(anyhow::anyhow!("pjrt feature disabled: cannot load {name}"))
+        }
+
+        pub fn execute_i32(&self, exe: &Executable, _inputs: &[TensorI32])
+                           -> Result<Vec<TensorI32>> {
+            Err(anyhow::anyhow!("pjrt feature disabled: cannot run {}", exe.name))
+        }
+
+        pub fn run(&self, name: &str, _inputs: &[TensorI32])
+                   -> Result<Vec<TensorI32>> {
+            Err(anyhow::anyhow!("pjrt feature disabled: cannot run {name}"))
+        }
+    }
+}
+
+pub use pjrt_impl::{Executable, Runtime};
+
+impl Runtime {
     /// Default artifacts location (repo-relative, overridable via env).
     pub fn default_artifacts_dir() -> PathBuf {
         if let Ok(p) = std::env::var("AXSYS_ARTIFACTS") {
             return PathBuf::from(p);
         }
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile `<artifacts>/<name>.hlo.txt` (cached).
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?)
-            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        let entry = std::sync::Arc::new(Executable { exe, name: name.into() });
-        self.cache.lock().unwrap().insert(name.into(), entry.clone());
-        Ok(entry)
-    }
-
-    /// Execute with int32 inputs; returns the int32 outputs of the
-    /// result tuple (aot.py lowers with `return_tuple=True`).
-    pub fn execute_i32(&self, exe: &Executable, inputs: &[TensorI32])
-                       -> Result<Vec<TensorI32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let lit = xla::Literal::vec1(&t.data);
-            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-            let lit = lit.reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = exe.exe.execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", exe.name))?;
-        let tuple = result[0][0].to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
-        let parts = tuple.to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
-            let shape = lit.array_shape()
-                .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-            let dims: Vec<usize> =
-                shape.dims().iter().map(|&d| d as usize).collect();
-            let data = lit.to_vec::<i32>()
-                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-            out.push(TensorI32::new(dims, data));
-        }
-        Ok(out)
-    }
-
-    /// Load-and-run convenience.
-    pub fn run(&self, name: &str, inputs: &[TensorI32]) -> Result<Vec<TensorI32>> {
-        let exe = self.load(name)?;
-        self.execute_i32(&exe, inputs)
     }
 }
 

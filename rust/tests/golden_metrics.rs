@@ -1,0 +1,112 @@
+//! Golden regression pins for the paper's error metrics (Table V
+//! setting): exhaustive 8-bit single-MAC sweeps per approximate family.
+//!
+//! The pinned numbers were generated from the Python oracle
+//! (`python/compile/kernels/ref.py::mac_scalar`) over all 65 536 operand
+//! pairs — the Rust word model mirrors it bit-for-bit, so these values
+//! must never drift. If a refactor changes any of them, the arithmetic
+//! changed, not just the implementation: that is a bug unless the paper
+//! mapping itself was wrong (in which case regenerate the goldens from
+//! the oracle and say so in the commit).
+
+use axsys::error::exhaustive_metrics;
+use axsys::pe::word::PeConfig;
+use axsys::Family;
+
+/// (family, signed, k, med, nmed, mred, max_ed, error_rate)
+#[allow(clippy::type_complexity)]
+const GOLDEN: &[(Family, bool, u32, f64, f64, f64, u64, f64)] = &[
+    (Family::Proposed, true, 2, 1.0, 6.103515625e-05,
+     0.0021752896304558945, 3, 0.5),
+    (Family::Proposed, true, 4, 7.125, 0.00043487548828125,
+     0.013972360106945313, 21, 0.8125),
+    (Family::Proposed, true, 6, 35.65625, 0.0021762847900390625,
+     0.06374472048890063, 109, 0.9375),
+    (Family::Proposed, false, 2, 1.0, 1.5378700499807768e-05,
+     0.0006369821030026554, 3, 0.5),
+    (Family::Proposed, false, 4, 7.125, 0.00010957324106113033,
+     0.003580747221153849, 21, 0.8125),
+    (Family::Proposed, false, 6, 35.65625, 0.0005483467896962706,
+     0.01378729871554553, 109, 0.9375),
+    (Family::Axsa5, true, 2, 0.25, 1.52587890625e-05,
+     0.0005764524712185496, 4, 0.0625),
+    (Family::Axsa5, true, 4, 5.75, 0.0003509521484375,
+     0.012284222910042818, 44, 0.31640625),
+    (Family::Axsa5, true, 6, 50.25, 0.0030670166015625,
+     0.10272117862187753, 300, 0.598876953125),
+    (Family::Axsa5, false, 2, 0.25, 3.844675124951942e-06,
+     0.00010591447570186614, 4, 0.0625),
+    (Family::Axsa5, false, 4, 5.75, 8.842752787389466e-05,
+     0.0018339410421101816, 44, 0.31640625),
+    (Family::Axsa5, false, 6, 50.25, 0.0007727797001153403,
+     0.011311007868927376, 300, 0.598876953125),
+    (Family::Sips12, true, 2, 1.25, 7.62939453125e-05,
+     0.0023897031364602654, 5, 1.0),
+    (Family::Sips12, true, 4, 8.5546875, 0.0005221366882324219,
+     0.01708665160216088, 49, 1.0),
+    (Family::Sips12, true, 6, 56.17529296875, 0.0034286677837371826,
+     0.115537162540702, 321, 1.0),
+    (Family::Sips12, false, 2, 1.25, 1.922337562475971e-05,
+     0.0006819970598979667, 5, 1.0),
+    (Family::Sips12, false, 4, 8.5546875, 0.00013155997693194924,
+     0.003680690695327011, 49, 1.0),
+    (Family::Sips12, false, 6, 56.17529296875, 0.0008639030060553633,
+     0.017676069027603658, 321, 1.0),
+    (Family::Nano6, true, 2, 1.25, 7.62939453125e-05,
+     0.0023897031364602853, 4, 0.9375),
+    (Family::Nano6, true, 4, 9.375, 0.00057220458984375,
+     0.01896271217007697, 44, 0.9921875),
+    (Family::Nano6, true, 6, 62.78515625, 0.003832101821899414,
+     0.12835077452689272, 300, 0.99853515625),
+    (Family::Nano6, false, 2, 1.25, 1.922337562475971e-05,
+     0.0006725578261434934, 4, 0.9375),
+    (Family::Nano6, false, 4, 9.375, 0.0001441753171856978,
+     0.003959690814068116, 44, 0.9921875),
+    (Family::Nano6, false, 6, 62.78515625, 0.0009655541138023837,
+     0.019390517847794404, 300, 0.99853515625),
+];
+
+fn close(got: f64, want: f64, what: &str) {
+    // the sweeps are deterministic; the tolerance only absorbs benign
+    // float-summation reassociation if the loop structure ever changes
+    let tol = want.abs().max(1e-12) * 1e-9;
+    assert!((got - want).abs() <= tol,
+            "{what}: got {got:e}, golden {want:e}");
+}
+
+#[test]
+fn table5_metrics_pinned_to_oracle_goldens() {
+    for &(family, signed, k, med, nmed, mred, max_ed, er) in GOLDEN {
+        let cfg = PeConfig::new(8, signed, family, k);
+        let m = exhaustive_metrics(&cfg);
+        let what = format!("{family:?} signed={signed} k={k}");
+        close(m.med, med, &format!("{what} med"));
+        close(m.nmed, nmed, &format!("{what} nmed"));
+        close(m.mred, mred, &format!("{what} mred"));
+        assert_eq!(m.max_ed, max_ed, "{what} max_ed");
+        close(m.error_rate, er, &format!("{what} error_rate"));
+    }
+}
+
+#[test]
+fn exact_configs_have_zero_golden_error() {
+    for family in Family::ALL {
+        for signed in [true, false] {
+            let m = exhaustive_metrics(&PeConfig::new(8, signed, family, 0));
+            assert_eq!(m.med, 0.0, "{family:?} signed={signed}");
+            assert_eq!(m.max_ed, 0, "{family:?} signed={signed}");
+            assert_eq!(m.error_rate, 0.0, "{family:?} signed={signed}");
+        }
+    }
+}
+
+#[test]
+fn paper_family_ordering_preserved_at_k6_signed() {
+    // Table V ordering (signed, k = 6): proposed < [5] < [12] < [6] on NMED
+    let nmed = |f: Family| {
+        exhaustive_metrics(&PeConfig::new(8, true, f, 6)).nmed
+    };
+    assert!(nmed(Family::Proposed) < nmed(Family::Axsa5));
+    assert!(nmed(Family::Axsa5) < nmed(Family::Sips12));
+    assert!(nmed(Family::Sips12) < nmed(Family::Nano6));
+}

@@ -1,0 +1,155 @@
+//! Minimal offline-vendored subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository cannot reach crates.io, so the
+//! crate vendors the (small) slice of anyhow it actually uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`ensure!`] / [`bail!`] macros and the
+//! [`Context`] extension trait. Semantics match upstream for this subset:
+//! `Error` boxes any `std::error::Error + Send + Sync` (and deliberately
+//! does *not* implement `std::error::Error` itself, which is what makes the
+//! blanket `From` conversion coherent), `context` wraps an error with a
+//! leading message, and the macros build errors from format strings.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn std::error::Error + Send + Sync + 'static>),
+    Context(String, Box<Error>),
+}
+
+/// A type-erased error with an optional chain of context messages.
+pub struct Error(Repr);
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Repr::Msg(message.to_string()))
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error(Repr::Context(context.to_string(), Box::new(self)))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.0 {
+            Repr::Msg(m) => f.write_str(m),
+            Repr::Boxed(e) => write!(f, "{e}"),
+            Repr::Context(c, inner) => write!(f, "{c}: {inner}"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // upstream prints the chain on Debug too; one line is enough here
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Repr::Boxed(Box::new(e)))
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_and_context_chain() {
+        let e = io_fail().unwrap_err();
+        let text = format!("{e}");
+        assert!(text.starts_with("reading config: "), "{text}");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x == 7 {
+                bail!("lucky numbers rejected");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(-1).unwrap_err()),
+                   "x must be positive, got -1");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "lucky numbers rejected");
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(format!("{e}"), "plain 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing value");
+    }
+}
