@@ -2,8 +2,10 @@
 //!
 //! The hybrid scheme of the paper's Fig. 12: the first two cascade blocks
 //! run their convolutions on approximate PEs (level k), the rest exact.
-//! Demonstrates the paper's core observation — the CNN cascade absorbs
-//! arithmetic error far better than the kernel-based detector.
+//! All convolutions are lowered to GEMM (shared im2col pass) and served
+//! **through the coordinator's worker pool** on the table-driven LUT
+//! backend. Demonstrates the paper's core observation — the CNN cascade
+//! absorbs arithmetic error far better than the kernel-based detector.
 //!
 //! Requires `make artifacts` (the CNN is trained at artifact-build time).
 //!
@@ -12,12 +14,9 @@
 //! ```
 
 use axsys::apps::bdcn;
-use axsys::apps::edge;
-use axsys::apps::image::{psnr, scene, ssim, write_pgm};
-use axsys::apps::WordGemm;
-use axsys::pe::word::PeConfig;
+use axsys::apps::image::{scene, ssim, write_pgm};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use axsys::runtime::{Runtime, TensorI32};
-use axsys::Family;
 
 fn main() -> anyhow::Result<()> {
     let out = std::env::args().nth(1).unwrap_or_else(|| "out".into());
@@ -28,27 +27,34 @@ fn main() -> anyhow::Result<()> {
             "{e:#}\nrun `make artifacts` first (trains the CNN)"))?;
 
     let img = scene(128, 128);
-    let e_exact = bdcn::forward_word(&blocks, &img, 0);
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        backend: BackendKind::Lut,
+        ..Default::default()
+    });
+    let exact = coord.serve_bdcn(&blocks, &img, 0);
     write_pgm(std::path::Path::new(&out).join("bdcn_exact.pgm").as_path(),
-              &e_exact)?;
+              &exact.out)?;
 
-    // kernel-based comparison uses the same image
-    let mut g0 = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
-    let lap_exact = edge::pipeline(&mut g0, &img);
+    // kernel-based comparison uses the same image and the same pool
+    let lap_exact = coord.serve_edge(&img, 0);
 
     println!("{:<4} {:>14} {:>9} {:>16} (approx vs exact)", "k",
              "BDCN PSNR(dB)", "SSIM", "kernel PSNR(dB)");
     for k in [2u32, 4, 6, 8] {
-        let e = bdcn::forward_word(&blocks, &img, k);
-        let mut gk = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
-        let lap = edge::pipeline(&mut gk, &img);
+        let e = coord.serve_bdcn(&blocks, &img, k);
+        let lap = coord.serve_edge(&img, k);
         println!("{:<4} {:>14.2} {:>9.4} {:>16.2}", k,
-                 psnr(&e_exact.data, &e.data), ssim(&e_exact.data, &e.data),
-                 psnr(&lap_exact.data, &lap.data));
+                 e.psnr_db, ssim(&exact.out.data, &e.out.data), lap.psnr_db);
         write_pgm(std::path::Path::new(&out)
-                  .join(format!("bdcn_k{k}.pgm")).as_path(), &e)?;
+                  .join(format!("bdcn_k{k}.pgm")).as_path(), &e.out)?;
     }
-    println!("\n(the CNN cascade should stay well above the kernel method at\n\
+    let s = coord.stats();
+    println!("\nservice: {} bdcn + {} edge app requests, {} GEMM \
+              sub-requests ({} lut MACs), gemm p99 {:.1} µs",
+             s.bdcn.requests, s.edge.requests, s.requests, s.lut_macs,
+             s.latency_percentile(0.99));
+    println!("(the CNN cascade should stay well above the kernel method at\n\
               every k — the paper's Table VI pattern)");
 
     // PJRT cross-check: the full quantized CNN lowered from JAX
@@ -61,11 +67,12 @@ fn main() -> anyhow::Result<()> {
         ])?;
         let got: Vec<u8> = outs[0].data.iter()
             .map(|&v| v.clamp(0, 255) as u8).collect();
-        let want = bdcn::forward_word(&blocks, &img, 6);
-        anyhow::ensure!(got == want.data,
-                        "PJRT bdcn128 must match the Rust pipeline (k=6)");
-        println!("PJRT bdcn128 artifact matches the Rust pipeline bit-for-bit (k=6)");
+        let want = coord.serve_bdcn(&blocks, &img, 6);
+        anyhow::ensure!(got == want.out.data,
+                        "PJRT bdcn128 must match the served pipeline (k=6)");
+        println!("PJRT bdcn128 artifact matches the served pipeline bit-for-bit (k=6)");
     }
+    coord.shutdown();
     println!("edge maps written to {out}/");
     Ok(())
 }

@@ -1,10 +1,13 @@
 //! DCT image compression (paper §V-A / Fig. 11 / Table VI column "DCT").
 //!
 //! Runs the 8x8 integer DCT compress->reconstruct pipeline on the 256x256
-//! test scene through three backends — exact PE, approximate PE at a sweep
-//! of k, and the AOT PJRT artifact — reporting PSNR/SSIM of each
-//! approximate reconstruction **against the exact design's output**
-//! (the paper's metric), plus PSNR vs the original.
+//! test scene **through the coordinator's serving path**: every GEMM
+//! stage is tiled and executed by the worker pool on the cycle-accurate
+//! systolic backend (bit-identical to the single-threaded path — see
+//! `rust/tests/prop_equiv.rs`). Reports PSNR/SSIM of each approximate
+//! reconstruction against the exact design's output (the paper's
+//! metric), plus PSNR vs the original, and cross-checks the AOT PJRT
+//! artifact when available.
 //!
 //! ```bash
 //! cargo run --release --example dct_compression [-- out_dir]
@@ -12,7 +15,8 @@
 
 use axsys::apps::dct;
 use axsys::apps::image::{psnr, scene, ssim, write_pgm};
-use axsys::apps::{SystolicGemm, WordGemm};
+use axsys::apps::{CoordinatorGemm, WordGemm};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use axsys::pe::word::PeConfig;
 use axsys::runtime::{Runtime, TensorI32};
 use axsys::Family;
@@ -23,24 +27,34 @@ fn main() -> anyhow::Result<()> {
     let img = scene(256, 256);
     write_pgm(std::path::Path::new(&out).join("dct_input.pgm").as_path(), &img)?;
 
-    let mut exact = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
-    let (r_exact, _) = dct::pipeline(&mut exact, &img);
-    println!("exact pipeline vs original: PSNR {:.2} dB",
-             psnr(&img.data, &r_exact.data));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        backend: BackendKind::Systolic,
+        ..Default::default()
+    });
+    let exact = coord.serve_dct(&img, 0);
+    println!("exact pipeline vs original: PSNR {:.2} dB (served, {} GEMM \
+              sub-requests)", exact.psnr_db, exact.gemm_requests);
     write_pgm(std::path::Path::new(&out).join("dct_exact.pgm").as_path(),
-              &r_exact)?;
+              &exact.out)?;
 
-    println!("\n{:<4} {:>10} {:>8}   (approx vs exact — paper Table VI)",
-             "k", "PSNR(dB)", "SSIM");
+    println!("\n{:<4} {:>10} {:>8} {:>12}   (approx vs exact — paper Table VI)",
+             "k", "PSNR(dB)", "SSIM", "SA cycles");
     for k in [2u32, 4, 6, 8] {
-        let mut g = SystolicGemm::new(
-            PeConfig::new(8, true, Family::Proposed, k), 8);
+        let mut g = CoordinatorGemm::new(&coord, k);
         let (r, _) = dct::pipeline(&mut g, &img);
-        println!("{:<4} {:>10.2} {:>8.4}", k,
-                 psnr(&r_exact.data, &r.data), ssim(&r_exact.data, &r.data));
+        println!("{:<4} {:>10.2} {:>8.4} {:>12}", k,
+                 psnr(&exact.out.data, &r.data), ssim(&exact.out.data, &r.data),
+                 g.stats.total_cycles());
         write_pgm(std::path::Path::new(&out)
                   .join(format!("dct_k{k}.pgm")).as_path(), &r)?;
     }
+    let s = coord.stats();
+    println!("\nservice: {} dct app requests, {} GEMM sub-requests, {} tiles, \
+              gemm latency p50 {:.1} µs / p99 {:.1} µs",
+             s.dct.requests, s.requests, s.tiles,
+             s.latency_percentile(0.50), s.latency_percentile(0.99));
+    coord.shutdown();
 
     // cross-check with the AOT artifact (full pipeline lowered from JAX;
     // needs the pjrt feature compiled in)

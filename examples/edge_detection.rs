@@ -1,9 +1,11 @@
 //! Laplacian-kernel edge detection (paper §V-B / Fig. 13 top row).
 //!
-//! Sweeps the approximation factor k and reports PSNR/SSIM of each
-//! approximate edge map against the exact design's output, on both the
-//! word-level backend and the cycle-accurate systolic array (with cycle
-//! and energy accounting from the hardware model).
+//! The 3x3 stencil is lowered to one `(P, 9) @ (9, 1)` GEMM by the
+//! shared im2col pass and served **through the coordinator**: the
+//! cycle-accurate systolic backend executes the tiles, so each sweep
+//! point also reports simulated cycles and the hardware model's energy
+//! estimate. Sweeps the approximation factor k and reports PSNR/SSIM of
+//! each approximate edge map against the exact design's output.
 //!
 //! ```bash
 //! cargo run --release --example edge_detection [-- out_dir]
@@ -11,9 +13,9 @@
 
 use axsys::apps::edge;
 use axsys::apps::image::{psnr, scene, ssim, write_pgm};
-use axsys::apps::{Gemm, SystolicGemm, WordGemm};
+use axsys::apps::CoordinatorGemm;
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use axsys::hw::sa_metrics;
-use axsys::pe::word::PeConfig;
 use axsys::pe::{Design, Signedness};
 use axsys::Family;
 
@@ -22,7 +24,12 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all(&out)?;
     let img = scene(256, 256);
 
-    let mut g_exact = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        backend: BackendKind::Systolic,
+        ..Default::default()
+    });
+    let mut g_exact = CoordinatorGemm::new(&coord, 0);
     let e_exact = edge::pipeline(&mut g_exact, &img);
     write_pgm(std::path::Path::new(&out).join("edge_exact.pgm").as_path(),
               &e_exact)?;
@@ -30,10 +37,9 @@ fn main() -> anyhow::Result<()> {
     println!("{:<4} {:>10} {:>8} {:>12} {:>14}", "k", "PSNR(dB)", "SSIM",
              "SA cycles", "energy est.");
     for k in [2u32, 4, 6, 8] {
-        let cfg = PeConfig::new(8, true, Family::Proposed, k);
-        let mut g = SystolicGemm::new(cfg, 8);
+        let mut g = CoordinatorGemm::new(&coord, k);
         let e = edge::pipeline(&mut g, &img);
-        let st = g.stats().unwrap();
+        let st = g.stats;
         // energy estimate: simulated cycles x SA power @ 250 MHz
         let d = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
         let m = sa_metrics(&d, 8);
@@ -45,9 +51,21 @@ fn main() -> anyhow::Result<()> {
                   .join(format!("edge_k{k}.pgm")).as_path(), &e)?;
     }
 
+    // the same sweep point through the app endpoint: quality comes back
+    // precomputed (approx vs served-exact), with per-app stats
+    let resp = coord.serve_edge(&img, 4);
+    println!("\nserve_edge(k=4): PSNR {:.2} dB, {} GEMM sub-requests, \
+              latency {:.0} µs",
+             resp.psnr_db, resp.gemm_requests, resp.latency_us);
+    let s = coord.stats();
+    println!("service: {} edge app requests, gemm latency p50 {:.1} µs / \
+              p99 {:.1} µs", s.edge.requests,
+             s.latency_percentile(0.50), s.latency_percentile(0.99));
+
     // exact-vs-exact sanity: the paper's metric peaks at identity
     let e_again = edge::pipeline(&mut g_exact, &img);
     assert!(psnr(&e_exact.data, &e_again.data).is_infinite());
+    coord.shutdown();
     println!("\nedge maps written to {out}/");
     Ok(())
 }

@@ -63,36 +63,14 @@ pub fn load_weights(path: &Path) -> anyhow::Result<Vec<Block>> {
     Ok(blocks)
 }
 
-/// SAME-padding integer conv via im2col + GEMM.
+/// SAME-padding integer conv lowered to GEMM via the shared im2col pass.
 /// `x`: (h, w, cin) int values; returns raw int32-range accumulators
 /// (h, w, cout). Feature order matches `bdcn._conv_q`.
 fn conv(g: &mut dyn Gemm, x: &[i64], h: usize, w: usize, wq: &Tensor)
         -> Vec<i64> {
     let [kh, kw, cin, cout] = wq.shape;
-    let (ph, pw) = (kh / 2, kw / 2);
-    let feat = kh * kw * cin;
-    let mut mat = vec![0i64; h * w * feat];
-    for dy in 0..kh {
-        for dx in 0..kw {
-            for y in 0..h {
-                let sy = y as isize + dy as isize - ph as isize;
-                if sy < 0 || sy >= h as isize {
-                    continue; // zero padding
-                }
-                for x_ in 0..w {
-                    let sx = x_ as isize + dx as isize - pw as isize;
-                    if sx < 0 || sx >= w as isize {
-                        continue;
-                    }
-                    let src = (sy as usize * w + sx as usize) * cin;
-                    let dst = (y * w + x_) * feat + (dy * kw + dx) * cin;
-                    mat[dst..dst + cin]
-                        .copy_from_slice(&x[src..src + cin]);
-                }
-            }
-        }
-    }
-    g.gemm(&mat, &wq.data, h * w, feat, cout)
+    let mat = super::im2col::im2col(x, h, w, cin, kh, kw, true);
+    g.gemm(&mat, &wq.data, h * w, kh * kw * cin, cout)
 }
 
 /// Requantize an accumulator to a ReLU-clipped int8 activation.

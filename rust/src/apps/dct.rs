@@ -3,6 +3,9 @@
 //! Bit-identical mirror of `python/compile/model.py`: HEVC integer
 //! coefficients, the (9,9,6,6) shift schedule, int8 coefficient storage,
 //! forward + reconstruction through the approximate GEMM backend.
+//! Served end-to-end by [`crate::coordinator::Coordinator::serve_dct`]
+//! (golden PSNR pinned in `tests/golden_psnr.rs`); requires image
+//! dimensions that are multiples of 8.
 
 use super::image::Image;
 use super::{clip8, rshift_round, Gemm};

@@ -1,6 +1,9 @@
 //! Laplacian-kernel edge detection via im2col + approximate GEMM
 //! (paper §V-B, kernel-based path). Mirrors `model.edge_pipeline`.
+//! The stencil lowers to one `(P, 9) @ (9, 1)` product, so plugging in
+//! [`super::CoordinatorGemm`] parallelizes it across the worker pool.
 
+use super::im2col::im2col;
 use super::image::Image;
 use super::{rshift_round, Gemm};
 
@@ -11,21 +14,12 @@ pub const LAPLACIAN: [i64; 9] = [-1, -1, -1, -1, 8, -1, -1, -1, -1];
 pub fn pipeline(g: &mut dyn Gemm, img: &Image) -> Image {
     let (h, w) = (img.h, img.w);
     let (oh, ow) = (h - 2, w - 2);
-    // im2col: (P, 9) patches, column order (dy, dx) — matches _im2col3
-    let p = oh * ow;
-    let mut mat = vec![0i64; p * 9];
-    for dy in 0..3 {
-        for dx in 0..3 {
-            let col = dy * 3 + dx;
-            for y in 0..oh {
-                for x in 0..ow {
-                    mat[(y * ow + x) * 9 + col] =
-                        img.at(y + dy, x + dx) as i64 - 128;
-                }
-            }
-        }
-    }
-    let y = g.gemm(&mat, &LAPLACIAN, p, 9, 1);
+    let centered: Vec<i64> =
+        img.data.iter().map(|&v| v as i64 - 128).collect();
+    // VALID im2col: (P, 9) patches, column order (dy, dx) — matches
+    // the oracle's _im2col3
+    let mat = im2col(&centered, h, w, 1, 3, 3, false);
+    let y = g.gemm(&mat, &LAPLACIAN, oh * ow, 9, 1);
     let mut out = Image::new(oh, ow);
     for (o, &v) in out.data.iter_mut().zip(y.iter()) {
         *o = rshift_round(v.abs(), 2).clamp(0, 255) as u8;

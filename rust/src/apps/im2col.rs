@@ -1,0 +1,103 @@
+//! im2col lowering: convolutions → GEMM (paper §V-B).
+//!
+//! Both edge paths (the Laplacian kernel and the BDCN-lite CNN) lower
+//! their convolutions to a single `patches @ weights` product so they
+//! ride the same tiled GEMM hot path as every other workload — and,
+//! through [`super::CoordinatorGemm`], the coordinator's worker pool.
+//!
+//! Patch layout (pinned by the Python oracle's `model._im2col3` and
+//! `bdcn._conv_q`): row `y*out_w + x` holds the receptive field of
+//! output pixel `(y, x)`; feature column `(dy*kw + dx)*cin + c`.
+
+/// Unfold a row-major `(h, w, cin)` input into an
+/// `(out_h*out_w, kh*kw*cin)` patch matrix.
+///
+/// `pad = true` is SAME zero padding (`out = h x w`, the CNN path);
+/// `pad = false` is VALID (`out = (h-kh+1) x (w-kw+1)`, the kernel
+/// path). Out-of-image taps contribute zeros — for pre-centered inputs
+/// that is the 128-gray border the oracle uses.
+pub fn im2col(x: &[i64], h: usize, w: usize, cin: usize, kh: usize,
+              kw: usize, pad: bool) -> Vec<i64> {
+    assert_eq!(x.len(), h * w * cin, "input shape");
+    assert!(kh <= h && kw <= w, "kernel larger than input");
+    let (ph, pw) = if pad { (kh / 2, kw / 2) } else { (0, 0) };
+    let (oh, ow) = if pad { (h, w) } else { (h + 1 - kh, w + 1 - kw) };
+    let feat = kh * kw * cin;
+    let mut mat = vec![0i64; oh * ow * feat];
+    for dy in 0..kh {
+        for dx in 0..kw {
+            for y in 0..oh {
+                let sy = y as isize + dy as isize - ph as isize;
+                if sy < 0 || sy >= h as isize {
+                    continue; // zero padding
+                }
+                for xx in 0..ow {
+                    let sx = xx as isize + dx as isize - pw as isize;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    let src = (sy as usize * w + sx as usize) * cin;
+                    let dst = (y * ow + xx) * feat + (dy * kw + dx) * cin;
+                    mat[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                }
+            }
+        }
+    }
+    mat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_3x3_matches_direct_patch_extraction() {
+        let (h, w) = (5usize, 6usize);
+        let x: Vec<i64> = (0..(h * w) as i64).collect();
+        let mat = im2col(&x, h, w, 1, 3, 3, false);
+        let (oh, ow) = (h - 2, w - 2);
+        assert_eq!(mat.len(), oh * ow * 9);
+        for y in 0..oh {
+            for xx in 0..ow {
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        assert_eq!(mat[(y * ow + xx) * 9 + dy * 3 + dx],
+                                   x[(y + dy) * w + (xx + dx)],
+                                   "({y},{xx}) tap ({dy},{dx})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_padding_zeros_the_border_taps() {
+        let (h, w) = (3usize, 3usize);
+        let x = vec![7i64; h * w];
+        let mat = im2col(&x, h, w, 1, 3, 3, true);
+        assert_eq!(mat.len(), h * w * 9);
+        // corner pixel (0,0): taps with dy<1 or dx<1 fall outside
+        for dy in 0..3 {
+            for dx in 0..3 {
+                let want = if dy == 0 || dx == 0 { 0 } else { 7 };
+                assert_eq!(mat[dy * 3 + dx], want, "tap ({dy},{dx})");
+            }
+        }
+        // centre pixel sees the full field
+        let c = (w + 1) * 9;
+        assert!(mat[c..c + 9].iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn multi_channel_feature_order_is_tap_major() {
+        // (dy*kw + dx)*cin + c — channels contiguous per tap
+        let (h, w, cin) = (3usize, 3usize, 2usize);
+        let x: Vec<i64> = (0..(h * w * cin) as i64).collect();
+        let mat = im2col(&x, h, w, cin, 1, 1, false);
+        assert_eq!(mat, x); // 1x1 kernel is the identity unfold
+        let mat3 = im2col(&x, h, w, cin, 3, 3, true);
+        // centre tap (dy=1, dx=1) of output pixel (0,0) is input (0,0)
+        let base = (3 + 1) * cin;
+        assert_eq!(&mat3[base..base + cin], &x[0..cin]);
+    }
+}

@@ -1,6 +1,8 @@
 //! Image utilities: deterministic procedural test scenes (bit-identical
 //! to `python/compile/image.py` — integer-only math), PGM I/O, PSNR and
-//! SSIM quality metrics.
+//! SSIM quality metrics. The checked-in golden images under
+//! `rust/tests/data/*.pgm` (oracle-tuned to the paper's §V headline
+//! PSNRs) are read back through [`read_pgm`].
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,14 +1,22 @@
 //! Application pipelines (paper §V): DCT image compression, Laplacian
 //! edge detection, and the BDCN-lite CNN edge detector — each driven
 //! through a pluggable GEMM backend so the same pipeline runs on the
-//! word-level PE model, the cycle-accurate systolic array, or the AOT
-//! PJRT artifacts.
+//! word-level PE model, the cycle-accurate systolic array, the AOT
+//! PJRT artifacts, or — via [`CoordinatorGemm`] — the coordinator's
+//! tiled worker pool (the serving path; see
+//! [`crate::coordinator::Coordinator::serve_dct`] and friends).
+//!
+//! Convolutions are lowered to GEMM with the shared [`im2col`] pass, so
+//! every pipeline is a sequence of matrix products on whichever backend
+//! the caller plugs in.
 
 pub mod bdcn;
 pub mod dct;
 pub mod edge;
+pub mod im2col;
 pub mod image;
 
+use crate::coordinator::{Coordinator, GemmRequest};
 use crate::pe::word::{matmul, PeConfig};
 use crate::systolic::{SaStats, Systolic};
 
@@ -74,6 +82,52 @@ impl Gemm for SystolicGemm {
     }
 }
 
+/// Serving-path backend: implements [`Gemm`] by submitting every matrix
+/// product to a running [`Coordinator`], which tiles it to the array's
+/// output geometry and fans the tiles across its worker pool.
+///
+/// Bit-identical to the single-threaded `word`/`lut`/`systolic`
+/// backends at every approximation level, because the coordinator tiles
+/// only the *output* dimensions: each output element's carry-save MAC
+/// chain still walks the full inner dimension in order
+/// (`tests/prop_equiv.rs` fuzzes this equivalence).
+pub struct CoordinatorGemm<'a> {
+    coord: &'a Coordinator,
+    /// Approximation level submitted with every request.
+    pub k: u32,
+    /// Execution stats merged from every response so far.
+    pub stats: SaStats,
+    /// GEMM requests issued through the coordinator so far.
+    pub requests: u64,
+}
+
+impl<'a> CoordinatorGemm<'a> {
+    pub fn new(coord: &'a Coordinator, k: u32) -> Self {
+        CoordinatorGemm { coord, k, stats: SaStats::default(), requests: 0 }
+    }
+}
+
+impl Gemm for CoordinatorGemm<'_> {
+    fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
+            -> Vec<i64> {
+        let resp = self.coord.call(GemmRequest {
+            a: a.to_vec(),
+            b: b.to_vec(),
+            m,
+            kk,
+            nn,
+            k: self.k,
+        });
+        self.requests += 1;
+        self.stats.merge(&resp.sa_stats);
+        resp.out
+    }
+
+    fn stats(&self) -> Option<SaStats> {
+        Some(self.stats)
+    }
+}
+
 /// Arithmetic right shift with round-to-nearest (matches the Python
 /// models' `_rshift_round`; Rust `>>` on i64 is arithmetic like numpy's).
 #[inline]
@@ -103,6 +157,25 @@ mod tests {
         assert_eq!(w, sg.gemm(&a, &b, 8, 5, 11));
         assert_eq!(w, lg.gemm(&a, &b, 8, 5, 11));
         assert!(sg.stats().unwrap().macs > 0);
+    }
+
+    #[test]
+    fn coordinator_gemm_matches_word_backend() {
+        use crate::coordinator::{BackendKind, CoordinatorConfig};
+        let cfg = PeConfig::new(8, true, Family::Proposed, 3);
+        let a: Vec<i64> = (0..60).map(|i| (i * 17 % 255) - 127).collect();
+        let b: Vec<i64> = (0..36).map(|i| (i * 23 % 255) - 127).collect();
+        let want = WordGemm { cfg }.gemm(&a, &b, 10, 6, 6);
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            backend: BackendKind::Word,
+            ..Default::default()
+        });
+        let mut g = CoordinatorGemm::new(&c, 3);
+        assert_eq!(g.gemm(&a, &b, 10, 6, 6), want);
+        assert_eq!(g.requests, 1);
+        assert!(g.stats().unwrap().macs > 0);
+        c.shutdown();
     }
 
     #[test]

@@ -1,5 +1,13 @@
 //! GEMM request coordinator — the serving layer of the stack.
 //!
+//! Beyond raw GEMM, the coordinator serves the paper's application
+//! pipelines end-to-end (`serve_dct` / `serve_edge` / `serve_bdcn`):
+//! each pipeline's matrix products — convolutions pre-lowered to GEMM
+//! by the shared im2col pass — are submitted through
+//! [`CoordinatorGemm`] and fan out across the same worker pool, with
+//! per-app counters, quality PSNR and latency percentiles reported in
+//! [`ServiceStats`].
+//!
 //! Arbitrary integer GEMM requests are tiled to the systolic array's
 //! output geometry, queued with backpressure, executed by a worker pool
 //! (std threads + channels; each worker owns its device — a cycle-accurate
@@ -17,10 +25,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use crate::apps::image::{psnr, Image};
+use crate::apps::{bdcn, dct, edge, CoordinatorGemm};
 use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::{matmul, PeConfig};
 use crate::runtime::{Runtime, TensorI32};
@@ -154,8 +164,99 @@ struct TileJob {
 
 type Shared = Arc<(Mutex<HashMap<u64, Pending>>, Condvar)>;
 
-/// Aggregate service statistics.
+/// Application pipelines servable end-to-end through the coordinator
+/// (paper §V). Every matrix product inside them is tiled and executed
+/// by the worker pool via [`CoordinatorGemm`]; the convolutions arrive
+/// pre-lowered to GEMM by the shared im2col pass
+/// ([`crate::apps::im2col`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    /// 8x8 integer DCT compress -> reconstruct (paper §V-A).
+    Dct,
+    /// Laplacian edge detection (paper §V-B, kernel path).
+    Edge,
+    /// BDCN-lite CNN edge cascade (paper §V-B; needs trained weights).
+    Bdcn,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 3] = [AppKind::Dct, AppKind::Edge, AppKind::Bdcn];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppKind::Dct => "dct",
+            AppKind::Edge => "edge",
+            AppKind::Bdcn => "bdcn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppKind> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// `"dct|edge|bdcn"` — for CLI error messages.
+    pub fn names() -> String {
+        Self::ALL.map(|a| a.name()).join("|")
+    }
+}
+
+/// Completed application-level response.
+#[derive(Clone, Debug)]
+pub struct AppResponse {
+    pub app: AppKind,
+    pub out: Image,
+    /// Paper §V quality metric: `dct` reports reconstruction-vs-input
+    /// PSNR; `edge`/`bdcn` report approximate-vs-exact PSNR, where the
+    /// exact (k = 0) reference runs through the same served path.
+    /// Infinite when the request itself is exact and self-referential.
+    pub psnr_db: f64,
+    /// End-to-end pipeline latency (all GEMM stages + reference run).
+    pub latency_us: f64,
+    /// GEMM sub-requests issued, including the exact reference run.
+    pub gemm_requests: u64,
+    /// Merged execution stats of every GEMM sub-request.
+    pub sa_stats: SaStats,
+}
+
+/// Aggregate counters for one served application pipeline.
 #[derive(Clone, Copy, Debug, Default)]
+pub struct AppStats {
+    pub requests: u64,
+    /// GEMM sub-requests the pipelines issued through the worker pool.
+    pub gemm_requests: u64,
+    pub total_latency_us: f64,
+    pub max_latency_us: f64,
+    /// Sum over requests with a finite quality PSNR (exact
+    /// self-referential runs report infinity and are excluded).
+    pub psnr_sum_db: f64,
+    pub psnr_samples: u64,
+}
+
+impl AppStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_latency_us / self.requests as f64
+        }
+    }
+
+    /// Mean quality PSNR over finite samples (0.0 when none recorded).
+    pub fn mean_psnr_db(&self) -> f64 {
+        if self.psnr_samples == 0 {
+            0.0
+        } else {
+            self.psnr_sum_db / self.psnr_samples as f64
+        }
+    }
+}
+
+/// Per-GEMM-request latency samples retained for percentile reporting
+/// (ring buffer: the most recent window once the cap is reached).
+pub const LATENCY_SAMPLE_CAP: usize = 8192;
+
+/// Aggregate service statistics.
+#[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub requests: u64,
     pub tiles: u64,
@@ -170,6 +271,14 @@ pub struct ServiceStats {
     pub lut_cache_hits: u64,
     /// Process-wide LUT table builds observed at snapshot time.
     pub lut_builds: u64,
+    /// Per-app serving counters (requests routed via `serve_*`).
+    pub dct: AppStats,
+    pub edge: AppStats,
+    pub bdcn: AppStats,
+    /// Recent per-request end-to-end GEMM latencies in µs (at most
+    /// [`LATENCY_SAMPLE_CAP`], ring-buffered) — feeds
+    /// [`Self::latency_percentile`].
+    latency_samples: Vec<f64>,
 }
 
 impl ServiceStats {
@@ -180,6 +289,44 @@ impl ServiceStats {
         } else {
             self.total_latency_us / self.requests as f64
         }
+    }
+
+    pub fn app(&self, app: AppKind) -> &AppStats {
+        match app {
+            AppKind::Dct => &self.dct,
+            AppKind::Edge => &self.edge,
+            AppKind::Bdcn => &self.bdcn,
+        }
+    }
+
+    fn app_mut(&mut self, app: AppKind) -> &mut AppStats {
+        match app {
+            AppKind::Dct => &mut self.dct,
+            AppKind::Edge => &mut self.edge,
+            AppKind::Bdcn => &mut self.bdcn,
+        }
+    }
+
+    fn record_latency(&mut self, us: f64) {
+        if self.latency_samples.len() < LATENCY_SAMPLE_CAP {
+            self.latency_samples.push(us);
+        } else {
+            let i = (self.requests as usize) % LATENCY_SAMPLE_CAP;
+            self.latency_samples[i] = us;
+        }
+    }
+
+    /// Latency percentile over the retained sample window, as the
+    /// rounded linear rank `round(p * (n-1))` of the sorted samples
+    /// (`p` in [0, 1]; 0.0 when no requests completed yet).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latency_samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latency_samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx]
     }
 }
 
@@ -260,20 +407,16 @@ impl Coordinator {
                         b_panel[t * tw + j] = req.b[t * nn + tj + j];
                     }
                 }
-                let mut job = TileJob { req_id: id, ti, tj, th, tw,
-                                        a_panel, b_panel, kk, k: req.k };
-                // blocking send = backpressure
-                loop {
-                    match tx.try_send(job) {
-                        Ok(()) => break,
-                        Err(TrySendError::Full(j)) => {
-                            job = j;
-                            std::thread::yield_now();
-                        }
-                        Err(TrySendError::Disconnected(_)) => {
-                            panic!("worker pool gone");
-                        }
-                    }
+                let job = TileJob { req_id: id, ti, tj, th, tw,
+                                    a_panel, b_panel, kk, k: req.k };
+                // Blocking send = backpressure: the channel parks this
+                // thread until a worker frees queue capacity (replaces
+                // the old try_send spin loop, which burned a core per
+                // saturated submitter). Workers drain the queue before
+                // exiting, so shutdown-while-saturated still completes
+                // every submitted tile.
+                if tx.send(job).is_err() {
+                    panic!("worker pool gone");
                 }
             }
         }
@@ -304,15 +447,108 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> ServiceStats {
-        let mut s = *self.stats.lock().unwrap();
+        let mut s = self.stats.lock().unwrap().clone();
         let (hits, builds) = lut::cache_counters();
         s.lut_cache_hits = hits;
         s.lut_builds = builds;
         s
     }
 
-    /// Drain the queue and join all workers.
+    // ---- application endpoints (paper §V through the worker pool) ----
+
+    /// Serve one DCT compress->reconstruct request at level `k`
+    /// (`img` dimensions must be multiples of 8). `psnr_db` is the
+    /// paper's compression quality: reconstruction vs input.
+    pub fn serve_dct(&self, img: &Image, k: u32) -> AppResponse {
+        let t0 = Instant::now();
+        let mut g = CoordinatorGemm::new(self, k);
+        let (recon, _) = dct::pipeline(&mut g, img);
+        let quality = psnr(&img.data, &recon.data);
+        self.finish_app(AppKind::Dct, recon, quality, t0, &[&g])
+    }
+
+    /// Serve one Laplacian edge-detection request at level `k`
+    /// (`img` at least 3x3). For `k > 0` the exact reference map is
+    /// produced through the same served path and `psnr_db` is
+    /// approximate-vs-exact (the paper's §V-B metric).
+    pub fn serve_edge(&self, img: &Image, k: u32) -> AppResponse {
+        let t0 = Instant::now();
+        let mut g = CoordinatorGemm::new(self, k);
+        let e = edge::pipeline(&mut g, img);
+        let mut g0 = CoordinatorGemm::new(self, 0);
+        let quality = if k == 0 {
+            f64::INFINITY
+        } else {
+            let e0 = edge::pipeline(&mut g0, img);
+            psnr(&e0.data, &e.data)
+        };
+        self.finish_app(AppKind::Edge, e, quality, t0, &[&g, &g0])
+    }
+
+    /// Serve one BDCN-lite CNN edge request: cascade blocks 0-1 run at
+    /// level `k`, blocks 2-3 exact (the paper's Fig. 12 hybrid scheme).
+    /// `psnr_db` is approximate-vs-exact through the same served path.
+    pub fn serve_bdcn(&self, blocks: &[bdcn::Block], img: &Image, k: u32)
+                      -> AppResponse {
+        let t0 = Instant::now();
+        let mut ga = CoordinatorGemm::new(self, k);
+        let mut ge = CoordinatorGemm::new(self, 0);
+        let e = bdcn::forward(&mut ga, &mut ge, blocks, img);
+        let mut gr = CoordinatorGemm::new(self, 0);
+        let quality = if k == 0 {
+            f64::INFINITY
+        } else {
+            let e0 = bdcn::forward(&mut gr, &mut ge, blocks, img);
+            psnr(&e0.data, &e.data)
+        };
+        self.finish_app(AppKind::Bdcn, e, quality, t0, &[&ga, &ge, &gr])
+    }
+
+    /// Dispatch by [`AppKind`] for the weight-free apps (`Bdcn` needs
+    /// its trained blocks — use [`Self::serve_bdcn`]).
+    pub fn call_app(&self, app: AppKind, img: &Image, k: u32)
+                    -> Option<AppResponse> {
+        match app {
+            AppKind::Dct => Some(self.serve_dct(img, k)),
+            AppKind::Edge => Some(self.serve_edge(img, k)),
+            AppKind::Bdcn => None,
+        }
+    }
+
+    fn finish_app(&self, app: AppKind, out: Image, psnr_db: f64,
+                  t0: Instant, gs: &[&CoordinatorGemm<'_>]) -> AppResponse {
+        let latency_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut sa_stats = SaStats::default();
+        let mut gemm_requests = 0;
+        for g in gs {
+            sa_stats.merge(&g.stats);
+            gemm_requests += g.requests;
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            let a = s.app_mut(app);
+            a.requests += 1;
+            a.gemm_requests += gemm_requests;
+            a.total_latency_us += latency_us;
+            a.max_latency_us = a.max_latency_us.max(latency_us);
+            if psnr_db.is_finite() {
+                a.psnr_sum_db += psnr_db;
+                a.psnr_samples += 1;
+            }
+        }
+        AppResponse { app, out, psnr_db, latency_us, gemm_requests, sa_stats }
+    }
+
+    /// Deterministic teardown: close the queue, let every worker drain
+    /// the tiles already accepted, and join them all. Also runs on
+    /// `Drop`, so a `Coordinator` can never leak parked worker threads —
+    /// even when dropped with the queue saturated (tested in
+    /// `coordinator_invariance.rs`).
     pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -322,10 +558,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.teardown();
     }
 }
 
@@ -427,6 +660,7 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
                 s.tiles += resp.sa_stats.tiles.max(1);
                 s.total_latency_us += latency_us;
                 s.max_latency_us = s.max_latency_us.max(latency_us);
+                s.record_latency(latency_us);
                 s.sim_cycles += resp.sa_stats.total_cycles();
                 s.sim_macs += resp.sa_stats.macs;
                 s.sim_toggles += resp.sa_stats.toggles;
@@ -681,6 +915,55 @@ mod tests {
             assert_ne!(r0.out, r7.out, "{backend:?}: k=7 must differ");
             c.shutdown();
         }
+    }
+
+    #[test]
+    fn app_endpoints_report_per_app_stats_and_percentiles() {
+        use crate::apps::image::scene;
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 3, backend: BackendKind::Lut, ..Default::default()
+        });
+        let img = scene(32, 32);
+        let d0 = c.serve_dct(&img, 0);
+        assert_eq!(d0.app, AppKind::Dct);
+        assert_eq!((d0.out.h, d0.out.w), (32, 32));
+        assert!(d0.psnr_db > 30.0, "exact DCT quality: {}", d0.psnr_db);
+        assert!(d0.gemm_requests >= 4, "4 GEMM stages"); // fwd x2 + inv x2
+        let e5 = c.serve_edge(&img, 5);
+        assert_eq!((e5.out.h, e5.out.w), (30, 30));
+        assert!(e5.psnr_db.is_finite(), "approx-vs-exact must be finite");
+        let e0 = c.serve_edge(&img, 0);
+        assert!(e0.psnr_db.is_infinite(), "exact is self-referential");
+        let s = c.stats();
+        assert_eq!(s.app(AppKind::Dct).requests, 1);
+        assert_eq!(s.app(AppKind::Edge).requests, 2);
+        assert_eq!(s.dct.psnr_samples, 1); // dct quality is vs input
+        assert_eq!(s.edge.psnr_samples, 1); // only the k=5 run is finite
+        assert!(s.edge.mean_psnr_db() > 0.0);
+        assert!(s.app(AppKind::Edge).mean_latency_us() > 0.0);
+        // GEMM-level percentiles: monotone and within [min, max]
+        let (p50, p99) = (s.latency_percentile(0.5), s.latency_percentile(0.99));
+        assert!(p50 > 0.0 && p50 <= p99 && p99 <= s.max_latency_us);
+        assert_eq!(s.app(AppKind::Bdcn).requests, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn served_dct_is_bit_identical_to_single_threaded() {
+        use crate::apps::image::scene;
+        use crate::apps::WordGemm;
+        let img = scene(24, 24);
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend: BackendKind::Word, ..Default::default()
+        });
+        for k in [0u32, 5] {
+            let cfg = PeConfig::new(8, true, Family::Proposed, k);
+            let mut wg = WordGemm { cfg };
+            let (want, _) = crate::apps::dct::pipeline(&mut wg, &img);
+            let got = c.serve_dct(&img, k);
+            assert_eq!(got.out.data, want.data, "k={k}");
+        }
+        c.shutdown();
     }
 
     #[test]

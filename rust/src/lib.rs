@@ -24,9 +24,9 @@
 //! | [`systolic`]  | cycle-accurate output-stationary systolic array |
 //! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |
 //! | [`hw`]        | metric composition cell→PE→SA (Tables II-IV, Fig 8) |
-//! | [`apps`]      | DCT / edge / BDCN pipelines + image I/O + PSNR/SSIM |
+//! | [`apps`]      | DCT / edge / BDCN pipelines (+ [`apps::im2col`] conv→GEMM lowering, [`apps::CoordinatorGemm`] serving adapter) + image I/O + PSNR/SSIM |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
-//! | [`coordinator`]| GEMM request router: tiler, batcher, worker pool |
+//! | [`coordinator`]| GEMM request router: tiler, batcher, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
 //! | [`bench`]     | tiny criterion-free measurement harness |
 //!
 //! ## Choosing a GEMM backend
@@ -51,6 +51,20 @@
 //! * [`coordinator::BackendKind::Pjrt`] — the AOT Pallas artifacts via
 //!   PJRT (requires the `pjrt` feature + artifacts; chunked-K deployment
 //!   mode, bit-identical only at `k = 0`).
+//!
+//! ## Coordinator-served applications
+//!
+//! The paper's §V pipelines run end-to-end through the coordinator: the
+//! convolutions are lowered to GEMM by [`apps::im2col`], every matrix
+//! product is submitted via [`apps::CoordinatorGemm`], and the
+//! [`coordinator::Coordinator::serve_dct`] / `serve_edge` / `serve_bdcn`
+//! endpoints report quality PSNR, per-app counters and latency
+//! percentiles in [`coordinator::ServiceStats`]. Because the coordinator
+//! tiles only output dimensions, the served results are **bit-identical**
+//! to the single-threaded backends at every approximation level
+//! (fuzzed in `tests/prop_equiv.rs`, golden-pinned in
+//! `tests/golden_psnr.rs`: DCT 38.21 dB, edge 30.45 dB — the paper's
+//! headline numbers).
 
 pub mod apps;
 pub mod bench;

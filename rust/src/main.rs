@@ -8,12 +8,15 @@
 //!   edge [--k K]        Laplacian edge detection
 //!   cnn [--k K]         BDCN-lite CNN edge detection
 //!   serve [...]         run the GEMM coordinator on a synthetic workload
+//!                       (--app dct|edge|bdcn serves application requests)
+//!   apps-report         paper §V quality tables: every cell family x k
+//!                       through the coordinator-served pipelines
 
 use std::path::PathBuf;
 
-use axsys::apps::image::{psnr, scene, ssim, write_pgm};
-use axsys::apps::{dct, edge, SystolicGemm, WordGemm};
-use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::apps::image::{psnr, scene, ssim, texture, write_pgm};
+use axsys::coordinator::{AppKind, BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
 use axsys::pe::word::PeConfig;
 use axsys::pe::{Design, Signedness};
 use axsys::runtime::{read_golden_bin, read_manifest, Runtime, TensorI32};
@@ -31,6 +34,7 @@ fn main() {
         "edge" => app_edge(rest),
         "cnn" => app_cnn(rest),
         "serve" => serve(rest),
+        "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
         "emit-verilog" => emit_verilog(rest),
         "help" | "--help" | "-h" => {
@@ -57,6 +61,9 @@ fn print_help() {
     println!("  edge [--k K] [--out dir]     Laplacian edge detection");
     println!("  cnn  [--k K] [--out dir]     BDCN-lite CNN edge detection");
     println!("  serve [--backend word|lut|systolic|pjrt] [--workers N] [--requests R]");
+    println!("        [--app gemm|dct|edge|bdcn] [--k K]   serve app pipelines");
+    println!("  apps-report [--backend B] [--size S]   §V PSNR tables, all");
+    println!("        four cell families x k through the served pipelines");
     println!("  lut-report                   product-LUT table sizes per design point");
     println!("  emit-verilog [--out dir]     export every cell + PE design as Verilog");
 }
@@ -233,20 +240,26 @@ fn app_dct(rest: &[String]) -> i32 {
     let dir = out_dir(rest);
     std::fs::create_dir_all(&dir).unwrap();
     let img = scene(256, 256);
-    let mut exact = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
-    let (r_exact, _) = dct::pipeline(&mut exact, &img);
-    let mut approx = SystolicGemm::new(PeConfig::new(8, true, Family::Proposed, k), 8);
-    let (r_apx, _) = dct::pipeline(&mut approx, &img);
-    let st = approx.stats.clone();
-    println!("DCT 256x256, k={k} (systolic 8x8 backend)");
-    println!("  exact-vs-original  PSNR {:6.2} dB", psnr(&img.data, &r_exact.data));
+    // every GEMM stage rides the coordinator's worker pool (the same
+    // serving path `serve --app dct` exposes), on the cycle-accurate
+    // backend for the paper's cycle/energy accounting
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Systolic, ..Default::default()
+    });
+    let exact = c.serve_dct(&img, 0);
+    let apx = c.serve_dct(&img, k);
+    println!("DCT 256x256, k={k} (coordinator, systolic 8x8 backend)");
+    println!("  exact-vs-original  PSNR {:6.2} dB", exact.psnr_db);
     println!("  approx-vs-exact    PSNR {:6.2} dB  SSIM {:.4}",
-             psnr(&r_exact.data, &r_apx.data), ssim(&r_exact.data, &r_apx.data));
-    println!("  SA: {} tiles, {} cycles, {} MACs",
-             st.tiles, st.total_cycles(), st.macs);
+             psnr(&exact.out.data, &apx.out.data),
+             ssim(&exact.out.data, &apx.out.data));
+    let st = apx.sa_stats;
+    println!("  SA: {} tiles, {} cycles, {} MACs ({} GEMM sub-requests)",
+             st.tiles, st.total_cycles(), st.macs, apx.gemm_requests);
     write_pgm(&dir.join("dct_input.pgm"), &img).unwrap();
-    write_pgm(&dir.join(format!("dct_recon_k{k}.pgm")), &r_apx).unwrap();
+    write_pgm(&dir.join(format!("dct_recon_k{k}.pgm")), &apx.out).unwrap();
     println!("  wrote {}/dct_recon_k{k}.pgm", dir.display());
+    c.shutdown();
     0
 }
 
@@ -255,14 +268,16 @@ fn app_edge(rest: &[String]) -> i32 {
     let dir = out_dir(rest);
     std::fs::create_dir_all(&dir).unwrap();
     let img = scene(256, 256);
-    let mut ge = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, 0) };
-    let e_exact = edge::pipeline(&mut ge, &img);
-    let mut ga = WordGemm { cfg: PeConfig::new(8, true, Family::Proposed, k) };
-    let e_apx = edge::pipeline(&mut ga, &img);
-    println!("Laplacian edge 256x256, k={k}");
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Lut, ..Default::default()
+    });
+    let exact = c.serve_edge(&img, 0);
+    let apx = c.serve_edge(&img, k); // psnr_db = approx-vs-exact, served
+    println!("Laplacian edge 256x256, k={k} (coordinator, lut backend)");
     println!("  approx-vs-exact PSNR {:6.2} dB  SSIM {:.4}",
-             psnr(&e_exact.data, &e_apx.data), ssim(&e_exact.data, &e_apx.data));
-    write_pgm(&dir.join(format!("edge_k{k}.pgm")), &e_apx).unwrap();
+             apx.psnr_db, ssim(&exact.out.data, &apx.out.data));
+    write_pgm(&dir.join(format!("edge_k{k}.pgm")), &apx.out).unwrap();
+    c.shutdown();
     0
 }
 
@@ -280,12 +295,17 @@ fn app_cnn(rest: &[String]) -> i32 {
         }
     };
     let img = scene(128, 128);
-    let e0 = axsys::apps::bdcn::forward_word(&blocks, &img, 0);
-    let ek = axsys::apps::bdcn::forward_word(&blocks, &img, k);
-    println!("BDCN-lite edge 128x128, k={k} (blocks 1-2 approx, 3-4 exact)");
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Lut, ..Default::default()
+    });
+    let exact = c.serve_bdcn(&blocks, &img, 0);
+    let apx = c.serve_bdcn(&blocks, &img, k);
+    println!("BDCN-lite edge 128x128, k={k} (blocks 1-2 approx, 3-4 exact; \
+              coordinator, lut backend)");
     println!("  approx-vs-exact PSNR {:6.2} dB  SSIM {:.4}",
-             psnr(&e0.data, &ek.data), ssim(&e0.data, &ek.data));
-    write_pgm(&dir.join(format!("bdcn_k{k}.pgm")), &ek).unwrap();
+             apx.psnr_db, ssim(&exact.out.data, &apx.out.data));
+    write_pgm(&dir.join(format!("bdcn_k{k}.pgm")), &apx.out).unwrap();
+    c.shutdown();
     0
 }
 
@@ -360,10 +380,30 @@ fn serve(rest: &[String]) -> i32 {
     let requests: usize = opt(rest, "--requests")
         .and_then(|v| v.parse().ok()).unwrap_or(64);
     let k = opt_k(rest);
-    println!("serve: backend={backend:?} workers={workers} requests={requests} k={k}");
+    let app = opt(rest, "--app").unwrap_or_else(|| "gemm".into());
+    // validate the app name before spawning the worker pool
+    let kind = if app == "gemm" {
+        None
+    } else {
+        match AppKind::parse(&app) {
+            Some(kind) => Some(kind),
+            None => {
+                eprintln!("unknown app '{app}' (expected gemm|{})",
+                          AppKind::names());
+                return 2;
+            }
+        }
+    };
+    println!("serve: backend={backend:?} workers={workers} requests={requests} \
+              k={k} app={app}");
     let c = Coordinator::new(CoordinatorConfig {
         workers, backend, ..Default::default()
     });
+    if let Some(kind) = kind {
+        let code = serve_apps(&c, kind, requests, k);
+        c.shutdown();
+        return code;
+    }
     let mut seed = 1u64;
     let mut rnd = move || {
         seed ^= seed << 13;
@@ -402,5 +442,133 @@ fn serve(rest: &[String]) -> i32 {
                  s.sim_cycles, s.sim_macs, energy_uj);
     }
     c.shutdown();
+    0
+}
+
+/// Drive `requests` application requests (deterministic mixed image set)
+/// through the coordinator's app endpoints and report the per-app
+/// counters + GEMM-level latency percentiles from `ServiceStats`.
+fn serve_apps(c: &Coordinator, kind: AppKind, requests: usize, k: u32) -> i32 {
+    let blocks = if kind == AppKind::Bdcn {
+        let weights = Runtime::default_artifacts_dir().join("bdcn_weights.txt");
+        match axsys::apps::bdcn::load_weights(&weights) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("cannot load {}: {e:#} (run `make artifacts`)",
+                          weights.display());
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    let t0 = std::time::Instant::now();
+    for r in 0..requests {
+        // mixed deterministic workload: structured scenes + LCG textures
+        // (multiples of 8 so every image is DCT-blockable)
+        let img = match r % 3 {
+            0 => scene(96, 96),
+            1 => texture(64, 128, 0xA150 + r as u64),
+            _ => scene(64, 64),
+        };
+        let resp = match kind {
+            AppKind::Bdcn => c.serve_bdcn(blocks.as_ref().unwrap(), &img, k),
+            _ => c.call_app(kind, &img, k).expect("weight-free app"),
+        };
+        if r == 0 {
+            println!("  first response: {}x{} map, PSNR {:.2} dB, \
+                      {} GEMM sub-requests",
+                     resp.out.h, resp.out.w, resp.psnr_db, resp.gemm_requests);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = c.stats();
+    let a = s.app(kind);
+    println!("  {} {} requests in {:.3}s ({:.1} req/s)",
+             a.requests, kind.name(), wall, a.requests as f64 / wall);
+    println!("  app latency: mean {:.1} µs  max {:.1} µs  | mean quality \
+              {:.2} dB over {} finite samples",
+             a.mean_latency_us(), a.max_latency_us, a.mean_psnr_db(),
+             a.psnr_samples);
+    println!("  gemm sub-requests: {} ({} tiles); latency p50 {:.1} µs  \
+              p90 {:.1} µs  p99 {:.1} µs",
+             a.gemm_requests, s.tiles,
+             s.latency_percentile(0.50), s.latency_percentile(0.90),
+             s.latency_percentile(0.99));
+    if s.lut_macs > 0 {
+        println!("  lut: {} MACs table-served, {} tables built, {} cache hits",
+                 s.lut_macs, s.lut_builds, s.lut_cache_hits);
+    }
+    0
+}
+
+/// Paper §V quality tables (Table VI pattern): sweep every cell family x
+/// approximation level through the coordinator-served pipelines.
+fn apps_report(rest: &[String]) -> i32 {
+    let backend = match opt(rest, "--backend") {
+        Some(v) => match BackendKind::parse(&v) {
+            Some(b) => b,
+            None => {
+                eprintln!("unknown backend '{v}' (expected {})",
+                          BackendKind::names());
+                return 2;
+            }
+        },
+        None => BackendKind::Lut,
+    };
+    let size: usize = opt(rest, "--size")
+        .and_then(|v| v.parse().ok()).unwrap_or(128);
+    if size % 8 != 0 || size < 16 {
+        eprintln!("--size must be a multiple of 8, >= 16");
+        return 2;
+    }
+    let img = scene(size, size);
+    let weights = Runtime::default_artifacts_dir().join("bdcn_weights.txt");
+    let blocks = axsys::apps::bdcn::load_weights(&weights).ok();
+    println!("apps-report: {size}x{size} scene, backend={backend:?} \
+              (all GEMMs through the coordinator)");
+    println!("{:<12} {:>2} | {:>13} {:>13} | {:>13} {}", "family", "k",
+             "dct vs-input", "dct vs-exact", "edge vs-exact",
+             if blocks.is_some() { "| bdcn vs-exact" } else { "" });
+    // exact DCT reference once up front: k=0 is family-independent, so
+    // every family row compares against the same served reconstruction
+    let exact = {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend, ..Default::default()
+        });
+        let r = c.serve_dct(&img, 0);
+        c.shutdown();
+        r
+    };
+    for family in Family::ALL {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend, family, ..Default::default()
+        });
+        for k in [2u32, 4, 5, 6] {
+            let d = c.serve_dct(&img, k);
+            let e = c.serve_edge(&img, k);
+            let dct_vs_exact = psnr(&exact.out.data, &d.out.data);
+            print!("{:<12} {:>2} | {:>10.2} dB {:>10.2} dB | {:>10.2} dB",
+                   family.name(), k, d.psnr_db, dct_vs_exact, e.psnr_db);
+            match &blocks {
+                Some(b) => {
+                    let r = c.serve_bdcn(b, &img, k);
+                    println!(" | {:>10.2} dB", r.psnr_db);
+                }
+                None => println!(),
+            }
+        }
+        let s = c.stats();
+        println!("{:<12}    | {} app requests, {} gemm sub-requests, \
+                  gemm p99 {:.1} µs",
+                 "", s.dct.requests + s.edge.requests + s.bdcn.requests,
+                 s.dct.gemm_requests + s.edge.gemm_requests
+                     + s.bdcn.gemm_requests,
+                 s.latency_percentile(0.99));
+        c.shutdown();
+    }
+    println!("(dct vs-input at k=5 and edge vs-exact at k=4 are the paper's \
+              38.21 / 30.45 dB headline metrics — pinned on golden images \
+              in rust/tests/golden_psnr.rs)");
     0
 }

@@ -129,6 +129,54 @@ fn saturated_queue_blocks_submit_instead_of_dropping() {
 }
 
 #[test]
+fn shutdown_with_saturated_queue_joins_all_workers() {
+    // Regression for the drop/shutdown liveness contract: tearing a
+    // coordinator down while its bounded queue is (or just was)
+    // saturated must deterministically drain every accepted tile, wake
+    // any parked worker, and join the whole pool. A hang here would
+    // stall the test binary, so the teardown runs under a watchdog.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        // explicit shutdown() after a saturating request completes
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            queue_depth: 1,
+            batch: 1,
+            backend: BackendKind::Lut,
+            ..Default::default()
+        });
+        let (m, kk, nn) = (64usize, 8usize, 64usize); // 64 tiles, depth 1
+        let id = c.submit(GemmRequest {
+            a: vec![1; m * kk], b: vec![1; kk * nn], m, kk, nn, k: 0,
+        });
+        let resp = c.wait(id);
+        assert!(resp.out.iter().all(|&v| v == kk as i64));
+        c.shutdown();
+
+        // drop without wait(): tiles of an unclaimed request are still
+        // in flight when the queue closes — Drop must drain and join,
+        // never leave workers parked on the request channel
+        let c2 = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            queue_depth: 1,
+            batch: 1,
+            backend: BackendKind::Lut,
+            ..Default::default()
+        });
+        for r in 0..3u64 {
+            c2.submit(GemmRequest {
+                a: ints(r + 1, 32 * 8), b: ints(r + 2, 8 * 32),
+                m: 32, kk: 8, nn: 32, k: 0,
+            });
+        }
+        drop(c2);
+        done_tx.send(()).unwrap();
+    });
+    done_rx.recv_timeout(std::time::Duration::from_secs(120)).expect(
+        "coordinator teardown hung: workers left parked on the request channel");
+}
+
+#[test]
 fn interleaved_ks_under_lut_do_not_cross_talk() {
     // per-request k routes to distinct shared tables; interleaving
     // requests must not mix them up

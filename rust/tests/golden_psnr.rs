@@ -1,0 +1,114 @@
+//! Golden PSNR regression tests on the coordinator-served path.
+//!
+//! The checked-in images under `tests/data/` were tuned against the
+//! bit-exact Python oracle so the served pipelines land exactly on the
+//! paper's §V headline numbers:
+//!
+//! * `golden_dct.pgm` (128x128): DCT reconstruction-vs-input PSNR is
+//!   **38.21 dB** at the approximate design point (proposed family,
+//!   k = 5) and 42.43 dB at the exact point (oracle-measured
+//!   38.215223 / 42.426121 dB);
+//! * `golden_edge.pgm` (128x128): edge-map approximate-vs-exact PSNR is
+//!   **30.45 dB** at k = 4 (oracle-measured 30.449833 dB).
+//!
+//! Any arithmetic drift anywhere in the served stack — PE model, LUT
+//! automaton, tiling, im2col lowering, requantization — moves these by
+//! far more than the ±0.05 dB tolerance.
+
+use std::path::PathBuf;
+
+use axsys::apps::image::{read_pgm, scene, Image};
+use axsys::apps::{dct, edge, CoordinatorGemm, WordGemm};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use axsys::pe::word::PeConfig;
+use axsys::Family;
+
+const TOL_DB: f64 = 0.05;
+
+fn golden(name: &str) -> Image {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(name);
+    let img = read_pgm(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+    assert_eq!((img.h, img.w), (128, 128), "golden image shape");
+    img
+}
+
+#[test]
+fn dct_served_psnr_pins_the_paper_38_21_db() {
+    let img = golden("golden_dct.pgm");
+    for backend in [BackendKind::Word, BackendKind::Lut] {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend, ..Default::default()
+        });
+        // exact design point through the serving path
+        let exact = c.serve_dct(&img, 0);
+        assert!((exact.psnr_db - 42.43).abs() <= TOL_DB,
+                "{backend:?} exact DCT PSNR {} != 42.43±{TOL_DB}",
+                exact.psnr_db);
+        // approximate design point (proposed, k = 5): the headline number
+        let apx = c.serve_dct(&img, 5);
+        assert!((apx.psnr_db - 38.21).abs() <= TOL_DB,
+                "{backend:?} approx DCT PSNR {} != 38.21±{TOL_DB}",
+                apx.psnr_db);
+        assert!(apx.gemm_requests >= 4, "4 GEMM stages per pipeline");
+        c.shutdown();
+    }
+}
+
+#[test]
+fn edge_served_psnr_pins_the_paper_30_45_db() {
+    let img = golden("golden_edge.pgm");
+    for backend in [BackendKind::Word, BackendKind::Lut] {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend, ..Default::default()
+        });
+        // exact design point: served result is bit-identical to the
+        // single-threaded exact pipeline (self-PSNR infinite)
+        let exact = c.serve_edge(&img, 0);
+        assert!(exact.psnr_db.is_infinite());
+        let mut wg = WordGemm {
+            cfg: PeConfig::new(8, true, Family::Proposed, 0),
+        };
+        assert_eq!(exact.out.data, edge::pipeline(&mut wg, &img).data,
+                   "{backend:?} served exact edge must be bit-identical");
+        // approximate design point (proposed, k = 4): the headline number
+        let apx = c.serve_edge(&img, 4);
+        assert!((apx.psnr_db - 30.45).abs() <= TOL_DB,
+                "{backend:?} approx edge PSNR {} != 30.45±{TOL_DB}",
+                apx.psnr_db);
+        c.shutdown();
+    }
+}
+
+#[test]
+fn served_pipelines_bit_identical_to_single_threaded_on_all_backends() {
+    // the acceptance gate: DCT and edge through the coordinator on
+    // word/lut/systolic == the pre-existing single-threaded WordGemm
+    // path, at both the exact and an approximate design point
+    let img = scene(64, 64);
+    for k in [0u32, 5] {
+        let cfg = PeConfig::new(8, true, Family::Proposed, k);
+        let mut wg = WordGemm { cfg };
+        let (dct_want, coeff_want) = dct::pipeline(&mut wg, &img);
+        let edge_want = edge::pipeline(&mut wg, &img);
+        for backend in [BackendKind::Word, BackendKind::Lut,
+                        BackendKind::Systolic] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers: 3, backend, ..Default::default()
+            });
+            let mut g = CoordinatorGemm::new(&c, k);
+            let (dct_got, coeff_got) = dct::pipeline(&mut g, &img);
+            assert_eq!(dct_got.data, dct_want.data, "dct {backend:?} k={k}");
+            assert_eq!(coeff_got, coeff_want, "coeffs {backend:?} k={k}");
+            assert_eq!(edge::pipeline(&mut g, &img).data, edge_want.data,
+                       "edge {backend:?} k={k}");
+            // and the app endpoints serve the same bits
+            assert_eq!(c.serve_dct(&img, k).out.data, dct_want.data,
+                       "serve_dct {backend:?} k={k}");
+            assert_eq!(c.serve_edge(&img, k).out.data, edge_want.data,
+                       "serve_edge {backend:?} k={k}");
+            c.shutdown();
+        }
+    }
+}

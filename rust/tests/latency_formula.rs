@@ -1,0 +1,77 @@
+//! Latency-formula regression: the cycle-accurate array must report
+//! exactly `3N - 2` compute cycles for an NxN GEMM on an NxN array (the
+//! formula of [11] cited in `systolic/mod.rs` §doc), plus the documented
+//! drain model (results stream out one column per cycle -> N drain
+//! cycles, `total = 4N - 2`).
+
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
+use axsys::pe::word::PeConfig;
+use axsys::systolic::Systolic;
+use axsys::Family;
+
+fn ints(seed: u64, len: usize) -> Vec<i64> {
+    let mut s = seed | 1;
+    (0..len).map(|_| {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s as i64 & 255) - 128
+    }).collect()
+}
+
+#[test]
+fn square_gemm_cycles_are_3n_minus_2_for_all_sizes() {
+    for size in 1usize..=16 {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 0);
+        let mut sa = Systolic::square(cfg, size);
+        let a = ints(size as u64, size * size);
+        let b = ints(size as u64 + 100, size * size);
+        let (_, st) = sa.run_tile(&a, &b, size);
+        assert_eq!(st.cycles, (3 * size - 2) as u64, "compute, size={size}");
+        assert_eq!(st.drain_cycles, size as u64, "drain, size={size}");
+        assert_eq!(st.total_cycles(), (4 * size - 2) as u64, "total, size={size}");
+        assert_eq!(st.tiles, 1);
+        assert_eq!(st.macs, (size * size * size) as u64);
+    }
+}
+
+#[test]
+fn rectangular_tile_cycles_follow_the_general_skew_formula() {
+    // the 3N-2 formula is the square special case of
+    // (rows-1) + (cols-1) + K compute cycles
+    let cfg = PeConfig::new(8, true, Family::Proposed, 0);
+    for (rows, cols, kk) in [(3usize, 5usize, 7usize), (8, 2, 1), (1, 1, 9)] {
+        let mut sa = Systolic::new(cfg, rows, cols);
+        let a = ints(7, rows * kk);
+        let b = ints(8, kk * cols);
+        let (_, st) = sa.run_tile(&a, &b, kk);
+        assert_eq!(st.cycles, (rows - 1 + cols - 1 + kk) as u64,
+                   "({rows},{cols},{kk})");
+        assert_eq!(st.drain_cycles, cols as u64);
+    }
+}
+
+#[test]
+fn served_systolic_requests_report_the_formula_cycles() {
+    // one 8x8x8 request = exactly one tile through the serving path:
+    // the response must carry the 3*8-2 = 22 compute + 8 drain cycles
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        backend: BackendKind::Systolic,
+        ..Default::default()
+    });
+    let resp = c.call(GemmRequest {
+        a: ints(1, 64),
+        b: ints(2, 64),
+        m: 8,
+        kk: 8,
+        nn: 8,
+        k: 0,
+    });
+    assert_eq!(resp.sa_stats.tiles, 1);
+    assert_eq!(resp.sa_stats.cycles, 22);
+    assert_eq!(resp.sa_stats.drain_cycles, 8);
+    assert_eq!(resp.sa_stats.total_cycles(), 30);
+    c.shutdown();
+}
