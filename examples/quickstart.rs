@@ -4,9 +4,11 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! 1. word-level PE model (fast functional emulation),
+//! 1. word-level PE model (fast functional emulation) + the
+//!    cache-blocked serving driver (same bits, microkernel speed),
 //! 2. cycle-accurate systolic array (the paper's Fig. 1 architecture),
-//! 3. the GEMM coordinator (serving layer, worker pool).
+//! 3. the GEMM coordinator (serving layer, worker pool with batched,
+//!    coalesced dispatch).
 //!
 //! If `make artifacts` has been run, it also executes the AOT-compiled
 //! Pallas kernel through PJRT and checks all paths agree bit-for-bit.
@@ -27,6 +29,13 @@ fn main() -> anyhow::Result<()> {
     let cfg = PeConfig::new(8, true, Family::Proposed, k_level);
     let y_word = matmul(&cfg, &a, &b, m, kk, nn);
     println!("word model:      C[0][0..4] = {:?}", &y_word[..4]);
+
+    // 1b. the cache-blocked serving driver (what the coordinator's
+    // workers run): tiling/packing only reorders independent output
+    // elements, so the bits cannot change
+    let y_blocked = axsys::gemm::matmul(&cfg, &a, &b, m, kk, nn);
+    println!("blocked driver:  C[0][0..4] = {:?}", &y_blocked[..4]);
+    assert_eq!(y_word, y_blocked, "blocked driver must match bit-for-bit");
 
     // 2. cycle-accurate systolic array
     let mut sa = Systolic::square(cfg, 8);

@@ -11,8 +11,9 @@
 //! ```
 //! Results are recorded in EXPERIMENTS.md §Perf (before/after log).
 
-use axsys::bench::{black_box, run, speedup};
+use axsys::bench::{black_box, run, speedup, xorshift_ints as ints};
 use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig, GemmRequest};
+use axsys::gemm::BlockedGemm;
 use axsys::netlist::random_vectors;
 use axsys::pe::lut::ProductLut;
 use axsys::pe::netlist_builder::pe_netlists;
@@ -21,16 +22,6 @@ use axsys::pe::{Design, Signedness};
 use axsys::runtime::{Runtime, TensorI32};
 use axsys::systolic::Systolic;
 use axsys::Family;
-
-fn ints(seed: u64, len: usize) -> Vec<i64> {
-    let mut s = seed | 1;
-    (0..len).map(|_| {
-        s ^= s << 13;
-        s ^= s >> 7;
-        s ^= s << 17;
-        (s as i64 & 255) - 128
-    }).collect()
-}
 
 fn main() {
     let cfg = PeConfig::new(8, true, Family::Proposed, 7);
@@ -90,6 +81,28 @@ fn main() {
     println!("    -> k=7 table: {} states, {} KiB, {:.1} M MAC/s",
              lut7.states(), lut7.table_bytes() / 1024,
              (256.0f64 * 256.0 * 256.0) / l7.median_ns * 1e3);
+
+    // blocked_vs_naive: the MC×KC×NC packed-panel driver against the
+    // PR 1 naive LUT walk on the same 256³ problem (issue acceptance
+    // gate: blocked must win). Bit-identity asserted before timing.
+    let mut bg = BlockedGemm::default();
+    assert_eq!(bg.matmul(&cfg4, &al, &bl, 256, 256, 256),
+               matmul(&cfg4, &al, &bl, 256, 256, 256),
+               "blocked and word disagree — bench comparison would be invalid");
+    let g256 = run("gemm::blocked lut 256x256x256 (k=4)", 1500, || {
+        black_box(bg.matmul(black_box(&cfg4), &al, &bl, 256, 256, 256));
+    });
+    let gx = speedup(&l256, &g256);
+    println!("    -> blocked_vs_naive: {:.2}x over naive lut ({:.1} M MAC/s){}",
+             gx, (256.0f64 * 256.0 * 256.0) / g256.median_ns * 1e3,
+             if gx >= 1.0 { "  [blocked >= naive OK]" }
+             else { "  [REGRESSION vs naive lut]" });
+    let gw256 = run("gemm::blocked word 256x256x256 (k=4)", 1500, || {
+        black_box(bg.matmul_word(black_box(&cfg4), &al, &bl, 256, 256, 256));
+    });
+    println!("    -> blocked word: {:.2}x over naive word ({:.1} M MAC/s)",
+             speedup(&w256, &gw256),
+             (256.0f64 * 256.0 * 256.0) / gw256.median_ns * 1e3);
 
     // L3: cycle-accurate systolic tile stream
     let mut sa = Systolic::square(cfg, 8);

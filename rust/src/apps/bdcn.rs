@@ -10,24 +10,32 @@ use std::path::Path;
 use super::image::Image;
 use super::Gemm;
 
+/// Cascade blocks in the BDCN-lite network.
 pub const N_BLOCKS: usize = 4;
-/// Accumulator requant shifts (bdcn.DEFAULT_SHIFTS).
+/// Requant shift after each block's first conv (bdcn.DEFAULT_SHIFTS).
 pub const SHIFT_W1: u32 = 7;
+/// Requant shift after each block's second conv.
 pub const SHIFT_W2: u32 = 9;
+/// Requant shift applied to the summed side outputs.
 pub const SHIFT_SIDE: u32 = 8;
 
 /// One conv tensor: HWIO layout (kh, kw, cin, cout), int8 values in i64.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// `(kh, kw, cin, cout)` dimensions.
     pub shape: [usize; 4],
+    /// Row-major (HWIO) weight values.
     pub data: Vec<i64>,
 }
 
 /// Quantized weights of one cascade block.
 #[derive(Clone, Debug)]
 pub struct Block {
+    /// First 3x3 conv of the block.
     pub w1: Tensor,
+    /// Second 3x3 conv of the block.
     pub w2: Tensor,
+    /// 1-channel side-output conv.
     pub side: Tensor,
 }
 

@@ -10,30 +10,38 @@ use std::path::Path;
 /// Grayscale image, row-major u8.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Image {
+    /// Height in pixels.
     pub h: usize,
+    /// Width in pixels.
     pub w: usize,
+    /// Row-major pixel values.
     pub data: Vec<u8>,
 }
 
 impl Image {
+    /// An all-black `h x w` image.
     pub fn new(h: usize, w: usize) -> Self {
         Image { h, w, data: vec![0; h * w] }
     }
 
+    /// Pixel at `(y, x)`.
     #[inline]
     pub fn at(&self, y: usize, x: usize) -> u8 {
         self.data[y * self.w + x]
     }
 
+    /// Set pixel at `(y, x)`.
     #[inline]
     pub fn set(&mut self, y: usize, x: usize, v: u8) {
         self.data[y * self.w + x] = v;
     }
 
+    /// Pixels widened to i64 (GEMM operand form).
     pub fn to_i64(&self) -> Vec<i64> {
         self.data.iter().map(|&v| v as i64).collect()
     }
 
+    /// Pixels widened to i32 (PJRT tensor form).
     pub fn to_i32(&self) -> Vec<i32> {
         self.data.iter().map(|&v| v as i32).collect()
     }

@@ -17,11 +17,12 @@ pub mod im2col;
 pub mod image;
 
 use crate::coordinator::{Coordinator, GemmRequest};
-use crate::pe::word::{matmul, PeConfig};
+use crate::pe::word::PeConfig;
 use crate::systolic::{SaStats, Systolic};
 
 /// Integer GEMM backend abstraction: `C(m x n) = A(m x k) @ B(k x n)`.
 pub trait Gemm {
+    /// Compute `C(m x nn) = A(m x kk) @ B(kk x nn)` (row-major slices).
     fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
             -> Vec<i64>;
 
@@ -31,39 +32,46 @@ pub trait Gemm {
     }
 }
 
-/// Fast functional backend: one virtual PE per output element.
+/// Fast functional backend: one virtual PE per output element, routed
+/// through the cache-blocked word engine ([`crate::gemm::matmul_word`]).
 pub struct WordGemm {
+    /// PE design point (family, widths, signedness, approximation `k`).
     pub cfg: PeConfig,
 }
 
 impl Gemm for WordGemm {
     fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
             -> Vec<i64> {
-        matmul(&self.cfg, a, b, m, kk, nn)
+        crate::gemm::matmul_word(&self.cfg, a, b, m, kk, nn)
     }
 }
 
-/// Table-driven backend: shared product-LUT tables, bit-identical to
-/// [`WordGemm`] (falls back to it for non-LUT-compilable design points).
+/// Table-driven backend: shared product-LUT tables through the blocked
+/// driver ([`crate::gemm::matmul`]), bit-identical to [`WordGemm`]
+/// (falls back to the word kernel for non-LUT-compilable design points).
 pub struct LutGemm {
+    /// PE design point (family, widths, signedness, approximation `k`).
     pub cfg: PeConfig,
 }
 
 impl Gemm for LutGemm {
     fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
             -> Vec<i64> {
-        crate::pe::lut::matmul(&self.cfg, a, b, m, kk, nn)
+        crate::gemm::matmul(&self.cfg, a, b, m, kk, nn)
     }
 }
 
 /// Cycle-accurate backend: tiles through a real systolic array and
 /// accumulates cycle/energy statistics.
 pub struct SystolicGemm {
+    /// The simulated array (owns the PE grid and operand registers).
     pub sa: Systolic,
+    /// Cycle/toggle/MAC statistics merged over every call so far.
     pub stats: SaStats,
 }
 
 impl SystolicGemm {
+    /// A `size`×`size` array of PEs configured by `cfg`.
     pub fn new(cfg: PeConfig, size: usize) -> Self {
         SystolicGemm { sa: Systolic::square(cfg, size), stats: SaStats::default() }
     }
@@ -102,6 +110,7 @@ pub struct CoordinatorGemm<'a> {
 }
 
 impl<'a> CoordinatorGemm<'a> {
+    /// Adapter submitting every product to `coord` at approximation `k`.
     pub fn new(coord: &'a Coordinator, k: u32) -> Self {
         CoordinatorGemm { coord, k, stats: SaStats::default(), requests: 0 }
     }
@@ -135,6 +144,7 @@ pub fn rshift_round(v: i64, s: u32) -> i64 {
     if s == 0 { v } else { (v + (1i64 << (s - 1))) >> s }
 }
 
+/// Saturate to the int8 range (coefficient storage in the DCT pipeline).
 #[inline]
 pub fn clip8(v: i64) -> i64 {
     v.clamp(-128, 127)

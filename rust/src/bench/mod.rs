@@ -2,21 +2,32 @@
 //!
 //! `run` executes a closure repeatedly with warmup, reports median /
 //! mean / min over per-iteration wall time, and guards against dead-code
-//! elimination through `black_box`.
+//! elimination through `black_box`. The [`report`] submodule runs the
+//! fixed `bench-report` suite and emits `BENCH_hotpath.json` through the
+//! dependency-free [`Json`] document model.
+
+pub mod report;
 
 use std::time::Instant;
 
 pub use std::hint::black_box;
 
+/// Summary of one timed closure: per-iteration wall times.
 #[derive(Clone, Copy, Debug)]
 pub struct Measurement {
+    /// Sampled iterations (after the warmup/calibration call).
     pub iters: u32,
+    /// Median per-iteration time, ns.
     pub median_ns: f64,
+    /// Mean per-iteration time, ns.
     pub mean_ns: f64,
+    /// Fastest observed iteration, ns.
     pub min_ns: f64,
 }
 
 impl Measurement {
+    /// Items-per-second implied by the median time for `items` of work
+    /// per iteration.
     pub fn throughput(&self, items: f64) -> f64 {
         items / (self.median_ns * 1e-9)
     }
@@ -30,6 +41,7 @@ impl std::fmt::Display for Measurement {
     }
 }
 
+/// Human-readable duration (ns → µs → ms → s as magnitude grows).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -45,6 +57,34 @@ pub fn fmt_ns(ns: f64) -> String {
 /// Median-time speedup of `fast` relative to `base` (>1 means faster).
 pub fn speedup(base: &Measurement, fast: &Measurement) -> f64 {
     base.median_ns / fast.median_ns
+}
+
+/// Deterministic xorshift64 stream — the one PRNG every measurement
+/// harness shares (directly, or through [`xorshift_ints`]).
+pub struct XorShift(u64);
+
+impl XorShift {
+    /// Stream seeded by `seed` (zero maps to a nonzero state).
+    pub fn new(seed: u64) -> Self {
+        XorShift(seed | 1)
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+}
+
+/// Deterministic operand stream over the signed 8-bit range
+/// `[-128, 127]` — the shared generator for benches, the
+/// `bench-report` suite and unit tests, so every harness draws from the
+/// same distribution.
+pub fn xorshift_ints(seed: u64, len: usize) -> Vec<i64> {
+    let mut x = XorShift::new(seed);
+    (0..len).map(|_| (x.next_u64() as i64 & 255) - 128).collect()
 }
 
 /// Measure `f` with automatic iteration count targeting ~`budget_ms` of
@@ -73,6 +113,141 @@ pub fn run<F: FnMut()>(label: &str, budget_ms: u64, mut f: F) -> Measurement {
     m
 }
 
+/// Minimal JSON document model for the `bench-report` emitter (serde is
+/// unavailable offline). Keys keep insertion order; non-finite floats
+/// serialize as `null` so the output is always valid JSON.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// Boolean literal.
+    Bool(bool),
+    /// Integer, emitted without a decimal point.
+    Int(i64),
+    /// Double-precision number (`null` when not finite).
+    Num(f64),
+    /// String, escaped on serialization.
+    Str(String),
+    /// Ordered array.
+    Arr(Vec<Json>),
+    /// Object with insertion-ordered keys.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// An empty object, ready for [`Json::set`] chaining.
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Builder-style field append (replaces an existing key in place).
+    /// Panics when `self` is not an object.
+    pub fn set(mut self, key: &str, v: Json) -> Json {
+        match &mut self {
+            Json::Obj(fields) => {
+                if let Some(f) = fields.iter_mut().find(|(k, _)| k == key) {
+                    f.1 = v;
+                } else {
+                    fields.push((key.to_string(), v));
+                }
+            }
+            _ => panic!("Json::set on a non-object"),
+        }
+        self
+    }
+
+    /// Field lookup on objects (`None` otherwise).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Serialize with 2-space indentation and a trailing newline.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        write_json(&mut out, self, 0);
+        out.push('\n');
+        out
+    }
+}
+
+fn write_json(out: &mut String, v: &Json, indent: usize) {
+    let pad = |out: &mut String, n: usize| {
+        for _ in 0..n {
+            out.push_str("  ");
+        }
+    };
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Int(i) => out.push_str(&i.to_string()),
+        Json::Num(f) => {
+            if f.is_finite() {
+                out.push_str(&format!("{f}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        Json::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        out.push_str(&format!("\\u{:04x}", c as u32));
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                pad(out, indent + 1);
+                write_json(out, item, indent + 1);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(out, indent);
+            out.push(']');
+        }
+        Json::Obj(fields) => {
+            if fields.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, val)) in fields.iter().enumerate() {
+                pad(out, indent + 1);
+                write_json(out, &Json::Str(k.clone()), 0);
+                out.push_str(": ");
+                write_json(out, val, indent + 1);
+                if i + 1 < fields.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(out, indent);
+            out.push('}');
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +260,34 @@ mod tests {
         });
         assert!(m.median_ns >= 0.0);
         assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn json_serializes_and_escapes() {
+        let j = Json::obj()
+            .set("schema", Json::Str("axsys-bench-report/v1".into()))
+            .set("n", Json::Int(-3))
+            .set("x", Json::Num(1.5))
+            .set("bad", Json::Num(f64::NAN))
+            .set("esc", Json::Str("a\"b\\c\nd".into()))
+            .set("arr", Json::Arr(vec![Json::Bool(true), Json::Null]));
+        let s = j.pretty();
+        assert!(s.contains("\"schema\": \"axsys-bench-report/v1\""), "{s}");
+        assert!(s.contains("\"n\": -3"));
+        assert!(s.contains("\"x\": 1.5"));
+        assert!(s.contains("\"bad\": null"), "NaN must become null: {s}");
+        assert!(s.contains("a\\\"b\\\\c\\nd"));
+        assert!(s.ends_with("}\n"));
+        assert_eq!(j.get("n"), Some(&Json::Int(-3)));
+        assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn json_set_replaces_in_place() {
+        let j = Json::obj().set("a", Json::Int(1)).set("a", Json::Int(2));
+        assert_eq!(j.get("a"), Some(&Json::Int(2)));
+        if let Json::Obj(fields) = &j {
+            assert_eq!(fields.len(), 1);
+        }
     }
 }

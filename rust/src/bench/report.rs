@@ -1,0 +1,257 @@
+//! The `bench-report` fixed suite: machine-readable perf trajectory.
+//!
+//! [`collect`] runs the same three measurements on every invocation and
+//! returns one [`Json`] document, which the CLI writes to
+//! `BENCH_hotpath.json` at the repository root so every PR leaves a
+//! comparable perf artifact behind:
+//!
+//! 1. **kernels** — `lut` naive walk vs the cache-blocked driver (lut and
+//!    word engines) vs the naive word walk on one `size³` GEMM at `k = 4`,
+//!    each as MACs/second (results cross-checked bit-identical before any
+//!    timing — a perf number for a wrong kernel is worthless);
+//! 2. **serve** — coordinator throughput on the `lut` backend over a
+//!    deterministic mixed-size request fleet, with p50/p90/p99/max
+//!    latency and the batched-dispatch counters;
+//! 3. **apps** — single-request `serve_dct` / `serve_edge` latency at the
+//!    paper's headline approximation levels.
+//!
+//! All sizes shrink with [`ReportConfig::size`] so CI can smoke-run the
+//! identical suite in seconds (`axsys bench-report --size 32`).
+
+use std::path::{Path, PathBuf};
+
+use crate::apps::image::scene;
+use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
+use crate::gemm::BlockedGemm;
+use crate::pe::lut::ProductLut;
+use crate::pe::word::{matmul as word_matmul, PeConfig};
+use crate::Family;
+
+use super::{black_box, run, speedup, xorshift_ints as ints, Json,
+            Measurement};
+
+/// Knobs of one `bench-report` run (all have CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ReportConfig {
+    /// GEMM edge length: the kernel section times `size x size x size`.
+    pub size: usize,
+    /// Requests in the serve-throughput fleet.
+    pub requests: usize,
+    /// Coordinator workers for the serve/apps sections.
+    pub workers: usize,
+    /// Approximation level of the kernel section.
+    pub k: u32,
+}
+
+impl Default for ReportConfig {
+    fn default() -> Self {
+        ReportConfig { size: 256, requests: 48, workers: 4, k: 4 }
+    }
+}
+
+/// Default artifact location: `BENCH_hotpath.json` at the repository
+/// root (one directory above the crate).
+pub fn default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("BENCH_hotpath.json")
+}
+
+fn meas_json(m: &Measurement, macs: f64) -> Json {
+    Json::obj()
+        .set("median_ns", Json::Num(m.median_ns))
+        .set("min_ns", Json::Num(m.min_ns))
+        .set("iters", Json::Int(m.iters as i64))
+        .set("macs_per_sec", Json::Num(m.throughput(macs)))
+}
+
+fn kernel_section(rc: &ReportConfig) -> Json {
+    let s = rc.size;
+    let macs = (s * s * s) as f64;
+    let budget = ((macs / 1e6) as u64).clamp(40, 1500);
+    let cfg = PeConfig::new(8, true, Family::Proposed, rc.k);
+    let a = ints(5, s * s);
+    let b = ints(6, s * s);
+    let lut = ProductLut::try_build(&cfg).expect("8-bit point compiles");
+    let mut eng = BlockedGemm::default();
+    // cross-check every timed path before timing it
+    let want = word_matmul(&cfg, &a, &b, s, s, s);
+    assert_eq!(lut.matmul(&a, &b, s, s, s), want, "naive lut != word");
+    assert_eq!(eng.matmul(&cfg, &a, &b, s, s, s), want, "blocked lut != word");
+    assert_eq!(eng.matmul_word(&cfg, &a, &b, s, s, s), want,
+               "blocked word != word");
+
+    let m_word = run("bench-report word naive", budget, || {
+        black_box(word_matmul(black_box(&cfg), &a, &b, s, s, s));
+    });
+    let m_lut = run("bench-report lut naive", budget, || {
+        black_box(lut.matmul(black_box(&a), &b, s, s, s));
+    });
+    let m_blocked = run("bench-report lut blocked", budget, || {
+        black_box(eng.matmul(black_box(&cfg), &a, &b, s, s, s));
+    });
+    let m_blocked_w = run("bench-report word blocked", budget, || {
+        black_box(eng.matmul_word(black_box(&cfg), &a, &b, s, s, s));
+    });
+    Json::obj()
+        .set("size", Json::Int(s as i64))
+        .set("k", Json::Int(rc.k as i64))
+        .set("word_naive", meas_json(&m_word, macs))
+        .set("lut_naive", meas_json(&m_lut, macs))
+        .set("lut_blocked", meas_json(&m_blocked, macs))
+        .set("word_blocked", meas_json(&m_blocked_w, macs))
+        .set("blocked_vs_naive_lut_speedup",
+             Json::Num(speedup(&m_lut, &m_blocked)))
+        .set("blocked_vs_naive_word_speedup",
+             Json::Num(speedup(&m_word, &m_blocked_w)))
+        .set("lut_vs_word_speedup", Json::Num(speedup(&m_word, &m_blocked)))
+}
+
+fn serve_section(rc: &ReportConfig) -> Json {
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: rc.workers,
+        backend: BackendKind::Lut,
+        ..Default::default()
+    });
+    let span = rc.size.clamp(16, 64);
+    let mut rng = super::XorShift::new(0xBE7C);
+    let t0 = std::time::Instant::now();
+    let mut ids = Vec::with_capacity(rc.requests);
+    for r in 0..rc.requests {
+        let m = 8 + (rng.next_u64() as usize % span);
+        let kk = 8 + (rng.next_u64() as usize % 25);
+        let nn = 8 + (rng.next_u64() as usize % span);
+        ids.push(c.submit(GemmRequest {
+            a: ints(rng.next_u64(), m * kk),
+            b: ints(rng.next_u64(), kk * nn),
+            m, kk, nn,
+            k: (r % 8) as u32,
+        }));
+    }
+    for id in ids {
+        c.wait(id);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = c.stats();
+    let out = Json::obj()
+        .set("backend", Json::Str("lut".into()))
+        .set("workers", Json::Int(rc.workers as i64))
+        .set("requests", Json::Int(s.requests as i64))
+        .set("req_per_sec", Json::Num(s.requests as f64 / wall.max(1e-9)))
+        .set("tiles", Json::Int(s.tiles as i64))
+        .set("latency_us", Json::obj()
+            .set("p50", Json::Num(s.latency_percentile(0.50)))
+            .set("p90", Json::Num(s.latency_percentile(0.90)))
+            .set("p99", Json::Num(s.latency_percentile(0.99)))
+            .set("max", Json::Num(s.max_latency_us))
+            .set("mean", Json::Num(s.mean_latency_us())))
+        .set("dispatch", Json::obj()
+            .set("worker_dispatches", Json::Int(s.worker_dispatches as i64))
+            .set("dispatched_tiles", Json::Int(s.dispatched_tiles as i64))
+            .set("coalesced_calls", Json::Int(s.coalesced_calls as i64))
+            .set("max_dispatch_tiles", Json::Int(s.max_dispatch_tiles as i64))
+            .set("mean_dispatch_tiles", Json::Num(s.mean_dispatch_tiles()))
+            .set("mean_dispatch_exec_us",
+                 Json::Num(s.mean_dispatch_exec_us())))
+        .set("lut_macs", Json::Int(s.lut_macs as i64));
+    c.shutdown();
+    out
+}
+
+fn apps_section(rc: &ReportConfig) -> Json {
+    let side = (rc.size.clamp(32, 256) / 8) * 8;
+    let img = scene(side, side);
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: rc.workers,
+        backend: BackendKind::Lut,
+        ..Default::default()
+    });
+    // one warm call each (tables built, pool spun up), then the measured
+    // response — per-request latency is what serving cares about
+    c.serve_dct(&img, 5);
+    let dct = c.serve_dct(&img, 5);
+    c.serve_edge(&img, 4);
+    let edge = c.serve_edge(&img, 4);
+    let out = Json::obj()
+        .set("image_side", Json::Int(side as i64))
+        .set("dct", Json::obj()
+            .set("k", Json::Int(5))
+            .set("latency_us", Json::Num(dct.latency_us))
+            .set("psnr_db", Json::Num(dct.psnr_db))
+            .set("gemm_requests", Json::Int(dct.gemm_requests as i64)))
+        .set("edge", Json::obj()
+            .set("k", Json::Int(4))
+            .set("latency_us", Json::Num(edge.latency_us))
+            .set("psnr_db", Json::Num(edge.psnr_db))
+            .set("gemm_requests", Json::Int(edge.gemm_requests as i64)));
+    c.shutdown();
+    out
+}
+
+/// Run the full fixed suite and assemble the report document.
+pub fn collect(rc: &ReportConfig) -> Json {
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get()).unwrap_or(1);
+    let generated_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    Json::obj()
+        .set("schema", Json::Str("axsys-bench-report/v1".into()))
+        .set("generated_unix", Json::Int(generated_unix))
+        .set("config", Json::obj()
+            .set("size", Json::Int(rc.size as i64))
+            .set("requests", Json::Int(rc.requests as i64))
+            .set("workers", Json::Int(rc.workers as i64))
+            .set("k", Json::Int(rc.k as i64))
+            .set("host_threads", Json::Int(threads as i64)))
+        .set("kernels", kernel_section(rc))
+        .set("serve", serve_section(rc))
+        .set("apps", apps_section(rc))
+}
+
+/// Serialize `doc` to `path` (pretty-printed, trailing newline).
+pub fn write_report(path: &Path, doc: &Json) -> std::io::Result<()> {
+    std::fs::write(path, doc.pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_suite_produces_complete_report() {
+        // the CI smoke shape: everything present, numbers positive
+        let rc = ReportConfig { size: 16, requests: 4, workers: 2, k: 4 };
+        let doc = collect(&rc);
+        let kernels = doc.get("kernels").expect("kernels");
+        for key in ["word_naive", "lut_naive", "lut_blocked", "word_blocked"] {
+            let m = kernels.get(key).expect(key);
+            match m.get("macs_per_sec") {
+                Some(&Json::Num(v)) => assert!(v > 0.0, "{key}: {v}"),
+                other => panic!("{key}.macs_per_sec: {other:?}"),
+            }
+        }
+        assert!(kernels.get("blocked_vs_naive_lut_speedup").is_some());
+        let serve = doc.get("serve").expect("serve");
+        assert_eq!(serve.get("requests"), Some(&Json::Int(4)));
+        let lat = serve.get("latency_us").expect("latency_us");
+        match (lat.get("p50"), lat.get("p99")) {
+            (Some(&Json::Num(p50)), Some(&Json::Num(p99))) => {
+                assert!(p50 > 0.0 && p50 <= p99, "{p50} vs {p99}");
+            }
+            other => panic!("percentiles missing: {other:?}"),
+        }
+        let disp = serve.get("dispatch").expect("dispatch");
+        match disp.get("worker_dispatches") {
+            Some(&Json::Int(v)) => assert!(v >= 1),
+            other => panic!("worker_dispatches: {other:?}"),
+        }
+        assert!(doc.get("apps").and_then(|a| a.get("dct")).is_some());
+        // the whole document serializes
+        let text = doc.pretty();
+        assert!(text.starts_with('{') && text.ends_with("}\n"));
+    }
+}

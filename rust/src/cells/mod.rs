@@ -46,6 +46,7 @@ pub enum CellKind {
 }
 
 impl CellKind {
+    /// Every cell variant, in Table II presentation order.
     pub const ALL: [CellKind; 12] = [
         CellKind::ExactPpc,
         CellKind::ExactNppc,
@@ -61,6 +62,7 @@ impl CellKind {
         CellKind::Axsa5Nppc,
     ];
 
+    /// Stable lower-case name (Verilog module names, CLI output).
     pub fn name(self) -> &'static str {
         match self {
             CellKind::ExactPpc => "exact_ppc",

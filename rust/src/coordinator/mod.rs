@@ -18,6 +18,19 @@
 //! batching (tested), and `Word`, `Lut` and `Systolic` are bit-identical
 //! to each other for every design point (`tests/backend_equiv.rs`).
 //!
+//! ## Batched dispatch
+//!
+//! Workers pull tiles in batches (up to [`CoordinatorConfig::batch`] per
+//! queue visit). On the software backends (`Word`/`Lut`) a batch is then
+//! **coalesced**: tiles that share one request's B panel (same request,
+//! same output-column origin, same `k`) — the shape the im2col-lowered
+//! conv tiles from [`crate::apps`] arrive in — are stacked row-wise and
+//! executed as a single cache-blocked GEMM through each worker's
+//! reusable [`BlockedGemm`] engine. Coalescing only concatenates
+//! *independent output rows*, so results stay bit-identical to per-tile
+//! execution (enforced by `tests/coordinator_invariance.rs`); batch-size
+//! and dispatch-latency counters land in [`ServiceStats`].
+//!
 //! PJRT note: tiles streamed through `axmm_b16` carry K in chunks of 8
 //! whose partial results are summed outside the PE; for k = 0 this is
 //! bit-identical to the monolithic array, for k > 0 it is the "chunked
@@ -31,8 +44,9 @@ use std::time::Instant;
 
 use crate::apps::image::{psnr, Image};
 use crate::apps::{bdcn, dct, edge, CoordinatorGemm};
+use crate::gemm::BlockedGemm;
 use crate::pe::lut::{self, ProductLut};
-use crate::pe::word::{matmul, PeConfig};
+use crate::pe::word::PeConfig;
 use crate::runtime::{Runtime, TensorI32};
 use crate::systolic::{SaStats, Systolic};
 use crate::Family;
@@ -52,9 +66,11 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every backend, in CLI-advertised order.
     pub const ALL: [BackendKind; 4] = [BackendKind::Word, BackendKind::Lut,
                                        BackendKind::Systolic, BackendKind::Pjrt];
 
+    /// Stable lower-case name (CLI `--backend` value).
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Word => "word",
@@ -64,6 +80,7 @@ impl BackendKind {
         }
     }
 
+    /// Inverse of [`Self::name`] (`None` for unknown names).
     pub fn parse(s: &str) -> Option<BackendKind> {
         Self::ALL.into_iter().find(|b| b.name() == s)
     }
@@ -75,13 +92,17 @@ impl BackendKind {
     }
 }
 
+/// Static configuration of one [`Coordinator`] worker pool.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Worker-thread count (min 1).
     pub workers: usize,
+    /// Device each worker instantiates.
     pub backend: BackendKind,
     /// PE configuration (family + width); the request's `k` overrides
     /// `pe.k` per submission.
     pub family: Family,
+    /// Operand width in bits of every worker device.
     pub n_bits: u32,
     /// Systolic tile geometry (square).
     pub sa_size: usize,
@@ -108,23 +129,36 @@ impl Default for CoordinatorConfig {
 /// One GEMM request: `C(m x nn) = A(m x kk) @ B(kk x nn)` at level `k`.
 #[derive(Clone, Debug)]
 pub struct GemmRequest {
+    /// Left operand, row-major `m x kk`.
     pub a: Vec<i64>,
+    /// Right operand, row-major `kk x nn`.
     pub b: Vec<i64>,
+    /// Output rows.
     pub m: usize,
+    /// Inner (contraction) dimension.
     pub kk: usize,
+    /// Output columns.
     pub nn: usize,
+    /// Approximation level for this request (0 = exact).
     pub k: u32,
 }
 
 /// Completed response.
 #[derive(Clone, Debug)]
 pub struct GemmResponse {
+    /// Request id (as returned by [`Coordinator::submit`]).
     pub id: u64,
+    /// Result matrix, row-major `m x nn`.
     pub out: Vec<i64>,
+    /// Output rows.
     pub m: usize,
+    /// Output columns.
     pub nn: usize,
+    /// End-to-end latency from submit to last tile commit, µs.
     pub latency_us: f64,
+    /// Output tiles the request was split into.
     pub tiles: u64,
+    /// Merged execution statistics of every tile.
     pub sa_stats: SaStats,
 }
 
@@ -155,9 +189,12 @@ struct TileJob {
     tj: usize,
     th: usize,
     tw: usize,
-    /// row-major panels: a is th x kk, b is kk x tw
+    /// row-major A panel, th x kk
     a_panel: Vec<i64>,
-    b_panel: Vec<i64>,
+    /// row-major B panel, kk x tw — one shared allocation per request
+    /// column (every row tile of a column reads the same B region, and
+    /// the coalescer merges exactly those tiles into one stacked GEMM)
+    b_panel: Arc<Vec<i64>>,
     kk: usize,
     k: u32,
 }
@@ -180,8 +217,10 @@ pub enum AppKind {
 }
 
 impl AppKind {
+    /// Every servable application, in CLI-advertised order.
     pub const ALL: [AppKind; 3] = [AppKind::Dct, AppKind::Edge, AppKind::Bdcn];
 
+    /// Stable lower-case name (CLI `--app` value).
     pub fn name(self) -> &'static str {
         match self {
             AppKind::Dct => "dct",
@@ -190,6 +229,7 @@ impl AppKind {
         }
     }
 
+    /// Inverse of [`Self::name`] (`None` for unknown names).
     pub fn parse(s: &str) -> Option<AppKind> {
         Self::ALL.into_iter().find(|a| a.name() == s)
     }
@@ -203,7 +243,9 @@ impl AppKind {
 /// Completed application-level response.
 #[derive(Clone, Debug)]
 pub struct AppResponse {
+    /// Which pipeline served this request.
     pub app: AppKind,
+    /// The pipeline's output image (reconstruction or edge map).
     pub out: Image,
     /// Paper §V quality metric: `dct` reports reconstruction-vs-input
     /// PSNR; `edge`/`bdcn` report approximate-vs-exact PSNR, where the
@@ -221,18 +263,23 @@ pub struct AppResponse {
 /// Aggregate counters for one served application pipeline.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AppStats {
+    /// Application requests completed.
     pub requests: u64,
     /// GEMM sub-requests the pipelines issued through the worker pool.
     pub gemm_requests: u64,
+    /// Summed end-to-end pipeline latency, µs.
     pub total_latency_us: f64,
+    /// Worst single-request pipeline latency, µs.
     pub max_latency_us: f64,
     /// Sum over requests with a finite quality PSNR (exact
     /// self-referential runs report infinity and are excluded).
     pub psnr_sum_db: f64,
+    /// Number of finite-PSNR samples in [`Self::psnr_sum_db`].
     pub psnr_samples: u64,
 }
 
 impl AppStats {
+    /// Mean end-to-end pipeline latency in µs (0.0 before any request).
     pub fn mean_latency_us(&self) -> f64 {
         if self.requests == 0 {
             0.0
@@ -258,22 +305,46 @@ pub const LATENCY_SAMPLE_CAP: usize = 8192;
 /// Aggregate service statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
+    /// GEMM requests completed.
     pub requests: u64,
+    /// Output tiles executed across all requests.
     pub tiles: u64,
+    /// Summed end-to-end request latency, µs.
     pub total_latency_us: f64,
+    /// Worst single-request latency, µs.
     pub max_latency_us: f64,
+    /// Simulated array cycles (systolic backend only).
     pub sim_cycles: u64,
+    /// MAC operations executed across all devices.
     pub sim_macs: u64,
+    /// Accumulator-bit toggles (systolic backend only).
     pub sim_toggles: u64,
-    /// MACs served from product-LUT tables (vs bit-plane fallback).
+    /// Worker batch dispatches pulled from the tile queue.
+    pub worker_dispatches: u64,
+    /// Tiles pulled across all dispatches (mean batch size =
+    /// `dispatched_tiles / worker_dispatches`).
+    pub dispatched_tiles: u64,
+    /// Largest single dispatch observed, in tiles.
+    pub max_dispatch_tiles: u64,
+    /// Device executions after same-B coalescing (`<= dispatched_tiles`;
+    /// the gap is tiles that rode along in a stacked GEMM).
+    pub coalesced_calls: u64,
+    /// Total device execution wall time across dispatches, µs (queue
+    /// wait excluded — compare against `total_latency_us` to see
+    /// queueing delay).
+    pub dispatch_exec_us: f64,
+    /// MACs served without the bit-plane walk on the `Lut` backend
+    /// (product tables, or the exact integer kernel at `k = 0`).
     pub lut_macs: u64,
     /// Process-wide LUT cache hits observed at snapshot time.
     pub lut_cache_hits: u64,
     /// Process-wide LUT table builds observed at snapshot time.
     pub lut_builds: u64,
-    /// Per-app serving counters (requests routed via `serve_*`).
+    /// Per-app serving counters for `serve_dct` requests.
     pub dct: AppStats,
+    /// Per-app serving counters for `serve_edge` requests.
     pub edge: AppStats,
+    /// Per-app serving counters for `serve_bdcn` requests.
     pub bdcn: AppStats,
     /// Recent per-request end-to-end GEMM latencies in µs (at most
     /// [`LATENCY_SAMPLE_CAP`], ring-buffered) — feeds
@@ -291,6 +362,25 @@ impl ServiceStats {
         }
     }
 
+    /// Mean tiles per worker dispatch (0.0 before any dispatch).
+    pub fn mean_dispatch_tiles(&self) -> f64 {
+        if self.worker_dispatches == 0 {
+            0.0
+        } else {
+            self.dispatched_tiles as f64 / self.worker_dispatches as f64
+        }
+    }
+
+    /// Mean device-execution time per dispatch in µs.
+    pub fn mean_dispatch_exec_us(&self) -> f64 {
+        if self.worker_dispatches == 0 {
+            0.0
+        } else {
+            self.dispatch_exec_us / self.worker_dispatches as f64
+        }
+    }
+
+    /// Per-app counters for one served pipeline.
     pub fn app(&self, app: AppKind) -> &AppStats {
         match app {
             AppKind::Dct => &self.dct,
@@ -341,6 +431,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Spawn the worker pool described by `cfg` (threads start
+    /// immediately and block on the tile queue).
     pub fn new(cfg: CoordinatorConfig) -> Self {
         // fail in the caller's thread with the real reason, instead of
         // letting every worker panic on the stub Runtime (which would
@@ -390,25 +482,30 @@ impl Coordinator {
             });
         }
         let tx = self.tx.as_ref().expect("coordinator shut down");
-        for bi in 0..tiles_m {
-            for bj in 0..tiles_n {
+        // column-major tile emission: every row tile of a column shares
+        // one Arc'd B panel (built once), and consecutive queue entries
+        // share it too — which is exactly what the workers' batch
+        // coalescer merges into a single stacked GEMM
+        for bj in 0..tiles_n {
+            let tj = bj * sa;
+            let tw = (nn - tj).min(sa);
+            let mut bp = vec![0i64; kk * tw];
+            for t in 0..kk {
+                for j in 0..tw {
+                    bp[t * tw + j] = req.b[t * nn + tj + j];
+                }
+            }
+            let b_panel = Arc::new(bp);
+            for bi in 0..tiles_m {
                 let ti = bi * sa;
-                let tj = bj * sa;
                 let th = (m - ti).min(sa);
-                let tw = (nn - tj).min(sa);
                 let mut a_panel = vec![0i64; th * kk];
                 for i in 0..th {
                     a_panel[i * kk..(i + 1) * kk]
                         .copy_from_slice(&req.a[(ti + i) * kk..(ti + i + 1) * kk]);
                 }
-                let mut b_panel = vec![0i64; kk * tw];
-                for t in 0..kk {
-                    for j in 0..tw {
-                        b_panel[t * tw + j] = req.b[t * nn + tj + j];
-                    }
-                }
-                let job = TileJob { req_id: id, ti, tj, th, tw,
-                                    a_panel, b_panel, kk, k: req.k };
+                let job = TileJob { req_id: id, ti, tj, th, tw, a_panel,
+                                    b_panel: b_panel.clone(), kk, k: req.k };
                 // Blocking send = backpressure: the channel parks this
                 // thread until a worker frees queue capacity (replaces
                 // the old try_send spin loop, which burned a core per
@@ -446,6 +543,8 @@ impl Coordinator {
         self.wait(id)
     }
 
+    /// Snapshot of the aggregate service statistics (LUT cache counters
+    /// refreshed from the process-wide cache at snapshot time).
     pub fn stats(&self) -> ServiceStats {
         let mut s = self.stats.lock().unwrap().clone();
         let (hits, builds) = lut::cache_counters();
@@ -562,8 +661,32 @@ impl Drop for Coordinator {
     }
 }
 
+/// Per-worker state shared by the software (`Word`/`Lut`) devices: the
+/// reusable cache-blocked engine (owns the packing scratch — no
+/// per-request allocation) plus the A-stacking buffer for coalesced
+/// dispatches.
+struct SwDevice {
+    eng: BlockedGemm,
+    stack_a: Vec<i64>,
+}
+
+impl SwDevice {
+    fn new() -> Box<Self> {
+        // single_threaded: the worker pool is the parallelism — a nested
+        // per-call fan-out on large coalesced GEMMs would oversubscribe
+        // the host and allocate per-thread scratch on every dispatch
+        Box::new(SwDevice {
+            eng: BlockedGemm::single_threaded(Default::default()),
+            stack_a: Vec::new(),
+        })
+    }
+}
+
 enum Device {
-    Word(PeConfig),
+    Word {
+        pc: PeConfig,
+        sw: Box<SwDevice>,
+    },
     Lut {
         pc: PeConfig,
         /// Per-worker memo of the process-wide shared tables, keyed by the
@@ -571,8 +694,9 @@ enum Device {
         /// word-model fallback). The `Arc`s point into `lut::cached`'s
         /// global map, so workers share one table per design point.
         tables: HashMap<u32, Option<Arc<ProductLut>>>,
-        /// MACs served from tables since the last stats drain.
+        /// MACs served without the bit-plane walk since the last drain.
         lut_macs: u64,
+        sw: Box<SwDevice>,
     },
     Systolic(Box<Systolic>),
     Pjrt {
@@ -584,13 +708,17 @@ enum Device {
 fn make_device(cfg: &CoordinatorConfig) -> Device {
     match cfg.backend {
         BackendKind::Word => {
-            Device::Word(PeConfig::new(cfg.n_bits, true, cfg.family, 0))
+            Device::Word {
+                pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
+                sw: SwDevice::new(),
+            }
         }
         BackendKind::Lut => {
             Device::Lut {
                 pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
                 tables: HashMap::new(),
                 lut_macs: 0,
+                sw: SwDevice::new(),
             }
         }
         BackendKind::Systolic => {
@@ -625,11 +753,21 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
                 }
             }
         }
-        let results = execute_batch(&cfg, &mut device, &batch);
-        if let Device::Lut { lut_macs, .. } = &mut device {
-            if *lut_macs > 0 {
-                stats.lock().unwrap().lut_macs += *lut_macs;
-                *lut_macs = 0;
+        let t_exec = Instant::now();
+        let (results, device_calls) = execute_batch(&cfg, &mut device, &batch);
+        let exec_us = t_exec.elapsed().as_secs_f64() * 1e6;
+        {
+            let mut s = stats.lock().unwrap();
+            s.worker_dispatches += 1;
+            s.dispatched_tiles += batch.len() as u64;
+            s.max_dispatch_tiles = s.max_dispatch_tiles.max(batch.len() as u64);
+            s.coalesced_calls += device_calls;
+            s.dispatch_exec_us += exec_us;
+            if let Device::Lut { lut_macs, .. } = &mut device {
+                if *lut_macs > 0 {
+                    s.lut_macs += *lut_macs;
+                    *lut_macs = 0;
+                }
             }
         }
         // commit results
@@ -672,45 +810,132 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
     }
 }
 
-fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
-                 batch: &[TileJob]) -> Vec<(Vec<i64>, SaStats)> {
-    match device {
-        Device::Word(pc) => batch.iter().map(|job| {
-            let mut pc2 = *pc;
-            pc2.k = job.k;
-            let out = matmul(&pc2, &job.a_panel, &job.b_panel,
-                             job.th, job.kk, job.tw);
-            (out, SaStats { tiles: 1, macs: (job.th * job.kk * job.tw) as u64,
-                            ..Default::default() })
-        }).collect(),
-        Device::Lut { pc, tables, lut_macs } => batch.iter().map(|job| {
-            let mut pc2 = *pc;
-            pc2.k = job.k;
-            let table = tables.entry(job.k)
-                .or_insert_with(|| lut::cached(&pc2))
-                .clone();
-            let macs = (job.th * job.kk * job.tw) as u64;
-            let out = match table {
-                Some(t) => {
-                    *lut_macs += macs;
-                    t.matmul(&job.a_panel, &job.b_panel,
-                             job.th, job.kk, job.tw)
-                }
-                // non-LUT-compilable design point: bit-identical fallback
-                None => matmul(&pc2, &job.a_panel, &job.b_panel,
-                               job.th, job.kk, job.tw),
-            };
-            (out, SaStats { tiles: 1, macs, ..Default::default() })
-        }).collect(),
-        Device::Systolic(sa) => batch.iter().map(|job| {
-            let mut pc = sa.cfg;
-            pc.k = job.k;
-            if pc.k != sa.cfg.k {
-                **sa = Systolic::square(pc, cfg.sa_size);
+/// Group batch indices by shared B panel: tiles of the same request with
+/// the same output-column origin, inner dimension, tile width and `k`
+/// were carved from the same B region, so their panels are identical and
+/// their A panels can be stacked row-wise into one GEMM. Returns groups
+/// in first-seen order; every batch index appears in exactly one group.
+fn coalesce(batch: &[TileJob]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut index: HashMap<(u64, usize, usize, usize, u32), usize> =
+        HashMap::new();
+    for (i, job) in batch.iter().enumerate() {
+        let key = (job.req_id, job.tj, job.kk, job.tw, job.k);
+        match index.get(&key) {
+            Some(&g) => groups[g].push(i),
+            None => {
+                index.insert(key, groups.len());
+                groups.push(vec![i]);
             }
-            sa.gemm(&job.a_panel, &job.b_panel, job.th, job.kk, job.tw)
-        }).collect(),
-        Device::Pjrt { rt, exe } => execute_batch_pjrt(rt, exe, batch),
+        }
+    }
+    groups
+}
+
+/// Execute one coalesced group on a software device. `table` is the
+/// worker's memoized LUT handle for the group's `k` (`None` = word path).
+/// Returns the stacked result rows (`sum of th` x `tw`).
+fn run_sw_group(sw: &mut SwDevice, pc2: &PeConfig,
+                table: Option<&ProductLut>, batch: &[TileJob],
+                group: &[usize]) -> Vec<i64> {
+    let first = &batch[group[0]];
+    // singleton groups (nothing to coalesce) skip the stacking copy and
+    // feed the tile's own A panel straight to the engine
+    let (a, total_th): (&[i64], usize) = if group.len() == 1 {
+        (&first.a_panel, first.th)
+    } else {
+        sw.stack_a.clear();
+        for &i in group {
+            debug_assert!(Arc::ptr_eq(&batch[i].b_panel, &first.b_panel)
+                          || batch[i].b_panel == first.b_panel,
+                          "coalesce key bug");
+            sw.stack_a.extend_from_slice(&batch[i].a_panel);
+        }
+        (&sw.stack_a, group.iter().map(|&i| batch[i].th).sum())
+    };
+    match table {
+        Some(t) => sw.eng.matmul_lut(t, a, &first.b_panel,
+                                     total_th, first.kk, first.tw),
+        None => sw.eng.matmul_word(pc2, a, &first.b_panel,
+                                   total_th, first.kk, first.tw),
+    }
+}
+
+/// Scatter a stacked group result back into per-tile `(tile, stats)`
+/// slots aligned with the batch order.
+fn scatter_group(batch: &[TileJob], group: &[usize], stacked: &[i64],
+                 results: &mut [Option<(Vec<i64>, SaStats)>]) {
+    let tw = batch[group[0]].tw;
+    let mut row = 0;
+    for &i in group {
+        let job = &batch[i];
+        let tile = stacked[row * tw..(row + job.th) * tw].to_vec();
+        row += job.th;
+        results[i] = Some((tile, SaStats {
+            tiles: 1,
+            macs: (job.th * job.kk * job.tw) as u64,
+            ..Default::default()
+        }));
+    }
+}
+
+/// Execute a pulled batch on the worker's device. Returns per-tile
+/// results aligned with `batch` order plus the number of device
+/// executions after coalescing (== `batch.len()` on the per-tile
+/// `Systolic`/`Pjrt` devices).
+fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
+                 batch: &[TileJob]) -> (Vec<(Vec<i64>, SaStats)>, u64) {
+    match device {
+        Device::Word { pc, sw } => {
+            let groups = coalesce(batch);
+            let mut results: Vec<Option<(Vec<i64>, SaStats)>> =
+                (0..batch.len()).map(|_| None).collect();
+            for group in &groups {
+                let mut pc2 = *pc;
+                pc2.k = batch[group[0]].k;
+                let stacked = run_sw_group(sw, &pc2, None, batch, group);
+                scatter_group(batch, group, &stacked, &mut results);
+            }
+            (results.into_iter().map(|r| r.expect("group cover")).collect(),
+             groups.len() as u64)
+        }
+        Device::Lut { pc, tables, lut_macs, sw } => {
+            let groups = coalesce(batch);
+            let mut results: Vec<Option<(Vec<i64>, SaStats)>> =
+                (0..batch.len()).map(|_| None).collect();
+            for group in &groups {
+                let first = &batch[group[0]];
+                let mut pc2 = *pc;
+                pc2.k = first.k;
+                let table = tables.entry(first.k)
+                    .or_insert_with(|| lut::cached(&pc2))
+                    .clone();
+                if table.is_some() {
+                    let total_th: usize =
+                        group.iter().map(|&i| batch[i].th).sum();
+                    *lut_macs += (total_th * first.kk * first.tw) as u64;
+                }
+                let stacked =
+                    run_sw_group(sw, &pc2, table.as_deref(), batch, group);
+                scatter_group(batch, group, &stacked, &mut results);
+            }
+            (results.into_iter().map(|r| r.expect("group cover")).collect(),
+             groups.len() as u64)
+        }
+        Device::Systolic(sa) => {
+            let out = batch.iter().map(|job| {
+                let mut pc = sa.cfg;
+                pc.k = job.k;
+                if pc.k != sa.cfg.k {
+                    **sa = Systolic::square(pc, cfg.sa_size);
+                }
+                sa.gemm(&job.a_panel, &job.b_panel, job.th, job.kk, job.tw)
+            }).collect();
+            (out, batch.len() as u64)
+        }
+        Device::Pjrt { rt, exe } => {
+            (execute_batch_pjrt(rt, exe, batch), batch.len() as u64)
+        }
     }
 }
 

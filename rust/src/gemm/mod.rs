@@ -1,0 +1,719 @@
+//! Cache-blocked GEMM driver — the shared throughput layer.
+//!
+//! Every software backend (`word`, `lut`, and through them the
+//! coordinator's worker devices) routes its matrix products through
+//! [`BlockedGemm`]: a classic MC×KC×NC packed-panel driver in the BLIS
+//! mold, specialized to the PE's fused-MAC semantics. Three microkernels
+//! cover the design space:
+//!
+//! * **exact** (`k == 0`): the carry-save state is unobservable, so the
+//!   kernel is plain wrapping-i64 MACs on decoded operands (same bits as
+//!   the word model's exact fast path, tested there);
+//! * **lut** (`k > 0`, LUT-compilable point): two table reads + two adds
+//!   per MAC against the process-shared [`ProductLut`] tables;
+//! * **word** (`k > 0`, non-compilable point): the bit-plane walk via
+//!   [`mac_step_planned`].
+//!
+//! ## Why blocking helps, and why it cannot change the bits
+//!
+//! The driver encodes A once per call (natural row stride), copy-packs
+//! each NC×KC transposed panel of B into contiguous scratch (L1/L2
+//! resident at the default sizes), and walks a 4-wide register
+//! microkernel over MC×NC output blocks: four output
+//! columns advance together, which turns the serially-dependent
+//! per-element automaton/carry-save chain into four independent
+//! dependency chains the CPU can overlap. That is where the speedup over
+//! the naive one-chain-at-a-time loop comes from (see `benches/hotpath.rs`,
+//! `blocked_vs_naive`).
+//!
+//! Bit-identity is structural: tiling and packing only *reorder
+//! independent output elements*. Each output element `C[i][j]` still
+//! folds its operand pairs `t = 0, 1, …, K-1` into its own accumulator
+//! in exactly the order the word model uses — the per-element carry-save
+//! (or automaton) state is carried across KC panels, never reset or
+//! split. The K loop is therefore never reassociated, and
+//! `blocked == naive == word` for every design point (fuzzed over ragged
+//! shapes in `tests/prop_equiv.rs`).
+//!
+//! Packing scratch lives inside the [`BlockedGemm`] value and is reused
+//! across calls, so a long-lived engine (one per coordinator worker, or
+//! the thread-local one behind [`matmul`]) performs no per-request
+//! packing allocation.
+//!
+//! ```
+//! use axsys::gemm::{BlockSizes, BlockedGemm};
+//! use axsys::pe::word::{matmul as word_matmul, PeConfig};
+//! use axsys::Family;
+//!
+//! let cfg = PeConfig::new(8, true, Family::Proposed, 4);
+//! let a: Vec<i64> = (0..7 * 9).map(|i| (i % 19) - 9).collect();
+//! let b: Vec<i64> = (0..9 * 5).map(|i| (i % 23) - 11).collect();
+//! // deliberately ragged block sizes: raggedness cannot change the bits
+//! let mut eng = BlockedGemm::new(BlockSizes { mc: 2, kc: 3, nc: 2 });
+//! let blocked = eng.matmul(&cfg, &a, &b, 7, 9, 5);
+//! assert_eq!(blocked, word_matmul(&cfg, &a, &b, 7, 9, 5));
+//! ```
+
+use std::cell::RefCell;
+
+use crate::pe::lut::{self, ProductLut};
+use crate::pe::word::{mac_step_planned, MacPlan, PeConfig};
+
+/// Cache-blocking parameters of the driver: C is computed in MC×NC
+/// blocks, each fed by KC-deep packed operand panels.
+///
+/// At the defaults the packed B panel (NC×KC) is 32 KiB as u16
+/// encodings — L1/L2-resident while the microkernel sweeps it (A
+/// streams from a once-per-call encoded copy at its natural stride).
+/// Any sizes ≥ 1 are legal (zeros are clamped); results are
+/// bit-identical for every choice, only speed changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSizes {
+    /// Output rows per block (packed-A panel height).
+    pub mc: usize,
+    /// Inner-dimension depth per packed panel.
+    pub kc: usize,
+    /// Output columns per block (packed-B panel height).
+    pub nc: usize,
+}
+
+impl Default for BlockSizes {
+    fn default() -> Self {
+        BlockSizes { mc: 64, kc: 256, nc: 64 }
+    }
+}
+
+/// Reusable packing + per-block state buffers (grow-only, never freed
+/// between calls — the "no per-request allocation" contract).
+#[derive(Default)]
+struct Scratch {
+    /// Packed A panel, u16 operand encodings (lut kernel).
+    a16: Vec<u16>,
+    /// Packed transposed B panel, u16 encodings (lut kernel).
+    b16: Vec<u16>,
+    /// Packed A panel, u64 encodings (word kernel).
+    a64: Vec<u64>,
+    /// Packed transposed B panel, u64 encodings (word kernel).
+    b64: Vec<u64>,
+    /// Packed A panel, decoded i64 operands (exact kernel).
+    ai: Vec<i64>,
+    /// Packed transposed B panel, decoded i64 operands (exact kernel).
+    bi: Vec<i64>,
+    /// Per-element accumulators of the current block (exact + lut).
+    acc: Vec<i64>,
+    /// Per-element automaton states of the current block (lut).
+    st: Vec<u16>,
+    /// Per-element sum rail of the current block (word).
+    s_rail: Vec<u64>,
+    /// Per-element carry rail of the current block (word).
+    k_rail: Vec<u64>,
+}
+
+/// Dimensions of one (block, panel) microkernel invocation. The A
+/// operand is encoded once per call as full rows (stride `a_stride`
+/// = kk); `a_base` points at the current block's `(icb, pcb)` corner.
+/// The B panel is copy-packed per block (`nw` rows of `kw`).
+struct BlockShape {
+    mh: usize,
+    nw: usize,
+    kw: usize,
+    a_stride: usize,
+    a_base: usize,
+}
+
+/// Problem operands shared across the block loops.
+struct Operands<'a> {
+    a: &'a [i64],
+    b: &'a [i64],
+    kk: usize,
+    nn: usize,
+}
+
+/// Resolved per-call engine (carries everything the kernels need).
+enum Eng<'a> {
+    /// `k == 0`: wrapping integer MACs on decoded operands.
+    Exact(PeConfig),
+    /// `k > 0`, LUT-compilable: product table + window automaton.
+    Lut(&'a ProductLut),
+    /// `k > 0`, word fallback: bit-plane walk per MAC.
+    Word(MacPlan),
+}
+
+/// The shared cache-blocked GEMM driver. Owns its packing scratch, so
+/// keep one per worker/thread and reuse it across calls.
+pub struct BlockedGemm {
+    /// Blocking parameters (change freely between calls; the scratch
+    /// resizes lazily).
+    pub blocks: BlockSizes,
+    /// Whether large problems may fan out across scoped threads.
+    parallel: bool,
+    scratch: Scratch,
+}
+
+impl Default for BlockedGemm {
+    fn default() -> Self {
+        Self::new(BlockSizes::default())
+    }
+}
+
+impl BlockedGemm {
+    /// A driver with the given blocking parameters and empty scratch.
+    /// Large problems are split across threads; callers that already
+    /// run inside a worker pool should use [`Self::single_threaded`].
+    pub fn new(blocks: BlockSizes) -> Self {
+        BlockedGemm { blocks, parallel: true, scratch: Scratch::default() }
+    }
+
+    /// A driver that never spawns threads: every call runs sequentially
+    /// on the caller's thread with the engine's own reusable scratch
+    /// (zero per-call allocation beyond the output). This is what each
+    /// coordinator worker owns — stacked coalesced GEMMs can be large,
+    /// and nested fan-out from an already-parallel pool would
+    /// oversubscribe the host.
+    pub fn single_threaded(blocks: BlockSizes) -> Self {
+        BlockedGemm { blocks, parallel: false, scratch: Scratch::default() }
+    }
+
+    /// Blocked GEMM `C(m×nn) = A(m×kk) @ B(kk×nn)` for a design point,
+    /// choosing the fastest bit-identical engine: the exact kernel at
+    /// `k = 0`, the shared product-LUT tables when the point compiles
+    /// (via [`lut::cached`]), the word kernel otherwise.
+    pub fn matmul(&mut self, cfg: &PeConfig, a: &[i64], b: &[i64], m: usize,
+                  kk: usize, nn: usize) -> Vec<i64> {
+        if cfg.k > 0 {
+            if let Some(l) = lut::cached(cfg) {
+                return self.matmul_lut(&l, a, b, m, kk, nn);
+            }
+        }
+        self.matmul_word(cfg, a, b, m, kk, nn)
+    }
+
+    /// Blocked GEMM on a pre-fetched product-LUT table (the coordinator
+    /// workers memoize the `Arc` per request-`k` and call this directly,
+    /// skipping the global cache lock). Falls through to the exact
+    /// kernel when the table's design point is exact.
+    pub fn matmul_lut(&mut self, lut: &ProductLut, a: &[i64], b: &[i64],
+                      m: usize, kk: usize, nn: usize) -> Vec<i64> {
+        let eng = if lut.cfg.k == 0 {
+            Eng::Exact(lut.cfg)
+        } else {
+            Eng::Lut(lut)
+        };
+        self.run(&eng, a, b, m, kk, nn)
+    }
+
+    /// Blocked GEMM that never consults the LUT cache: exact kernel at
+    /// `k = 0`, bit-plane word kernel otherwise. The blocked equivalent
+    /// of [`crate::pe::word::matmul`], bit-identical to it.
+    pub fn matmul_word(&mut self, cfg: &PeConfig, a: &[i64], b: &[i64],
+                       m: usize, kk: usize, nn: usize) -> Vec<i64> {
+        let eng = if cfg.k == 0 {
+            Eng::Exact(*cfg)
+        } else {
+            Eng::Word(MacPlan::new(cfg))
+        };
+        self.run(&eng, a, b, m, kk, nn)
+    }
+
+    fn run(&mut self, eng: &Eng, a: &[i64], b: &[i64], m: usize, kk: usize,
+           nn: usize) -> Vec<i64> {
+        assert_eq!(a.len(), m * kk, "A shape");
+        assert_eq!(b.len(), kk * nn, "B shape");
+        let mut out = vec![0i64; m * nn];
+        if m == 0 || nn == 0 {
+            return out;
+        }
+        let op = Operands { a, b, kk, nn };
+        // parallelize across output-row chunks for large problems, same
+        // policy as the naive engines — unless this engine was built
+        // with `single_threaded` (coordinator workers: their pool is
+        // the parallelism, and the sequential path is the zero-alloc one)
+        let work = m * nn * kk;
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get()).unwrap_or(1).min(8);
+        if self.parallel && work >= 1 << 18 && threads > 1 && m >= 2 * threads {
+            let bs = self.blocks;
+            let chunk = m.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (ci, rows) in out.chunks_mut(chunk * nn).enumerate() {
+                    let op = &op;
+                    scope.spawn(move || {
+                        let mut local = Scratch::default();
+                        drive_rows(eng, &bs, &mut local, op, ci * chunk, rows);
+                    });
+                }
+            });
+        } else {
+            drive_rows(eng, &self.blocks, &mut self.scratch, &op, 0, &mut out);
+        }
+        out
+    }
+}
+
+/// Compute output rows `i0 .. i0 + out_rows.len()/nn` of C into
+/// `out_rows` with the full MC×KC×NC block structure. Per-element state
+/// (accumulator + automaton state, or the two carry-save rails) is
+/// carried across KC panels in increasing-`t` order, which is what keeps
+/// every output element's MAC chain identical to the unblocked walk.
+fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
+              i0: usize, out_rows: &mut [i64]) {
+    let nn = op.nn;
+    let kk = op.kk;
+    let h = out_rows.len() / nn;
+    let mc = bs.mc.max(1);
+    let kc = bs.kc.max(1);
+    let nc = bs.nc.max(1);
+    // A is encoded ONCE for the whole call (rows i0..i0+h, natural kk
+    // stride) — blocks then slice into it, so no element is re-encoded
+    // per column stripe. B panels are copy-packed per block below.
+    match eng {
+        Eng::Exact(cfg) => {
+            sc.ai.resize(h * kk, 0);
+            for i in 0..h {
+                let src = &op.a[(i0 + i) * kk..(i0 + i + 1) * kk];
+                let dst = &mut sc.ai[i * kk..(i + 1) * kk];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = cfg.decode_operand(v as u64);
+                }
+            }
+            sc.bi.resize(nc * kc, 0);
+            sc.acc.resize(mc * nc, 0);
+        }
+        Eng::Lut(l) => {
+            sc.a16.resize(h * kk, 0);
+            for i in 0..h {
+                let src = &op.a[(i0 + i) * kk..(i0 + i + 1) * kk];
+                let dst = &mut sc.a16[i * kk..(i + 1) * kk];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = l.cfg.encode(v) as u16;
+                }
+            }
+            sc.b16.resize(nc * kc, 0);
+            sc.acc.resize(mc * nc, 0);
+            sc.st.resize(mc * nc, 0);
+        }
+        Eng::Word(plan) => {
+            sc.a64.resize(h * kk, 0);
+            for i in 0..h {
+                let src = &op.a[(i0 + i) * kk..(i0 + i + 1) * kk];
+                let dst = &mut sc.a64[i * kk..(i + 1) * kk];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = plan.cfg.encode(v);
+                }
+            }
+            sc.s_rail.resize(mc * nc, 0);
+            sc.k_rail.resize(mc * nc, 0);
+            sc.b64.resize(nc * kc, 0);
+        }
+    }
+    let mut icb = 0;
+    while icb < h {
+        let mh = (h - icb).min(mc);
+        let mut jcb = 0;
+        while jcb < nn {
+            let nw = (nn - jcb).min(nc);
+            match eng {
+                Eng::Exact(_) => sc.acc[..mh * nw].fill(0),
+                Eng::Lut(_) => {
+                    sc.acc[..mh * nw].fill(0);
+                    sc.st[..mh * nw].fill(0);
+                }
+                Eng::Word(_) => {
+                    sc.s_rail[..mh * nw].fill(0);
+                    sc.k_rail[..mh * nw].fill(0);
+                }
+            }
+            // KC panels in increasing t order: the per-element state
+            // survives from one panel to the next
+            let mut pcb = 0;
+            while pcb < kk {
+                let kw = (kk - pcb).min(kc);
+                let sh = BlockShape { mh, nw, kw, a_stride: kk,
+                                      a_base: icb * kk + pcb };
+                let bt = (pcb, jcb);
+                match eng {
+                    Eng::Exact(cfg) => {
+                        pack_b_exact(cfg, sc, op, bt, &sh);
+                        kernel_exact(&sh, &sc.ai, &sc.bi, &mut sc.acc);
+                    }
+                    Eng::Lut(l) => {
+                        pack_b_enc16(&l.cfg, sc, op, bt, &sh);
+                        kernel_lut(l, &sh, &sc.a16, &sc.b16, &mut sc.acc,
+                                   &mut sc.st);
+                    }
+                    Eng::Word(plan) => {
+                        pack_b_enc64(&plan.cfg, sc, op, bt, &sh);
+                        kernel_word(plan, &sh, &sc.a64, &sc.b64,
+                                    &mut sc.s_rail, &mut sc.k_rail);
+                    }
+                }
+                pcb += kw;
+            }
+            // resolve + write back the finished block
+            for i in 0..mh {
+                let dst = &mut out_rows[(icb + i) * nn + jcb
+                                        ..(icb + i) * nn + jcb + nw];
+                match eng {
+                    Eng::Exact(cfg) => {
+                        for (j, o) in dst.iter_mut().enumerate() {
+                            *o = cfg.decode(sc.acc[i * nw + j] as u64);
+                        }
+                    }
+                    Eng::Lut(l) => {
+                        for (j, o) in dst.iter_mut().enumerate() {
+                            *o = l.cfg.decode(sc.acc[i * nw + j] as u64);
+                        }
+                    }
+                    Eng::Word(plan) => {
+                        for (j, o) in dst.iter_mut().enumerate() {
+                            *o = plan.resolve(sc.s_rail[i * nw + j],
+                                              sc.k_rail[i * nw + j]);
+                        }
+                    }
+                }
+            }
+            jcb += nw;
+        }
+        icb += mh;
+    }
+}
+
+/// Copy-pack the B(pc0.., col0..) panel transposed as decoded i64
+/// operands (nw×kw, unit-stride inner dimension).
+fn pack_b_exact(cfg: &PeConfig, sc: &mut Scratch, op: &Operands,
+                bt: (usize, usize), sh: &BlockShape) {
+    let (bpc, col0) = bt;
+    for t in 0..sh.kw {
+        let src = &op.b[(bpc + t) * op.nn + col0..][..sh.nw];
+        for (j, &v) in src.iter().enumerate() {
+            sc.bi[j * sh.kw + t] = cfg.decode_operand(v as u64);
+        }
+    }
+}
+
+/// u16-encoding flavor of [`pack_b_exact`] (lut kernel).
+fn pack_b_enc16(cfg: &PeConfig, sc: &mut Scratch, op: &Operands,
+                bt: (usize, usize), sh: &BlockShape) {
+    let (bpc, col0) = bt;
+    for t in 0..sh.kw {
+        let src = &op.b[(bpc + t) * op.nn + col0..][..sh.nw];
+        for (j, &v) in src.iter().enumerate() {
+            sc.b16[j * sh.kw + t] = cfg.encode(v) as u16;
+        }
+    }
+}
+
+/// u64-encoding flavor of [`pack_b_exact`] (word kernel).
+fn pack_b_enc64(cfg: &PeConfig, sc: &mut Scratch, op: &Operands,
+                bt: (usize, usize), sh: &BlockShape) {
+    let (bpc, col0) = bt;
+    for t in 0..sh.kw {
+        let src = &op.b[(bpc + t) * op.nn + col0..][..sh.nw];
+        for (j, &v) in src.iter().enumerate() {
+            sc.b64[j * sh.kw + t] = cfg.encode(v);
+        }
+    }
+}
+
+/// Exact microkernel: 4 output columns per sweep, wrapping i64 MACs.
+fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64]) {
+    let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
+    for i in 0..mh {
+        let arow = &ai[sh.a_base + i * sh.a_stride..][..kw];
+        let racc = &mut acc[i * nw..(i + 1) * nw];
+        let mut j = 0;
+        while j + 4 <= nw {
+            let b0 = &bi[j * kw..(j + 1) * kw];
+            let b1 = &bi[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &bi[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &bi[(j + 3) * kw..(j + 4) * kw];
+            let (mut c0, mut c1, mut c2, mut c3) =
+                (racc[j], racc[j + 1], racc[j + 2], racc[j + 3]);
+            for t in 0..kw {
+                let av = arow[t];
+                c0 = c0.wrapping_add(av.wrapping_mul(b0[t]));
+                c1 = c1.wrapping_add(av.wrapping_mul(b1[t]));
+                c2 = c2.wrapping_add(av.wrapping_mul(b2[t]));
+                c3 = c3.wrapping_add(av.wrapping_mul(b3[t]));
+            }
+            racc[j] = c0;
+            racc[j + 1] = c1;
+            racc[j + 2] = c2;
+            racc[j + 3] = c3;
+            j += 4;
+        }
+        while j < nw {
+            let bj = &bi[j * kw..(j + 1) * kw];
+            let mut c = racc[j];
+            for t in 0..kw {
+                c = c.wrapping_add(arow[t].wrapping_mul(bj[t]));
+            }
+            racc[j] = c;
+            j += 1;
+        }
+    }
+}
+
+/// Table-driven microkernel: 4 output columns advance together, so four
+/// independent (accumulator, automaton-state) chains are in flight — the
+/// ILP the naive per-element loop cannot expose.
+fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
+              acc: &mut [i64], st: &mut [u16]) {
+    let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
+    let n = lut.cfg.n;
+    let kb = lut.window_bits() as usize;
+    let kmask = (1usize << kb) - 1;
+    for i in 0..mh {
+        let arow = &a16[sh.a_base + i * sh.a_stride..][..kw];
+        let racc = &mut acc[i * nw..(i + 1) * nw];
+        let rst = &mut st[i * nw..(i + 1) * nw];
+        let mut j = 0;
+        while j + 4 <= nw {
+            let b0 = &b16[j * kw..(j + 1) * kw];
+            let b1 = &b16[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &b16[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &b16[(j + 3) * kw..(j + 4) * kw];
+            let (mut c0, mut c1, mut c2, mut c3) =
+                (racc[j], racc[j + 1], racc[j + 2], racc[j + 3]);
+            let (mut s0, mut s1, mut s2, mut s3) =
+                (rst[j] as usize, rst[j + 1] as usize,
+                 rst[j + 2] as usize, rst[j + 3] as usize);
+            for t in 0..kw {
+                let ai = arow[t] as usize;
+                let ahi = ai << n;
+                let alo = (ai & kmask) << kb;
+                let bi = b0[t] as usize;
+                c0 += lut.prod_entry(ahi | bi);
+                let e = lut.trans_entry(s0, alo | (bi & kmask));
+                c0 += (e >> 16) as i16 as i64;
+                s0 = (e & 0xFFFF) as usize;
+                let bi = b1[t] as usize;
+                c1 += lut.prod_entry(ahi | bi);
+                let e = lut.trans_entry(s1, alo | (bi & kmask));
+                c1 += (e >> 16) as i16 as i64;
+                s1 = (e & 0xFFFF) as usize;
+                let bi = b2[t] as usize;
+                c2 += lut.prod_entry(ahi | bi);
+                let e = lut.trans_entry(s2, alo | (bi & kmask));
+                c2 += (e >> 16) as i16 as i64;
+                s2 = (e & 0xFFFF) as usize;
+                let bi = b3[t] as usize;
+                c3 += lut.prod_entry(ahi | bi);
+                let e = lut.trans_entry(s3, alo | (bi & kmask));
+                c3 += (e >> 16) as i16 as i64;
+                s3 = (e & 0xFFFF) as usize;
+            }
+            racc[j] = c0;
+            racc[j + 1] = c1;
+            racc[j + 2] = c2;
+            racc[j + 3] = c3;
+            rst[j] = s0 as u16;
+            rst[j + 1] = s1 as u16;
+            rst[j + 2] = s2 as u16;
+            rst[j + 3] = s3 as u16;
+            j += 4;
+        }
+        while j < nw {
+            let bj = &b16[j * kw..(j + 1) * kw];
+            let mut c = racc[j];
+            let mut s = rst[j] as usize;
+            for t in 0..kw {
+                let ai = arow[t] as usize;
+                let bi = bj[t] as usize;
+                c += lut.prod_entry((ai << n) | bi);
+                let e = lut.trans_entry(s, ((ai & kmask) << kb) | (bi & kmask));
+                c += (e >> 16) as i16 as i64;
+                s = (e & 0xFFFF) as usize;
+            }
+            racc[j] = c;
+            rst[j] = s as u16;
+            j += 1;
+        }
+    }
+}
+
+/// Word microkernel: 4 carry-save (s, k) chains per sweep through
+/// [`mac_step_planned`].
+fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
+               s_rail: &mut [u64], k_rail: &mut [u64]) {
+    let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
+    for i in 0..mh {
+        let arow = &a64[sh.a_base + i * sh.a_stride..][..kw];
+        let rs = &mut s_rail[i * nw..(i + 1) * nw];
+        let rk = &mut k_rail[i * nw..(i + 1) * nw];
+        let mut j = 0;
+        while j + 4 <= nw {
+            let b0 = &b64[j * kw..(j + 1) * kw];
+            let b1 = &b64[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &b64[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &b64[(j + 3) * kw..(j + 4) * kw];
+            let (mut s0, mut s1, mut s2, mut s3) =
+                (rs[j], rs[j + 1], rs[j + 2], rs[j + 3]);
+            let (mut k0, mut k1, mut k2, mut k3) =
+                (rk[j], rk[j + 1], rk[j + 2], rk[j + 3]);
+            for t in 0..kw {
+                let av = arow[t];
+                (s0, k0) = mac_step_planned(plan, av, b0[t], s0, k0);
+                (s1, k1) = mac_step_planned(plan, av, b1[t], s1, k1);
+                (s2, k2) = mac_step_planned(plan, av, b2[t], s2, k2);
+                (s3, k3) = mac_step_planned(plan, av, b3[t], s3, k3);
+            }
+            rs[j] = s0;
+            rs[j + 1] = s1;
+            rs[j + 2] = s2;
+            rs[j + 3] = s3;
+            rk[j] = k0;
+            rk[j + 1] = k1;
+            rk[j + 2] = k2;
+            rk[j + 3] = k3;
+            j += 4;
+        }
+        while j < nw {
+            let bj = &b64[j * kw..(j + 1) * kw];
+            let (mut s, mut k) = (rs[j], rk[j]);
+            for t in 0..kw {
+                (s, k) = mac_step_planned(plan, arow[t], bj[t], s, k);
+            }
+            rs[j] = s;
+            rk[j] = k;
+            j += 1;
+        }
+    }
+}
+
+thread_local! {
+    static ENGINE: RefCell<BlockedGemm> = RefCell::new(BlockedGemm::default());
+}
+
+/// Blocked GEMM through a thread-local [`BlockedGemm`] (default block
+/// sizes, scratch reused per thread). The drop-in replacement for
+/// [`crate::pe::word::matmul`] / [`crate::pe::lut::matmul`] on the hot
+/// path — bit-identical to both.
+pub fn matmul(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
+              nn: usize) -> Vec<i64> {
+    ENGINE.with(|e| e.borrow_mut().matmul(cfg, a, b, m, kk, nn))
+}
+
+/// Word-only flavor of [`matmul`]: blocked driver, but never consults
+/// the LUT cache (exact kernel at `k = 0`, bit-plane kernel otherwise).
+/// Use when auditing the normative word semantics at blocked speed.
+pub fn matmul_word(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
+                   nn: usize) -> Vec<i64> {
+    ENGINE.with(|e| e.borrow_mut().matmul_word(cfg, a, b, m, kk, nn))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::xorshift_ints as ints;
+    use crate::pe::word::matmul as word_matmul;
+    use crate::Family;
+
+    #[test]
+    fn blocked_matches_word_all_families_and_ks() {
+        let (m, kk, nn) = (11usize, 19usize, 13usize);
+        let a = ints(1, m * kk);
+        let b = ints(2, kk * nn);
+        let mut eng = BlockedGemm::default();
+        for family in Family::ALL {
+            for signed in [true, false] {
+                for k in [0u32, 2, 4, 7] {
+                    let cfg = PeConfig::new(8, signed, family, k);
+                    let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+                    assert_eq!(eng.matmul(&cfg, &a, &b, m, kk, nn), want,
+                               "lut engine: {family:?} signed={signed} k={k}");
+                    assert_eq!(eng.matmul_word(&cfg, &a, &b, m, kk, nn), want,
+                               "word engine: {family:?} signed={signed} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_block_sizes_do_not_change_bits() {
+        // shapes never multiples of the block sizes, state carried
+        // across many KC panels
+        let (m, kk, nn) = (17usize, 29usize, 11usize);
+        let a = ints(3, m * kk);
+        let b = ints(4, kk * nn);
+        let cfg = PeConfig::new(8, true, Family::Proposed, 5);
+        let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+        for bs in [BlockSizes { mc: 1, kc: 1, nc: 1 },
+                   BlockSizes { mc: 2, kc: 3, nc: 5 },
+                   BlockSizes { mc: 5, kc: 7, nc: 3 },
+                   BlockSizes { mc: 64, kc: 256, nc: 64 }] {
+            let mut eng = BlockedGemm::new(bs);
+            assert_eq!(eng.matmul(&cfg, &a, &b, m, kk, nn), want, "{bs:?}");
+            assert_eq!(eng.matmul_word(&cfg, &a, &b, m, kk, nn), want,
+                       "{bs:?} word");
+        }
+    }
+
+    #[test]
+    fn wide_operands_fall_back_to_the_word_kernel() {
+        // n = 16 has no product table; matmul must route to the word
+        // kernel and stay bit-identical
+        let cfg = PeConfig::new(16, true, Family::Proposed, 3);
+        let a = ints(5, 6 * 9);
+        let b = ints(6, 9 * 4);
+        let mut eng = BlockedGemm::default();
+        assert_eq!(eng.matmul(&cfg, &a, &b, 6, 9, 4),
+                   word_matmul(&cfg, &a, &b, 6, 9, 4));
+    }
+
+    #[test]
+    fn scratch_reuse_across_heterogeneous_calls() {
+        // one engine serving mixed shapes and design points (the
+        // coordinator-worker pattern) must stay correct call after call
+        let mut eng = BlockedGemm::default();
+        for (i, &(m, kk, nn, k)) in [(8usize, 8usize, 8usize, 0u32),
+                                     (3, 40, 2, 6), (13, 5, 17, 2),
+                                     (1, 1, 1, 7), (8, 24, 8, 4)]
+            .iter().enumerate() {
+            let cfg = PeConfig::new(8, true, Family::Sips12, k);
+            let a = ints(10 + i as u64, m * kk);
+            let b = ints(20 + i as u64, kk * nn);
+            assert_eq!(eng.matmul(&cfg, &a, &b, m, kk, nn),
+                       word_matmul(&cfg, &a, &b, m, kk, nn),
+                       "call {i}: ({m},{kk},{nn}) k={k}");
+        }
+    }
+
+    #[test]
+    fn parallel_row_split_is_bit_identical() {
+        // large-problem path (threaded row chunks, per-thread scratch)
+        let (m, kk, nn) = (64usize, 64usize, 64usize);
+        let a = ints(7, m * kk);
+        let b = ints(8, kk * nn);
+        let cfg = PeConfig::new(8, true, Family::Proposed, 4);
+        let mut eng = BlockedGemm::default();
+        assert_eq!(eng.matmul(&cfg, &a, &b, m, kk, nn),
+                   word_matmul(&cfg, &a, &b, m, kk, nn));
+    }
+
+    #[test]
+    fn single_threaded_engine_matches_parallel() {
+        // a problem big enough to trip the parallel engine's fan-out:
+        // the sequential (coordinator-worker) engine must produce the
+        // same bits without spawning
+        let (m, kk, nn) = (64usize, 64usize, 64usize);
+        let a = ints(13, m * kk);
+        let b = ints(14, kk * nn);
+        let cfg = PeConfig::new(8, true, Family::Proposed, 4);
+        let mut par = BlockedGemm::default();
+        let mut seq = BlockedGemm::single_threaded(BlockSizes::default());
+        assert_eq!(seq.matmul(&cfg, &a, &b, m, kk, nn),
+                   par.matmul(&cfg, &a, &b, m, kk, nn));
+        assert_eq!(seq.matmul_word(&cfg, &a, &b, m, kk, nn),
+                   par.matmul_word(&cfg, &a, &b, m, kk, nn));
+    }
+
+    #[test]
+    fn thread_local_convenience_matches() {
+        let cfg = PeConfig::new(8, true, Family::Nano6, 3);
+        let a = ints(9, 10 * 7);
+        let b = ints(10, 7 * 9);
+        assert_eq!(matmul(&cfg, &a, &b, 10, 7, 9),
+                   word_matmul(&cfg, &a, &b, 10, 7, 9));
+    }
+}

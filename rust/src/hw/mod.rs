@@ -19,8 +19,11 @@ use crate::Family;
 /// Area / power / delay / energy summary of one hardware unit.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HwMetrics {
+    /// Cell area, µm².
     pub area_um2: f64,
+    /// Total (dynamic + leakage) power at random activity, µW.
     pub power_uw: f64,
+    /// Critical-path delay, ns.
     pub delay_ns: f64,
     /// Power-delay product in femtojoules.
     pub pdp_fj: f64,
@@ -56,8 +59,11 @@ fn netlist_metrics(nl: &Netlist, period_ns: f64, seed: u64) -> HwMetrics {
 
 /// One Table II row: (label, PPC metrics, NPPC metrics).
 pub struct Table2Row {
+    /// Paper row label.
     pub label: &'static str,
+    /// AND-product cell metrics.
     pub ppc: HwMetrics,
+    /// NAND-product (sign-position) cell metrics.
     pub nppc: HwMetrics,
 }
 
@@ -65,6 +71,7 @@ pub struct Table2Row {
 /// we use the paper's cell-level order of magnitude (1 GHz toggling).
 const CELL_PERIOD_NS: f64 = 1.0;
 
+/// Area/power/delay of one cell's netlist (Table II granularity).
 pub fn cell_metrics(kind: CellKind) -> HwMetrics {
     netlist_metrics(&cell_netlist(kind), CELL_PERIOD_NS, 17)
 }
@@ -139,9 +146,13 @@ pub fn conventional_mac_metrics(n: u32, hybrid: bool) -> HwMetrics {
 
 /// One Table III row.
 pub struct Table3Row {
+    /// Paper row label.
     pub label: String,
+    /// Operand width in bits.
     pub n: u32,
+    /// Unsigned-grid metrics (absent where the paper omits the column).
     pub unsigned: Option<HwMetrics>,
+    /// Signed (Baugh-Wooley) metrics.
     pub signed: Option<HwMetrics>,
 }
 
@@ -219,11 +230,15 @@ pub fn sa_metrics(d: &Design, size: usize) -> HwMetrics {
 
 /// One Table IV row: metrics across the four array sizes.
 pub struct Table4Row {
+    /// Paper row label.
     pub label: String,
+    /// Operand width in bits.
     pub n: u32,
+    /// `(array size, metrics)` across [`TABLE4_SIZES`].
     pub sizes: [(usize, HwMetrics); 4],
 }
 
+/// Array sizes the paper's Table IV evaluates.
 pub const TABLE4_SIZES: [usize; 4] = [3, 4, 8, 16];
 
 fn table4_row(label: &str, d: &Design) -> Table4Row {
@@ -234,7 +249,8 @@ fn table4_row(label: &str, d: &Design) -> Table4Row {
     }
 }
 
-/// Regenerate Table IV (signed PEs, exact + approx at k = N-1, both widths).
+/// Regenerate Table IV (signed PEs, exact + approx at `k = N-1`, both
+/// widths).
 pub fn table4() -> Vec<Table4Row> {
     let mut rows = Vec::new();
     for n in [4u32, 8] {
@@ -266,12 +282,17 @@ pub fn table4() -> Vec<Table4Row> {
 /// Fig. 8: proposed-vs-\[6\]-exact area/PDP savings (%) per array size,
 /// plus proposed-approx-vs-\[5\] PDP improvement.
 pub struct Fig8Point {
+    /// Array size (NxN).
     pub size: usize,
+    /// Proposed-exact area saving over \[6\], percent.
     pub area_saving_pct: f64,
+    /// Proposed-exact PDP saving over \[6\], percent.
     pub pdp_saving_pct: f64,
+    /// Proposed-approx PDP saving over the best baseline \[5\], percent.
     pub approx_pdp_vs_best_pct: f64,
 }
 
+/// Compute the Fig. 8 saving series for operand width `n`.
 pub fn fig8(n: u32) -> Vec<Fig8Point> {
     let exact6 = Design {
         n, signed: Signedness::Signed, family: Family::Proposed, k: 0,
@@ -296,11 +317,15 @@ pub fn fig8(n: u32) -> Vec<Fig8Point> {
 
 /// Fig. 9: (PDP, NMED) per design, signed 8-bit, k = N-1.
 pub struct Fig9Point {
+    /// Paper design label.
     pub label: &'static str,
+    /// Power-delay product, fJ.
     pub pdp_fj: f64,
+    /// Normalized mean error distance.
     pub nmed: f64,
 }
 
+/// Compute the Fig. 9 accuracy-vs-energy scatter.
 pub fn fig9() -> Vec<Fig9Point> {
     Family::ALL.iter().map(|&f| {
         let d = Design::approximate_default(8, Signedness::Signed, f);
@@ -312,11 +337,15 @@ pub fn fig9() -> Vec<Fig9Point> {
 
 /// Fig. 10: PDP and MRED vs approximation factor k (signed 8-bit).
 pub struct Fig10Point {
+    /// Approximation level.
     pub k: u32,
+    /// Power-delay product, fJ.
     pub pdp_fj: f64,
+    /// Mean relative error distance.
     pub mred: f64,
 }
 
+/// Compute the Fig. 10 PDP/MRED-vs-k series.
 pub fn fig10() -> Vec<Fig10Point> {
     (0..=8u32).map(|k| {
         let d = Design::approximate(8, Signedness::Signed, Family::Proposed, k);

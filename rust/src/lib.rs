@@ -13,21 +13,23 @@
 //!   GEMM tiling/batching service, and a PJRT runtime that executes the
 //!   AOT artifacts. Python never runs on the request path.
 //!
-//! Module map (see DESIGN.md for the experiment index):
+//! Module map (layer diagram and request data-flow: `ARCHITECTURE.md`
+//! at the repository root; experiment index: DESIGN.md):
 //!
 //! | module        | role |
 //! |---------------|------|
 //! | [`cells`]     | PPC/NPPC truth-table cells, exact + approximate + baselines |
 //! | [`netlist`]   | gate-level netlists: evaluation, STA, toggle power |
 //! | [`tech`]      | 90 nm-class standard-cell library + calibration |
-//! | [`pe`]        | PE functional models ([`pe::word`] bit-plane walk, [`pe::lut`] product-LUT fast path) + PE netlist builders |
+//! | [`pe`]        | PE functional models ([`pe::word`] bit-plane walk, [`pe::lut`] product-LUT tables) + PE netlist builders |
+//! | [`gemm`]      | cache-blocked (MC×KC×NC, packed-panel) GEMM driver all software backends route through |
 //! | [`systolic`]  | cycle-accurate output-stationary systolic array |
 //! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |
 //! | [`hw`]        | metric composition cell→PE→SA (Tables II-IV, Fig 8) |
 //! | [`apps`]      | DCT / edge / BDCN pipelines (+ [`apps::im2col`] conv→GEMM lowering, [`apps::CoordinatorGemm`] serving adapter) + image I/O + PSNR/SSIM |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
-//! | [`coordinator`]| GEMM request router: tiler, batcher, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
-//! | [`bench`]     | tiny criterion-free measurement harness |
+//! | [`coordinator`]| GEMM request router: tiler, batched+coalesced dispatch, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
+//! | [`bench`]     | tiny criterion-free measurement harness + the `bench-report` JSON emitter |
 //!
 //! ## Choosing a GEMM backend
 //!
@@ -36,13 +38,15 @@
 //!
 //! * [`coordinator::BackendKind::Lut`] — table-driven
 //!   ([`pe::lut`]): per-design-point product table + carry-save-window
-//!   automaton, built once and `Arc`-shared across workers. Bit-identical
+//!   automaton, built once and `Arc`-shared across workers, executed
+//!   through the cache-blocked driver in [`gemm`]. Bit-identical
 //!   to `Word` and the fastest path for serving (≥5× on large GEMMs, see
 //!   `benches/hotpath.rs` `lut_vs_word`). Use it whenever you only need
 //!   results. Design points it cannot compile (`n > 8`, `k > n`,
 //!   over-budget tables) transparently fall back to the word model.
 //! * [`coordinator::BackendKind::Word`] — the word-level bit-plane walk
-//!   ([`pe::word`]): no table build cost, works for every `n <= 16`, and
+//!   ([`pe::word`], blocked by [`gemm`]): no table build cost, works for
+//!   every `n <= 16`, and
 //!   is the normative software model the Python oracle pins. Use it for
 //!   one-off calls, wide operands, or when auditing the LUT path.
 //! * [`coordinator::BackendKind::Systolic`] — cycle-accurate array
@@ -51,6 +55,47 @@
 //! * [`coordinator::BackendKind::Pjrt`] — the AOT Pallas artifacts via
 //!   PJRT (requires the `pjrt` feature + artifacts; chunked-K deployment
 //!   mode, bit-identical only at `k = 0`).
+//!
+//! The compile-checked version of the choice (the README quickstart):
+//!
+//! ```
+//! use axsys::pe::word::{matmul as word_matmul, PeConfig};
+//! use axsys::Family;
+//!
+//! // a design point: 8-bit signed operands, the paper's proposed cells,
+//! // 4 approximate least-significant columns
+//! let cfg = PeConfig::new(8, true, Family::Proposed, 4);
+//! let a: Vec<i64> = (0..4 * 3).map(|i| (i * 37 % 255) - 127).collect();
+//! let b: Vec<i64> = (0..3 * 2).map(|i| (i * 91 % 255) - 127).collect();
+//!
+//! // normative word model vs the blocked serving driver: same bits
+//! let y_word = word_matmul(&cfg, &a, &b, 4, 3, 2);
+//! let y_blocked = axsys::gemm::matmul(&cfg, &a, &b, 4, 3, 2);
+//! assert_eq!(y_word, y_blocked);
+//! ```
+//!
+//! And the served path — submit to a worker pool on any backend and get
+//! the same bits back:
+//!
+//! ```
+//! use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
+//!                          GemmRequest};
+//!
+//! let pool = Coordinator::new(CoordinatorConfig {
+//!     workers: 2,
+//!     backend: BackendKind::Lut,
+//!     ..Default::default()
+//! });
+//! let resp = pool.call(GemmRequest {
+//!     a: vec![1; 8 * 8], b: vec![2; 8 * 8],
+//!     m: 8, kk: 8, nn: 8,
+//!     k: 0, // exact request
+//! });
+//! assert_eq!(resp.out[0], 16); // sum of 8 products of 1*2
+//! let stats = pool.stats();
+//! assert_eq!(stats.requests, 1);
+//! pool.shutdown();
+//! ```
 //!
 //! ## Coordinator-served applications
 //!
@@ -66,11 +111,14 @@
 //! `tests/golden_psnr.rs`: DCT 38.21 dB, edge 30.45 dB — the paper's
 //! headline numbers).
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod bench;
 pub mod cells;
 pub mod coordinator;
 pub mod error;
+pub mod gemm;
 pub mod hw;
 pub mod netlist;
 pub mod pe;
@@ -88,16 +136,22 @@ pub mod tech;
 /// * `Nano6`  — Chen/Lombardi, NANOARCH 2015 \[6\]: inexact cell.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum Family {
+    /// The paper's proposed approximate PPC/NPPC cells (Table I).
     Proposed,
+    /// Carry-elided compressor baseline (Waris et al., IEEE TC 2021).
     Axsa5,
+    /// XNOR-based inexact cell baseline (Waris et al., SiPS 2019).
     Sips12,
+    /// Inexact cell baseline (Chen/Lombardi, NANOARCH 2015).
     Nano6,
 }
 
 impl Family {
+    /// Every family, in the paper's comparison order.
     pub const ALL: [Family; 4] =
         [Family::Proposed, Family::Axsa5, Family::Sips12, Family::Nano6];
 
+    /// Stable lower-case name (CLI + cache keys).
     pub fn name(self) -> &'static str {
         match self {
             Family::Proposed => "proposed",
@@ -107,6 +161,7 @@ impl Family {
         }
     }
 
+    /// Inverse of [`Self::name`] (`None` for unknown names).
     pub fn parse(s: &str) -> Option<Family> {
         Self::ALL.iter().copied().find(|f| f.name() == s)
     }

@@ -1,16 +1,9 @@
 //! axsys CLI — leader entrypoint for the approximate systolic-array stack.
 //!
-//! Subcommands:
-//!   selftest            cells/PE/SA invariants + golden cross-check
-//!   hw-report           regenerate Tables II-IV + Figs 8-10 data
-//!   error-sweep         Table V error metrics (NMED/MRED)
-//!   dct [--k K]         DCT pipeline on the SA simulator (+ PJRT check)
-//!   edge [--k K]        Laplacian edge detection
-//!   cnn [--k K]         BDCN-lite CNN edge detection
-//!   serve [...]         run the GEMM coordinator on a synthetic workload
-//!                       (--app dct|edge|bdcn serves application requests)
-//!   apps-report         paper §V quality tables: every cell family x k
-//!                       through the coordinator-served pipelines
+//! The `COMMANDS` table below is the single source of truth for the
+//! subcommand/flag surface: `axsys help` renders it for the terminal,
+//! `axsys help --markdown` emits the README's CLI section verbatim, and
+//! a unit test in this file fails whenever the README copy drifts.
 
 use std::path::PathBuf;
 
@@ -36,9 +29,14 @@ fn main() {
         "serve" => serve(rest),
         "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
+        "bench-report" => bench_report(rest),
         "emit-verilog" => emit_verilog(rest),
         "help" | "--help" | "-h" => {
-            print_help();
+            if rest.iter().any(|a| a == "--markdown") {
+                print!("{}", help_markdown());
+            } else {
+                print_help();
+            }
             0
         }
         other => {
@@ -50,22 +48,87 @@ fn main() {
     std::process::exit(code);
 }
 
+/// One CLI subcommand: `(name, argument summary, description)`.
+///
+/// `{BACKENDS}` / `{APPS}` placeholders are substituted with the live
+/// parser sets ([`BackendKind::names`] / [`AppKind::names`]) at render
+/// time, so the advertised values can never drift from what parses.
+struct Cmd {
+    name: &'static str,
+    args: &'static str,
+    help: &'static str,
+}
+
+/// Single source of truth for the CLI surface (help text, README table,
+/// and the drift test at the bottom of this file).
+const COMMANDS: &[Cmd] = &[
+    Cmd { name: "selftest", args: "",
+          help: "invariants + AOT golden cross-check" },
+    Cmd { name: "hw-report", args: "",
+          help: "Tables II-IV + Figs 8-10 (hardware model)" },
+    Cmd { name: "error-sweep", args: "",
+          help: "Table V NMED/MRED sweeps" },
+    Cmd { name: "dct", args: "[--k K] [--out DIR]",
+          help: "DCT compression pipeline (coordinator-served)" },
+    Cmd { name: "edge", args: "[--k K] [--out DIR]",
+          help: "Laplacian edge detection (coordinator-served)" },
+    Cmd { name: "cnn", args: "[--k K] [--out DIR]",
+          help: "BDCN-lite CNN edge detection (coordinator-served)" },
+    Cmd { name: "serve",
+          args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
+                 [--app gemm|{APPS}] [--k K]",
+          help: "run the GEMM coordinator on synthetic or app traffic" },
+    Cmd { name: "apps-report", args: "[--backend {BACKENDS}] [--size S]",
+          help: "paper §V PSNR tables: all four cell families x k, served" },
+    Cmd { name: "lut-report", args: "",
+          help: "product-LUT table sizes per design point" },
+    Cmd { name: "bench-report",
+          args: "[--size S] [--requests R] [--workers W] [--k K] [--out PATH]",
+          help: "fixed perf suite -> BENCH_hotpath.json at the repo root" },
+    Cmd { name: "emit-verilog", args: "[--out DIR]",
+          help: "export every cell + PE design as Verilog" },
+    Cmd { name: "help", args: "[--markdown]",
+          help: "this message (--markdown: the README CLI table)" },
+];
+
+fn expand(template: &str) -> String {
+    template
+        .replace("{BACKENDS}", &BackendKind::names())
+        .replace("{APPS}", &AppKind::names())
+}
+
 fn print_help() {
     println!("axsys — energy-efficient exact/approximate systolic arrays (VLSID'26 repro)");
     println!();
     println!("usage: axsys <command> [options]");
-    println!("  selftest                     invariants + AOT golden cross-check");
-    println!("  hw-report                    Tables II-IV + Figs 8-10 (hardware model)");
-    println!("  error-sweep                  Table V NMED/MRED sweeps");
-    println!("  dct  [--k K] [--out dir]     DCT compression pipeline");
-    println!("  edge [--k K] [--out dir]     Laplacian edge detection");
-    println!("  cnn  [--k K] [--out dir]     BDCN-lite CNN edge detection");
-    println!("  serve [--backend word|lut|systolic|pjrt] [--workers N] [--requests R]");
-    println!("        [--app gemm|dct|edge|bdcn] [--k K]   serve app pipelines");
-    println!("  apps-report [--backend B] [--size S]   §V PSNR tables, all");
-    println!("        four cell families x k through the served pipelines");
-    println!("  lut-report                   product-LUT table sizes per design point");
-    println!("  emit-verilog [--out dir]     export every cell + PE design as Verilog");
+    for c in COMMANDS {
+        let args = expand(c.args);
+        if args.is_empty() {
+            println!("  {:<14} {}", c.name, c.help);
+        } else if c.name.len() + args.len() < 60 {
+            println!("  {:<14} {args}", c.name);
+            println!("  {:<14} {}", "", c.help);
+        } else {
+            println!("  {} {args}", c.name);
+            println!("  {:<14} {}", "", c.help);
+        }
+    }
+}
+
+/// The README's CLI section, generated (between the `<!-- CLI:BEGIN -->`
+/// / `<!-- CLI:END -->` markers). Regenerate with
+/// `cargo run --release -- help --markdown`. Literal pipes in cells are
+/// escaped so the GFM table structure survives.
+fn help_markdown() -> String {
+    let esc = |s: &str| s.replace('|', "\\|");
+    let mut s = String::new();
+    s.push_str("| command | arguments | description |\n");
+    s.push_str("|---------|-----------|-------------|\n");
+    for c in COMMANDS {
+        s.push_str(&format!("| `{}` | {} | {} |\n",
+                            c.name, esc(&expand(c.args)), esc(c.help)));
+    }
+    s
 }
 
 fn opt(rest: &[String], name: &str) -> Option<String> {
@@ -344,6 +407,48 @@ fn emit_verilog(rest: &[String]) -> i32 {
     0
 }
 
+/// Run the fixed perf suite and write `BENCH_hotpath.json` (repo root by
+/// default) so every PR carries a machine-readable perf trajectory.
+fn bench_report(rest: &[String]) -> i32 {
+    use axsys::bench::report::{self, ReportConfig};
+    let mut rc = ReportConfig::default();
+    if let Some(v) = opt(rest, "--size").and_then(|v| v.parse().ok()) {
+        rc.size = v;
+    }
+    if let Some(v) = opt(rest, "--requests").and_then(|v| v.parse().ok()) {
+        rc.requests = v;
+    }
+    if let Some(v) = opt(rest, "--workers").and_then(|v| v.parse().ok()) {
+        rc.workers = v;
+    }
+    if let Some(v) = opt(rest, "--k").and_then(|v| v.parse().ok()) {
+        rc.k = v;
+    }
+    if rc.size < 16 || rc.requests == 0 || rc.workers == 0 || rc.k > 8 {
+        eprintln!("bench-report: --size >= 16, --requests/--workers >= 1, \
+                   --k 0..=8");
+        return 2;
+    }
+    let out = opt(rest, "--out").map(PathBuf::from)
+        .unwrap_or_else(report::default_path);
+    println!("bench-report: size={} requests={} workers={} k={}",
+             rc.size, rc.requests, rc.workers, rc.k);
+    let doc = report::collect(&rc);
+    if let Err(e) = report::write_report(&out, &doc) {
+        eprintln!("cannot write {}: {e}", out.display());
+        return 1;
+    }
+    let speedup = doc.get("kernels")
+        .and_then(|k| k.get("blocked_vs_naive_lut_speedup"));
+    if let Some(axsys::bench::Json::Num(sx)) = speedup {
+        println!("  blocked_vs_naive_lut: {sx:.2}x{}",
+                 if *sx >= 1.0 { "  [blocked >= naive OK]" }
+                 else { "  [REGRESSION vs naive lut]" });
+    }
+    println!("  wrote {}", out.display());
+    0
+}
+
 fn lut_report() -> i32 {
     use axsys::pe::lut::ProductLut;
     println!("== product-LUT design points (8-bit signed) ==");
@@ -571,4 +676,52 @@ fn apps_report(rest: &[String]) -> i32 {
               38.21 / 30.45 dB headline metrics — pinned on golden images \
               in rust/tests/golden_psnr.rs)");
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLI_BEGIN: &str =
+        "<!-- CLI:BEGIN (generated by `cargo run --release -- help --markdown`) -->";
+    const CLI_END: &str = "<!-- CLI:END -->";
+
+    /// The README's CLI table is generated from [`COMMANDS`]; this test
+    /// is the drift guard. On failure, re-run
+    /// `cargo run --release -- help --markdown` and paste the output
+    /// between the markers in README.md.
+    #[test]
+    fn readme_cli_table_matches_generated_markdown() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+        let readme = std::fs::read_to_string(path).expect("README.md");
+        let begin = readme.find(CLI_BEGIN)
+            .expect("README.md is missing the CLI:BEGIN marker");
+        let end = readme.find(CLI_END)
+            .expect("README.md is missing the CLI:END marker");
+        let block = readme[begin + CLI_BEGIN.len()..end].trim();
+        assert_eq!(block, help_markdown().trim(),
+                   "README CLI table drifted from main.rs COMMANDS — \
+                    regenerate with `cargo run --release -- help --markdown`");
+    }
+
+    #[test]
+    fn advertised_flag_sets_come_from_the_parsers() {
+        // the serve row must advertise exactly what BackendKind/AppKind
+        // parse — the substitution, not a hand-written copy (pipes are
+        // escaped for the GFM table, so compare the escaped form)
+        let md = help_markdown();
+        let esc = |s: String| s.replace('|', "\\|");
+        assert!(md.contains(&esc(BackendKind::names())), "{md}");
+        assert!(md.contains(&esc(AppKind::names())), "{md}");
+        assert!(!md.contains("{BACKENDS}") && !md.contains("{APPS}"),
+                "unexpanded placeholder: {md}");
+        // every dispatched command is documented and vice versa
+        for name in ["selftest", "hw-report", "error-sweep", "dct", "edge",
+                     "cnn", "serve", "apps-report", "lut-report",
+                     "bench-report", "emit-verilog", "help"] {
+            assert!(COMMANDS.iter().any(|c| c.name == name),
+                    "{name} missing from COMMANDS");
+        }
+        assert_eq!(COMMANDS.len(), 12, "new commands must be dispatched too");
+    }
 }

@@ -18,15 +18,20 @@ pub type NetId = u32;
 /// Sentinel for unused gate input slots.
 const NONE: NetId = u32::MAX;
 
+/// One gate instance: a primitive kind plus up to three input nets.
 #[derive(Clone, Copy, Debug)]
 pub struct Gate {
+    /// The primitive this gate instantiates.
     pub kind: GateKind,
+    /// Input nets (unused slots hold the internal sentinel).
     pub ins: [NetId; 3],
 }
 
 /// A combinational netlist plus its sequential boundary (DFF count).
 #[derive(Clone, Debug, Default)]
 pub struct Netlist {
+    /// Gates in topological (creation) order; a gate's output NetId is
+    /// its index here.
     pub gates: Vec<Gate>,
     /// Primary inputs (order = evaluation argument order).
     pub inputs: Vec<NetId>,
@@ -35,10 +40,12 @@ pub struct Netlist {
     /// D-flip-flops on the sequential boundary (registers); they are not
     /// part of the combinational graph but count for area/power.
     pub dffs: u32,
+    /// Human-readable name (test messages, Verilog headers).
     pub name: String,
 }
 
 impl Netlist {
+    /// An empty named netlist.
     pub fn new(name: &str) -> Self {
         Netlist { name: name.to_string(), ..Default::default() }
     }
@@ -52,44 +59,54 @@ impl Netlist {
         (self.gates.len() - 1) as NetId
     }
 
+    /// Declare a primary input; returns its net.
     pub fn input(&mut self) -> NetId {
         let id = self.push(GateKind::Input, [NONE; 3]);
         self.inputs.push(id);
         id
     }
 
+    /// Tied-low constant net.
     pub fn const0(&mut self) -> NetId {
         self.push(GateKind::Const0, [NONE; 3])
     }
 
+    /// Tied-high constant net.
     pub fn const1(&mut self) -> NetId {
         self.push(GateKind::Const1, [NONE; 3])
     }
 
+    /// Inverter gate.
     pub fn inv(&mut self, a: NetId) -> NetId {
         self.push(GateKind::Inv, [a, NONE, NONE])
     }
 
+    /// 2-input AND gate.
     pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::And2, [a, b, NONE])
     }
 
+    /// 2-input OR gate.
     pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::Or2, [a, b, NONE])
     }
 
+    /// 2-input NAND gate.
     pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::Nand2, [a, b, NONE])
     }
 
+    /// 2-input NOR gate.
     pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::Nor2, [a, b, NONE])
     }
 
+    /// 2-input XOR gate.
     pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::Xor2, [a, b, NONE])
     }
 
+    /// 2-input XNOR gate.
     pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(GateKind::Xnor2, [a, b, NONE])
     }
@@ -129,14 +146,17 @@ impl Netlist {
         (self.and2(a, b), self.xor2(a, b))
     }
 
+    /// Append a net to the primary outputs.
     pub fn mark_output(&mut self, n: NetId) {
         self.outputs.push(n);
     }
 
+    /// Register `count` D-flip-flops on the sequential boundary.
     pub fn add_dffs(&mut self, count: u32) {
         self.dffs += count;
     }
 
+    /// Logic-gate count (inputs and constants excluded).
     pub fn gate_count(&self) -> usize {
         self.gates.iter()
             .filter(|g| !matches!(g.kind,
@@ -184,6 +204,8 @@ impl Netlist {
         self.outputs.iter().map(|&o| values[o as usize]).collect()
     }
 
+    /// Evaluate on one input vector with fresh scratch (convenience
+    /// wrapper over [`Self::eval_into`]).
     pub fn eval(&self, inputs: &[u8]) -> Vec<u8> {
         self.eval_into(inputs, &mut Vec::new())
     }

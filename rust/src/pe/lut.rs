@@ -31,8 +31,9 @@
 //! Tables are built lazily and shared process-wide through [`cached`]
 //! (keyed by the [`PeConfig`] fields, `Arc`-shared across coordinator
 //! workers). Unsupported design points (`n > 8`, `k > n`, or a table over
-//! [`TABLE_BYTES_BUDGET`]) transparently fall back to [`word::matmul`]
-//! via [`matmul`] — same bits, just not table speed.
+//! [`TABLE_BYTES_BUDGET`]) transparently fall back to
+//! [`word::matmul`](super::word::matmul) via [`matmul`] — same bits,
+//! just not table speed.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,6 +48,7 @@ pub const TABLE_BYTES_BUDGET: usize = 64 << 20;
 
 /// Compiled lookup tables for one PE design point.
 pub struct ProductLut {
+    /// The design point these tables were compiled for.
     pub cfg: PeConfig,
     /// `2^N x 2^N` exact signed products of decoded operand pairs,
     /// indexed `(a_enc << N) | b_enc`.
@@ -142,6 +144,26 @@ impl ProductLut {
         self.n_states
     }
 
+    /// Approximate-window width in bits (`== cfg.k` for compiled points).
+    #[inline(always)]
+    pub(crate) fn window_bits(&self) -> u32 {
+        self.kb
+    }
+
+    /// Product-table read at a precombined `(a_enc << N) | b_enc` index.
+    /// Hot-loop primitive for the blocked microkernel in [`crate::gemm`].
+    #[inline(always)]
+    pub(crate) fn prod_entry(&self, idx: usize) -> i64 {
+        self.prod[idx] as i64
+    }
+
+    /// Automaton transition read: packed `(err i16 << 16) | next_state`
+    /// for `(state, (a_lo << k) | b_lo)`. Only valid when `cfg.k > 0`.
+    #[inline(always)]
+    pub(crate) fn trans_entry(&self, state: usize, key: usize) -> u32 {
+        self.trans[(state << (2 * self.kb)) | key]
+    }
+
     /// Resident table footprint in bytes.
     pub fn table_bytes(&self) -> usize {
         self.prod.len() * 4 + self.trans.len() * 4
@@ -156,10 +178,15 @@ impl ProductLut {
         self.matmul(a, b, 1, a.len(), 1)[0]
     }
 
-    /// Table-driven GEMM `C(m x nn) = A(m x kk) @ B(kk x nn)`:
-    /// cache-blocked over output columns (B panels stay L1-resident while
-    /// A rows stream), parallelized across output-row chunks for large
-    /// problems. Bit-identical to [`word::matmul`] on the same config.
+    /// Table-driven GEMM `C(m x nn) = A(m x kk) @ B(kk x nn)`: the
+    /// *naive reference walk* — one (accumulator, state) chain at a time
+    /// over a transposed B, lightly blocked over output columns and
+    /// parallelized across output-row chunks for large problems.
+    /// Bit-identical to [`word::matmul`](super::word::matmul) on the
+    /// same config, and the
+    /// baseline the cache-blocked driver in [`crate::gemm`] is measured
+    /// against (`benches/hotpath.rs`, `blocked_vs_naive`). Serving paths
+    /// should prefer [`crate::gemm::BlockedGemm`].
     pub fn matmul(&self, a: &[i64], b: &[i64], m: usize, kk: usize,
                   nn: usize) -> Vec<i64> {
         assert_eq!(a.len(), m * kk);
@@ -283,7 +310,7 @@ pub fn cache_counters() -> (u64, u64) {
 
 /// Table-driven GEMM with transparent fallback: uses the shared LUT when
 /// the design point supports it, the word-level bit-plane walk otherwise.
-/// Always bit-identical to [`word::matmul`].
+/// Always bit-identical to [`word::matmul`](super::word::matmul).
 pub fn matmul(cfg: &PeConfig, a: &[i64], b: &[i64], m: usize, kk: usize,
               nn: usize) -> Vec<i64> {
     match cached(cfg) {

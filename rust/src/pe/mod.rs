@@ -32,8 +32,11 @@ pub enum Signedness {
 /// width, a signedness, a cell family and an approximation level.
 #[derive(Clone, Copy, Debug)]
 pub struct Design {
+    /// Operand width in bits.
     pub n: u32,
+    /// Unsigned all-PPC grid or signed Baugh-Wooley grid.
     pub signed: Signedness,
+    /// Approximate-cell family for the low-`k` columns.
     pub family: Family,
     /// Number of approximate least-significant columns (0 = exact PE).
     pub k: u32,
@@ -44,14 +47,17 @@ pub struct Design {
 }
 
 impl Design {
+    /// Exact PE built from the paper's optimized (mirror-adder) cells.
     pub fn proposed_exact(n: u32, signed: Signedness) -> Self {
         Design { n, signed, family: Family::Proposed, k: 0, optimized_exact: true }
     }
 
+    /// Exact PE built from the conventional cells of \[6\].
     pub fn conventional_exact(n: u32, signed: Signedness) -> Self {
         Design { n, signed, family: Family::Proposed, k: 0, optimized_exact: false }
     }
 
+    /// Approximate PE: `family` cells on the `k` least-significant columns.
     pub fn approximate(n: u32, signed: Signedness, family: Family, k: u32) -> Self {
         Design { n, signed, family, k, optimized_exact: true }
     }
@@ -61,6 +67,7 @@ impl Design {
         Self::approximate(n, signed, family, n - 1)
     }
 
+    /// Whether this design uses the signed (Baugh-Wooley) grid.
     pub fn is_signed(&self) -> bool {
         self.signed == Signedness::Signed
     }

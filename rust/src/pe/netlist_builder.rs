@@ -153,11 +153,17 @@ pub fn ripple_adder(nl: &mut Netlist, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
 /// A built PE: the per-cycle grid netlist, the drain merge netlist, and
 /// bookkeeping for the hardware model.
 pub struct PeNetlists {
+    /// Per-cycle cell grid (one MAC step: `a, b, s, k -> s', k'`).
     pub grid: Netlist,
+    /// Drain merge adder (Kogge-Stone resolve of the two rails).
     pub merge: Netlist,
+    /// Operand width in bits.
     pub n: u32,
+    /// Accumulator width in bits.
     pub w: u32,
+    /// PPC-flavor cells instantiated in the grid.
     pub ppc_cells: u32,
+    /// NPPC-flavor cells instantiated in the grid.
     pub nppc_cells: u32,
 }
 

@@ -22,23 +22,30 @@ use crate::Family;
 /// Static configuration of one PE instance.
 #[derive(Clone, Copy, Debug)]
 pub struct PeConfig {
+    /// Operand width in bits (<= 16).
     pub n: u32,
     /// Accumulator width in bits (<= 48). Default `2n + 8`.
     pub w: u32,
+    /// Two's-complement operands (Baugh-Wooley grid) vs unsigned.
     pub signed: bool,
+    /// Approximate-cell family for the low-`k` columns.
     pub family: Family,
+    /// Number of approximate least-significant columns (0 = exact).
     pub k: u32,
 }
 
 impl PeConfig {
+    /// Configuration with the default accumulator width `2n + 8`.
     pub fn new(n: u32, signed: bool, family: Family, k: u32) -> Self {
         PeConfig { n, w: 2 * n + 8, signed, family, k }
     }
 
+    /// Configuration matching a paper-table [`Design`] point.
     pub fn from_design(d: &Design) -> Self {
         Self::new(d.n, d.signed == Signedness::Signed, d.family, d.k)
     }
 
+    /// All-ones mask of the W-bit accumulator.
     #[inline]
     pub fn word_mask(&self) -> u64 {
         (1u64 << self.w) - 1
@@ -105,6 +112,7 @@ impl PeConfig {
 /// One processing element: carry-save accumulator + the cell grid.
 #[derive(Clone, Debug)]
 pub struct Pe {
+    /// Design point of this element.
     pub cfg: PeConfig,
     plan: MacPlan,
     /// Sum rail of the carry-save accumulator.
@@ -114,14 +122,17 @@ pub struct Pe {
     /// Toggle count (Hamming distance of successive states) — the activity
     /// proxy used by the energy model.
     pub toggles: u64,
+    /// MAC operations executed since construction.
     pub macs: u64,
 }
 
 impl Pe {
+    /// A fresh element with a zeroed accumulator.
     pub fn new(cfg: PeConfig) -> Self {
         Pe { cfg, plan: MacPlan::new(&cfg), s: 0, k: 0, toggles: 0, macs: 0 }
     }
 
+    /// Zero the carry-save accumulator (counters are kept).
     pub fn reset(&mut self) {
         self.s = 0;
         self.k = 0;
@@ -215,8 +226,11 @@ struct RowMasks {
     ee: u64,
 }
 
+/// The hoisted per-config mask plan consumed by [`mac_step_planned`]
+/// (see `RowMasks` above for what is precomputed and why).
 #[derive(Clone, Debug)]
 pub struct MacPlan {
+    /// The design point the plan was built for.
     pub cfg: PeConfig,
     mw: u64,
     bw: u64,
@@ -226,6 +240,7 @@ pub struct MacPlan {
 }
 
 impl MacPlan {
+    /// Hoist every per-row mask for `cfg` (one-time cost per GEMM call).
     pub fn new(cfg: &PeConfig) -> Self {
         let mw = cfg.word_mask();
         let amask = (1u64 << cfg.k) - 1;
@@ -255,6 +270,7 @@ impl MacPlan {
         }
     }
 
+    /// Drain a carry-save state pair to its signed integer value.
     #[inline]
     pub fn resolve(&self, s: u64, kc: u64) -> i64 {
         self.cfg.decode(s.wrapping_add(kc) & self.mw)

@@ -25,16 +25,20 @@ use anyhow::Result;
 /// Shape + data of one int32 tensor crossing the PJRT boundary.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorI32 {
+    /// Dimension sizes, outermost first.
     pub dims: Vec<usize>,
+    /// Row-major element data (`dims` product elements).
     pub data: Vec<i32>,
 }
 
 impl TensorI32 {
+    /// A tensor from shape + row-major data (length-checked).
     pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         TensorI32 { dims, data }
     }
 
+    /// A rank-1, single-element tensor (the runtime `k` argument).
     pub fn scalar1(v: i32) -> Self {
         TensorI32 { dims: vec![1], data: vec![v] }
     }
@@ -53,6 +57,7 @@ mod pjrt_impl {
     /// A compiled artifact ready to execute.
     pub struct Executable {
         exe: xla::PjRtLoadedExecutable,
+        /// Artifact name (the `<name>.hlo.txt` stem it was loaded from).
         pub name: String,
     }
 
@@ -75,6 +80,7 @@ mod pjrt_impl {
             })
         }
 
+        /// PJRT platform name (e.g. `"cpu"`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -146,6 +152,7 @@ mod pjrt_impl {
 
     /// Stub standing in for a compiled artifact; never constructed.
     pub struct Executable {
+        /// Artifact name (kept for error messages).
         pub name: String,
     }
 
@@ -154,25 +161,30 @@ mod pjrt_impl {
     pub struct Runtime {}
 
     impl Runtime {
+        /// Always errors: the `pjrt` feature is disabled in this build.
         pub fn new(_artifacts_dir: &Path) -> Result<Self> {
             Err(anyhow::anyhow!(
                 "axsys was built without the `pjrt` feature; rebuild with \
                  `--features pjrt` (and the xla crate) to run AOT artifacts"))
         }
 
+        /// Placeholder platform name for the disabled stub.
         pub fn platform(&self) -> String {
             "pjrt-disabled".into()
         }
 
+        /// Always errors (stub).
         pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
             Err(anyhow::anyhow!("pjrt feature disabled: cannot load {name}"))
         }
 
+        /// Always errors (stub).
         pub fn execute_i32(&self, exe: &Executable, _inputs: &[TensorI32])
                            -> Result<Vec<TensorI32>> {
             Err(anyhow::anyhow!("pjrt feature disabled: cannot run {}", exe.name))
         }
 
+        /// Always errors (stub).
         pub fn run(&self, name: &str, _inputs: &[TensorI32])
                    -> Result<Vec<TensorI32>> {
             Err(anyhow::anyhow!("pjrt feature disabled: cannot run {name}"))
@@ -204,10 +216,15 @@ pub fn read_golden_bin(path: &Path) -> Result<Vec<i32>> {
 /// One golden case from `artifacts/golden/manifest.txt`.
 #[derive(Clone, Debug)]
 pub struct GoldenCase {
+    /// Case name (prefix of the `.bin` golden files).
     pub case: String,
+    /// Artifact stem the case executes.
     pub artifact: String,
+    /// Shapes of the input tensors, in argument order.
     pub in_shapes: Vec<Vec<usize>>,
+    /// Approximation level passed as the trailing scalar argument.
     pub k: i32,
+    /// Shapes of the expected output tensors.
     pub out_shapes: Vec<Vec<usize>>,
 }
 

@@ -25,10 +25,12 @@ pub struct SaStats {
 }
 
 impl SaStats {
+    /// Compute + drain cycles.
     pub fn total_cycles(&self) -> u64 {
         self.cycles + self.drain_cycles
     }
 
+    /// Accumulate another stats block into this one (per-field sums).
     pub fn merge(&mut self, other: &SaStats) {
         self.cycles += other.cycles;
         self.drain_cycles += other.drain_cycles;
@@ -40,8 +42,11 @@ impl SaStats {
 
 /// An `rows x cols` output-stationary systolic array of word-level PEs.
 pub struct Systolic {
+    /// Design point of every PE in the array.
     pub cfg: PeConfig,
+    /// Array height (output rows per tile).
     pub rows: usize,
+    /// Array width (output columns per tile).
     pub cols: usize,
     pes: Vec<Pe>,
     // operand registers between PEs (index [i][j])
@@ -50,6 +55,7 @@ pub struct Systolic {
 }
 
 impl Systolic {
+    /// A fresh `rows x cols` array of PEs configured by `cfg`.
     pub fn new(cfg: PeConfig, rows: usize, cols: usize) -> Self {
         Systolic {
             cfg,
@@ -61,6 +67,7 @@ impl Systolic {
         }
     }
 
+    /// Square `size x size` array (the paper's geometry).
     pub fn square(cfg: PeConfig, size: usize) -> Self {
         Self::new(cfg, size, size)
     }

@@ -14,15 +14,25 @@
 /// Gate primitive kinds understood by the netlist evaluator.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum GateKind {
+    /// Primary input (no cost, no logic).
     Input,
+    /// Tied-low constant.
     Const0,
+    /// Tied-high constant.
     Const1,
+    /// Inverter.
     Inv,
+    /// 2-input AND.
     And2,
+    /// 2-input OR.
     Or2,
+    /// 2-input NAND.
     Nand2,
+    /// 2-input NOR.
     Nor2,
+    /// 2-input XOR.
     Xor2,
+    /// 2-input XNOR.
     Xnor2,
     /// Majority-of-3 complex gate (mirror-adder carry stage).
     Maj3,
@@ -30,14 +40,19 @@ pub enum GateKind {
 
 /// Per-kind parameters plus global calibration scale factors.
 pub struct Library {
-    /// (area µm², delay ps, switching energy fJ, leakage nW) per kind,
-    /// indexed in the order of [`GateKind`]'s data variants.
+    /// Area scale applied to every gate's raw µm² figure.
     pub area_cal: f64,
+    /// Delay scale applied to every gate's raw ps figure.
     pub delay_cal: f64,
+    /// Switching-energy scale applied to every gate's raw fJ figure.
     pub energy_cal: f64,
+    /// Leakage scale applied to every gate's raw nW figure.
     pub leak_cal: f64,
+    /// D-flip-flop area, µm² (calibrated).
     pub dff_area: f64,
+    /// D-flip-flop switching energy per clock, fJ (calibrated).
     pub dff_energy_fj: f64,
+    /// D-flip-flop leakage, nW (calibrated).
     pub dff_leak_nw: f64,
     /// Clock-to-Q added once to every register-to-register path.
     pub dff_cq_ps: f64,
@@ -62,18 +77,22 @@ fn raw(kind: GateKind) -> (f64, f64, f64, f64) {
 }
 
 impl Library {
+    /// Calibrated cell area, µm².
     pub fn area(&self, kind: GateKind) -> f64 {
         raw(kind).0 * self.area_cal
     }
 
+    /// Calibrated propagation delay, ps.
     pub fn delay_ps(&self, kind: GateKind) -> f64 {
         raw(kind).1 * self.delay_cal
     }
 
+    /// Calibrated switching energy per output toggle, fJ.
     pub fn energy_fj(&self, kind: GateKind) -> f64 {
         raw(kind).2 * self.energy_cal
     }
 
+    /// Calibrated leakage power, nW.
     pub fn leak_nw(&self, kind: GateKind) -> f64 {
         raw(kind).3 * self.leak_cal
     }

@@ -1,7 +1,8 @@
 //! Service-level invariance tests for the coordinator on the table-driven
 //! `Lut` backend: results must not depend on worker count, batch size or
-//! queue depth, and a saturated queue must exert backpressure (block the
-//! submitter) rather than drop tiles.
+//! queue depth; coalesced batched dispatch must be bit-identical to
+//! one-at-a-time execution; and a saturated queue must exert
+//! backpressure (block the submitter) rather than drop tiles.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -91,6 +92,76 @@ fn lut_and_word_backends_agree_through_the_service() {
         }
         assert_eq!(outs[0], outs[1], "k={k}");
     }
+}
+
+#[test]
+fn coalesced_batches_bit_identical_to_one_at_a_time() {
+    // With batch=1 a worker executes exactly one tile per dispatch, so
+    // nothing can coalesce; with large batches a worker pulls many tiles
+    // of the same request and stacks the ones sharing a B panel into one
+    // blocked GEMM. Every configuration must produce the same bits for
+    // every request, on both software backends.
+    let reqs: &[(usize, usize, usize, u32)] = &[
+        (40, 9, 24, 0),   // multi row+col tiles, exact
+        (17, 13, 40, 3),  // ragged both ways, approximate
+        (64, 8, 8, 5),    // single tile column: maximally coalescable
+        (8, 24, 64, 7),   // single tile row: nothing to coalesce
+    ];
+    for backend in [BackendKind::Lut, BackendKind::Word] {
+        let run_with = |workers: usize, batch: usize| -> Vec<Vec<i64>> {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers, batch, backend, ..Default::default()
+            });
+            let ids: Vec<u64> = reqs.iter().enumerate()
+                .map(|(i, &(m, kk, nn, k))| c.submit(GemmRequest {
+                    a: ints(2 * i as u64 + 1, m * kk),
+                    b: ints(2 * i as u64 + 2, kk * nn),
+                    m, kk, nn, k,
+                }))
+                .collect();
+            let outs = ids.into_iter().map(|id| c.wait(id).out).collect();
+            c.shutdown();
+            outs
+        };
+        let want = run_with(1, 1); // strictly per-tile execution
+        for (workers, batch) in [(1, 64), (4, 16), (8, 64)] {
+            assert_eq!(run_with(workers, batch), want,
+                       "{backend:?} workers={workers} batch={batch}");
+        }
+    }
+}
+
+#[test]
+fn dispatch_counters_track_batches_and_coalescing() {
+    // one worker + deep batch: the 8 row tiles of a single-column
+    // request share one B panel and should coalesce into few device
+    // calls; the counters must reflect every pulled tile exactly once
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        batch: 64,
+        backend: BackendKind::Lut,
+        ..Default::default()
+    });
+    let (m, kk, nn) = (64usize, 8usize, 8usize); // 8 tiles, all tj = 0
+    let a = ints(11, m * kk);
+    let b = ints(12, kk * nn);
+    let resp = c.call(GemmRequest { a, b, m, kk, nn, k: 4 });
+    assert_eq!(resp.tiles, 8);
+    let s = c.stats();
+    assert!(s.worker_dispatches >= 1, "{}", s.worker_dispatches);
+    assert_eq!(s.dispatched_tiles, 8);
+    assert!(s.max_dispatch_tiles >= 1 && s.max_dispatch_tiles <= 8);
+    // every dispatch coalesces to at least one call, never more than
+    // its tiles; a dispatch that saw >1 same-B tiles must have merged
+    // them (coalesced_calls == worker_dispatches in that case)
+    assert!(s.coalesced_calls >= s.worker_dispatches);
+    assert!(s.coalesced_calls <= s.dispatched_tiles);
+    assert_eq!(s.coalesced_calls, s.worker_dispatches,
+               "same-B tiles in one dispatch must merge into one call");
+    assert!(s.mean_dispatch_tiles() >= 1.0);
+    assert!(s.mean_dispatch_exec_us() > 0.0);
+    assert_eq!(s.lut_macs, (m * kk * nn) as u64);
+    c.shutdown();
 }
 
 #[test]

@@ -3,6 +3,10 @@
 //!
 //! * `lut == word == systolic` over (m, kk, nn) up to 48, three operand
 //!   ranges, all four cell families, k in 0..=6, signed and unsigned;
+//! * the cache-blocked driver (`gemm::BlockedGemm`, both lut and word
+//!   engines, including deliberately ragged block sizes that never
+//!   divide the problem shape) equals the naive `lut`/`word` walks on
+//!   the same sweep;
 //! * `CoordinatorGemm` (the served, tiled, multi-worker path) equals the
 //!   single-threaded `WordGemm` on the same sweep (signed — the
 //!   coordinator's device configs are signed).
@@ -15,6 +19,7 @@
 
 use axsys::apps::{CoordinatorGemm, Gemm, WordGemm};
 use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use axsys::gemm::{BlockSizes, BlockedGemm};
 use axsys::pe::lut::matmul as lut_matmul;
 use axsys::pe::word::{matmul as word_matmul, PeConfig};
 use axsys::systolic::Systolic;
@@ -127,6 +132,41 @@ fn fuzz_lut_word_systolic_bit_identical() {
                    "systolic({rows}x{cols}) != word [{i}] {}",
                    case.describe(master));
         assert!(st.macs > 0);
+    }
+}
+
+#[test]
+fn fuzz_blocked_matches_naive_over_ragged_shapes() {
+    // blocked == naive == word for shapes that are never multiples of
+    // the block sizes: the per-element state must survive KC panel
+    // boundaries and MC/NC remainders bit-exactly
+    let master = master_seed();
+    let mut rng = XorShift::new(master.wrapping_add(2));
+    let cases = if cfg!(debug_assertions) { 120 } else { 400 };
+    // awkward blocks exercise raggedness on nearly every case; the
+    // default blocks exercise the production configuration
+    let mut engines = [
+        BlockedGemm::new(BlockSizes { mc: 5, kc: 7, nc: 3 }),
+        BlockedGemm::default(),
+    ];
+    for i in 0..cases {
+        let case = Case::draw(rng.next(), false);
+        let cfg = case.cfg();
+        let want = word_matmul(&cfg, &case.a, &case.b, case.m, case.kk, case.nn);
+        let naive_lut = lut_matmul(&cfg, &case.a, &case.b,
+                                   case.m, case.kk, case.nn);
+        assert_eq!(naive_lut, want, "naive lut != word [{i}] {}",
+                   case.describe(master));
+        for (ei, eng) in engines.iter_mut().enumerate() {
+            let lut = eng.matmul(&cfg, &case.a, &case.b,
+                                 case.m, case.kk, case.nn);
+            assert_eq!(lut, want, "blocked(lut)[{ei}] != word [{i}] {}",
+                       case.describe(master));
+            let word = eng.matmul_word(&cfg, &case.a, &case.b,
+                                       case.m, case.kk, case.nn);
+            assert_eq!(word, want, "blocked(word)[{ei}] != word [{i}] {}",
+                       case.describe(master));
+        }
     }
 }
 
