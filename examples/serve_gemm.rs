@@ -87,8 +87,17 @@ fn main() {
                  stats.lut_macs, stats.lut_builds, stats.lut_cache_hits);
     }
 
+    if stats.metered_macs > 0 {
+        // calibrated, data-dependent energy from the per-MAC model (the
+        // meters every backend carries; see rust/src/energy)
+        println!("  metered energy: {:.3} µJ total, {:.2} fJ/MAC over {} MACs",
+                 stats.total_energy_uj(), stats.mean_mac_fj(),
+                 stats.metered_macs);
+    }
     if stats.sim_cycles > 0 {
-        // the paper's energy story: same workload, exact vs approximate SA
+        // the random-activity hardware-model estimate, for contrast with
+        // the metered number above (paper's energy story: same workload,
+        // exact vs approximate SA)
         let exact = Design::proposed_exact(8, Signedness::Signed);
         let conv = Design::conventional_exact(8, Signedness::Signed);
         let apx = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
@@ -97,8 +106,9 @@ fn main() {
         let (e6, ep, ea) = (uj(&conv), uj(&exact), uj(&apx));
         println!("  simulated {} cycles / {} MACs on the 8x8 SA", stats.sim_cycles,
                  stats.sim_macs);
-        println!("  energy estimate @250MHz: exact[6] {:.2} µJ | proposed exact \
-                  {:.2} µJ (-{:.1}%) | proposed approx {:.2} µJ (-{:.1}%)",
+        println!("  random-activity estimate @250MHz: exact[6] {:.2} µJ | \
+                  proposed exact {:.2} µJ (-{:.1}%) | proposed approx \
+                  {:.2} µJ (-{:.1}%)",
                  e6, ep, (1.0 - ep / e6) * 100.0, ea, (1.0 - ea / e6) * 100.0);
     }
 }

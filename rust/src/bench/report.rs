@@ -13,7 +13,11 @@
 //!    deterministic mixed-size request fleet, with p50/p90/p99/max
 //!    latency and the batched-dispatch counters;
 //! 3. **apps** — single-request `serve_dct` / `serve_edge` latency at the
-//!    paper's headline approximation levels.
+//!    paper's headline approximation levels;
+//! 4. **energy** — the data-dependent per-MAC model on a fixed synthetic
+//!    stream: mean fJ/MAC per design plus the 8×8-array savings vs the
+//!    conventional MAC (the golden-pinned headline), so the energy
+//!    trajectory is machine-readable across PRs alongside the perf one.
 //!
 //! All sizes shrink with [`ReportConfig::size`] so CI can smoke-run the
 //! identical suite in seconds (`axsys bench-report --size 32`).
@@ -23,9 +27,11 @@ use std::path::{Path, PathBuf};
 use crate::apps::image::scene;
 use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
                          GemmRequest};
+use crate::energy;
 use crate::gemm::BlockedGemm;
 use crate::pe::lut::ProductLut;
 use crate::pe::word::{matmul as word_matmul, PeConfig};
+use crate::pe::{Design, Signedness};
 use crate::Family;
 
 use super::{black_box, run, speedup, xorshift_ints as ints, Json,
@@ -115,6 +121,16 @@ fn serve_section(rc: &ReportConfig) -> Json {
         backend: BackendKind::Lut,
         ..Default::default()
     });
+    // warm the tables for every k the fleet will use (r % 8): the
+    // one-time energy-table compiles are seconds-scale and would
+    // otherwise land inside the first request at each k, turning the
+    // latency percentiles into a measurement of cache cold-start
+    // instead of serving (the product-LUT tables build in the same pass)
+    for k in 0..rc.requests.min(8) as u32 {
+        let pc = PeConfig::new(8, true, Family::Proposed, k);
+        let _ = crate::pe::lut::cached(&pc);
+        let _ = energy::cached(&pc);
+    }
     let span = rc.size.clamp(16, 64);
     let mut rng = super::XorShift::new(0xBE7C);
     let t0 = std::time::Instant::now();
@@ -155,9 +171,42 @@ fn serve_section(rc: &ReportConfig) -> Json {
             .set("mean_dispatch_tiles", Json::Num(s.mean_dispatch_tiles()))
             .set("mean_dispatch_exec_us",
                  Json::Num(s.mean_dispatch_exec_us())))
-        .set("lut_macs", Json::Int(s.lut_macs as i64));
+        .set("lut_macs", Json::Int(s.lut_macs as i64))
+        .set("energy_uj_total", Json::Num(s.total_energy_uj()))
+        .set("metered_macs", Json::Int(s.metered_macs as i64))
+        .set("mean_mac_fj", Json::Num(s.mean_mac_fj()));
     c.shutdown();
     out
+}
+
+/// The data-dependent energy model on a fixed synthetic stream (1024
+/// MACs, chains of 64): mean fJ/MAC per design and the 8×8 array-level
+/// savings vs the conventional MAC — the machine-readable form of the
+/// headline `tests/energy_model.rs` golden-pins on the full stream.
+fn energy_section() -> Json {
+    let a_ops = ints(0xE7E5, 1024);
+    let b_ops = ints(0x1A7B, 1024);
+    let chain = 64;
+    let e6 = energy::mean_mac_fj(
+        &Design::conventional_exact(8, Signedness::Signed),
+        &a_ops, &b_ops, chain);
+    let prop_exact = energy::mean_mac_fj(
+        &Design::proposed_exact(8, Signedness::Signed), &a_ops, &b_ops, chain);
+    let prop_apx = energy::mean_mac_fj(
+        &Design::approximate(8, Signedness::Signed, Family::Proposed, 7),
+        &a_ops, &b_ops, chain);
+    let conv = energy::conventional_mean_mac_fj(8, false, &a_ops, &b_ops);
+    let arr = |fj| energy::array_fj_per_cycle(fj, 8, 8);
+    Json::obj()
+        .set("stream_macs", Json::Int(1024))
+        .set("mean_mac_fj", Json::obj()
+            .set("exact6", Json::Num(e6))
+            .set("proposed_exact", Json::Num(prop_exact))
+            .set("proposed_approx_k7", Json::Num(prop_apx))
+            .set("conventional_mac", Json::Num(conv)))
+        .set("array8_saving_vs_conventional_pct", Json::obj()
+            .set("exact", Json::Num((1.0 - arr(prop_exact) / arr(conv)) * 100.0))
+            .set("approx", Json::Num((1.0 - arr(prop_apx) / arr(conv)) * 100.0)))
 }
 
 fn apps_section(rc: &ReportConfig) -> Json {
@@ -199,7 +248,7 @@ pub fn collect(rc: &ReportConfig) -> Json {
         .map(|d| d.as_secs() as i64)
         .unwrap_or(0);
     Json::obj()
-        .set("schema", Json::Str("axsys-bench-report/v1".into()))
+        .set("schema", Json::Str("axsys-bench-report/v2".into()))
         .set("generated_unix", Json::Int(generated_unix))
         .set("config", Json::obj()
             .set("size", Json::Int(rc.size as i64))
@@ -210,6 +259,7 @@ pub fn collect(rc: &ReportConfig) -> Json {
         .set("kernels", kernel_section(rc))
         .set("serve", serve_section(rc))
         .set("apps", apps_section(rc))
+        .set("energy", energy_section())
 }
 
 /// Serialize `doc` to `path` (pretty-printed, trailing newline).
@@ -250,6 +300,22 @@ mod tests {
             other => panic!("worker_dispatches: {other:?}"),
         }
         assert!(doc.get("apps").and_then(|a| a.get("dct")).is_some());
+        // served requests are metered on the lut backend
+        match serve.get("energy_uj_total") {
+            Some(&Json::Num(v)) => assert!(v > 0.0, "served energy {v}"),
+            other => panic!("energy_uj_total: {other:?}"),
+        }
+        // the energy section carries the headline savings
+        let energy = doc.get("energy").expect("energy section");
+        let sav = energy.get("array8_saving_vs_conventional_pct")
+            .expect("savings");
+        match (sav.get("exact"), sav.get("approx")) {
+            (Some(&Json::Num(e)), Some(&Json::Num(a))) => {
+                assert!(a > e && e > 0.0,
+                        "approx must save more than exact: {a} vs {e}");
+            }
+            other => panic!("savings: {other:?}"),
+        }
         // the whole document serializes
         let text = doc.pretty();
         assert!(text.starts_with('{') && text.ends_with("}\n"));

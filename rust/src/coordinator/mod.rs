@@ -31,6 +31,19 @@
 //! execution (enforced by `tests/coordinator_invariance.rs`); batch-size
 //! and dispatch-latency counters land in [`ServiceStats`].
 //!
+//! ## Energy accounting
+//!
+//! Every request served by a meterable design point reports calibrated,
+//! data-dependent energy (DESIGN.md §4): the software workers charge
+//! each MAC its [`crate::energy::EnergyLut`] table energy inside the
+//! blocked kernels, the systolic workers replay the PE's gate netlist
+//! per MAC (the ground-truth cross-check), and the totals surface as
+//! [`GemmResponse::energy_uj`] / [`GemmResponse::avg_power_uw`], per-app
+//! energy-per-image in [`AppStats`], and fleet totals in
+//! [`ServiceStats`]. Metering only reads operands and states the
+//! devices already hold — the bit-identity invariance suites run with
+//! it enabled.
+//!
 //! PJRT note: tiles streamed through `axmm_b16` carry K in chunks of 8
 //! whose partial results are summed outside the PE; for k = 0 this is
 //! bit-identical to the monolithic array, for k > 0 it is the "chunked
@@ -44,6 +57,7 @@ use std::time::Instant;
 
 use crate::apps::image::{psnr, Image};
 use crate::apps::{bdcn, dct, edge, CoordinatorGemm};
+use crate::energy::{self, EnergyLut};
 use crate::gemm::BlockedGemm;
 use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::PeConfig;
@@ -170,6 +184,19 @@ impl GemmResponse {
         }
         self.sa_stats.macs as f64 / (self.latency_us * 1e-6)
     }
+
+    /// Calibrated data-dependent energy of this request in microjoules
+    /// (the per-MAC model of [`crate::energy`]; 0.0 when the design
+    /// point is not meterable — see [`SaStats::metered_macs`]).
+    pub fn energy_uj(&self) -> f64 {
+        self.sa_stats.energy_uj()
+    }
+
+    /// Mean modeled power at the paper's 250 MHz clock, µW (simulated
+    /// cycles on the systolic backend, MAC-serialized time otherwise).
+    pub fn avg_power_uw(&self) -> f64 {
+        self.sa_stats.avg_power_uw()
+    }
 }
 
 struct Pending {
@@ -260,6 +287,16 @@ pub struct AppResponse {
     pub sa_stats: SaStats,
 }
 
+impl AppResponse {
+    /// Total metered energy of every GEMM stage behind this response
+    /// (including the exact reference run where one was served), µJ —
+    /// with [`Self::psnr_db`] this is one point of the paper's
+    /// quality-vs-energy trade.
+    pub fn energy_uj(&self) -> f64 {
+        self.sa_stats.energy_uj()
+    }
+}
+
 /// Aggregate counters for one served application pipeline.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AppStats {
@@ -276,6 +313,8 @@ pub struct AppStats {
     pub psnr_sum_db: f64,
     /// Number of finite-PSNR samples in [`Self::psnr_sum_db`].
     pub psnr_samples: u64,
+    /// Summed metered energy of every GEMM sub-request, femtojoules.
+    pub energy_fj: f64,
 }
 
 impl AppStats {
@@ -294,6 +333,17 @@ impl AppStats {
             0.0
         } else {
             self.psnr_sum_db / self.psnr_samples as f64
+        }
+    }
+
+    /// Mean metered energy per served image, µJ (0.0 before any
+    /// request). Pairs with [`Self::mean_psnr_db`] for the
+    /// energy-vs-quality trade the paper motivates.
+    pub fn mean_energy_uj(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.energy_fj * 1e-9 / self.requests as f64
         }
     }
 }
@@ -319,6 +369,11 @@ pub struct ServiceStats {
     pub sim_macs: u64,
     /// Accumulator-bit toggles (systolic backend only).
     pub sim_toggles: u64,
+    /// Fleet total of metered data-dependent energy, femtojoules.
+    pub energy_fj: f64,
+    /// MACs covered by an energy meter (`== sim_macs` when every served
+    /// design point was meterable).
+    pub metered_macs: u64,
     /// Worker batch dispatches pulled from the tile queue.
     pub worker_dispatches: u64,
     /// Tiles pulled across all dispatches (mean batch size =
@@ -377,6 +432,21 @@ impl ServiceStats {
             0.0
         } else {
             self.dispatch_exec_us / self.worker_dispatches as f64
+        }
+    }
+
+    /// Fleet total of metered energy in microjoules.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.energy_fj * 1e-9
+    }
+
+    /// Mean metered energy per MAC in femtojoules (0.0 before any
+    /// metered MAC) — the fleet-level calibration number `serve` prints.
+    pub fn mean_mac_fj(&self) -> f64 {
+        if self.metered_macs == 0 {
+            0.0
+        } else {
+            self.energy_fj / self.metered_macs as f64
         }
     }
 
@@ -630,6 +700,7 @@ impl Coordinator {
             a.gemm_requests += gemm_requests;
             a.total_latency_us += latency_us;
             a.max_latency_us = a.max_latency_us.max(latency_us);
+            a.energy_fj += sa_stats.energy_fj;
             if psnr_db.is_finite() {
                 a.psnr_sum_db += psnr_db;
                 a.psnr_samples += 1;
@@ -685,6 +756,10 @@ impl SwDevice {
 enum Device {
     Word {
         pc: PeConfig,
+        /// Per-worker memo of the process-wide shared energy tables,
+        /// keyed by the request's approximation level k (`None` = not
+        /// tabulable → the request runs unmetered).
+        etables: HashMap<u32, Option<Arc<EnergyLut>>>,
         sw: Box<SwDevice>,
     },
     Lut {
@@ -694,11 +769,21 @@ enum Device {
         /// word-model fallback). The `Arc`s point into `lut::cached`'s
         /// global map, so workers share one table per design point.
         tables: HashMap<u32, Option<Arc<ProductLut>>>,
+        /// Energy-table memo, same keying (see `Device::Word`).
+        etables: HashMap<u32, Option<Arc<EnergyLut>>>,
         /// MACs served without the bit-plane walk since the last drain.
         lut_macs: u64,
         sw: Box<SwDevice>,
     },
-    Systolic(Box<Systolic>),
+    Systolic {
+        pc: PeConfig,
+        /// One metered array per approximation level served so far: the
+        /// gate-netlist meter ([`Systolic::enable_meter`]) is built once
+        /// per `k`, not per k-switch (mixed-k traffic — e.g. the app
+        /// endpoints' approx + exact-reference runs — alternates every
+        /// request).
+        arrays: HashMap<u32, Box<Systolic>>,
+    },
     Pjrt {
         rt: Runtime,
         exe: std::sync::Arc<crate::runtime::Executable>,
@@ -710,6 +795,7 @@ fn make_device(cfg: &CoordinatorConfig) -> Device {
         BackendKind::Word => {
             Device::Word {
                 pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
+                etables: HashMap::new(),
                 sw: SwDevice::new(),
             }
         }
@@ -717,13 +803,16 @@ fn make_device(cfg: &CoordinatorConfig) -> Device {
             Device::Lut {
                 pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
                 tables: HashMap::new(),
+                etables: HashMap::new(),
                 lut_macs: 0,
                 sw: SwDevice::new(),
             }
         }
         BackendKind::Systolic => {
-            let pc = PeConfig::new(cfg.n_bits, true, cfg.family, 0);
-            Device::Systolic(Box::new(Systolic::square(pc, cfg.sa_size)))
+            Device::Systolic {
+                pc: PeConfig::new(cfg.n_bits, true, cfg.family, 0),
+                arrays: HashMap::new(),
+            }
         }
         BackendKind::Pjrt => {
             let rt = Runtime::new(&Runtime::default_artifacts_dir())
@@ -802,6 +891,8 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
                 s.sim_cycles += resp.sa_stats.total_cycles();
                 s.sim_macs += resp.sa_stats.macs;
                 s.sim_toggles += resp.sa_stats.toggles;
+                s.energy_fj += resp.sa_stats.energy_fj;
+                s.metered_macs += resp.sa_stats.metered_macs;
                 drop(s);
                 p.done = Some(resp);
                 cvar.notify_all();
@@ -833,11 +924,13 @@ fn coalesce(batch: &[TileJob]) -> Vec<Vec<usize>> {
 }
 
 /// Execute one coalesced group on a software device. `table` is the
-/// worker's memoized LUT handle for the group's `k` (`None` = word path).
-/// Returns the stacked result rows (`sum of th` x `tw`).
+/// worker's memoized LUT handle for the group's `k` (`None` = word
+/// path), `elut` its memoized energy table (`None` = unmetered).
+/// Returns the stacked result rows (`sum of th` x `tw`) plus the
+/// group's metered femtojoules.
 fn run_sw_group(sw: &mut SwDevice, pc2: &PeConfig,
-                table: Option<&ProductLut>, batch: &[TileJob],
-                group: &[usize]) -> Vec<i64> {
+                table: Option<&ProductLut>, elut: Option<Arc<EnergyLut>>,
+                batch: &[TileJob], group: &[usize]) -> (Vec<i64>, f64) {
     let first = &batch[group[0]];
     // singleton groups (nothing to coalesce) skip the stacking copy and
     // feed the tile's own A panel straight to the engine
@@ -853,27 +946,37 @@ fn run_sw_group(sw: &mut SwDevice, pc2: &PeConfig,
         }
         (&sw.stack_a, group.iter().map(|&i| batch[i].th).sum())
     };
-    match table {
+    sw.eng.set_meter(elut);
+    let out = match table {
         Some(t) => sw.eng.matmul_lut(t, a, &first.b_panel,
                                      total_th, first.kk, first.tw),
         None => sw.eng.matmul_word(pc2, a, &first.b_panel,
                                    total_th, first.kk, first.tw),
-    }
+    };
+    let energy_fj = sw.eng.take_energy_fj();
+    (out, energy_fj)
 }
 
 /// Scatter a stacked group result back into per-tile `(tile, stats)`
-/// slots aligned with the batch order.
+/// slots aligned with the batch order. The group's metered energy lands
+/// on its first tile (every tile of a group belongs to one request, so
+/// the request-level sum is exact); per-tile meter coverage is recorded
+/// when `metered`.
 fn scatter_group(batch: &[TileJob], group: &[usize], stacked: &[i64],
+                 group_fj: f64, metered: bool,
                  results: &mut [Option<(Vec<i64>, SaStats)>]) {
     let tw = batch[group[0]].tw;
     let mut row = 0;
-    for &i in group {
+    for (gi, &i) in group.iter().enumerate() {
         let job = &batch[i];
         let tile = stacked[row * tw..(row + job.th) * tw].to_vec();
         row += job.th;
+        let macs = (job.th * job.kk * job.tw) as u64;
         results[i] = Some((tile, SaStats {
             tiles: 1,
-            macs: (job.th * job.kk * job.tw) as u64,
+            macs,
+            energy_fj: if gi == 0 { group_fj } else { 0.0 },
+            metered_macs: if metered { macs } else { 0 },
             ..Default::default()
         }));
     }
@@ -886,20 +989,26 @@ fn scatter_group(batch: &[TileJob], group: &[usize], stacked: &[i64],
 fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
                  batch: &[TileJob]) -> (Vec<(Vec<i64>, SaStats)>, u64) {
     match device {
-        Device::Word { pc, sw } => {
+        Device::Word { pc, etables, sw } => {
             let groups = coalesce(batch);
             let mut results: Vec<Option<(Vec<i64>, SaStats)>> =
                 (0..batch.len()).map(|_| None).collect();
             for group in &groups {
                 let mut pc2 = *pc;
                 pc2.k = batch[group[0]].k;
-                let stacked = run_sw_group(sw, &pc2, None, batch, group);
-                scatter_group(batch, group, &stacked, &mut results);
+                let elut = etables.entry(pc2.k)
+                    .or_insert_with(|| energy::cached(&pc2))
+                    .clone();
+                let metered = elut.is_some();
+                let (stacked, fj) =
+                    run_sw_group(sw, &pc2, None, elut, batch, group);
+                scatter_group(batch, group, &stacked, fj, metered,
+                              &mut results);
             }
             (results.into_iter().map(|r| r.expect("group cover")).collect(),
              groups.len() as u64)
         }
-        Device::Lut { pc, tables, lut_macs, sw } => {
+        Device::Lut { pc, tables, etables, lut_macs, sw } => {
             let groups = coalesce(batch);
             let mut results: Vec<Option<(Vec<i64>, SaStats)>> =
                 (0..batch.len()).map(|_| None).collect();
@@ -915,20 +1024,28 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
                         group.iter().map(|&i| batch[i].th).sum();
                     *lut_macs += (total_th * first.kk * first.tw) as u64;
                 }
-                let stacked =
-                    run_sw_group(sw, &pc2, table.as_deref(), batch, group);
-                scatter_group(batch, group, &stacked, &mut results);
+                let elut = etables.entry(first.k)
+                    .or_insert_with(|| energy::cached(&pc2))
+                    .clone();
+                let metered = elut.is_some();
+                let (stacked, fj) = run_sw_group(sw, &pc2, table.as_deref(),
+                                                 elut, batch, group);
+                scatter_group(batch, group, &stacked, fj, metered,
+                              &mut results);
             }
             (results.into_iter().map(|r| r.expect("group cover")).collect(),
              groups.len() as u64)
         }
-        Device::Systolic(sa) => {
+        Device::Systolic { pc, arrays } => {
             let out = batch.iter().map(|job| {
-                let mut pc = sa.cfg;
-                pc.k = job.k;
-                if pc.k != sa.cfg.k {
-                    **sa = Systolic::square(pc, cfg.sa_size);
-                }
+                let sa = arrays.entry(job.k).or_insert_with(|| {
+                    let mut pc2 = *pc;
+                    pc2.k = job.k;
+                    let mut sa = Systolic::square(pc2, cfg.sa_size);
+                    // gate-level ground truth on the slow path
+                    sa.enable_meter();
+                    Box::new(sa)
+                });
                 sa.gemm(&job.a_panel, &job.b_panel, job.th, job.kk, job.tw)
             }).collect();
             (out, batch.len() as u64)
@@ -1120,6 +1237,9 @@ mod tests {
         });
         assert!(resp.sa_stats.total_cycles() > 0);
         assert!(resp.sa_stats.macs > 0);
+        // the systolic device meters by direct netlist replay
+        assert_eq!(resp.sa_stats.metered_macs, resp.sa_stats.macs);
+        assert!(resp.energy_uj() > 0.0 && resp.avg_power_uw() > 0.0);
         c.shutdown();
     }
 
@@ -1205,6 +1325,50 @@ mod tests {
         assert_eq!(s.lut_macs, (m * kk * nn) as u64);
         assert!(s.lut_builds >= 1);
         assert!(s.mean_latency_us() > 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn served_requests_carry_data_dependent_energy() {
+        // every software-served request at a tabulable design point is
+        // fully metered, and the fleet totals add up
+        for backend in [BackendKind::Word, BackendKind::Lut] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers: 3, backend, ..Default::default()
+            });
+            let (m, kk, nn) = (20, 12, 16);
+            let mut total = 0.0;
+            for (seed, k) in [(1u64, 0u32), (3, 4)] {
+                let resp = c.call(GemmRequest {
+                    a: ints(seed, m * kk), b: ints(seed + 1, kk * nn),
+                    m, kk, nn, k,
+                });
+                assert_eq!(resp.sa_stats.metered_macs, resp.sa_stats.macs,
+                           "{backend:?} k={k}: full meter coverage");
+                assert!(resp.energy_uj() > 0.0, "{backend:?} k={k}");
+                total += resp.sa_stats.energy_fj;
+            }
+            let s = c.stats();
+            assert_eq!(s.metered_macs, 2 * (m * kk * nn) as u64);
+            assert!((s.energy_fj - total).abs() < 1e-9 * total.max(1.0));
+            assert!(s.total_energy_uj() > 0.0 && s.mean_mac_fj() > 0.0);
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn app_responses_report_energy_per_image() {
+        use crate::apps::image::scene;
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2, backend: BackendKind::Lut, ..Default::default()
+        });
+        let img = scene(24, 24);
+        let r = c.serve_dct(&img, 5);
+        assert!(r.energy_uj() > 0.0);
+        let s = c.stats();
+        assert!(s.dct.mean_energy_uj() > 0.0);
+        // energy-vs-quality pair is available at the stats level
+        assert!(s.dct.mean_psnr_db() > 0.0);
         c.shutdown();
     }
 }

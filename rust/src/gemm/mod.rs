@@ -40,6 +40,19 @@
 //! the thread-local one behind [`matmul`]) performs no per-request
 //! packing allocation.
 //!
+//! ## Energy metering
+//!
+//! An engine can carry an [`EnergyLut`] meter ([`BlockedGemm::set_meter`]):
+//! each kernel then charges every MAC its canonical data-dependent energy
+//! with one extra table read — the LUT kernel indexes with the automaton
+//! state it already chases, the word kernel recovers the state from its
+//! live rails, the exact kernel uses the stateless `k = 0` row. The
+//! accumulated femtojoules drain through [`BlockedGemm::take_energy_fj`].
+//! Metering only *reads* operands and states the kernels already hold —
+//! it cannot reorder a MAC chain, so metered results are bit-identical
+//! to unmetered ones (asserted in this module's tests and fuzzed with
+//! metering enabled in `tests/energy_model.rs`).
+//!
 //! ```
 //! use axsys::gemm::{BlockSizes, BlockedGemm};
 //! use axsys::pe::word::{matmul as word_matmul, PeConfig};
@@ -55,7 +68,9 @@
 //! ```
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
+use crate::energy::EnergyLut;
 use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::{mac_step_planned, MacPlan, PeConfig};
 
@@ -148,6 +163,11 @@ pub struct BlockedGemm {
     /// Whether large problems may fan out across scoped threads.
     parallel: bool,
     scratch: Scratch,
+    /// Optional per-MAC energy meter (see module docs, §Energy metering).
+    meter: Option<Arc<EnergyLut>>,
+    /// Metered femtojoules accumulated since the last
+    /// [`Self::take_energy_fj`].
+    energy_fj: f64,
 }
 
 impl Default for BlockedGemm {
@@ -161,7 +181,8 @@ impl BlockedGemm {
     /// Large problems are split across threads; callers that already
     /// run inside a worker pool should use [`Self::single_threaded`].
     pub fn new(blocks: BlockSizes) -> Self {
-        BlockedGemm { blocks, parallel: true, scratch: Scratch::default() }
+        BlockedGemm { blocks, parallel: true, scratch: Scratch::default(),
+                      meter: None, energy_fj: 0.0 }
     }
 
     /// A driver that never spawns threads: every call runs sequentially
@@ -171,7 +192,22 @@ impl BlockedGemm {
     /// and nested fan-out from an already-parallel pool would
     /// oversubscribe the host.
     pub fn single_threaded(blocks: BlockSizes) -> Self {
-        BlockedGemm { blocks, parallel: false, scratch: Scratch::default() }
+        BlockedGemm { blocks, parallel: false, scratch: Scratch::default(),
+                      meter: None, energy_fj: 0.0 }
+    }
+
+    /// Install (or clear) the per-MAC energy meter. The table must match
+    /// the design point of subsequent calls — the coordinator workers
+    /// swap the right table in per dispatch group; a mismatch is a
+    /// caller bug (debug-asserted in the kernels' driver).
+    pub fn set_meter(&mut self, meter: Option<Arc<EnergyLut>>) {
+        self.meter = meter;
+    }
+
+    /// Drain the femtojoules metered since the last call (0.0 when no
+    /// meter is installed).
+    pub fn take_energy_fj(&mut self) -> f64 {
+        std::mem::take(&mut self.energy_fj)
     }
 
     /// Blocked GEMM `C(m×nn) = A(m×kk) @ B(kk×nn)` for a design point,
@@ -224,6 +260,22 @@ impl BlockedGemm {
             return out;
         }
         let op = Operands { a, b, kk, nn };
+        // clone the Arc so the meter borrow is independent of `self`
+        // (the scratch and the energy accumulator are borrowed mutably
+        // below)
+        let meter_arc = self.meter.clone();
+        let meter = meter_arc.as_deref();
+        if let Some(el) = meter {
+            let cfg = match eng {
+                Eng::Exact(c) => *c,
+                Eng::Lut(l) => l.cfg,
+                Eng::Word(p) => p.cfg,
+            };
+            debug_assert!(el.cfg.n == cfg.n && el.cfg.k == cfg.k
+                          && el.cfg.signed == cfg.signed
+                          && el.cfg.family == cfg.family,
+                          "energy meter / engine design-point mismatch");
+        }
         // parallelize across output-row chunks for large problems, same
         // policy as the naive engines — unless this engine was built
         // with `single_threaded` (coordinator workers: their pool is
@@ -234,17 +286,25 @@ impl BlockedGemm {
         if self.parallel && work >= 1 << 18 && threads > 1 && m >= 2 * threads {
             let bs = self.blocks;
             let chunk = m.div_ceil(threads);
+            // per-chunk energies summed in chunk order afterwards, so the
+            // metered total is deterministic for a given thread split
+            let mut chunk_fj = vec![0f64; m.div_ceil(chunk)];
             std::thread::scope(|scope| {
-                for (ci, rows) in out.chunks_mut(chunk * nn).enumerate() {
+                for ((ci, rows), fj) in out.chunks_mut(chunk * nn).enumerate()
+                    .zip(chunk_fj.iter_mut())
+                {
                     let op = &op;
                     scope.spawn(move || {
                         let mut local = Scratch::default();
-                        drive_rows(eng, &bs, &mut local, op, ci * chunk, rows);
+                        *fj = drive_rows(eng, &bs, &mut local, op, meter,
+                                         ci * chunk, rows);
                     });
                 }
             });
+            self.energy_fj += chunk_fj.into_iter().sum::<f64>();
         } else {
-            drive_rows(eng, &self.blocks, &mut self.scratch, &op, 0, &mut out);
+            self.energy_fj += drive_rows(eng, &self.blocks, &mut self.scratch,
+                                         &op, meter, 0, &mut out);
         }
         out
     }
@@ -255,8 +315,10 @@ impl BlockedGemm {
 /// (accumulator + automaton state, or the two carry-save rails) is
 /// carried across KC panels in increasing-`t` order, which is what keeps
 /// every output element's MAC chain identical to the unblocked walk.
+/// Returns the femtojoules metered over these rows (0.0 unmetered).
 fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
-              i0: usize, out_rows: &mut [i64]) {
+              meter: Option<&EnergyLut>, i0: usize, out_rows: &mut [i64])
+              -> f64 {
     let nn = op.nn;
     let kk = op.kk;
     let h = out_rows.len() / nn;
@@ -306,6 +368,7 @@ fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
             sc.b64.resize(nc * kc, 0);
         }
     }
+    let mut energy_fj = 0f64;
     let mut icb = 0;
     while icb < h {
         let mh = (h - icb).min(mc);
@@ -331,22 +394,22 @@ fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
                 let sh = BlockShape { mh, nw, kw, a_stride: kk,
                                       a_base: icb * kk + pcb };
                 let bt = (pcb, jcb);
-                match eng {
+                energy_fj += match eng {
                     Eng::Exact(cfg) => {
                         pack_b_exact(cfg, sc, op, bt, &sh);
-                        kernel_exact(&sh, &sc.ai, &sc.bi, &mut sc.acc);
+                        kernel_exact(&sh, &sc.ai, &sc.bi, &mut sc.acc, meter)
                     }
                     Eng::Lut(l) => {
                         pack_b_enc16(&l.cfg, sc, op, bt, &sh);
                         kernel_lut(l, &sh, &sc.a16, &sc.b16, &mut sc.acc,
-                                   &mut sc.st);
+                                   &mut sc.st, meter)
                     }
                     Eng::Word(plan) => {
                         pack_b_enc64(&plan.cfg, sc, op, bt, &sh);
                         kernel_word(plan, &sh, &sc.a64, &sc.b64,
-                                    &mut sc.s_rail, &mut sc.k_rail);
+                                    &mut sc.s_rail, &mut sc.k_rail, meter)
                     }
-                }
+                };
                 pcb += kw;
             }
             // resolve + write back the finished block
@@ -376,6 +439,7 @@ fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
         }
         icb += mh;
     }
+    energy_fj
 }
 
 /// Copy-pack the B(pc0.., col0..) panel transposed as decoded i64
@@ -416,8 +480,12 @@ fn pack_b_enc64(cfg: &PeConfig, sc: &mut Scratch, op: &Operands,
 }
 
 /// Exact microkernel: 4 output columns per sweep, wrapping i64 MACs.
-fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64]) {
+/// With a meter, each MAC adds its stateless (`k = 0`) table energy;
+/// the arithmetic is untouched. Returns metered fJ.
+fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64],
+                elut: Option<&EnergyLut>) -> f64 {
     let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
+    let mut efj = 0f64;
     for i in 0..mh {
         let arow = &ai[sh.a_base + i * sh.a_stride..][..kw];
         let racc = &mut acc[i * nw..(i + 1) * nw];
@@ -435,6 +503,12 @@ fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64]) {
                 c1 = c1.wrapping_add(av.wrapping_mul(b1[t]));
                 c2 = c2.wrapping_add(av.wrapping_mul(b2[t]));
                 c3 = c3.wrapping_add(av.wrapping_mul(b3[t]));
+                if let Some(el) = elut {
+                    efj += el.mac_fj(0, av as u64, b0[t] as u64)
+                        + el.mac_fj(0, av as u64, b1[t] as u64)
+                        + el.mac_fj(0, av as u64, b2[t] as u64)
+                        + el.mac_fj(0, av as u64, b3[t] as u64);
+                }
             }
             racc[j] = c0;
             racc[j + 1] = c1;
@@ -447,22 +521,31 @@ fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64]) {
             let mut c = racc[j];
             for t in 0..kw {
                 c = c.wrapping_add(arow[t].wrapping_mul(bj[t]));
+                if let Some(el) = elut {
+                    efj += el.mac_fj(0, arow[t] as u64, bj[t] as u64);
+                }
             }
             racc[j] = c;
             j += 1;
         }
     }
+    efj
 }
 
 /// Table-driven microkernel: 4 output columns advance together, so four
 /// independent (accumulator, automaton-state) chains are in flight — the
-/// ILP the naive per-element loop cannot expose.
+/// ILP the naive per-element loop cannot expose. With a meter, each MAC
+/// adds one energy-table read indexed by the very automaton state the
+/// kernel chases anyway. Returns metered fJ.
 fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
-              acc: &mut [i64], st: &mut [u16]) {
+              acc: &mut [i64], st: &mut [u16], elut: Option<&EnergyLut>)
+              -> f64 {
     let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
     let n = lut.cfg.n;
+    let two_n = 2 * n as usize;
     let kb = lut.window_bits() as usize;
     let kmask = (1usize << kb) - 1;
+    let mut efj = 0f64;
     for i in 0..mh {
         let arow = &a16[sh.a_base + i * sh.a_stride..][..kw];
         let racc = &mut acc[i * nw..(i + 1) * nw];
@@ -484,21 +567,33 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
                 let alo = (ai & kmask) << kb;
                 let bi = b0[t] as usize;
                 c0 += lut.prod_entry(ahi | bi);
+                if let Some(el) = elut {
+                    efj += el.entry((s0 << two_n) | ahi | bi);
+                }
                 let e = lut.trans_entry(s0, alo | (bi & kmask));
                 c0 += (e >> 16) as i16 as i64;
                 s0 = (e & 0xFFFF) as usize;
                 let bi = b1[t] as usize;
                 c1 += lut.prod_entry(ahi | bi);
+                if let Some(el) = elut {
+                    efj += el.entry((s1 << two_n) | ahi | bi);
+                }
                 let e = lut.trans_entry(s1, alo | (bi & kmask));
                 c1 += (e >> 16) as i16 as i64;
                 s1 = (e & 0xFFFF) as usize;
                 let bi = b2[t] as usize;
                 c2 += lut.prod_entry(ahi | bi);
+                if let Some(el) = elut {
+                    efj += el.entry((s2 << two_n) | ahi | bi);
+                }
                 let e = lut.trans_entry(s2, alo | (bi & kmask));
                 c2 += (e >> 16) as i16 as i64;
                 s2 = (e & 0xFFFF) as usize;
                 let bi = b3[t] as usize;
                 c3 += lut.prod_entry(ahi | bi);
+                if let Some(el) = elut {
+                    efj += el.entry((s3 << two_n) | ahi | bi);
+                }
                 let e = lut.trans_entry(s3, alo | (bi & kmask));
                 c3 += (e >> 16) as i16 as i64;
                 s3 = (e & 0xFFFF) as usize;
@@ -521,6 +616,9 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
                 let ai = arow[t] as usize;
                 let bi = bj[t] as usize;
                 c += lut.prod_entry((ai << n) | bi);
+                if let Some(el) = elut {
+                    efj += el.entry((s << two_n) | (ai << n) | bi);
+                }
                 let e = lut.trans_entry(s, ((ai & kmask) << kb) | (bi & kmask));
                 c += (e >> 16) as i16 as i64;
                 s = (e & 0xFFFF) as usize;
@@ -530,13 +628,18 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
             j += 1;
         }
     }
+    efj
 }
 
 /// Word microkernel: 4 carry-save (s, k) chains per sweep through
-/// [`mac_step_planned`].
+/// [`mac_step_planned`]. With a meter, each MAC's automaton state is
+/// recovered from the live rails' low-`k` window before the step.
+/// Returns metered fJ.
 fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
-               s_rail: &mut [u64], k_rail: &mut [u64]) {
+               s_rail: &mut [u64], k_rail: &mut [u64],
+               elut: Option<&EnergyLut>) -> f64 {
     let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
+    let mut efj = 0f64;
     for i in 0..mh {
         let arow = &a64[sh.a_base + i * sh.a_stride..][..kw];
         let rs = &mut s_rail[i * nw..(i + 1) * nw];
@@ -553,6 +656,12 @@ fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
                 (rk[j], rk[j + 1], rk[j + 2], rk[j + 3]);
             for t in 0..kw {
                 let av = arow[t];
+                if let Some(el) = elut {
+                    efj += el.mac_fj(el.state_of_rails(s0, k0), av, b0[t])
+                        + el.mac_fj(el.state_of_rails(s1, k1), av, b1[t])
+                        + el.mac_fj(el.state_of_rails(s2, k2), av, b2[t])
+                        + el.mac_fj(el.state_of_rails(s3, k3), av, b3[t]);
+                }
                 (s0, k0) = mac_step_planned(plan, av, b0[t], s0, k0);
                 (s1, k1) = mac_step_planned(plan, av, b1[t], s1, k1);
                 (s2, k2) = mac_step_planned(plan, av, b2[t], s2, k2);
@@ -572,6 +681,9 @@ fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
             let bj = &b64[j * kw..(j + 1) * kw];
             let (mut s, mut k) = (rs[j], rk[j]);
             for t in 0..kw {
+                if let Some(el) = elut {
+                    efj += el.mac_fj(el.state_of_rails(s, k), arow[t], bj[t]);
+                }
                 (s, k) = mac_step_planned(plan, arow[t], bj[t], s, k);
             }
             rs[j] = s;
@@ -579,6 +691,7 @@ fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
             j += 1;
         }
     }
+    efj
 }
 
 thread_local! {
@@ -715,5 +828,42 @@ mod tests {
         let b = ints(10, 7 * 9);
         assert_eq!(matmul(&cfg, &a, &b, 10, 7, 9),
                    word_matmul(&cfg, &a, &b, 10, 7, 9));
+    }
+
+    #[test]
+    fn metering_changes_no_bits_and_matches_chain_aggregation() {
+        // the meter observes: metered results == unmetered results, and
+        // the metered total equals the per-element chain aggregation
+        // through the same table (tolerance: cross-element f64 order)
+        let (m, kk, nn) = (6usize, 14usize, 5usize);
+        let a = ints(21, m * kk);
+        let b = ints(22, kk * nn);
+        for k in [0u32, 3] {
+            let cfg = PeConfig::new(8, true, Family::Proposed, k);
+            let elut = crate::energy::cached(&cfg).expect("8-bit tabulates");
+            let mut eng = BlockedGemm::default();
+            let want = eng.matmul(&cfg, &a, &b, m, kk, nn);
+            assert_eq!(eng.take_energy_fj(), 0.0, "unmetered engine");
+            eng.set_meter(Some(elut.clone()));
+            assert_eq!(eng.matmul(&cfg, &a, &b, m, kk, nn), want,
+                       "metered lut engine changed bits (k={k})");
+            let e_lut = eng.take_energy_fj();
+            assert_eq!(eng.matmul_word(&cfg, &a, &b, m, kk, nn), want,
+                       "metered word engine changed bits (k={k})");
+            let e_word = eng.take_energy_fj();
+            let mut want_fj = 0.0;
+            for i in 0..m {
+                for j in 0..nn {
+                    let ops: Vec<(i64, i64)> = (0..kk)
+                        .map(|t| (a[i * kk + t], b[t * nn + j])).collect();
+                    want_fj += elut.chain_fj(&ops);
+                }
+            }
+            assert!(want_fj > 0.0);
+            for (label, e) in [("lut", e_lut), ("word", e_word)] {
+                assert!((e - want_fj).abs() <= 1e-6 * want_fj,
+                        "{label} k={k}: {e} vs {want_fj}");
+            }
+        }
     }
 }

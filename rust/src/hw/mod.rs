@@ -4,6 +4,15 @@
 //! (arrays) and the Fig. 8-10 series from the gate-level netlists in
 //! [`crate::pe::netlist_builder`] — nothing here copies paper numbers;
 //! the library calibration lives in [`crate::tech`] (one anchor row).
+//!
+//! Power here is **random-activity** power: every netlist is driven with
+//! deterministic random vectors through the incremental activity-replay
+//! API ([`crate::netlist::Stepper`], aggregated by
+//! [`crate::netlist::Netlist::power_uw`]) — the right granularity for
+//! the paper's synthesis-style tables. For *data-dependent* energy at
+//! real workload activity (what the serving stack reports per request),
+//! see [`crate::energy`], which builds its per-MAC model on the same
+//! replay API.
 
 use crate::cells::CellKind;
 use crate::error::{exhaustive_metrics, ErrorMetrics};

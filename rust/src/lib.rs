@@ -23,6 +23,7 @@
 //! | [`tech`]      | 90 nm-class standard-cell library + calibration |
 //! | [`pe`]        | PE functional models ([`pe::word`] bit-plane walk, [`pe::lut`] product-LUT tables) + PE netlist builders |
 //! | [`gemm`]      | cache-blocked (MC×KC×NC, packed-panel) GEMM driver all software backends route through |
+//! | [`energy`]    | data-dependent per-MAC energy model: netlist activity replay + per-design-point [`energy::EnergyLut`] tables the meters read |
 //! | [`systolic`]  | cycle-accurate output-stationary systolic array |
 //! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |
 //! | [`hw`]        | metric composition cell→PE→SA (Tables II-IV, Fig 8) |
@@ -110,6 +111,21 @@
 //! (fuzzed in `tests/prop_equiv.rs`, golden-pinned in
 //! `tests/golden_psnr.rs`: DCT 38.21 dB, edge 30.45 dB — the paper's
 //! headline numbers).
+//!
+//! ## Energy accounting
+//!
+//! Every served request also reports calibrated, **data-dependent**
+//! energy: the [`energy`] subsystem derives a per-MAC energy model
+//! straight from the gate netlists (activity replay through
+//! [`netlist::Stepper`], tabulated per design point in
+//! [`energy::EnergyLut`]) and the execution layers meter with it —
+//! table lookups on the blocked software engines, true netlist replay
+//! on the cycle-accurate systolic backend. See
+//! [`coordinator::GemmResponse::energy_uj`],
+//! [`coordinator::ServiceStats`], the `energy-report` CLI subcommand,
+//! and the "Energy data-flow" section of ARCHITECTURE.md. Metering
+//! observes and never reorders — the bit-identity suites run with it
+//! enabled.
 
 #![warn(missing_docs)]
 
@@ -117,6 +133,7 @@ pub mod apps;
 pub mod bench;
 pub mod cells;
 pub mod coordinator;
+pub mod energy;
 pub mod error;
 pub mod gemm;
 pub mod hw;

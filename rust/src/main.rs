@@ -5,7 +5,7 @@
 //! `axsys help --markdown` emits the README's CLI section verbatim, and
 //! a unit test in this file fails whenever the README copy drifts.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use axsys::apps::image::{psnr, scene, ssim, texture, write_pgm};
 use axsys::coordinator::{AppKind, BackendKind, Coordinator, CoordinatorConfig,
@@ -29,6 +29,7 @@ fn main() {
         "serve" => serve(rest),
         "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
+        "energy-report" => energy_report(rest),
         "bench-report" => bench_report(rest),
         "emit-verilog" => emit_verilog(rest),
         "help" | "--help" | "-h" => {
@@ -82,6 +83,9 @@ const COMMANDS: &[Cmd] = &[
           help: "paper §V PSNR tables: all four cell families x k, served" },
     Cmd { name: "lut-report", args: "",
           help: "product-LUT table sizes per design point" },
+    Cmd { name: "energy-report", args: "[--size S] [--k K] [--out PATH]",
+          help: "array-level energy savings + accuracy-vs-energy scatter \
+                 at real workload activity" },
     Cmd { name: "bench-report",
           args: "[--size S] [--requests R] [--workers W] [--k K] [--out PATH]",
           help: "fixed perf suite -> BENCH_hotpath.json at the repo root" },
@@ -468,6 +472,146 @@ fn lut_report() -> i32 {
     0
 }
 
+/// Default artifact location for `energy-report`: repo root, next to
+/// `BENCH_hotpath.json`.
+fn energy_report_default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("ENERGY_report.json")
+}
+
+/// Regenerate the paper's array-level energy savings table and a
+/// Fig. 9-style accuracy-vs-energy scatter from the per-MAC model at
+/// **real workload activity**: operand streams captured from the DCT and
+/// edge pipelines (exact arithmetic, so every design replays the same
+/// stream) instead of `hw::`'s random vectors. Writes a JSON artifact.
+fn energy_report(rest: &[String]) -> i32 {
+    use axsys::bench::Json;
+    use axsys::energy;
+    use axsys::error::exhaustive_metrics;
+    let size: usize = opt(rest, "--size")
+        .and_then(|v| v.parse().ok()).unwrap_or(64);
+    let k: u32 = opt(rest, "--k").and_then(|v| v.parse().ok()).unwrap_or(7);
+    if size % 8 != 0 || size < 16 || k == 0 || k > 8 {
+        eprintln!("energy-report: --size multiple of 8 >= 16, --k 1..=8");
+        return 2;
+    }
+    let out = opt(rest, "--out").map(PathBuf::from)
+        .unwrap_or_else(energy_report_default_path);
+    println!("energy-report: {size}x{size} DCT+edge workload streams, \
+              approx k={k}, signed 8-bit");
+
+    // operand chains from the real pipelines (one chain per sampled
+    // output element; each design replays the identical stream)
+    let mut chains = energy::dct_workload_chains(size, 160);
+    chains.extend(energy::edge_workload_chains(size, 160));
+    let macs: usize = chains.iter().map(|c| c.len()).sum();
+    println!("  {} operand chains / {} MACs captured from the GEMM streams",
+             chains.len(), macs);
+    // the conventional MACs are stateless: same stream, flattened
+    let flat_a: Vec<i64> = chains.iter().flatten().map(|p| p.0).collect();
+    let flat_b: Vec<i64> = chains.iter().flatten().map(|p| p.1).collect();
+
+    let pe_rows: Vec<(String, f64)> = {
+        let mut rows = vec![
+            ("Exact [6]".to_string(), energy::mean_mac_fj_chains(
+                &Design::conventional_exact(8, Signedness::Signed), &chains)),
+            ("Proposed exact".to_string(), energy::mean_mac_fj_chains(
+                &Design::proposed_exact(8, Signedness::Signed), &chains)),
+        ];
+        for family in Family::ALL {
+            let d = Design::approximate(8, Signedness::Signed, family, k);
+            rows.push((format!("{} approx k={k}", family.paper_label()),
+                       energy::mean_mac_fj_chains(&d, &chains)));
+        }
+        rows
+    };
+    let conv = ("Gemmini MAC [13]".to_string(),
+                energy::conventional_mean_mac_fj(8, false, &flat_a, &flat_b));
+    let hafsa = ("HA-FSA MAC [10]".to_string(),
+                 energy::conventional_mean_mac_fj(8, true, &flat_a, &flat_b));
+    let conv_arr = energy::array_fj_per_cycle(conv.1, 8, 8);
+    let e6_arr = energy::array_fj_per_cycle(pe_rows[0].1, 8, 8);
+
+    println!("== per-MAC energy at workload activity, 8x8 array composition ==");
+    println!("  {:<22} {:>11} {:>16} {:>9} {:>12}", "design", "fJ/MAC",
+             "8x8 fJ/cycle", "vs conv", "vs exact[6]");
+    let mut json_rows = Vec::new();
+    for (label, fj) in pe_rows.iter().chain([&conv, &hafsa]) {
+        let arr = energy::array_fj_per_cycle(*fj, 8, 8);
+        let vs_conv = (1.0 - arr / conv_arr) * 100.0;
+        let vs_e6 = (1.0 - arr / e6_arr) * 100.0;
+        println!("  {label:<22} {fj:>11.3} {arr:>16.1} {vs_conv:>8.1}% \
+                  {vs_e6:>11.1}%");
+        json_rows.push(Json::obj()
+            .set("design", Json::Str(label.clone()))
+            .set("mean_mac_fj", Json::Num(*fj))
+            .set("array8_fj_per_cycle", Json::Num(arr))
+            .set("saving_vs_conventional_pct", Json::Num(vs_conv))
+            .set("saving_vs_exact6_pct", Json::Num(vs_e6)));
+    }
+    let prop_exact = pe_rows[1].1;
+    let prop_apx = pe_rows[2].1;
+    let s_exact =
+        (1.0 - energy::array_fj_per_cycle(prop_exact, 8, 8) / conv_arr) * 100.0;
+    let s_apx =
+        (1.0 - energy::array_fj_per_cycle(prop_apx, 8, 8) / conv_arr) * 100.0;
+    println!("== headline: proposed PEs vs conventional MAC, 8x8 array ==");
+    println!("  exact savings  {s_exact:>5.1}%   (paper: ~22%)");
+    println!("  approx savings {s_apx:>5.1}%   (paper: ~32%, k = N-1; \
+              golden-pinned on a synthetic stream in tests/energy_model.rs)");
+
+    // Fig. 9-style scatter: accuracy (NMED) vs energy per family
+    println!("== accuracy vs energy (k={k}, signed 8-bit) ==");
+    let mut scatter = Vec::new();
+    for family in Family::ALL {
+        let label = format!("{} approx k={k}", family.paper_label());
+        let fj = pe_rows.iter()
+            .find(|(l, _)| *l == label)
+            .map(|(_, fj)| *fj)
+            .unwrap_or_default();
+        let em = exhaustive_metrics(&PeConfig::new(8, true, family, k));
+        println!("  {:<12} {:>8.3} fJ/MAC   NMED {:.4}",
+                 family.paper_label(), fj, em.nmed);
+        scatter.push(Json::obj()
+            .set("family", Json::Str(family.name().into()))
+            .set("mean_mac_fj", Json::Num(fj))
+            .set("nmed", Json::Num(em.nmed)));
+    }
+
+    // cross-check: table aggregation == direct netlist replay, exactly
+    let d2 = Design::approximate(8, Signedness::Signed, Family::Proposed, 2);
+    let elut = energy::cached_design(&d2).expect("k=2 tabulates");
+    let mut rep = energy::Replayer::new(&d2);
+    for c in chains.iter().take(4) {
+        assert_eq!(elut.chain_fj(c), rep.chain_fj(c),
+                   "EnergyLut must equal direct replay exactly");
+    }
+    println!("  [cross-check] EnergyLut == netlist replay on sampled chains");
+
+    let doc = Json::obj()
+        .set("schema", Json::Str("axsys-energy-report/v1".into()))
+        .set("config", Json::obj()
+            .set("size", Json::Int(size as i64))
+            .set("k", Json::Int(k as i64))
+            .set("chains", Json::Int(chains.len() as i64))
+            .set("macs", Json::Int(macs as i64)))
+        .set("designs", Json::Arr(json_rows))
+        .set("headline", Json::obj()
+            .set("exact_saving_vs_conventional_pct", Json::Num(s_exact))
+            .set("approx_saving_vs_conventional_pct", Json::Num(s_apx))
+            .set("paper_exact_pct", Json::Num(22.0))
+            .set("paper_approx_pct", Json::Num(32.0)))
+        .set("accuracy_vs_energy", Json::Arr(scatter));
+    if let Err(e) = std::fs::write(&out, doc.pretty()) {
+        eprintln!("cannot write {}: {e}", out.display());
+        return 1;
+    }
+    println!("  wrote {}", out.display());
+    0
+}
+
 fn serve(rest: &[String]) -> i32 {
     let backend = match opt(rest, "--backend") {
         Some(v) => match BackendKind::parse(&v) {
@@ -540,11 +684,13 @@ fn serve(rest: &[String]) -> i32 {
                  s.lut_macs, s.lut_builds, s.lut_cache_hits);
     }
     if s.sim_cycles > 0 {
-        let d = Design::approximate(8, Signedness::Signed, Family::Proposed, k);
-        let sa_m = axsys::hw::sa_metrics(&d, 8);
-        let energy_uj = s.sim_cycles as f64 * 4.0 * sa_m.power_uw * 1e-9;
-        println!("  simulated: {} cycles, {} MACs, est. energy {:.2} µJ @250MHz",
-                 s.sim_cycles, s.sim_macs, energy_uj);
+        println!("  simulated: {} cycles, {} MACs", s.sim_cycles, s.sim_macs);
+    }
+    if s.metered_macs > 0 {
+        println!("  energy: {:.3} µJ metered ({:.2} fJ/MAC over {} of {} MACs, \
+                  data-dependent model)",
+                 s.total_energy_uj(), s.mean_mac_fj(), s.metered_macs,
+                 s.sim_macs);
     }
     c.shutdown();
     0
@@ -595,6 +741,10 @@ fn serve_apps(c: &Coordinator, kind: AppKind, requests: usize, k: u32) -> i32 {
               {:.2} dB over {} finite samples",
              a.mean_latency_us(), a.max_latency_us, a.mean_psnr_db(),
              a.psnr_samples);
+    if s.metered_macs > 0 {
+        println!("  app energy: {:.3} µJ/image ({:.2} fJ/MAC fleet-wide)",
+                 a.mean_energy_uj(), s.mean_mac_fj());
+    }
     println!("  gemm sub-requests: {} ({} tiles); latency p50 {:.1} µs  \
               p90 {:.1} µs  p99 {:.1} µs",
              a.gemm_requests, s.tiles,
@@ -718,10 +868,10 @@ mod tests {
         // every dispatched command is documented and vice versa
         for name in ["selftest", "hw-report", "error-sweep", "dct", "edge",
                      "cnn", "serve", "apps-report", "lut-report",
-                     "bench-report", "emit-verilog", "help"] {
+                     "energy-report", "bench-report", "emit-verilog", "help"] {
             assert!(COMMANDS.iter().any(|c| c.name == name),
                     "{name} missing from COMMANDS");
         }
-        assert_eq!(COMMANDS.len(), 12, "new commands must be dispatched too");
+        assert_eq!(COMMANDS.len(), 13, "new commands must be dispatched too");
     }
 }

@@ -7,6 +7,14 @@
 //! pass; static timing is the longest weighted path; dynamic power is
 //! per-gate toggle counting over simulated vector streams (the same
 //! first-order `α·C·V²·f` model synthesis power tools report).
+//!
+//! Activity replay is incremental: a [`Stepper`] feeds input vectors one
+//! at a time and returns the *per-step* switched energy in femtojoules
+//! (per-gate library energy for every toggled net, plus the register
+//! clocking term), so callers can attribute energy to individual cycles
+//! instead of only aggregate power. [`Netlist::power_uw`] is a thin
+//! aggregation over the stepper, and the data-dependent per-MAC model in
+//! [`crate::energy`] is built entirely on this API (DESIGN.md §4).
 
 pub mod verilog;
 
@@ -166,9 +174,10 @@ impl Netlist {
 
     // -- evaluation ---------------------------------------------------
 
-    /// Evaluate on one input vector; `values` is scratch storage reused
-    /// across calls (resized as needed). Returns output bits.
-    pub fn eval_into(&self, inputs: &[u8], values: &mut Vec<u8>) -> Vec<u8> {
+    /// Evaluate one input vector into `values` (one entry per gate, in
+    /// gate order) without collecting outputs — the core shared by
+    /// [`Self::eval_into`] and the activity [`Stepper`].
+    pub fn eval_values(&self, inputs: &[u8], values: &mut Vec<u8>) {
         assert_eq!(inputs.len(), self.inputs.len(), "{}", self.name);
         values.clear();
         values.reserve(self.gates.len());
@@ -201,7 +210,81 @@ impl Netlist {
             };
             values.push(v);
         }
+    }
+
+    /// Evaluate on one input vector; `values` is scratch storage reused
+    /// across calls (resized as needed). Returns output bits.
+    pub fn eval_into(&self, inputs: &[u8], values: &mut Vec<u8>) -> Vec<u8> {
+        self.eval_values(inputs, values);
         self.outputs.iter().map(|&o| values[o as usize]).collect()
+    }
+
+    /// 64-lane bit-parallel evaluation: every input (and every resulting
+    /// gate value) is a `u64` mask carrying one boolean per lane, and
+    /// one pass evaluates 64 independent input vectors at once — all
+    /// primitives are bitwise, so lanes cannot interact. This is the
+    /// workhorse behind the [`crate::energy::EnergyLut`] build (millions
+    /// of frames per design point); lane `l` of every value equals the
+    /// scalar [`Self::eval_values`] result on lane `l`'s inputs (tested).
+    pub fn eval_values64(&self, inputs: &[u64], values: &mut Vec<u64>) {
+        assert_eq!(inputs.len(), self.inputs.len(), "{}", self.name);
+        values.clear();
+        values.reserve(self.gates.len());
+        let mut in_iter = 0usize;
+        for g in &self.gates {
+            let v = match g.kind {
+                GateKind::Input => {
+                    let v = inputs[in_iter];
+                    in_iter += 1;
+                    v
+                }
+                GateKind::Const0 => 0,
+                GateKind::Const1 => u64::MAX,
+                _ => {
+                    let a = values[g.ins[0] as usize];
+                    let b = if g.ins[1] == NONE { 0 } else { values[g.ins[1] as usize] };
+                    let c = if g.ins[2] == NONE { 0 } else { values[g.ins[2] as usize] };
+                    match g.kind {
+                        GateKind::Inv => !a,
+                        GateKind::And2 => a & b,
+                        GateKind::Or2 => a | b,
+                        GateKind::Nand2 => !(a & b),
+                        GateKind::Nor2 => !(a | b),
+                        GateKind::Xor2 => a ^ b,
+                        GateKind::Xnor2 => !(a ^ b),
+                        GateKind::Maj3 => (a & b) | (a & c) | (b & c),
+                        _ => unreachable!(),
+                    }
+                }
+            };
+            values.push(v);
+        }
+    }
+
+    /// Switched energy between two gate-value frames (as produced by
+    /// [`Self::eval_values`]): the calibrated per-gate energy of every
+    /// toggled net plus the register clocking term (half the DFFs toggle
+    /// per cycle — the same convention [`Self::power_uw`] uses).
+    /// Returns `(energy in fJ, toggled nets)`.
+    pub fn frame_energy(&self, prev: &[u8], cur: &[u8]) -> (f64, u64) {
+        debug_assert_eq!(prev.len(), self.gates.len());
+        debug_assert_eq!(cur.len(), self.gates.len());
+        let lib = tech::LIB;
+        let mut energy_fj = 0f64;
+        let mut toggles = 0u64;
+        for (i, g) in self.gates.iter().enumerate() {
+            if cur[i] != prev[i] {
+                toggles += 1;
+                energy_fj += lib.energy_fj(g.kind);
+            }
+        }
+        energy_fj += self.dffs as f64 * lib.dff_energy_fj * 0.5;
+        (energy_fj, toggles)
+    }
+
+    /// Start an incremental activity replay over this netlist.
+    pub fn stepper(&self) -> Stepper<'_> {
+        Stepper { nl: self, prev: Vec::new(), cur: Vec::new() }
     }
 
     /// Evaluate on one input vector with fresh scratch (convenience
@@ -240,32 +323,19 @@ impl Netlist {
     }
 
     /// Simulate `vectors` consecutive input vectors and return
-    /// (dynamic+leakage power in µW, total toggles).
+    /// (dynamic+leakage power in µW, total toggles). A thin aggregation
+    /// over the per-step [`Stepper`] replay.
     ///
     /// `period_ns` is the clock period (paper Table IV runs at 250 MHz).
     pub fn power_uw(&self, vectors: &[Vec<u8>], period_ns: f64) -> (f64, u64) {
         let lib = tech::LIB;
-        let mut prev: Vec<u8> = Vec::new();
-        let mut scratch = Vec::new();
+        let mut st = self.stepper();
         let mut energy_fj = 0f64;
         let mut toggles = 0u64;
-        let mut all = vec![0u8; 0];
         for v in vectors {
-            self.eval_into(v, &mut scratch);
-            all.clear();
-            all.extend_from_slice(&scratch);
-            if !prev.is_empty() {
-                for (i, g) in self.gates.iter().enumerate() {
-                    if all[i] != prev[i] {
-                        toggles += 1;
-                        energy_fj += lib.energy_fj(g.kind);
-                    }
-                }
-                // register clock + data activity (approx: half the DFFs
-                // toggle per cycle on random data)
-                energy_fj += self.dffs as f64 * lib.dff_energy_fj * 0.5;
-            }
-            std::mem::swap(&mut prev, &mut all);
+            let (e, t) = st.step(v);
+            energy_fj += e;
+            toggles += t;
         }
         let cycles = (vectors.len().max(2) - 1) as f64;
         let leak_uw = self.gates.iter().map(|g| lib.leak_nw(g.kind)).sum::<f64>()
@@ -274,6 +344,62 @@ impl Netlist {
         // 1 fJ per 1 ns == 1e-15 J / 1e-9 s == 1e-6 W == 1 µW
         let dyn_uw = energy_fj / (cycles * period_ns);
         (dyn_uw + leak_uw, toggles)
+    }
+}
+
+/// Incremental activity replay over one [`Netlist`]: feed input vectors
+/// one at a time, get back the switched energy of each step.
+///
+/// The first step only establishes the activity baseline (it returns
+/// zero energy, exactly like the first vector of [`Netlist::power_uw`]);
+/// every later step returns the calibrated switched energy of the
+/// transition from the previous frame (gate toggles + register
+/// clocking). [`Stepper::snapshot`] / [`Stepper::restore`] save and
+/// re-establish a baseline in O(gates), which is what lets
+/// [`crate::energy`] tabulate millions of transitions *from the same
+/// quiescent frame* without re-evaluating it each time.
+pub struct Stepper<'a> {
+    nl: &'a Netlist,
+    /// Gate values of the current baseline frame (empty before the
+    /// first step).
+    prev: Vec<u8>,
+    cur: Vec<u8>,
+}
+
+impl Stepper<'_> {
+    /// Evaluate `inputs` and return `(switched energy fJ, toggled nets)`
+    /// relative to the previous frame; the evaluated frame becomes the
+    /// new baseline. The first step returns `(0.0, 0)`.
+    pub fn step(&mut self, inputs: &[u8]) -> (f64, u64) {
+        self.nl.eval_values(inputs, &mut self.cur);
+        if self.prev.is_empty() {
+            std::mem::swap(&mut self.prev, &mut self.cur);
+            return (0.0, 0);
+        }
+        let (energy_fj, toggles) = self.nl.frame_energy(&self.prev, &self.cur);
+        std::mem::swap(&mut self.prev, &mut self.cur);
+        (energy_fj, toggles)
+    }
+
+    /// Opaque snapshot of the current baseline frame's gate values.
+    pub fn snapshot(&self) -> Vec<u8> {
+        self.prev.clone()
+    }
+
+    /// Re-establish a previously snapshotted baseline (O(gates) copy,
+    /// no energy accounted).
+    pub fn restore(&mut self, snap: &[u8]) {
+        self.prev.clear();
+        self.prev.extend_from_slice(snap);
+    }
+
+    /// Output bits of the current baseline frame (empty before the
+    /// first step).
+    pub fn outputs(&self) -> Vec<u8> {
+        if self.prev.is_empty() {
+            return Vec::new();
+        }
+        self.nl.outputs.iter().map(|&o| self.prev[o as usize]).collect()
     }
 }
 
@@ -367,5 +493,89 @@ mod tests {
     fn random_vectors_deterministic() {
         assert_eq!(random_vectors(8, 10, 1), random_vectors(8, 10, 1));
         assert_ne!(random_vectors(8, 10, 1), random_vectors(8, 10, 2));
+    }
+
+    #[test]
+    fn bit_parallel_eval_matches_scalar_lanes() {
+        // one 64-lane evaluation == 64 scalar evaluations, every gate
+        let mut nl = Netlist::new("lanes");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let (fc, fs) = nl.full_adder(a, b, c);
+        let m = nl.maj3(a, b, fs);
+        let x = nl.xnor2(fc, m);
+        let i = nl.inv(x);
+        let nr = nl.nor2(i, fs);
+        nl.mark_output(nr);
+        // lane l gets inputs (l&1, (l>>1)&1, (l>>2)&1), repeating
+        let lane_inputs = [0xAAAA_AAAA_AAAA_AAAAu64,
+                           0xCCCC_CCCC_CCCC_CCCC,
+                           0xF0F0_F0F0_F0F0_F0F0];
+        let mut v64 = Vec::new();
+        nl.eval_values64(&lane_inputs, &mut v64);
+        let mut v8 = Vec::new();
+        for l in 0..64u64 {
+            let inp = [(l & 1) as u8, ((l >> 1) & 1) as u8,
+                       ((l >> 2) & 1) as u8];
+            nl.eval_values(&inp, &mut v8);
+            for (g, &w) in v64.iter().enumerate() {
+                assert_eq!(((w >> l) & 1) as u8, v8[g], "gate {g} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn stepper_aggregates_to_power_uw() {
+        // power_uw is defined as an aggregation over the stepper; the
+        // per-step energies must reproduce its dynamic-energy total and
+        // toggle count exactly
+        let mut nl = Netlist::new("agg");
+        let a = nl.input();
+        let b = nl.input();
+        let (c, s) = nl.full_adder(a, b, a);
+        nl.mark_output(c);
+        nl.mark_output(s);
+        nl.add_dffs(3);
+        let vecs = random_vectors(2, 150, 11);
+        let mut st = nl.stepper();
+        let mut energy = 0.0;
+        let mut toggles = 0u64;
+        for v in &vecs {
+            let (e, t) = st.step(v);
+            energy += e;
+            toggles += t;
+        }
+        let (p, t) = nl.power_uw(&vecs, 4.0);
+        assert_eq!(toggles, t);
+        let lib = tech::LIB;
+        let leak = nl.gates.iter().map(|g| lib.leak_nw(g.kind)).sum::<f64>()
+            / 1000.0 + nl.dffs as f64 * lib.dff_leak_nw / 1000.0;
+        let dyn_uw = energy / ((vecs.len() - 1) as f64 * 4.0);
+        assert!((p - (dyn_uw + leak)).abs() < 1e-12, "{p} vs {}", dyn_uw + leak);
+    }
+
+    #[test]
+    fn stepper_first_step_is_free_and_restore_rebaselines() {
+        let mut nl = Netlist::new("rz");
+        let a = nl.input();
+        let b = nl.input();
+        let (c, s) = nl.half_adder(a, b);
+        nl.mark_output(c);
+        nl.mark_output(s);
+        let mut st = nl.stepper();
+        assert_eq!(st.step(&[0, 0]), (0.0, 0), "baseline step is free");
+        let quiet = st.snapshot();
+        let (e1, t1) = st.step(&[1, 1]);
+        assert!(e1 > 0.0 && t1 > 0);
+        assert_eq!(st.outputs(), vec![1, 0]);
+        // restoring the quiescent baseline makes the same transition
+        // cost the same energy again (the EnergyLut build pattern)
+        st.restore(&quiet);
+        let (e2, t2) = st.step(&[1, 1]);
+        assert_eq!((e1, t1), (e2, t2));
+        // without the restore, 1,1 -> 1,1 switches nothing
+        let (e3, t3) = st.step(&[1, 1]);
+        assert_eq!((e3, t3), (0.0, 0));
     }
 }

@@ -57,6 +57,11 @@ pub struct ProductLut {
     /// packs `err` (i16, high half) and the successor state index (u16,
     /// low half). Empty when `k == 0` (the PE is exact and stateless).
     trans: Vec<u32>,
+    /// Carry-save window value `(s_lo, kc_lo)` of each automaton state
+    /// (index-aligned with the transition table; `[(0, 0)]` when exact).
+    /// The energy subsystem embeds these windows into netlist frames, so
+    /// its tables share this automaton's state indices by construction.
+    win: Vec<(u64, u64)>,
     n_states: usize,
     /// Approximate-window width in bits (== `cfg.k`).
     kb: u32,
@@ -88,7 +93,7 @@ impl ProductLut {
         }
         if cfg.k == 0 {
             return Some(ProductLut { cfg: *cfg, prod, trans: Vec::new(),
-                                     n_states: 1, kb: 0 });
+                                     win: vec![(0, 0)], n_states: 1, kb: 0 });
         }
 
         // Discover the reachable window states breadth-first from the
@@ -136,12 +141,24 @@ impl ProductLut {
             }
             next_state += 1;
         }
-        Some(ProductLut { cfg: *cfg, prod, trans, n_states: states.len(), kb })
+        let n_states = states.len();
+        Some(ProductLut { cfg: *cfg, prod, trans, win: states, n_states, kb })
     }
 
     /// Number of reachable approximate-window states (1 when exact).
     pub fn states(&self) -> usize {
         self.n_states
+    }
+
+    /// Carry-save window value `(s_lo, kc_lo)` of automaton state `i`.
+    pub(crate) fn state_window(&self, i: usize) -> (u64, u64) {
+        self.win[i]
+    }
+
+    /// Successor state index for `(state, (a_lo << k) | b_lo)`. Only
+    /// valid when `cfg.k > 0` (the exact automaton has no transitions).
+    pub(crate) fn next_state(&self, state: usize, key: usize) -> usize {
+        (self.trans_entry(state, key) & 0xFFFF) as usize
     }
 
     /// Approximate-window width in bits (`== cfg.k` for compiled points).

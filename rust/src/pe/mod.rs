@@ -67,6 +67,20 @@ impl Design {
         Self::approximate(n, signed, family, n - 1)
     }
 
+    /// Design point matching a runtime [`PeConfig`], assuming the
+    /// paper's optimized exact cells (the serving default — exact cells
+    /// are functionally identical, so `PeConfig` does not distinguish
+    /// them; hardware metrics and energy tables do).
+    pub fn from_pe_config(cfg: &PeConfig) -> Self {
+        Design {
+            n: cfg.n,
+            signed: if cfg.signed { Signedness::Signed } else { Signedness::Unsigned },
+            family: cfg.family,
+            k: cfg.k,
+            optimized_exact: true,
+        }
+    }
+
     /// Whether this design uses the signed (Baugh-Wooley) grid.
     pub fn is_signed(&self) -> bool {
         self.signed == Signedness::Signed

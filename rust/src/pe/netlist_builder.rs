@@ -487,7 +487,7 @@ mod tests {
         // The fused grid stays carry-save per cycle; the conventional MAC
         // resolves a full CPA every cycle — the paper's Table III shows
         // this as a >2x delay and >60% PADP gap (our area ordering
-        // deviates slightly: EXPERIMENTS.md §Deviations).
+        // deviates slightly: DESIGN.md §6).
         let pe = pe_netlists(&Design::proposed_exact(8, Signedness::Signed), 24);
         let mac = conventional_mac_netlist(8, 24, false);
         assert!(mac.critical_path_ps() > 1.5 * pe.grid.critical_path_ps());

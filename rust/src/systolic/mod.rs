@@ -7,7 +7,10 @@
 //! `size x size` GEMM with K = size the full result is available after
 //! `3*size - 2` cycles (the latency formula of \[11\], verified in tests).
 
+use crate::energy::Replayer;
 use crate::pe::word::{Pe, PeConfig};
+use crate::pe::Design;
+use crate::tech::PERIOD_NS_250MHZ;
 
 /// Execution statistics for one GEMM (or one tile stream).
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,6 +25,13 @@ pub struct SaStats {
     pub toggles: u64,
     /// Number of (rows x cols) output tiles processed.
     pub tiles: u64,
+    /// Modeled data-dependent energy of the metered MACs, femtojoules
+    /// (the canonical per-MAC model of [`crate::energy`]; 0.0 when
+    /// unmetered).
+    pub energy_fj: f64,
+    /// MAC operations covered by an energy meter (`== macs` when the
+    /// request was fully metered; 0 when the backend has no meter).
+    pub metered_macs: u64,
 }
 
 impl SaStats {
@@ -37,6 +47,30 @@ impl SaStats {
         self.macs += other.macs;
         self.toggles += other.toggles;
         self.tiles += other.tiles;
+        self.energy_fj += other.energy_fj;
+        self.metered_macs += other.metered_macs;
+    }
+
+    /// Metered energy in microjoules.
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_fj * 1e-9
+    }
+
+    /// Mean modeled power (µW) at the paper's 250 MHz clock: metered
+    /// energy over the simulated cycle count when available (systolic
+    /// backend), else over MAC-serialized single-PE time (one MAC per
+    /// cycle — the software engines have no cycle notion).
+    pub fn avg_power_uw(&self) -> f64 {
+        let cycles = if self.total_cycles() > 0 {
+            self.total_cycles()
+        } else {
+            self.macs
+        };
+        if cycles == 0 {
+            return 0.0;
+        }
+        // 1 fJ per 1 ns == 1 µW
+        self.energy_fj / (cycles as f64 * PERIOD_NS_250MHZ)
     }
 }
 
@@ -52,6 +86,8 @@ pub struct Systolic {
     // operand registers between PEs (index [i][j])
     a_reg: Vec<Option<u64>>,
     b_reg: Vec<Option<u64>>,
+    /// Optional gate-level energy meter (see [`Self::enable_meter`]).
+    meter: Option<Replayer>,
 }
 
 impl Systolic {
@@ -64,12 +100,26 @@ impl Systolic {
             pes: vec![Pe::new(cfg); rows * cols],
             a_reg: vec![None; rows * cols],
             b_reg: vec![None; rows * cols],
+            meter: None,
         }
     }
 
     /// Square `size x size` array (the paper's geometry).
     pub fn square(cfg: PeConfig, size: usize) -> Self {
         Self::new(cfg, size, size)
+    }
+
+    /// Enable the gate-level activity meter: every MAC replays the PE's
+    /// grid netlist (the canonical frame of [`crate::energy`]) and its
+    /// switched energy lands in [`SaStats::energy_fj`]. This is the
+    /// ground-truth cross-check for the table-driven meters — direct
+    /// netlist evaluation at real request activity — and it works for
+    /// any buildable design point (no table-size limit). It adds
+    /// roughly an order of magnitude on top of the already
+    /// cycle-accurate simulation, which is why it is opt-in: the
+    /// coordinator's systolic workers opt in, the fuzz suites do not.
+    pub fn enable_meter(&mut self) {
+        self.meter = Some(Replayer::new(&Design::from_pe_config(&self.cfg)));
     }
 
     fn clear(&mut self) {
@@ -121,6 +171,17 @@ impl Systolic {
                 for j in 0..self.cols {
                     if let (Some(a), Some(b)) = (self.a_reg[i * self.cols + j],
                                                  self.b_reg[i * self.cols + j]) {
+                        if self.meter.is_some() {
+                            // charge the canonical frame's gate energy
+                            // against the PE's pre-MAC rails
+                            let (ps, pk) = {
+                                let pe = &self.pes[i * self.cols + j];
+                                (pe.s, pe.k)
+                            };
+                            let m = self.meter.as_mut().unwrap();
+                            stats.energy_fj += m.mac_fj(a, b, ps, pk);
+                            stats.metered_macs += 1;
+                        }
                         self.pes[i * self.cols + j].mac(a, b);
                     }
                 }
@@ -269,6 +330,24 @@ mod tests {
         assert_eq!(st.tiles, 4);
         assert_eq!(st.macs, 4 * 16 * 4); // tiles * PEs * K
         assert!(st.toggles > 0);
+    }
+
+    #[test]
+    fn meter_charges_every_mac_without_changing_bits() {
+        let (m, kk, nn) = (6usize, 7usize, 5usize);
+        let a = ints(11, m * kk);
+        let b = ints(12, kk * nn);
+        let c = cfg(3);
+        let (want, st0) = Systolic::new(c, 4, 4).gemm(&a, &b, m, kk, nn);
+        assert_eq!(st0.energy_fj, 0.0, "unmetered array charges nothing");
+        assert_eq!(st0.metered_macs, 0);
+        let mut sa = Systolic::new(c, 4, 4);
+        sa.enable_meter();
+        let (got, st) = sa.gemm(&a, &b, m, kk, nn);
+        assert_eq!(got, want, "metering must not change bits");
+        assert_eq!(st.metered_macs, st.macs, "full coverage");
+        assert!(st.energy_fj > 0.0);
+        assert!(st.energy_uj() > 0.0 && st.avg_power_uw() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Energy-subsystem consistency + golden tests (DESIGN.md §4).
+//!
+//! * **Consistency:** for random operand streams across all four cell
+//!   families × signedness × k, `EnergyLut` aggregation equals direct
+//!   netlist activity-replay energy **exactly** (same f64 values, same
+//!   order), and the systolic-sim meter (netlist replay per MAC) agrees
+//!   with the blocked-GEMM meters (table lookups) on identical requests.
+//! * **Golden:** the 8×8 array-level energy savings of the proposed
+//!   exact and approximate PEs vs the conventional-MAC baseline,
+//!   computed through the per-MAC model on a fixed synthetic stream,
+//!   reproduce the oracle-pinned values (Python port of the netlist +
+//!   library, differentially validated against the word model) — the
+//!   model's rendition of the paper's ~22% / ~32% headline.
+
+use axsys::bench::xorshift_ints as ints;
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
+use axsys::energy::{self, EnergyLut, Replayer};
+use axsys::gemm::BlockedGemm;
+use axsys::pe::lut;
+use axsys::pe::word::PeConfig;
+use axsys::pe::{Design, Signedness};
+use axsys::systolic::Systolic;
+use axsys::Family;
+
+fn chain(seed: u64, len: usize) -> Vec<(i64, i64)> {
+    ints(seed, len).into_iter().zip(ints(seed ^ 0xDEAD, len)).collect()
+}
+
+fn close(a: f64, b: f64, rel: f64) -> bool {
+    (a - b).abs() <= rel * a.abs().max(b.abs()).max(1e-12)
+}
+
+#[test]
+fn lut_aggregation_equals_replay_exactly_all_families() {
+    // n = 4: every family × signedness × k, tiny tables, exhaustive-ish
+    for family in Family::ALL {
+        for signed in [Signedness::Signed, Signedness::Unsigned] {
+            for k in [0u32, 1, 2, 3, 4] {
+                let d = Design { n: 4, signed, family, k,
+                                 optimized_exact: true };
+                let elut = EnergyLut::try_build(&d).expect("4-bit builds");
+                let mut rep = Replayer::new(&d);
+                for seed in [7u64, 19, 311] {
+                    let ops = chain(seed.wrapping_mul(k as u64 + 1), 48);
+                    assert_eq!(elut.chain_fj(&ops), rep.chain_fj(&ops),
+                               "{family:?} {signed:?} k={k} seed={seed}");
+                }
+            }
+        }
+    }
+    // n = 8 spot checks (bigger tables; exactness must still be bit-level)
+    for (family, signed, k) in [(Family::Proposed, true, 2u32),
+                                (Family::Nano6, false, 2)] {
+        let d = Design {
+            n: 8,
+            signed: if signed { Signedness::Signed } else { Signedness::Unsigned },
+            family, k, optimized_exact: true,
+        };
+        let elut = energy::cached_design(&d).expect("8-bit builds");
+        let mut rep = Replayer::new(&d);
+        let ops = chain(0xC0FFEE ^ k as u64, 200);
+        assert_eq!(elut.chain_fj(&ops), rep.chain_fj(&ops),
+                   "{family:?} signed={signed} k={k}");
+    }
+}
+
+#[test]
+fn blocked_meters_agree_with_systolic_replay_meter() {
+    // same request, three independent meters: the lut kernel walks the
+    // automaton, the word kernel recovers states from live rails, the
+    // systolic array replays the netlist gate by gate — all must charge
+    // the same energy (tolerance: cross-element f64 summation order).
+    // The shape tiles the 4x4 array evenly: ragged tiles would add
+    // zero-operand padding MACs that only the systolic meter sees.
+    let (m, kk, nn) = (12usize, 10usize, 8usize);
+    let a = ints(41, m * kk);
+    let b = ints(42, kk * nn);
+    for k in [0u32, 3] {
+        let cfg = PeConfig::new(8, true, Family::Proposed, k);
+        let elut = energy::cached(&cfg).expect("tabulable");
+        let plut = lut::cached(&cfg).expect("compilable");
+        let mut eng = BlockedGemm::default();
+        eng.set_meter(Some(elut.clone()));
+        let out_lut = eng.matmul_lut(&plut, &a, &b, m, kk, nn);
+        let e_lut = eng.take_energy_fj();
+        let out_word = eng.matmul_word(&cfg, &a, &b, m, kk, nn);
+        let e_word = eng.take_energy_fj();
+        let mut sa = Systolic::square(cfg, 4);
+        sa.enable_meter();
+        let (out_sa, st) = sa.gemm(&a, &b, m, kk, nn);
+        assert_eq!(out_lut, out_word, "k={k}");
+        assert_eq!(out_lut, out_sa, "k={k}");
+        assert_eq!(st.metered_macs, st.macs);
+        assert!(e_lut > 0.0);
+        assert!(close(e_lut, e_word, 1e-9), "k={k}: {e_lut} vs {e_word}");
+        assert!(close(e_lut, st.energy_fj, 1e-9),
+                "k={k}: blocked {e_lut} vs systolic {}", st.energy_fj);
+    }
+}
+
+#[test]
+fn served_energy_is_backend_independent_and_fully_covered() {
+    let (m, kk, nn) = (16usize, 8usize, 16usize);
+    let a = ints(51, m * kk);
+    let b = ints(52, kk * nn);
+    let mut energies = Vec::new();
+    for backend in [BackendKind::Lut, BackendKind::Word,
+                    BackendKind::Systolic] {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 3, backend, ..Default::default()
+        });
+        let resp = c.call(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn, k: 2,
+        });
+        assert_eq!(resp.sa_stats.metered_macs, resp.sa_stats.macs,
+                   "{backend:?}: full meter coverage");
+        assert!(resp.energy_uj() > 0.0, "{backend:?}");
+        energies.push((backend, resp.sa_stats.energy_fj));
+        let s = c.stats();
+        assert!(close(s.energy_fj, resp.sa_stats.energy_fj, 1e-12),
+                "{backend:?}: fleet total");
+        c.shutdown();
+    }
+    // identical per-MAC model behind every backend (the systolic path
+    // pads ragged tiles with zero-operand MACs; this shape tiles evenly,
+    // so all three meter exactly the same MAC population)
+    let (b0, e0) = energies[0];
+    for &(bk, e) in &energies[1..] {
+        assert!(close(e0, e, 1e-9), "{b0:?} {e0} vs {bk:?} {e}");
+    }
+}
+
+#[test]
+fn wide_design_points_serve_unmetered_but_correct() {
+    // n = 16 has no energy table: the word backend must still serve the
+    // request (bit-correct), just with zero meter coverage
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        backend: BackendKind::Word,
+        n_bits: 16,
+        ..Default::default()
+    });
+    let (m, kk, nn) = (9usize, 6usize, 7usize);
+    let a = ints(61, m * kk);
+    let b = ints(62, kk * nn);
+    let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 3 });
+    let cfg = PeConfig::new(16, true, Family::Proposed, 3);
+    // reference through the same tiling the coordinator applies
+    let mut want = vec![0i64; m * nn];
+    for ti in (0..m).step_by(8) {
+        for tj in (0..nn).step_by(8) {
+            let th = (m - ti).min(8);
+            let tw = (nn - tj).min(8);
+            let ap: Vec<i64> = (0..th)
+                .flat_map(|i| a[(ti + i) * kk..(ti + i + 1) * kk].to_vec())
+                .collect();
+            let bp: Vec<i64> = (0..kk)
+                .flat_map(|t| b[t * nn + tj..t * nn + tj + tw].to_vec())
+                .collect();
+            let tile = axsys::pe::word::matmul(&cfg, &ap, &bp, th, kk, tw);
+            for i in 0..th {
+                for j in 0..tw {
+                    want[(ti + i) * nn + tj + j] = tile[i * tw + j];
+                }
+            }
+        }
+    }
+    assert_eq!(resp.out, want);
+    assert_eq!(resp.sa_stats.metered_macs, 0, "no table for n = 16");
+    assert_eq!(resp.energy_uj(), 0.0);
+    c.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Golden numbers — oracle-pinned (Python port of netlist + library;
+// see DESIGN.md §4 for derivation and the deviation discussion).
+// ---------------------------------------------------------------------
+
+/// The fixed synthetic stream behind the goldens: 4096 signed-8-bit
+/// MACs replayed as 64 chains of 64.
+fn golden_stream() -> (Vec<i64>, Vec<i64>) {
+    (ints(0xE7E5, 4096), ints(0x1A7B, 4096))
+}
+
+#[test]
+fn golden_mean_mac_energies() {
+    let (a, b) = golden_stream();
+    for (label, d, want) in [
+        ("exact [6]",
+         Design::conventional_exact(8, Signedness::Signed), 55.136053455),
+        ("proposed exact",
+         Design::proposed_exact(8, Signedness::Signed), 50.520325745),
+        ("proposed approx k=7",
+         Design::approximate_default(8, Signedness::Signed, Family::Proposed),
+         45.496647502),
+    ] {
+        let got = energy::mean_mac_fj(&d, &a, &b, 64);
+        assert!(close(got, want, 1e-6), "{label}: {got} vs oracle {want}");
+    }
+    let conv = energy::conventional_mean_mac_fj(8, false, &a, &b);
+    assert!(close(conv, 69.680298499, 1e-6), "gemmini MAC: {conv}");
+    let hafsa = energy::conventional_mean_mac_fj(8, true, &a, &b);
+    assert!(close(hafsa, 72.669358569, 1e-6), "HA-FSA MAC: {hafsa}");
+}
+
+#[test]
+fn golden_array_savings_reproduce_paper_headline() {
+    // paper: the proposed 8-bit exact and approximate PEs in an 8x8
+    // array save ~22% and ~32% energy vs the existing design. Through
+    // the per-MAC model the savings vs the conventional-MAC baseline
+    // land at 26.73% / 33.74% (oracle-pinned; the exact-PE saving
+    // overshoots the paper by ~5 points — DESIGN.md §6 discusses why).
+    let (a, b) = golden_stream();
+    let e6 = energy::mean_mac_fj(
+        &Design::conventional_exact(8, Signedness::Signed), &a, &b, 64);
+    let pe = energy::mean_mac_fj(
+        &Design::proposed_exact(8, Signedness::Signed), &a, &b, 64);
+    let pa = energy::mean_mac_fj(
+        &Design::approximate_default(8, Signedness::Signed, Family::Proposed),
+        &a, &b, 64);
+    let conv = energy::conventional_mean_mac_fj(8, false, &a, &b);
+    // orderings first: approx < exact < exact [6] < conventional MAC
+    assert!(pa < pe, "approx PE must be cheaper than exact: {pa} vs {pe}");
+    assert!(pe < e6, "proposed exact must beat exact [6]: {pe} vs {e6}");
+    assert!(e6 < conv, "fused PEs must beat the conventional MAC: {e6} vs {conv}");
+    let arr = |fj| energy::array_fj_per_cycle(fj, 8, 8);
+    let s_exact = 1.0 - arr(pe) / arr(conv);
+    let s_apx = 1.0 - arr(pa) / arr(conv);
+    // oracle-pinned band
+    assert!((s_exact - 0.267291).abs() < 1.5e-3,
+            "exact 8x8 saving drifted: {s_exact}");
+    assert!((s_apx - 0.337374).abs() < 1.5e-3,
+            "approx 8x8 saving drifted: {s_apx}");
+    // and the paper-ballpark band the reproduction must stay inside
+    assert!((0.15..=0.45).contains(&s_exact), "{s_exact}");
+    assert!((0.15..=0.45).contains(&s_apx), "{s_apx}");
+    assert!(s_apx > s_exact, "approximation must increase the saving");
+}
+
+#[test]
+fn golden_energy_decreases_with_k() {
+    // more approximate columns -> less switched energy, monotonically
+    let a = ints(0xA11CE, 512);
+    let b = ints(0xB0B, 512);
+    let want = [(0u32, 50.729141), (2, 50.364719), (4, 49.133676),
+                (6, 47.019692), (8, 44.342738)];
+    let mut prev = f64::INFINITY;
+    for (k, oracle) in want {
+        let d = Design::approximate(8, Signedness::Signed,
+                                    Family::Proposed, k);
+        let got = energy::mean_mac_fj(&d, &a, &b, 32);
+        assert!(close(got, oracle, 1e-5), "k={k}: {got} vs {oracle}");
+        assert!(got < prev, "k={k}: {got} !< {prev}");
+        prev = got;
+    }
+}
