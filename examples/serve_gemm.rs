@@ -53,7 +53,7 @@ fn run_fleet(backend: BackendKind, workers: usize, requests: usize, k: u32)
         .map(|id| coord.wait(id).latency_us).collect();
     let wall = t0.elapsed().as_secs_f64();
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let stats = coord.stats();
+    let stats = coord.stats_snapshot();
     coord.shutdown();
     (wall, lats, stats)
 }

@@ -180,7 +180,7 @@ fn main() {
     });
     println!("    -> {:.2} Mpix/s served (each call includes the exact \
               reference pass)", (256.0 * 256.0) / ea.median_ns * 1e3);
-    let sa_stats = coord_apps.stats();
+    let sa_stats = coord_apps.stats_snapshot();
     println!("    -> app stats: dct {} reqs (mean PSNR {:.2} dB), edge {} \
               reqs (mean {:.2} dB); gemm p50 {:.1} µs p99 {:.1} µs",
              sa_stats.dct.requests, sa_stats.dct.mean_psnr_db(),

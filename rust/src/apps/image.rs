@@ -3,8 +3,14 @@
 //! SSIM quality metrics. The checked-in golden images under
 //! `rust/tests/data/*.pgm` (oracle-tuned to the paper's §V headline
 //! PSNRs) are read back through [`read_pgm`].
+//!
+//! PGM decoding is exposed as [`decode_pgm`] with the typed
+//! [`PgmError`]: application images arrive **over the wire** as inline
+//! PGM payloads (see [`crate::net`]), so every malformed header,
+//! truncated payload or oversized dimension must surface as a
+//! structured error reply — never a panic in a server thread.
 
-use std::io::{Read, Write};
+use std::fmt;
 use std::path::Path;
 
 /// Grayscale image, row-major u8.
@@ -103,26 +109,88 @@ pub fn texture(h: usize, w: usize, seed: u64) -> Image {
     img
 }
 
-/// Binary PGM (P5) writer.
+/// Largest accepted PGM dimension per side: refuses pathological
+/// headers (e.g. arriving over the network) before any allocation.
+pub const MAX_PGM_DIM: usize = 4096;
+
+/// Why a PGM payload failed to decode. Typed so remote callers get a
+/// structured error reply (the wire path feeds untrusted bytes straight
+/// into [`decode_pgm`]) instead of a panic or a stringly error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PgmError {
+    /// Missing or wrong `P5` signature (only binary PGM is supported).
+    BadMagic,
+    /// Header ended before width, height and maxval were all present.
+    TruncatedHeader,
+    /// Width or height is not a positive decimal integer.
+    BadDimension,
+    /// Width or height exceeds [`MAX_PGM_DIM`] (refused pre-allocation).
+    Oversized,
+    /// Maxval other than 255 (only 8-bit pixels are supported).
+    UnsupportedMaxval,
+    /// Pixel payload shorter than the `w * h` bytes the header promised.
+    TruncatedPayload {
+        /// Bytes the header promised (`w * h`).
+        expected: usize,
+        /// Bytes actually present after the header.
+        got: usize,
+    },
+}
+
+impl fmt::Display for PgmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PgmError::BadMagic => write!(f, "not a binary (P5) PGM"),
+            PgmError::TruncatedHeader => write!(f, "truncated PGM header"),
+            PgmError::BadDimension => {
+                write!(f, "width/height is not a positive integer")
+            }
+            PgmError::Oversized => {
+                write!(f, "dimensions exceed {MAX_PGM_DIM} pixels per side")
+            }
+            PgmError::UnsupportedMaxval => {
+                write!(f, "maxval must be 255 (8-bit pixels)")
+            }
+            PgmError::TruncatedPayload { expected, got } => {
+                write!(f, "pixel payload truncated: header promises \
+                           {expected} bytes, {got} present")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PgmError {}
+
+/// Serialize to the binary PGM (P5) byte form [`decode_pgm`] parses —
+/// the inline image form application requests carry over the wire.
+pub fn encode_pgm(img: &Image) -> Vec<u8> {
+    let mut out = format!("P5\n{} {}\n255\n", img.w, img.h).into_bytes();
+    out.extend_from_slice(&img.data);
+    out
+}
+
+/// Binary PGM (P5) writer (the byte form of [`encode_pgm`]).
 pub fn write_pgm(path: &Path, img: &Image) -> std::io::Result<()> {
-    let mut f = std::fs::File::create(path)?;
-    write!(f, "P5\n{} {}\n255\n", img.w, img.h)?;
-    f.write_all(&img.data)?;
-    Ok(())
+    std::fs::write(path, encode_pgm(img))
 }
 
-/// Binary PGM (P5) reader.
+/// Binary PGM (P5) reader ([`decode_pgm`] over the file's bytes).
 pub fn read_pgm(path: &Path) -> std::io::Result<Image> {
-    let mut buf = Vec::new();
-    std::fs::File::open(path)?.read_to_end(&mut buf)?;
-    parse_pgm(&buf).ok_or_else(|| std::io::Error::new(
-        std::io::ErrorKind::InvalidData, format!("bad PGM: {}", path.display())))
+    let buf = std::fs::read(path)?;
+    decode_pgm(&buf).map_err(|e| std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("bad PGM {}: {e}", path.display())))
 }
 
-fn parse_pgm(buf: &[u8]) -> Option<Image> {
-    // P5\n<w> <h>\n255\n<data> with optional comment lines
+/// Decode a binary PGM (P5) payload: `P5 <w> <h> 255` header tokens
+/// separated by any whitespace run, `#` comment lines allowed anywhere
+/// in the header, then one whitespace byte and `w * h` raw pixels
+/// (trailing bytes are ignored). Every failure is a typed [`PgmError`];
+/// this function never panics on arbitrary input (fuzzed in the tests
+/// below).
+pub fn decode_pgm(buf: &[u8]) -> Result<Image, PgmError> {
     let mut pos = 0usize;
-    let mut tokens = Vec::new();
+    let mut tokens: Vec<&[u8]> = Vec::new();
     while tokens.len() < 4 && pos < buf.len() {
         // skip whitespace
         while pos < buf.len() && buf[pos].is_ascii_whitespace() {
@@ -134,23 +202,47 @@ fn parse_pgm(buf: &[u8]) -> Option<Image> {
             }
             continue;
         }
+        if pos >= buf.len() {
+            break;
+        }
         let start = pos;
         while pos < buf.len() && !buf[pos].is_ascii_whitespace() {
             pos += 1;
         }
         tokens.push(&buf[start..pos]);
     }
-    if tokens.len() < 4 || tokens[0] != b"P5" {
-        return None;
+    match tokens.first() {
+        Some(t) if *t == b"P5" => {}
+        _ => return Err(PgmError::BadMagic),
     }
-    let w: usize = std::str::from_utf8(tokens[1]).ok()?.parse().ok()?;
-    let h: usize = std::str::from_utf8(tokens[2]).ok()?.parse().ok()?;
+    if tokens.len() < 4 {
+        return Err(PgmError::TruncatedHeader);
+    }
+    let dim = |t: &[u8]| -> Result<usize, PgmError> {
+        let v: usize = std::str::from_utf8(t)
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or(PgmError::BadDimension)?;
+        if v == 0 {
+            return Err(PgmError::BadDimension);
+        }
+        Ok(v)
+    };
+    let w = dim(tokens[1])?;
+    let h = dim(tokens[2])?;
+    if w > MAX_PGM_DIM || h > MAX_PGM_DIM {
+        return Err(PgmError::Oversized);
+    }
     if tokens[3] != b"255" {
-        return None;
+        return Err(PgmError::UnsupportedMaxval);
     }
-    pos += 1; // single whitespace after maxval
-    let data = buf.get(pos..pos + h * w)?.to_vec();
-    Some(Image { h, w, data })
+    pos += 1; // exactly one whitespace byte separates maxval from pixels
+    let expected = w * h; // bounded by MAX_PGM_DIM² — cannot overflow
+    let got = buf.len().saturating_sub(pos);
+    if got < expected {
+        return Err(PgmError::TruncatedPayload { expected, got });
+    }
+    Ok(Image { h, w, data: buf[pos..pos + expected].to_vec() })
 }
 
 /// Peak signal-to-noise ratio in dB against a 255 peak. `f64::INFINITY`
@@ -219,6 +311,63 @@ mod tests {
         write_pgm(&p, &img).unwrap();
         let back = read_pgm(&p).unwrap();
         assert_eq!(img, back);
+    }
+
+    #[test]
+    fn pgm_decoder_accepts_comments_and_loose_whitespace() {
+        // legal PGM variability: comments after the magic and on their
+        // own lines, multi-byte whitespace runs between header tokens
+        let img = scene(16, 8);
+        let mut buf =
+            b"P5 # binary pgm\n# a full comment line\n  8\t16 \n255\n".to_vec();
+        buf.extend_from_slice(&img.data);
+        assert_eq!(decode_pgm(&buf), Ok(img.clone()));
+        // the canonical writer form round-trips through the decoder
+        assert_eq!(decode_pgm(&encode_pgm(&img)), Ok(img));
+    }
+
+    #[test]
+    fn pgm_decoder_returns_typed_errors_never_panics() {
+        // wrong / missing magic
+        assert_eq!(decode_pgm(b"P2\n2 2\n255\n1234"), Err(PgmError::BadMagic));
+        assert_eq!(decode_pgm(b""), Err(PgmError::BadMagic));
+        // header ends before maxval
+        assert_eq!(decode_pgm(b"P5\n2"), Err(PgmError::TruncatedHeader));
+        assert_eq!(decode_pgm(b"P5\n2 2"), Err(PgmError::TruncatedHeader));
+        // non-numeric / non-positive dimensions
+        assert_eq!(decode_pgm(b"P5\n-2 4\n255\n"), Err(PgmError::BadDimension));
+        assert_eq!(decode_pgm(b"P5\n2x 4\n255\n"), Err(PgmError::BadDimension));
+        assert_eq!(decode_pgm(b"P5\n0 4\n255\n"), Err(PgmError::BadDimension));
+        // unsupported maxval (16-bit PGM)
+        assert_eq!(decode_pgm(b"P5\n2 2\n65535\n\0\0\0\0\0\0\0\0"),
+                   Err(PgmError::UnsupportedMaxval));
+        // payload shorter than the header promises
+        assert_eq!(decode_pgm(b"P5\n4 4\n255\nabc"),
+                   Err(PgmError::TruncatedPayload { expected: 16, got: 3 }));
+        // oversized dimensions refuse before allocating the pixel buffer
+        let huge = format!("P5\n{} 2\n255\n", MAX_PGM_DIM + 1);
+        assert_eq!(decode_pgm(huge.as_bytes()), Err(PgmError::Oversized));
+    }
+
+    #[test]
+    fn pgm_decoder_survives_random_garbage() {
+        // arbitrary byte soup must produce Ok or a typed Err — no panics
+        // (these bytes arrive straight off a TCP socket)
+        let mut s = 0x5EEDu64;
+        for case in 0..200 {
+            let len = (case * 7) % 64;
+            let bytes: Vec<u8> = (0..len).map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                s as u8
+            }).collect();
+            let _ = decode_pgm(&bytes);
+            // prefixing the magic exercises the header tokenizer too
+            let mut with_magic = b"P5\n".to_vec();
+            with_magic.extend_from_slice(&bytes);
+            let _ = decode_pgm(&with_magic);
+        }
     }
 
     #[test]

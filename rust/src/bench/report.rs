@@ -150,7 +150,7 @@ fn serve_section(rc: &ReportConfig) -> Json {
         c.wait(id);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let s = c.stats();
+    let s = c.stats_snapshot();
     let out = Json::obj()
         .set("backend", Json::Str("lut".into()))
         .set("workers", Json::Int(rc.workers as i64))

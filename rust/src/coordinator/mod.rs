@@ -352,6 +352,70 @@ impl AppStats {
 /// (ring buffer: the most recent window once the cap is reached).
 pub const LATENCY_SAMPLE_CAP: usize = 8192;
 
+/// Rounded-linear-rank percentile over an **ascending-sorted** slice:
+/// `sorted[round(p * (n-1))]` with `p` clamped to \[0, 1\] (0.0 when
+/// empty). The one percentile definition shared by [`LatencyRing`]
+/// (and through it [`ServiceStats`] and the network layer's
+/// `NetStats`) and the load generator's client-side reports.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+/// Fixed-capacity ring of recent latency samples (µs), capped at
+/// [`LATENCY_SAMPLE_CAP`]: once full, new samples overwrite the oldest
+/// so percentiles always describe the most recent window. One sampler
+/// implementation is shared by [`ServiceStats`] and the network layer's
+/// `NetStats` ([`crate::net::server::NetStats`]), so every layer reports
+/// percentiles with identical semantics.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRing {
+    samples: Vec<f64>,
+    recorded: u64,
+}
+
+impl LatencyRing {
+    /// Record one sample in µs (overwrites the oldest once at capacity).
+    pub fn record(&mut self, us: f64) {
+        if self.samples.len() < LATENCY_SAMPLE_CAP {
+            self.samples.push(us);
+        } else {
+            self.samples[(self.recorded as usize) % LATENCY_SAMPLE_CAP] = us;
+        }
+        self.recorded += 1;
+    }
+
+    /// Samples recorded over the ring's lifetime (≥ the retained window).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold another ring's retained window into this one (used when
+    /// per-connection network stats merge into fleet totals); both
+    /// windows stay bounded by [`LATENCY_SAMPLE_CAP`].
+    pub fn merge(&mut self, other: &LatencyRing) {
+        for &s in &other.samples {
+            self.record(s);
+        }
+    }
+
+    /// Percentile over the retained window ([`percentile_sorted`] of
+    /// the sorted samples; 0.0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&v, p)
+    }
+}
+
 /// Aggregate service statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
@@ -404,7 +468,7 @@ pub struct ServiceStats {
     /// Recent per-request end-to-end GEMM latencies in µs (at most
     /// [`LATENCY_SAMPLE_CAP`], ring-buffered) — feeds
     /// [`Self::latency_percentile`].
-    latency_samples: Vec<f64>,
+    latency: LatencyRing,
 }
 
 impl ServiceStats {
@@ -468,25 +532,13 @@ impl ServiceStats {
     }
 
     fn record_latency(&mut self, us: f64) {
-        if self.latency_samples.len() < LATENCY_SAMPLE_CAP {
-            self.latency_samples.push(us);
-        } else {
-            let i = (self.requests as usize) % LATENCY_SAMPLE_CAP;
-            self.latency_samples[i] = us;
-        }
+        self.latency.record(us);
     }
 
-    /// Latency percentile over the retained sample window, as the
-    /// rounded linear rank `round(p * (n-1))` of the sorted samples
-    /// (`p` in [0, 1]; 0.0 when no requests completed yet).
+    /// Latency percentile over the retained sample window
+    /// ([`LatencyRing::percentile`]; 0.0 when no requests completed yet).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        if self.latency_samples.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latency_samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = (p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx]
+        self.latency.percentile(p)
     }
 }
 
@@ -613,14 +665,25 @@ impl Coordinator {
         self.wait(id)
     }
 
-    /// Snapshot of the aggregate service statistics (LUT cache counters
-    /// refreshed from the process-wide cache at snapshot time).
-    pub fn stats(&self) -> ServiceStats {
-        let mut s = self.stats.lock().unwrap().clone();
+    /// Cheap snapshot of the aggregate service statistics: one short
+    /// lock to clone the stats block, released before the caller
+    /// formats, encodes or aggregates anything. Concurrent readers — the
+    /// network server's stats frames, `loadgen` polling, CLI summaries —
+    /// must use this (or [`Self::stats`], its alias) so the stats lock
+    /// is never held across encoding while workers try to commit
+    /// results. LUT cache counters are refreshed from the process-wide
+    /// cache (lock-free atomics) after the clone.
+    pub fn stats_snapshot(&self) -> ServiceStats {
+        let mut s = { self.stats.lock().unwrap().clone() };
         let (hits, builds) = lut::cache_counters();
         s.lut_cache_hits = hits;
         s.lut_builds = builds;
         s
+    }
+
+    /// Alias of [`Self::stats_snapshot`] (the historical name).
+    pub fn stats(&self) -> ServiceStats {
+        self.stats_snapshot()
     }
 
     // ---- application endpoints (paper §V through the worker pool) ----

@@ -30,6 +30,7 @@
 //! | [`apps`]      | DCT / edge / BDCN pipelines (+ [`apps::im2col`] conv→GEMM lowering, [`apps::CoordinatorGemm`] serving adapter) + image I/O + PSNR/SSIM |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
 //! | [`coordinator`]| GEMM request router: tiler, batched+coalesced dispatch, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
+//! | [`net`]       | framed TCP serving layer: versioned wire protocol, thread-per-connection server with a max-inflight admission gate fronting the coordinator, blocking client + [`net::client::RemoteGemm`], load generator |
 //! | [`bench`]     | tiny criterion-free measurement harness + the `bench-report` JSON emitter |
 //!
 //! ## Choosing a GEMM backend
@@ -112,6 +113,20 @@
 //! `tests/golden_psnr.rs`: DCT 38.21 dB, edge 30.45 dB — the paper's
 //! headline numbers).
 //!
+//! ## Network serving
+//!
+//! The [`net`] layer puts a process boundary in front of the pool:
+//! `axsys serve --listen ADDR` exposes the coordinator over a
+//! length-prefixed, versioned binary TCP protocol (GEMM, application
+//! requests with inline PGM images, stats snapshots, typed errors).
+//! The server pipelines per connection behind a max-inflight admission
+//! gate that **blocks reads instead of dropping**, and
+//! [`net::client::RemoteGemm`] implements [`apps::Gemm`] so any
+//! pipeline runs remotely unchanged — bit-identically, as
+//! `tests/net_serve.rs` pins for every backend. `axsys loadgen` drives
+//! a live server with a seeded multi-client mix and emits
+//! `BENCH_serve_net.json`.
+//!
 //! ## Energy accounting
 //!
 //! Every served request also reports calibrated, **data-dependent**
@@ -137,6 +152,7 @@ pub mod energy;
 pub mod error;
 pub mod gemm;
 pub mod hw;
+pub mod net;
 pub mod netlist;
 pub mod pe;
 pub mod runtime;

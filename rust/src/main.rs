@@ -6,6 +6,7 @@
 //! a unit test in this file fails whenever the README copy drifts.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use axsys::apps::image::{psnr, scene, ssim, texture, write_pgm};
 use axsys::coordinator::{AppKind, BackendKind, Coordinator, CoordinatorConfig,
@@ -27,6 +28,7 @@ fn main() {
         "edge" => app_edge(rest),
         "cnn" => app_cnn(rest),
         "serve" => serve(rest),
+        "loadgen" => loadgen(rest),
         "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
         "energy-report" => energy_report(rest),
@@ -77,8 +79,15 @@ const COMMANDS: &[Cmd] = &[
           help: "BDCN-lite CNN edge detection (coordinator-served)" },
     Cmd { name: "serve",
           args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
-                 [--app gemm|{APPS}] [--k K]",
-          help: "run the GEMM coordinator on synthetic or app traffic" },
+                 [--app gemm|{APPS}] [--k K] [--listen ADDR] \
+                 [--max-inflight N] [--port-file PATH]",
+          help: "run the GEMM coordinator on synthetic/app traffic, or \
+                 serve it over TCP (--listen)" },
+    Cmd { name: "loadgen",
+          args: "--addr HOST:PORT [--clients N] [--requests R] [--k K] \
+                 [--seed S] [--gemm-only] [--out PATH]",
+          help: "framed-TCP load generator -> BENCH_serve_net.json \
+                 (against serve --listen)" },
     Cmd { name: "apps-report", args: "[--backend {BACKENDS}] [--size S]",
           help: "paper §V PSNR tables: all four cell families x k, served" },
     Cmd { name: "lut-report", args: "",
@@ -626,6 +635,11 @@ fn serve(rest: &[String]) -> i32 {
     };
     let workers: usize = opt(rest, "--workers")
         .and_then(|v| v.parse().ok()).unwrap_or(4);
+    if let Some(addr) = opt(rest, "--listen") {
+        // network mode: expose this pool over the framed TCP protocol
+        // instead of driving synthetic traffic at it
+        return serve_listen(&addr, rest, backend, workers);
+    }
     let requests: usize = opt(rest, "--requests")
         .and_then(|v| v.parse().ok()).unwrap_or(64);
     let k = opt_k(rest);
@@ -674,7 +688,7 @@ fn serve(rest: &[String]) -> i32 {
         c.wait(id);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let s = c.stats();
+    let s = c.stats_snapshot();
     println!("  {} requests in {:.3}s  ({:.1} req/s, {:.1} tiles/s)",
              s.requests, wall, s.requests as f64 / wall, s.tiles as f64 / wall);
     println!("  latency: mean {:.1} µs  max {:.1} µs",
@@ -694,6 +708,96 @@ fn serve(rest: &[String]) -> i32 {
     }
     c.shutdown();
     0
+}
+
+/// `serve --listen ADDR`: front the coordinator with the framed TCP
+/// server and run until killed. Binding port 0 picks an ephemeral port;
+/// `--port-file` writes the bound address for scripts (the CI loopback
+/// smoke uses it to find the port before launching `loadgen`).
+fn serve_listen(addr: &str, rest: &[String], backend: BackendKind,
+                workers: usize) -> i32 {
+    use axsys::net::server::{NetServer, ServerConfig};
+    let mut scfg = ServerConfig::default();
+    if let Some(v) = opt(rest, "--max-inflight").and_then(|v| v.parse().ok()) {
+        scfg.max_inflight = v;
+    }
+    // BDCN weights are optional: without the artifact, `bdcn` requests
+    // get a typed Unsupported reply instead of a refusal to start
+    scfg.bdcn = axsys::apps::bdcn::load_weights(
+        &Runtime::default_artifacts_dir().join("bdcn_weights.txt"))
+        .ok()
+        .map(Arc::new);
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers, backend, ..Default::default()
+    }));
+    let server = match NetServer::bind(addr, coord, scfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: cannot listen on {addr}: {e}");
+            return 1;
+        }
+    };
+    println!("serve: listening on {} (backend={backend:?} workers={workers}; \
+              stop with Ctrl-C)", server.local_addr());
+    if let Some(pf) = opt(rest, "--port-file") {
+        if let Err(e) = std::fs::write(&pf, format!("{}\n", server.local_addr())) {
+            eprintln!("serve: cannot write {pf}: {e}");
+            return 1;
+        }
+        println!("  wrote bound address to {pf}");
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `loadgen`: drive a live `serve --listen` server with the seeded
+/// multi-client mix and write the `BENCH_serve_net.json` artifact.
+fn loadgen(rest: &[String]) -> i32 {
+    use axsys::net::loadgen::{self, LoadgenConfig};
+    let Some(addr) = opt(rest, "--addr") else {
+        eprintln!("loadgen: --addr HOST:PORT is required (start a server \
+                   with `axsys serve --listen 127.0.0.1:0`)");
+        return 2;
+    };
+    let mut cfg = LoadgenConfig::new(addr);
+    if let Some(v) = opt(rest, "--clients").and_then(|v| v.parse().ok()) {
+        cfg.clients = v;
+    }
+    if let Some(v) = opt(rest, "--requests").and_then(|v| v.parse().ok()) {
+        cfg.requests = v;
+    }
+    if let Some(v) = opt(rest, "--k").and_then(|v| v.parse().ok()) {
+        cfg.k_max = v;
+    }
+    if let Some(v) = opt(rest, "--seed").and_then(|v| v.parse().ok()) {
+        cfg.seed = v;
+    }
+    if rest.iter().any(|a| a == "--gemm-only") {
+        cfg.apps = false;
+    }
+    if cfg.clients == 0 || cfg.requests == 0 || cfg.k_max > 8 {
+        eprintln!("loadgen: --clients/--requests >= 1, --k 0..=8");
+        return 2;
+    }
+    let out = opt(rest, "--out").map(PathBuf::from)
+        .unwrap_or_else(loadgen::default_path);
+    println!("loadgen: addr={} clients={} requests={} k<={} apps={}",
+             cfg.addr, cfg.clients, cfg.requests, cfg.k_max, cfg.apps);
+    match loadgen::run(&cfg) {
+        Ok(doc) => {
+            if let Err(e) = std::fs::write(&out, doc.pretty()) {
+                eprintln!("cannot write {}: {e}", out.display());
+                return 1;
+            }
+            println!("  wrote {}", out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("loadgen: {e}");
+            1
+        }
+    }
 }
 
 /// Drive `requests` application requests (deterministic mixed image set)
@@ -733,7 +837,7 @@ fn serve_apps(c: &Coordinator, kind: AppKind, requests: usize, k: u32) -> i32 {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let s = c.stats();
+    let s = c.stats_snapshot();
     let a = s.app(kind);
     println!("  {} {} requests in {:.3}s ({:.1} req/s)",
              a.requests, kind.name(), wall, a.requests as f64 / wall);
@@ -813,7 +917,7 @@ fn apps_report(rest: &[String]) -> i32 {
                 None => println!(),
             }
         }
-        let s = c.stats();
+        let s = c.stats_snapshot();
         println!("{:<12}    | {} app requests, {} gemm sub-requests, \
                   gemm p99 {:.1} µs",
                  "", s.dct.requests + s.edge.requests + s.bdcn.requests,
@@ -867,11 +971,11 @@ mod tests {
                 "unexpanded placeholder: {md}");
         // every dispatched command is documented and vice versa
         for name in ["selftest", "hw-report", "error-sweep", "dct", "edge",
-                     "cnn", "serve", "apps-report", "lut-report",
+                     "cnn", "serve", "loadgen", "apps-report", "lut-report",
                      "energy-report", "bench-report", "emit-verilog", "help"] {
             assert!(COMMANDS.iter().any(|c| c.name == name),
                     "{name} missing from COMMANDS");
         }
-        assert_eq!(COMMANDS.len(), 13, "new commands must be dispatched too");
+        assert_eq!(COMMANDS.len(), 14, "new commands must be dispatched too");
     }
 }

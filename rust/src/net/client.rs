@@ -1,0 +1,179 @@
+//! Blocking client library for the framed TCP protocol.
+//!
+//! [`Client`] is a thin request/reply wrapper around one connection
+//! with reusable encode/decode buffers; its split
+//! [`Client::send_gemm`] / [`Client::recv_gemm`] halves let callers
+//! pipeline many requests before reading any reply (the server answers
+//! strictly in request order per connection). [`RemoteGemm`] implements
+//! the [`Gemm`] trait over a connection, so every existing application
+//! pipeline and differential test runs against a remote server
+//! unchanged — and bit-identically, since the wire carries exact `i64`
+//! operands into the same worker pool.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::apps::image::{encode_pgm, Image};
+use crate::apps::Gemm;
+use crate::coordinator::AppKind;
+use crate::systolic::SaStats;
+
+use super::proto::{self, AppResp, Frame, GemmResp, WireStats};
+use super::NetError;
+
+/// One blocking connection to a [`crate::net::server::NetServer`].
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    wbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+}
+
+impl Client {
+    /// Connect to a serving address (e.g. `"127.0.0.1:4817"` or the
+    /// value printed by `axsys serve --listen`).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+            wbuf: Vec::new(),
+            rbuf: Vec::new(),
+        })
+    }
+
+    /// Send one raw frame (low-level; the typed helpers below cover the
+    /// request kinds the server accepts).
+    pub fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        proto::write_frame(&mut self.writer, frame, &mut self.wbuf)?;
+        Ok(())
+    }
+
+    /// Receive one raw frame (blocking). A clean server-side close
+    /// surfaces as an `Io` error with `UnexpectedEof`.
+    pub fn recv(&mut self) -> Result<Frame, NetError> {
+        match proto::read_frame(&mut self.reader, &mut self.rbuf)? {
+            Some(f) => Ok(f),
+            None => Err(NetError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ))),
+        }
+    }
+
+    /// Send one GEMM request without waiting for the reply (the
+    /// pipelining half; pair with [`Self::recv_gemm`] in the same
+    /// order). Serializes straight from the borrowed operand slices —
+    /// no owned wire struct, no operand double-copy on the hot path.
+    pub fn send_gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize,
+                     nn: usize, k: u32) -> Result<(), NetError> {
+        assert_eq!(a.len(), m * kk, "A shape");
+        assert_eq!(b.len(), kk * nn, "B shape");
+        proto::encode_gemm_req(k, m as u32, kk as u32, nn as u32, a, b,
+                               &mut self.wbuf);
+        self.writer.write_all(&self.wbuf)?;
+        Ok(())
+    }
+
+    /// Receive the next GEMM reply (blocking); typed error frames
+    /// surface as [`NetError::Server`].
+    pub fn recv_gemm(&mut self) -> Result<GemmResp, NetError> {
+        match self.recv()? {
+            Frame::GemmResp(r) => Ok(r),
+            Frame::Error(e) => Err(NetError::Server { code: e.code, msg: e.msg }),
+            _ => Err(NetError::Unexpected("expected a GEMM response")),
+        }
+    }
+
+    /// Synchronous GEMM call: `C(m x nn) = A(m x kk) @ B(kk x nn)` at
+    /// approximation level `k`, served by the remote pool.
+    pub fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize,
+                nn: usize, k: u32) -> Result<GemmResp, NetError> {
+        self.send_gemm(a, b, m, kk, nn, k)?;
+        self.recv_gemm()
+    }
+
+    /// Synchronous application call: the image travels inline as a
+    /// binary PGM payload and the server runs the full served pipeline.
+    pub fn app(&mut self, app: AppKind, img: &Image, k: u32)
+               -> Result<AppResp, NetError> {
+        self.send(&Frame::AppReq(proto::AppReq {
+            app,
+            k,
+            pgm: encode_pgm(img),
+        }))?;
+        match self.recv()? {
+            Frame::AppResp(r) => Ok(r),
+            Frame::Error(e) => Err(NetError::Server { code: e.code, msg: e.msg }),
+            _ => Err(NetError::Unexpected("expected an app response")),
+        }
+    }
+
+    /// Fetch a coordinator + network statistics snapshot.
+    pub fn stats(&mut self) -> Result<WireStats, NetError> {
+        self.send(&Frame::StatsReq)?;
+        match self.recv()? {
+            Frame::StatsResp(s) => Ok(s),
+            Frame::Error(e) => Err(NetError::Server { code: e.code, msg: e.msg }),
+            _ => Err(NetError::Unexpected("expected a stats response")),
+        }
+    }
+}
+
+/// Remote [`Gemm`] backend: every matrix product is shipped over the
+/// framed TCP protocol to a serving pool and the result dropped back
+/// into the caller's pipeline. Bit-identical to the in-process
+/// [`crate::apps::CoordinatorGemm`] against the same pool configuration
+/// (`tests/net_serve.rs`), so application pipelines and differential
+/// tests run over the network unchanged.
+///
+/// The [`Gemm`] trait is infallible, so network failures panic with
+/// context — matching the in-process adapter, whose pool-gone failure
+/// mode also panics. Callers that need recoverable errors should use
+/// [`Client`] directly.
+pub struct RemoteGemm {
+    client: Client,
+    /// Approximation level submitted with every product.
+    pub k: u32,
+    /// Server-reported execution stats merged from every response.
+    pub stats: SaStats,
+    /// GEMM requests issued so far.
+    pub requests: u64,
+}
+
+impl RemoteGemm {
+    /// Connect to a serving address and fix the approximation level
+    /// submitted with every product.
+    pub fn connect<A: ToSocketAddrs>(addr: A, k: u32)
+                                     -> std::io::Result<RemoteGemm> {
+        Ok(RemoteGemm {
+            client: Client::connect(addr)?,
+            k,
+            stats: SaStats::default(),
+            requests: 0,
+        })
+    }
+}
+
+impl Gemm for RemoteGemm {
+    fn gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize)
+            -> Vec<i64> {
+        let r = self.client.gemm(a, b, m, kk, nn, self.k)
+            .expect("remote GEMM failed");
+        self.requests += 1;
+        self.stats.merge(&SaStats {
+            tiles: r.tiles,
+            macs: r.macs,
+            energy_fj: r.energy_fj,
+            metered_macs: r.metered_macs,
+            ..Default::default()
+        });
+        r.out
+    }
+
+    fn stats(&self) -> Option<SaStats> {
+        Some(self.stats)
+    }
+}

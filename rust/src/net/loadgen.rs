@@ -1,0 +1,220 @@
+//! Closed-loop TCP load generator (the `axsys loadgen` subcommand).
+//!
+//! Spins [`LoadgenConfig::clients`] client threads, each with its own
+//! connection and a **seeded xorshift request mix** — GEMM shapes drawn
+//! from `8..=40` per dimension, approximation levels `0..=k_max`, and
+//! (unless disabled) periodic `dct`/`edge` application requests with
+//! inline PGM images. Reports client-observed throughput and
+//! p50/p90/p99 latency plus the **server-reported** pool counters and
+//! metered energy from a stats frame, and returns the whole summary as
+//! a [`Json`] document (written to `BENCH_serve_net.json` by the CLI,
+//! uploaded as a CI artifact by the loopback smoke job).
+//!
+//! The request mix varies sizes, levels and request kinds; the cell
+//! *family* is a property of the server's pool configuration, so
+//! sweeping families means pointing the generator at differently
+//! configured servers.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::apps::image::{scene, texture};
+use crate::bench::{xorshift_ints, Json, XorShift};
+use crate::coordinator::{percentile_sorted, AppKind};
+
+use super::client::Client;
+use super::NetError;
+
+/// Knobs of one load-generation run (all have CLI flags).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address (`HOST:PORT`).
+    pub addr: String,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Approximation levels are drawn uniformly from `0..=k_max`.
+    pub k_max: u32,
+    /// Base seed of the deterministic request mix.
+    pub seed: u64,
+    /// Include `dct`/`edge` application requests in the mix.
+    pub apps: bool,
+}
+
+impl LoadgenConfig {
+    /// Default mix against `addr`: 4 clients, 64 requests, `k <= 6`,
+    /// apps included.
+    pub fn new(addr: String) -> Self {
+        LoadgenConfig {
+            addr,
+            clients: 4,
+            requests: 64,
+            k_max: 6,
+            seed: 0x5EED,
+            apps: true,
+        }
+    }
+}
+
+/// Default artifact location: `BENCH_serve_net.json` at the repository
+/// root, next to `BENCH_hotpath.json`.
+pub fn default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("BENCH_serve_net.json")
+}
+
+struct WorkerOut {
+    gemm_lat: Vec<f64>,
+    app_lat: Vec<f64>,
+    macs: u64,
+}
+
+fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool)
+          -> Result<WorkerOut, NetError> {
+    let mut client = Client::connect(addr.as_str())?;
+    let mut rng = XorShift::new(seed);
+    let mut out = WorkerOut {
+        gemm_lat: Vec::with_capacity(n),
+        app_lat: Vec::new(),
+        macs: 0,
+    };
+    for i in 0..n {
+        let k = (rng.next_u64() % (k_max as u64 + 1)) as u32;
+        if apps && i % 8 == 7 {
+            // every 8th request exercises an app pipeline end-to-end
+            // (dct and edge alternate; both image sizes are 8-aligned)
+            let (app, img) = if i % 16 == 7 {
+                (AppKind::Dct, scene(32, 32))
+            } else {
+                (AppKind::Edge, texture(24, 24, seed ^ i as u64))
+            };
+            let t0 = Instant::now();
+            let r = client.app(app, &img, k)?;
+            out.app_lat.push(t0.elapsed().as_secs_f64() * 1e6);
+            out.macs += r.macs;
+        } else {
+            let m = 8 + (rng.next_u64() % 33) as usize;
+            let kk = 8 + (rng.next_u64() % 17) as usize;
+            let nn = 8 + (rng.next_u64() % 33) as usize;
+            let a = xorshift_ints(rng.next_u64(), m * kk);
+            let b = xorshift_ints(rng.next_u64(), kk * nn);
+            let t0 = Instant::now();
+            let r = client.gemm(&a, &b, m, kk, nn, k)?;
+            out.gemm_lat.push(t0.elapsed().as_secs_f64() * 1e6);
+            out.macs += r.macs;
+        }
+    }
+    Ok(out)
+}
+
+fn lat_json(sorted: &[f64]) -> Json {
+    let mean = if sorted.is_empty() {
+        0.0
+    } else {
+        sorted.iter().sum::<f64>() / sorted.len() as f64
+    };
+    Json::obj()
+        .set("count", Json::Int(sorted.len() as i64))
+        .set("p50", Json::Num(percentile_sorted(sorted, 0.50)))
+        .set("p90", Json::Num(percentile_sorted(sorted, 0.90)))
+        .set("p99", Json::Num(percentile_sorted(sorted, 0.99)))
+        .set("max", Json::Num(sorted.last().copied().unwrap_or(0.0)))
+        .set("mean", Json::Num(mean))
+}
+
+/// Run the configured fleet against a live server and return the
+/// summary document. Any client-side failure (connect refused, typed
+/// server error, protocol violation) aborts the run with that error —
+/// a clean exit means every request got a correct-kind reply.
+pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
+    let clients = cfg.clients.max(1);
+    // the probe connection doubles as the stats poller at the end
+    let mut probe = Client::connect(cfg.addr.as_str())?;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for ci in 0..clients {
+        let n = cfg.requests / clients
+            + usize::from(ci < cfg.requests % clients);
+        if n == 0 {
+            continue;
+        }
+        let addr = cfg.addr.clone();
+        let seed = cfg.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(ci as u64 + 1);
+        let (k_max, apps) = (cfg.k_max, cfg.apps);
+        handles.push(std::thread::Builder::new()
+            .name(format!("axsys-loadgen-{ci}"))
+            .spawn(move || worker(addr, n, seed, k_max, apps))
+            .expect("spawn loadgen client"));
+    }
+    let mut gemm_lat = Vec::new();
+    let mut app_lat = Vec::new();
+    let mut macs = 0u64;
+    for h in handles {
+        let w = h.join().expect("loadgen client thread")?;
+        gemm_lat.extend(w.gemm_lat);
+        app_lat.extend(w.app_lat);
+        macs += w.macs;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // server-reported counters + metered energy (snapshot-then-encode
+    // server-side: polling never holds the pool's stats lock)
+    let ws = probe.stats()?;
+    let mut all: Vec<f64> =
+        gemm_lat.iter().chain(app_lat.iter()).copied().collect();
+    let by = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
+    all.sort_by(by);
+    gemm_lat.sort_by(by);
+    app_lat.sort_by(by);
+    let served = all.len();
+    println!("loadgen: {} requests over {} clients in {:.3}s ({:.1} req/s)",
+             served, clients, wall, served as f64 / wall.max(1e-9));
+    println!("  latency µs: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+             percentile_sorted(&all, 0.50), percentile_sorted(&all, 0.90),
+             percentile_sorted(&all, 0.99),
+             all.last().copied().unwrap_or(0.0));
+    println!("  server: {} pool requests, {:.3} µJ metered ({:.2} fJ/MAC), \
+              {} frames in / {} out",
+             ws.requests, ws.total_energy_uj(), ws.mean_mac_fj(),
+             ws.frames_in, ws.frames_out);
+    Ok(Json::obj()
+        .set("schema", Json::Str("axsys-serve-net/v1".into()))
+        .set("config", Json::obj()
+            .set("addr", Json::Str(cfg.addr.clone()))
+            .set("clients", Json::Int(clients as i64))
+            .set("requests", Json::Int(cfg.requests as i64))
+            .set("k_max", Json::Int(cfg.k_max as i64))
+            .set("seed", Json::Int(cfg.seed as i64))
+            .set("apps", Json::Bool(cfg.apps)))
+        .set("wall_s", Json::Num(wall))
+        .set("served_requests", Json::Int(served as i64))
+        .set("throughput_req_per_sec",
+             Json::Num(served as f64 / wall.max(1e-9)))
+        .set("client_macs", Json::Int(macs as i64))
+        .set("latency_us", lat_json(&all))
+        .set("gemm_latency_us", lat_json(&gemm_lat))
+        .set("app_latency_us", lat_json(&app_lat))
+        .set("server", Json::obj()
+            .set("requests", Json::Int(ws.requests as i64))
+            .set("tiles", Json::Int(ws.tiles as i64))
+            .set("macs", Json::Int(ws.macs as i64))
+            .set("energy_uj_total", Json::Num(ws.total_energy_uj()))
+            .set("mean_mac_fj", Json::Num(ws.mean_mac_fj()))
+            .set("metered_macs", Json::Int(ws.metered_macs as i64))
+            .set("latency_us", Json::obj()
+                .set("p50", Json::Num(ws.latency_p50_us))
+                .set("p90", Json::Num(ws.latency_p90_us))
+                .set("p99", Json::Num(ws.latency_p99_us))
+                .set("mean", Json::Num(ws.mean_latency_us)))
+            .set("net", Json::obj()
+                .set("connections", Json::Int(ws.connections as i64))
+                .set("frames_in", Json::Int(ws.frames_in as i64))
+                .set("frames_out", Json::Int(ws.frames_out as i64))
+                .set("bytes_in", Json::Int(ws.bytes_in as i64))
+                .set("bytes_out", Json::Int(ws.bytes_out as i64))
+                .set("p50", Json::Num(ws.net_p50_us))
+                .set("p90", Json::Num(ws.net_p90_us))
+                .set("p99", Json::Num(ws.net_p99_us)))))
+}

@@ -1,0 +1,93 @@
+//! Network serving layer: a framed TCP boundary in front of the
+//! coordinator — std-only (threads + blocking sockets, no async
+//! runtime, no external crates).
+//!
+//! Until this module existed every request entered through an
+//! in-process [`crate::coordinator::Coordinator`] handle; the related
+//! DNN-accelerator literature treats these arrays as *shared*
+//! infrastructure that many workloads multiplex onto, which needs a
+//! real wire boundary with admission control, not a library call. The
+//! pieces:
+//!
+//! * [`proto`] — the length-prefixed, versioned binary wire protocol:
+//!   GEMM requests/responses, application requests with inline PGM
+//!   payloads, stats snapshots and typed error replies, all
+//!   encoded/decoded through reusable buffers.
+//! * [`server`] — a thread-per-connection TCP server fronting a running
+//!   coordinator: per-connection request pipelining with in-order
+//!   replies, a configurable max-inflight admission gate that
+//!   **backpressures (blocks reads) rather than drops**, graceful drain
+//!   on shutdown, and per-connection + fleet
+//!   [`server::NetStats`].
+//! * [`client`] — a blocking client library; [`client::RemoteGemm`]
+//!   implements the [`crate::apps::Gemm`] trait, so every existing
+//!   application pipeline and differential test runs over TCP
+//!   unchanged.
+//! * [`loadgen`] — a closed-loop multi-client load generator with a
+//!   seeded xorshift request mix, reporting throughput, latency
+//!   percentiles and server-metered energy as `BENCH_serve_net.json`.
+//!
+//! Results served over TCP are **bit-identical** to the in-process
+//! coordinator path on every backend: the wire carries exact `i64`
+//! operands and the server submits them to the same worker pool
+//! (`tests/net_serve.rs` pins this for `word`/`lut`/`systolic`, GEMM
+//! and all three application pipelines).
+//!
+//! The frame lifecycle (where backpressure lives) is documented in
+//! ARCHITECTURE.md's "Network data-flow" section.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+use std::fmt;
+
+/// Client-side failure of one framed request/reply exchange.
+#[derive(Debug)]
+pub enum NetError {
+    /// Socket-level failure (connect/read/write) or server disconnect.
+    Io(std::io::Error),
+    /// The peer violated the wire protocol.
+    Proto(proto::ProtoError),
+    /// The server answered with a typed error frame.
+    Server {
+        /// Machine-readable error class.
+        code: proto::ErrCode,
+        /// Human-readable detail from the server.
+        msg: String,
+    },
+    /// The server answered with a frame kind that does not match the
+    /// request that was sent.
+    Unexpected(&'static str),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "network i/o: {e}"),
+            NetError::Proto(e) => write!(f, "wire protocol: {e}"),
+            NetError::Server { code, msg } => {
+                write!(f, "server error ({code:?}): {msg}")
+            }
+            NetError::Unexpected(what) => write!(f, "unexpected reply: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> Self {
+        NetError::Io(e)
+    }
+}
+
+impl From<proto::ProtoError> for NetError {
+    fn from(e: proto::ProtoError) -> Self {
+        match e {
+            proto::ProtoError::Io(io) => NetError::Io(io),
+            other => NetError::Proto(other),
+        }
+    }
+}

@@ -1,0 +1,924 @@
+//! The framed binary wire protocol (version 1).
+//!
+//! Every frame is `[len: u32 LE][magic: u16][version: u8][kind: u8]
+//! [body]`, where `len` counts everything after itself. Integers are
+//! little-endian; floats travel as their IEEE-754 bit pattern. The
+//! decoder is hardened against untrusted input: truncated, corrupted
+//! or oversized frames produce a typed [`ProtoError`] — never a panic
+//! and never an unbounded allocation (length and element caps are
+//! checked before any buffer is sized).
+//!
+//! Encoding and decoding go through **reusable buffers**
+//! ([`encode`]/[`read_frame`]/[`write_frame`] all take a caller-owned
+//! scratch `Vec`), so a busy connection allocates only for the decoded
+//! matrices themselves.
+//!
+//! Round-trip identity (`decode(encode(f)) == f`) is fuzzed over 500
+//! seeded frames of every kind — including empty matrices and ragged
+//! shapes — in this module's tests; decoder rejection of hostile input
+//! is covered there too.
+
+use crate::apps::image::{Image, MAX_PGM_DIM};
+use crate::coordinator::AppKind;
+
+/// Magic tag at the start of every frame payload.
+pub const MAGIC: u16 = 0xA551;
+/// Wire-protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Hard cap on one frame's payload length (128 MiB).
+pub const MAX_FRAME_LEN: usize = 1 << 27;
+/// Hard cap on elements per wire matrix — operands *and* results
+/// (refused before allocating). Sized so the largest legal frame, a
+/// [`GemmReq`] carrying two cap-sized `i64` operands, still fits
+/// [`MAX_FRAME_LEN`] with header room; the server also bounds `m * nn`
+/// at admission, so every accepted request's reply is encodable.
+pub const MAX_GEMM_ELEMS: usize = (1 << 23) - 64;
+/// Hard cap on an inline PGM payload in an application request: the
+/// largest legal image ([`MAX_PGM_DIM`]² pixels) plus header room, so
+/// every PGM the decoder accepts is also receivable over the wire.
+pub const MAX_PGM_LEN: usize = MAX_PGM_DIM * MAX_PGM_DIM + 4096;
+
+const K_GEMM_REQ: u8 = 1;
+const K_GEMM_RESP: u8 = 2;
+const K_APP_REQ: u8 = 3;
+const K_APP_RESP: u8 = 4;
+const K_STATS_REQ: u8 = 5;
+const K_STATS_RESP: u8 = 6;
+const K_ERROR: u8 = 7;
+
+/// Why a frame failed to decode (or the stream failed underneath it).
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Underlying socket/stream failure while reading a frame.
+    Io(std::io::Error),
+    /// Frame payload did not start with [`MAGIC`].
+    BadMagic(u16),
+    /// Frame version is not [`VERSION`].
+    BadVersion(u8),
+    /// Unknown message-kind byte.
+    UnknownKind(u8),
+    /// A declared length exceeds a protocol cap (frame, matrix or
+    /// image) — refused before any allocation.
+    Oversized {
+        /// The declared length / element count.
+        len: usize,
+        /// The cap it exceeded.
+        max: usize,
+    },
+    /// Payload ended before the advertised content.
+    Truncated {
+        /// Bytes the decoder needed next.
+        need: usize,
+        /// Bytes still available.
+        have: usize,
+    },
+    /// Structurally invalid payload (bad field values, trailing bytes).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "i/o: {e}"),
+            ProtoError::BadMagic(m) => write!(f, "bad frame magic 0x{m:04x}"),
+            ProtoError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v}")
+            }
+            ProtoError::UnknownKind(k) => write!(f, "unknown message kind {k}"),
+            ProtoError::Oversized { len, max } => {
+                write!(f, "declared length {len} exceeds cap {max}")
+            }
+            ProtoError::Truncated { need, have } => {
+                write!(f, "truncated payload: need {need} bytes, have {have}")
+            }
+            ProtoError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Machine-readable class of a typed error reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Structurally invalid request (framing or field values).
+    Malformed,
+    /// The inline PGM payload failed to decode, or the image does not
+    /// fit the application's shape rules.
+    BadImage,
+    /// The request names a capability this server does not have (e.g.
+    /// `bdcn` without loaded weights, an unexpected frame kind).
+    Unsupported,
+    /// A size cap was exceeded.
+    TooLarge,
+    /// The server failed internally.
+    Internal,
+}
+
+impl ErrCode {
+    /// Every code, in wire-value order.
+    pub const ALL: [ErrCode; 5] = [ErrCode::Malformed, ErrCode::BadImage,
+                                   ErrCode::Unsupported, ErrCode::TooLarge,
+                                   ErrCode::Internal];
+
+    /// Stable wire value.
+    pub fn code(self) -> u16 {
+        match self {
+            ErrCode::Malformed => 1,
+            ErrCode::BadImage => 2,
+            ErrCode::Unsupported => 3,
+            ErrCode::TooLarge => 4,
+            ErrCode::Internal => 5,
+        }
+    }
+
+    /// Inverse of [`Self::code`] (`None` for unknown values).
+    pub fn from_code(v: u16) -> Option<ErrCode> {
+        Self::ALL.into_iter().find(|c| c.code() == v)
+    }
+}
+
+/// One GEMM request: `C(m x nn) = A(m x kk) @ B(kk x nn)` at level `k`
+/// (the wire form of [`crate::coordinator::GemmRequest`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GemmReq {
+    /// Approximation level (0 = exact).
+    pub k: u32,
+    /// Output rows.
+    pub m: u32,
+    /// Inner (contraction) dimension.
+    pub kk: u32,
+    /// Output columns.
+    pub nn: u32,
+    /// Left operand, row-major `m x kk`.
+    pub a: Vec<i64>,
+    /// Right operand, row-major `kk x nn`.
+    pub b: Vec<i64>,
+}
+
+/// One GEMM response (the wire form of
+/// [`crate::coordinator::GemmResponse`] plus its merged stats).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GemmResp {
+    /// Output rows.
+    pub m: u32,
+    /// Output columns.
+    pub nn: u32,
+    /// Server-side submit-to-complete latency of the pool request, µs.
+    pub latency_us: f64,
+    /// Output tiles the request was split into.
+    pub tiles: u64,
+    /// MAC operations executed.
+    pub macs: u64,
+    /// Metered data-dependent energy, femtojoules.
+    pub energy_fj: f64,
+    /// MACs covered by an energy meter (`== macs` when fully metered).
+    pub metered_macs: u64,
+    /// Result matrix, row-major `m x nn`.
+    pub out: Vec<i64>,
+}
+
+impl GemmResp {
+    /// Server-metered energy of this request in microjoules.
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_fj * 1e-9
+    }
+}
+
+/// One application request: the image travels inline as a binary PGM
+/// payload (decoded server-side by [`crate::apps::image::decode_pgm`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppReq {
+    /// Which pipeline to run.
+    pub app: AppKind,
+    /// Approximation level (0 = exact).
+    pub k: u32,
+    /// Inline binary PGM (P5) image payload.
+    pub pgm: Vec<u8>,
+}
+
+/// One application response (the wire form of
+/// [`crate::coordinator::AppResponse`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppResp {
+    /// Which pipeline served this request.
+    pub app: AppKind,
+    /// The paper's §V quality metric (may be infinite for exact
+    /// self-referential runs — the bit pattern round-trips).
+    pub psnr_db: f64,
+    /// End-to-end pipeline latency on the server, µs.
+    pub latency_us: f64,
+    /// GEMM sub-requests the pipeline issued.
+    pub gemm_requests: u64,
+    /// Metered energy of every GEMM stage, femtojoules.
+    pub energy_fj: f64,
+    /// MAC operations executed across the pipeline's GEMM stages.
+    pub macs: u64,
+    /// Output-image height.
+    pub h: u32,
+    /// Output-image width.
+    pub w: u32,
+    /// Row-major output pixels (`h * w` bytes).
+    pub pixels: Vec<u8>,
+}
+
+impl AppResp {
+    /// Rebuild the reply's output image from the wire fields.
+    pub fn image(&self) -> Image {
+        Image {
+            h: self.h as usize,
+            w: self.w as usize,
+            data: self.pixels.clone(),
+        }
+    }
+
+    /// Server-metered energy of this request in microjoules.
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_fj * 1e-9
+    }
+}
+
+/// Snapshot of coordinator + network statistics (the stats frame's
+/// body). Built server-side from
+/// [`crate::coordinator::Coordinator::stats_snapshot`] and the fleet
+/// [`crate::net::server::NetStats`] — both cloned under one short lock
+/// each, *then* encoded.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireStats {
+    /// GEMM pool requests completed.
+    pub requests: u64,
+    /// Output tiles executed.
+    pub tiles: u64,
+    /// MAC operations executed.
+    pub macs: u64,
+    /// Fleet total of metered energy, femtojoules.
+    pub energy_fj: f64,
+    /// MACs covered by an energy meter.
+    pub metered_macs: u64,
+    /// GEMM latency p50 over the retained window, µs.
+    pub latency_p50_us: f64,
+    /// GEMM latency p90, µs.
+    pub latency_p90_us: f64,
+    /// GEMM latency p99, µs.
+    pub latency_p99_us: f64,
+    /// Mean GEMM latency, µs.
+    pub mean_latency_us: f64,
+    /// TCP connections accepted since the server started.
+    pub connections: u64,
+    /// Frames read off client sockets.
+    pub frames_in: u64,
+    /// Frames written back to clients.
+    pub frames_out: u64,
+    /// Bytes read off client sockets (length prefixes included).
+    pub bytes_in: u64,
+    /// Bytes written back to clients.
+    pub bytes_out: u64,
+    /// Server-side request latency p50 (admission to reply written), µs.
+    pub net_p50_us: f64,
+    /// Server-side request latency p90, µs.
+    pub net_p90_us: f64,
+    /// Server-side request latency p99, µs.
+    pub net_p99_us: f64,
+}
+
+impl WireStats {
+    /// Fleet total of metered energy in microjoules.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.energy_fj * 1e-9
+    }
+
+    /// Mean metered energy per MAC in femtojoules (0.0 before any
+    /// metered MAC).
+    pub fn mean_mac_fj(&self) -> f64 {
+        if self.metered_macs == 0 {
+            0.0
+        } else {
+            self.energy_fj / self.metered_macs as f64
+        }
+    }
+}
+
+/// A typed error reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    /// Machine-readable error class.
+    pub code: ErrCode,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+/// One protocol message (request or reply).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// GEMM request (client → server).
+    GemmReq(GemmReq),
+    /// GEMM response (server → client).
+    GemmResp(GemmResp),
+    /// Application request with an inline PGM image (client → server).
+    AppReq(AppReq),
+    /// Application response (server → client).
+    AppResp(AppResp),
+    /// Stats snapshot request (client → server, empty body).
+    StatsReq,
+    /// Stats snapshot response (server → client).
+    StatsResp(WireStats),
+    /// Typed error reply (server → client).
+    Error(WireError),
+}
+
+// ---- encoding ------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_i64s(out: &mut Vec<u8>, s: &[i64]) {
+    out.reserve(s.len() * 8);
+    for &v in s {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn app_code(app: AppKind) -> u8 {
+    AppKind::ALL.iter().position(|&a| a == app).unwrap_or(0) as u8
+}
+
+fn app_from(code: u8) -> Result<AppKind, ProtoError> {
+    match AppKind::ALL.get(code as usize) {
+        Some(&a) => Ok(a),
+        None => Err(ProtoError::Malformed("unknown application code")),
+    }
+}
+
+/// Encode a GEMM request straight from borrowed operand slices — the
+/// client's hot path. Byte-identical to
+/// `encode(&Frame::GemmReq(..), out)` without materializing the owned
+/// wire struct (no operand copy beyond the serialization itself).
+pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
+                       b: &[i64], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]); // length, patched below
+    put_u16(out, MAGIC);
+    put_u8(out, VERSION);
+    put_u8(out, K_GEMM_REQ);
+    put_u32(out, k);
+    put_u32(out, m);
+    put_u32(out, kk);
+    put_u32(out, nn);
+    put_i64s(out, a);
+    put_i64s(out, b);
+    let len = (out.len() - 4) as u32;
+    out[..4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Encode `frame` into `out` (cleared first): the 4-byte length prefix,
+/// then magic/version/kind and the body. The buffer is reusable across
+/// calls — steady-state encoding allocates nothing beyond its high-water
+/// mark.
+pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
+    if let Frame::GemmReq(r) = frame {
+        return encode_gemm_req(r.k, r.m, r.kk, r.nn, &r.a, &r.b, out);
+    }
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]); // length, patched below
+    put_u16(out, MAGIC);
+    put_u8(out, VERSION);
+    match frame {
+        Frame::GemmReq(_) => unreachable!("encoded by encode_gemm_req above"),
+        Frame::GemmResp(r) => {
+            put_u8(out, K_GEMM_RESP);
+            put_u32(out, r.m);
+            put_u32(out, r.nn);
+            put_f64(out, r.latency_us);
+            put_u64(out, r.tiles);
+            put_u64(out, r.macs);
+            put_f64(out, r.energy_fj);
+            put_u64(out, r.metered_macs);
+            put_i64s(out, &r.out);
+        }
+        Frame::AppReq(r) => {
+            put_u8(out, K_APP_REQ);
+            put_u8(out, app_code(r.app));
+            put_u32(out, r.k);
+            put_u32(out, r.pgm.len() as u32);
+            out.extend_from_slice(&r.pgm);
+        }
+        Frame::AppResp(r) => {
+            put_u8(out, K_APP_RESP);
+            put_u8(out, app_code(r.app));
+            put_f64(out, r.psnr_db);
+            put_f64(out, r.latency_us);
+            put_u64(out, r.gemm_requests);
+            put_f64(out, r.energy_fj);
+            put_u64(out, r.macs);
+            put_u32(out, r.h);
+            put_u32(out, r.w);
+            out.extend_from_slice(&r.pixels);
+        }
+        Frame::StatsReq => put_u8(out, K_STATS_REQ),
+        Frame::StatsResp(s) => {
+            put_u8(out, K_STATS_RESP);
+            put_u64(out, s.requests);
+            put_u64(out, s.tiles);
+            put_u64(out, s.macs);
+            put_f64(out, s.energy_fj);
+            put_u64(out, s.metered_macs);
+            put_f64(out, s.latency_p50_us);
+            put_f64(out, s.latency_p90_us);
+            put_f64(out, s.latency_p99_us);
+            put_f64(out, s.mean_latency_us);
+            put_u64(out, s.connections);
+            put_u64(out, s.frames_in);
+            put_u64(out, s.frames_out);
+            put_u64(out, s.bytes_in);
+            put_u64(out, s.bytes_out);
+            put_f64(out, s.net_p50_us);
+            put_f64(out, s.net_p90_us);
+            put_f64(out, s.net_p99_us);
+        }
+        Frame::Error(e) => {
+            put_u8(out, K_ERROR);
+            put_u16(out, e.code.code());
+            put_u32(out, e.msg.len() as u32);
+            out.extend_from_slice(e.msg.as_bytes());
+        }
+    }
+    let len = (out.len() - 4) as u32;
+    out[..4].copy_from_slice(&len.to_le_bytes());
+}
+
+// ---- decoding ------------------------------------------------------
+
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.remaining() < n {
+            return Err(ProtoError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn i64s(&mut self, count: usize) -> Result<Vec<i64>, ProtoError> {
+        let bytes = self.take(count * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+fn checked_elems(x: u32, y: u32) -> Result<usize, ProtoError> {
+    let n = (x as u64) * (y as u64);
+    if n > MAX_GEMM_ELEMS as u64 {
+        return Err(ProtoError::Oversized {
+            len: n.min(usize::MAX as u64) as usize,
+            max: MAX_GEMM_ELEMS,
+        });
+    }
+    Ok(n as usize)
+}
+
+/// Decode one frame payload (everything after the length prefix).
+fn decode_payload(buf: &[u8]) -> Result<Frame, ProtoError> {
+    let mut rd = Rd::new(buf);
+    let magic = rd.u16()?;
+    if magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    let ver = rd.u8()?;
+    if ver != VERSION {
+        return Err(ProtoError::BadVersion(ver));
+    }
+    let kind = rd.u8()?;
+    let frame = match kind {
+        K_GEMM_REQ => {
+            let k = rd.u32()?;
+            let m = rd.u32()?;
+            let kk = rd.u32()?;
+            let nn = rd.u32()?;
+            let ea = checked_elems(m, kk)?;
+            let eb = checked_elems(kk, nn)?;
+            Frame::GemmReq(GemmReq { k, m, kk, nn, a: rd.i64s(ea)?,
+                                     b: rd.i64s(eb)? })
+        }
+        K_GEMM_RESP => {
+            let m = rd.u32()?;
+            let nn = rd.u32()?;
+            let latency_us = rd.f64()?;
+            let tiles = rd.u64()?;
+            let macs = rd.u64()?;
+            let energy_fj = rd.f64()?;
+            let metered_macs = rd.u64()?;
+            let eo = checked_elems(m, nn)?;
+            Frame::GemmResp(GemmResp { m, nn, latency_us, tiles, macs,
+                                       energy_fj, metered_macs,
+                                       out: rd.i64s(eo)? })
+        }
+        K_APP_REQ => {
+            let app = app_from(rd.u8()?)?;
+            let k = rd.u32()?;
+            let len = rd.u32()? as usize;
+            if len > MAX_PGM_LEN {
+                return Err(ProtoError::Oversized { len, max: MAX_PGM_LEN });
+            }
+            Frame::AppReq(AppReq { app, k, pgm: rd.take(len)?.to_vec() })
+        }
+        K_APP_RESP => {
+            let app = app_from(rd.u8()?)?;
+            let psnr_db = rd.f64()?;
+            let latency_us = rd.f64()?;
+            let gemm_requests = rd.u64()?;
+            let energy_fj = rd.f64()?;
+            let macs = rd.u64()?;
+            let h = rd.u32()?;
+            let w = rd.u32()?;
+            if h as usize > MAX_PGM_DIM || w as usize > MAX_PGM_DIM {
+                return Err(ProtoError::Oversized {
+                    len: h.max(w) as usize,
+                    max: MAX_PGM_DIM,
+                });
+            }
+            let px = (h as usize) * (w as usize);
+            Frame::AppResp(AppResp { app, psnr_db, latency_us, gemm_requests,
+                                     energy_fj, macs, h, w,
+                                     pixels: rd.take(px)?.to_vec() })
+        }
+        K_STATS_REQ => Frame::StatsReq,
+        K_STATS_RESP => Frame::StatsResp(WireStats {
+            requests: rd.u64()?,
+            tiles: rd.u64()?,
+            macs: rd.u64()?,
+            energy_fj: rd.f64()?,
+            metered_macs: rd.u64()?,
+            latency_p50_us: rd.f64()?,
+            latency_p90_us: rd.f64()?,
+            latency_p99_us: rd.f64()?,
+            mean_latency_us: rd.f64()?,
+            connections: rd.u64()?,
+            frames_in: rd.u64()?,
+            frames_out: rd.u64()?,
+            bytes_in: rd.u64()?,
+            bytes_out: rd.u64()?,
+            net_p50_us: rd.f64()?,
+            net_p90_us: rd.f64()?,
+            net_p99_us: rd.f64()?,
+        }),
+        K_ERROR => {
+            let raw = rd.u16()?;
+            let code = match ErrCode::from_code(raw) {
+                Some(c) => c,
+                None => return Err(ProtoError::Malformed("unknown error code")),
+            };
+            let len = rd.u32()? as usize;
+            let msg = String::from_utf8(rd.take(len)?.to_vec())
+                .map_err(|_| ProtoError::Malformed("error message not UTF-8"))?;
+            Frame::Error(WireError { code, msg })
+        }
+        other => return Err(ProtoError::UnknownKind(other)),
+    };
+    if rd.remaining() != 0 {
+        return Err(ProtoError::Malformed("trailing bytes after frame body"));
+    }
+    Ok(frame)
+}
+
+/// Decode one full frame (length prefix included) from the start of
+/// `buf`; returns the frame and the bytes consumed. Every failure is a
+/// typed error — the decoder never panics on arbitrary input.
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
+    if buf.len() < 4 {
+        return Err(ProtoError::Truncated { need: 4, have: buf.len() });
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::Oversized { len, max: MAX_FRAME_LEN });
+    }
+    if len < 4 {
+        return Err(ProtoError::Malformed("frame length below header size"));
+    }
+    if buf.len() < 4 + len {
+        return Err(ProtoError::Truncated { need: 4 + len, have: buf.len() });
+    }
+    Ok((decode_payload(&buf[4..4 + len])?, 4 + len))
+}
+
+/// Read one frame from `r`. `Ok(None)` means clean EOF at a frame
+/// boundary (the peer closed between frames); EOF inside a frame is an
+/// error. `scratch` is the reusable payload buffer.
+pub fn read_frame<R: std::io::Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<Option<Frame>, ProtoError> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(ProtoError::Malformed(
+                        "connection closed inside a frame header"))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::Oversized { len, max: MAX_FRAME_LEN });
+    }
+    if len < 4 {
+        return Err(ProtoError::Malformed("frame length below header size"));
+    }
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch).map_err(ProtoError::Io)?;
+    decode_payload(scratch).map(Some)
+}
+
+/// Encode `frame` into `scratch` and write it whole to `w`; returns the
+/// total bytes written (length prefix included).
+pub fn write_frame<W: std::io::Write>(
+    w: &mut W,
+    frame: &Frame,
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<usize> {
+    encode(frame, scratch);
+    w.write_all(scratch)?;
+    Ok(scratch.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::XorShift;
+
+    fn rand_f(x: &mut XorShift) -> f64 {
+        (x.next_u64() % 1_000_000) as f64 / 7.0
+    }
+
+    fn rand_frame(x: &mut XorShift) -> Frame {
+        match x.next_u64() % 7 {
+            0 => {
+                // ragged sizes including empty matrices
+                let m = (x.next_u64() % 13) as u32;
+                let kk = (x.next_u64() % 9) as u32;
+                let nn = (x.next_u64() % 13) as u32;
+                Frame::GemmReq(GemmReq {
+                    k: (x.next_u64() % 9) as u32,
+                    m,
+                    kk,
+                    nn,
+                    a: (0..(m * kk) as usize).map(|_| x.next_u64() as i64)
+                        .collect(),
+                    b: (0..(kk * nn) as usize).map(|_| x.next_u64() as i64)
+                        .collect(),
+                })
+            }
+            1 => {
+                let m = (x.next_u64() % 11) as u32;
+                let nn = (x.next_u64() % 11) as u32;
+                Frame::GemmResp(GemmResp {
+                    m,
+                    nn,
+                    latency_us: rand_f(x),
+                    tiles: x.next_u64() % 1000,
+                    macs: x.next_u64() % 100_000,
+                    energy_fj: rand_f(x),
+                    metered_macs: x.next_u64() % 100_000,
+                    out: (0..(m * nn) as usize).map(|_| x.next_u64() as i64)
+                        .collect(),
+                })
+            }
+            2 => Frame::AppReq(AppReq {
+                app: AppKind::ALL[(x.next_u64() % 3) as usize],
+                k: (x.next_u64() % 9) as u32,
+                pgm: (0..(x.next_u64() % 300) as usize)
+                    .map(|_| x.next_u64() as u8)
+                    .collect(),
+            }),
+            3 => {
+                let h = (x.next_u64() % 10) as u32;
+                let w = (x.next_u64() % 10) as u32;
+                Frame::AppResp(AppResp {
+                    app: AppKind::ALL[(x.next_u64() % 3) as usize],
+                    psnr_db: if x.next_u64() % 8 == 0 {
+                        f64::INFINITY
+                    } else {
+                        rand_f(x)
+                    },
+                    latency_us: rand_f(x),
+                    gemm_requests: x.next_u64() % 100,
+                    energy_fj: rand_f(x),
+                    macs: x.next_u64() % 100_000,
+                    h,
+                    w,
+                    pixels: (0..(h * w) as usize).map(|_| x.next_u64() as u8)
+                        .collect(),
+                })
+            }
+            4 => Frame::StatsReq,
+            5 => Frame::StatsResp(WireStats {
+                requests: x.next_u64() % 10_000,
+                tiles: x.next_u64() % 10_000,
+                macs: x.next_u64(),
+                energy_fj: rand_f(x),
+                metered_macs: x.next_u64(),
+                latency_p50_us: rand_f(x),
+                latency_p90_us: rand_f(x),
+                latency_p99_us: rand_f(x),
+                mean_latency_us: rand_f(x),
+                connections: x.next_u64() % 100,
+                frames_in: x.next_u64() % 100_000,
+                frames_out: x.next_u64() % 100_000,
+                bytes_in: x.next_u64(),
+                bytes_out: x.next_u64(),
+                net_p50_us: rand_f(x),
+                net_p90_us: rand_f(x),
+                net_p99_us: rand_f(x),
+            }),
+            _ => {
+                let n = (x.next_u64() % 40) as usize;
+                Frame::Error(WireError {
+                    code: ErrCode::ALL[(x.next_u64() % 5) as usize],
+                    msg: (0..n)
+                        .map(|_| char::from(b'a' + (x.next_u64() % 26) as u8))
+                        .collect(),
+                })
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_round_trip_identity_500_cases() {
+        let mut x = XorShift::new(0xF0A1);
+        let mut buf = Vec::new();
+        for case in 0..500 {
+            let f = rand_frame(&mut x);
+            encode(&f, &mut buf);
+            let (back, used) =
+                decode(&buf).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(used, buf.len(), "case {case}: partial consume");
+            assert_eq!(back, f, "case {case}: round trip not identity");
+        }
+    }
+
+    #[test]
+    fn streamed_frames_read_back_in_order() {
+        let mut x = XorShift::new(0xBEEF);
+        let frames: Vec<Frame> = (0..40).map(|_| rand_frame(&mut x)).collect();
+        let mut stream = Vec::new();
+        let mut buf = Vec::new();
+        for f in &frames {
+            encode(f, &mut buf);
+            stream.extend_from_slice(&buf);
+        }
+        let mut cur = std::io::Cursor::new(stream);
+        let mut scratch = Vec::new();
+        for (i, f) in frames.iter().enumerate() {
+            let got = read_frame(&mut cur, &mut scratch).unwrap().unwrap();
+            assert_eq!(&got, f, "frame {i}");
+        }
+        assert!(read_frame(&mut cur, &mut scratch).unwrap().is_none(),
+                "clean EOF after the last frame");
+    }
+
+    #[test]
+    fn decoder_rejects_truncation_corruption_and_oversize_without_panic() {
+        let mut x = XorShift::new(0x7E57);
+        let mut buf = Vec::new();
+        for _ in 0..50 {
+            let f = rand_frame(&mut x);
+            encode(&f, &mut buf);
+            // every strict prefix fails with a typed error, never panics
+            let step = (buf.len() / 17).max(1);
+            for cut in (0..buf.len()).step_by(step) {
+                assert!(decode(&buf[..cut]).is_err(),
+                        "prefix {cut} of {} must not decode", buf.len());
+            }
+        }
+        // corrupted magic
+        encode(&Frame::StatsReq, &mut buf);
+        buf[4] ^= 0xFF;
+        assert!(matches!(decode(&buf), Err(ProtoError::BadMagic(_))));
+        // bad version
+        encode(&Frame::StatsReq, &mut buf);
+        buf[6] = 99;
+        assert!(matches!(decode(&buf), Err(ProtoError::BadVersion(99))));
+        // unknown kind
+        encode(&Frame::StatsReq, &mut buf);
+        buf[7] = 0xEE;
+        assert!(matches!(decode(&buf), Err(ProtoError::UnknownKind(0xEE))));
+        // oversized length prefix refuses before reading anything
+        let mut bad = ((MAX_FRAME_LEN as u32) + 1).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(decode(&bad), Err(ProtoError::Oversized { .. })));
+        // a length below the header size is structurally invalid
+        let mut tiny = 2u32.to_le_bytes().to_vec();
+        tiny.extend_from_slice(&[0u8, 0u8]);
+        assert!(matches!(decode(&tiny), Err(ProtoError::Malformed(_))));
+        // trailing garbage inside the declared payload is rejected
+        encode(&Frame::StatsReq, &mut buf);
+        buf.push(0xAB);
+        let len = (buf.len() - 4) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(decode(&buf), Err(ProtoError::Malformed(_))));
+        // oversized matrix dims reject before allocating
+        encode(&Frame::GemmReq(GemmReq {
+            k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![],
+        }), &mut buf);
+        buf[12..16].copy_from_slice(&(1u32 << 16).to_le_bytes()); // m
+        buf[16..20].copy_from_slice(&(1u32 << 16).to_le_bytes()); // kk
+        assert!(matches!(decode(&buf), Err(ProtoError::Oversized { .. })));
+        // oversized inline image length rejects before allocating
+        encode(&Frame::AppReq(AppReq {
+            app: AppKind::Dct, k: 0, pgm: vec![],
+        }), &mut buf);
+        // payload layout: magic(2) ver(1) kind(1) app(1) k(4) len(4)
+        buf[13..17].copy_from_slice(&((MAX_PGM_LEN as u32) + 1).to_le_bytes());
+        assert!(matches!(decode(&buf), Err(ProtoError::Oversized { .. })));
+    }
+
+    #[test]
+    fn borrowed_gemm_encode_matches_owned_form() {
+        let mut x = XorShift::new(0x60DD);
+        for _ in 0..20 {
+            let m = (x.next_u64() % 9) as u32;
+            let kk = (x.next_u64() % 7) as u32;
+            let nn = (x.next_u64() % 9) as u32;
+            let k = (x.next_u64() % 8) as u32;
+            let a: Vec<i64> =
+                (0..(m * kk) as usize).map(|_| x.next_u64() as i64).collect();
+            let b: Vec<i64> =
+                (0..(kk * nn) as usize).map(|_| x.next_u64() as i64).collect();
+            let mut owned = Vec::new();
+            encode(&Frame::GemmReq(GemmReq {
+                k, m, kk, nn, a: a.clone(), b: b.clone(),
+            }), &mut owned);
+            let mut borrowed = Vec::new();
+            encode_gemm_req(k, m, kk, nn, &a, &b, &mut borrowed);
+            assert_eq!(owned, borrowed);
+        }
+    }
+
+    #[test]
+    fn err_codes_round_trip() {
+        for c in ErrCode::ALL {
+            assert_eq!(ErrCode::from_code(c.code()), Some(c));
+        }
+        assert_eq!(ErrCode::from_code(999), None);
+    }
+}

@@ -1,0 +1,619 @@
+//! Thread-per-connection TCP server fronting a running
+//! [`Coordinator`].
+//!
+//! Each accepted connection gets a **reader** thread (decodes frames,
+//! validates, submits GEMMs to the pool) and a **writer** thread
+//! (resolves pending replies in admission order, encodes them through a
+//! reusable buffer, flushes when the queue runs dry). The bounded
+//! channel between them is the **admission gate**: when
+//! [`ServerConfig::max_inflight`] replies are pending, the reader
+//! blocks handing over the next request, stops reading the socket, the
+//! kernel's receive window fills, and the client's writes stall — the
+//! server backpressures instead of dropping or reordering. Replies are
+//! written strictly in request order per connection, so pipelined
+//! clients can match replies to requests positionally.
+//!
+//! [`NetServer::shutdown`] drains gracefully: the listener stops
+//! accepting, every connection's read side is half-closed (no *new*
+//! requests are admitted), already-admitted requests complete on the
+//! pool and their replies flush before the connection threads are
+//! joined. Statistics are kept **per connection** and folded into fleet
+//! totals ([`NetServer::stats`], the stats frame) on demand, so no hot
+//! path ever contends on one global lock.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::apps::bdcn::Block;
+use crate::apps::image::decode_pgm;
+use crate::apps::image::Image;
+use crate::coordinator::{AppKind, Coordinator, GemmRequest, LatencyRing,
+                         ServiceStats};
+
+use super::proto::{self, AppResp, ErrCode, Frame, GemmResp, ProtoError,
+                   WireError, WireStats};
+
+/// Per-connection and fleet-level network counters. The latency ring is
+/// the same sampler [`ServiceStats`] uses
+/// ([`LatencyRing`]), recording server-side
+/// admission-to-reply-written time per request.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    /// TCP connections accepted (fleet level only).
+    pub connections_opened: u64,
+    /// Connections fully torn down (fleet level only).
+    pub connections_closed: u64,
+    /// Frames read off the socket.
+    pub frames_in: u64,
+    /// Frames written back.
+    pub frames_out: u64,
+    /// Bytes read (length prefixes included).
+    pub bytes_in: u64,
+    /// Bytes written.
+    pub bytes_out: u64,
+    /// GEMM request frames seen (valid or not).
+    pub gemm_requests: u64,
+    /// Application request frames seen.
+    pub app_requests: u64,
+    /// Stats request frames seen.
+    pub stats_requests: u64,
+    /// Typed error frames sent.
+    pub error_replies: u64,
+    latency: LatencyRing,
+}
+
+impl NetStats {
+    /// Server-side request latency percentile (admission → reply
+    /// written) over the retained ring window.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.percentile(p)
+    }
+
+    fn record_latency(&mut self, us: f64) {
+        self.latency.record(us);
+    }
+
+    /// Fold another stats block into this one (fleet totals = closed
+    /// connections + every live connection's block).
+    pub fn merge(&mut self, other: &NetStats) {
+        self.connections_opened += other.connections_opened;
+        self.connections_closed += other.connections_closed;
+        self.frames_in += other.frames_in;
+        self.frames_out += other.frames_out;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.gemm_requests += other.gemm_requests;
+        self.app_requests += other.app_requests;
+        self.stats_requests += other.stats_requests;
+        self.error_replies += other.error_replies;
+        self.latency.merge(&other.latency);
+    }
+}
+
+/// Static configuration of one [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Admission gate: max replies pending per connection before the
+    /// reader stops reading the socket (0 selects
+    /// [`Self::DEFAULT_MAX_INFLIGHT`]). This bounds both memory and
+    /// pool queue pressure per client; excess requests wait in the
+    /// kernel's socket buffers on the *client's* side.
+    pub max_inflight: usize,
+    /// Socket write timeout per connection (`None` = never time out).
+    /// A client that stops *reading* its replies eventually stalls the
+    /// connection's writer in `write`; this bounds that stall — and
+    /// therefore how long [`NetServer::shutdown`]'s drain can block on
+    /// an unresponsive client before abandoning its connection.
+    pub write_timeout: Option<Duration>,
+    /// Trained BDCN weights, if this server should serve `bdcn`
+    /// requests (without them, `bdcn` gets a typed `Unsupported` reply).
+    pub bdcn: Option<Arc<Vec<Block>>>,
+}
+
+impl ServerConfig {
+    /// Default admission-gate depth.
+    pub const DEFAULT_MAX_INFLIGHT: usize = 32;
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_inflight: Self::DEFAULT_MAX_INFLIGHT,
+            write_timeout: Some(Duration::from_secs(30)),
+            bdcn: None,
+        }
+    }
+}
+
+struct State {
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    opened: AtomicU64,
+    closed_count: AtomicU64,
+    /// Folded stats of closed connections.
+    closed: Mutex<NetStats>,
+    /// Live per-connection stats blocks.
+    live: Mutex<Vec<Arc<Mutex<NetStats>>>>,
+    /// One cloned handle per **live** connection (keyed by connection
+    /// id), for the shutdown drain's read-side half-close. Entries are
+    /// pruned when their connection finishes — a long-running server
+    /// must not accumulate one dup'd fd per connection ever accepted.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    stop: AtomicBool,
+}
+
+impl State {
+    /// Fleet totals: closed-connection accumulator + live blocks. Holds
+    /// the `live` registry lock across the fold so a connection moving
+    /// from live to closed (see `connection_loop`) is counted exactly
+    /// once — lock order is always `live` → `closed`/per-connection.
+    fn net_stats(&self) -> NetStats {
+        let live = self.live.lock().unwrap();
+        let mut total = self.closed.lock().unwrap().clone();
+        for cs in live.iter() {
+            let snap = cs.lock().unwrap().clone();
+            total.merge(&snap);
+        }
+        drop(live);
+        total.connections_opened = self.opened.load(Ordering::Relaxed);
+        total.connections_closed = self.closed_count.load(Ordering::Relaxed);
+        total
+    }
+}
+
+/// The TCP server: an accept loop plus two threads per live connection,
+/// all fronting one shared [`Coordinator`] worker pool.
+pub struct NetServer {
+    addr: SocketAddr,
+    state: Arc<State>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback
+    /// port) and start accepting connections against `coord`. The
+    /// coordinator is shared — in-process callers may keep submitting
+    /// through their own `Arc` clone, and served results stay
+    /// bit-identical to theirs.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        coord: Arc<Coordinator>,
+        mut cfg: ServerConfig,
+    ) -> std::io::Result<NetServer> {
+        if cfg.max_inflight == 0 {
+            cfg.max_inflight = ServerConfig::DEFAULT_MAX_INFLIGHT;
+        }
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(State {
+            coord,
+            cfg,
+            opened: AtomicU64::new(0),
+            closed_count: AtomicU64::new(0),
+            closed: Mutex::new(NetStats::default()),
+            live: Mutex::new(Vec::new()),
+            conns: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+        });
+        let conn_threads = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = state.clone();
+            let threads = conn_threads.clone();
+            std::thread::Builder::new()
+                .name("axsys-net-accept".into())
+                .spawn(move || accept_loop(listener, state, threads))
+                .expect("spawn accept thread")
+        };
+        Ok(NetServer { addr, state, accept: Some(accept), conn_threads })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Fleet network statistics (closed + live connections folded).
+    pub fn stats(&self) -> NetStats {
+        self.state.net_stats()
+    }
+
+    /// Graceful drain: stop accepting, half-close every connection's
+    /// read side so no new requests are admitted, let already-admitted
+    /// requests complete on the pool and their replies flush, then join
+    /// every thread. A connection whose client has stopped reading is
+    /// abandoned once its write stalls past
+    /// [`ServerConfig::write_timeout`], which bounds the drain. Also
+    /// runs on `Drop`.
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if self.state.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock accept() with a throwaway connection to ourselves;
+        // unspecified bind addresses are woken via the matching-family
+        // loopback (both tried — v6-only stacks refuse the v4 one)
+        let mut wakes = vec![self.addr];
+        if self.addr.ip().is_unspecified() {
+            let mut v4 = self.addr;
+            v4.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+            let mut v6 = self.addr;
+            v6.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST));
+            wakes = vec![v4, v6];
+        }
+        let woke = wakes.iter().any(|w| {
+            TcpStream::connect_timeout(w, Duration::from_secs(1)).is_ok()
+        });
+        if let Some(h) = self.accept.take() {
+            if woke {
+                let _ = h.join();
+            }
+            // no self-connect succeeded (exotic bind address): detach
+            // the accept thread rather than hang shutdown on its join —
+            // it exits with the process and holds no request state
+        }
+        // half-close read sides: readers see EOF, writers drain + flush
+        for (_, c) in self.state.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+        let threads: Vec<_> =
+            self.conn_threads.lock().unwrap().drain(..).collect();
+        for h in threads {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<State>,
+               threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>) {
+    for stream in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // accept() can fail persistently (e.g. fd exhaustion);
+                // back off instead of spinning a core until it clears
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let id = state.opened.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            state.conns.lock().unwrap().push((id, clone));
+        }
+        let st = state.clone();
+        let h = std::thread::Builder::new()
+            .name("axsys-net-conn".into())
+            .spawn(move || connection_loop(stream, st, id))
+            .expect("spawn connection thread");
+        // reap handles of connections that already finished (their
+        // threads have exited; dropping the handle just detaches) so a
+        // long-running server holds state only for live connections
+        let mut t = threads.lock().unwrap();
+        t.retain(|h| !h.is_finished());
+        t.push(h);
+    }
+}
+
+/// A reply slot, enqueued by the reader in request order. `Ready`
+/// carries an immediately-known reply (typed errors); the others are
+/// resolved by the writer thread so the reader can keep admitting
+/// pipelined requests while earlier ones execute.
+enum Pending {
+    Ready(Frame, Instant),
+    Gemm { id: u64, t0: Instant },
+    App { app: AppKind, k: u32, img: Image, t0: Instant },
+    Stats(Instant),
+}
+
+fn connection_loop(stream: TcpStream, state: Arc<State>, id: u64) {
+    let cs: Arc<Mutex<NetStats>> = Arc::new(Mutex::new(NetStats::default()));
+    state.live.lock().unwrap().push(cs.clone());
+    let finish = |state: &Arc<State>, cs: &Arc<Mutex<NetStats>>| {
+        // move this connection's block from live to closed atomically
+        // w.r.t. `State::net_stats` (same `live` → `closed` lock order)
+        let mut live = state.live.lock().unwrap();
+        let snap = cs.lock().unwrap().clone();
+        state.closed.lock().unwrap().merge(&snap);
+        live.retain(|e| !Arc::ptr_eq(e, cs));
+        drop(live);
+        // release this connection's dup'd drain handle (fd) too
+        state.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+        state.closed_count.fetch_add(1, Ordering::Relaxed);
+    };
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            finish(&state, &cs);
+            return;
+        }
+    };
+    // bound writer stalls on clients that stop reading (see
+    // ServerConfig::write_timeout) — a timed-out write errors the
+    // writer out, which also bounds the shutdown drain
+    let _ = wstream.set_write_timeout(state.cfg.write_timeout);
+    let (tx, rx) = sync_channel::<Pending>(state.cfg.max_inflight.max(1));
+    let writer = {
+        let st = state.clone();
+        let wcs = cs.clone();
+        std::thread::Builder::new()
+            .name("axsys-net-write".into())
+            .spawn(move || writer_loop(wstream, st, wcs, rx))
+            .expect("spawn writer thread")
+    };
+    reader_loop(stream, &state, &cs, tx);
+    let _ = writer.join();
+    finish(&state, &cs);
+}
+
+fn reader_loop(stream: TcpStream, state: &Arc<State>,
+               cs: &Arc<Mutex<NetStats>>, tx: SyncSender<Pending>) {
+    let mut br = BufReader::new(stream);
+    let mut scratch = Vec::new();
+    loop {
+        let frame = match proto::read_frame(&mut br, &mut scratch) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,               // clean EOF (or drain half-close)
+            Err(ProtoError::Io(_)) => break, // connection died
+            Err(e) => {
+                // framing is unrecoverable: answer with a typed error,
+                // then close this connection (others are unaffected)
+                let _ = tx.send(Pending::Ready(
+                    Frame::Error(WireError {
+                        code: err_code_for(&e),
+                        msg: e.to_string(),
+                    }),
+                    Instant::now(),
+                ));
+                break;
+            }
+        };
+        {
+            let mut s = cs.lock().unwrap();
+            s.frames_in += 1;
+            s.bytes_in += (scratch.len() + 4) as u64;
+        }
+        let t0 = Instant::now();
+        let pending = match frame {
+            Frame::GemmReq(req) => {
+                cs.lock().unwrap().gemm_requests += 1;
+                admit_gemm(state, req, t0)
+            }
+            Frame::AppReq(req) => {
+                cs.lock().unwrap().app_requests += 1;
+                admit_app(state, req, t0)
+            }
+            Frame::StatsReq => {
+                cs.lock().unwrap().stats_requests += 1;
+                Pending::Stats(t0)
+            }
+            _ => reply_err(
+                ErrCode::Unsupported,
+                "server accepts gemm/app/stats request frames only",
+                t0,
+            ),
+        };
+        // the admission gate: blocks when `max_inflight` replies are
+        // already pending, which stops socket reads (backpressure, not
+        // drops — the reply order per connection is never disturbed)
+        if tx.send(pending).is_err() {
+            break; // writer gone (socket error)
+        }
+    }
+    // dropping tx lets the writer drain every admitted reply and exit
+}
+
+fn reply_err(code: ErrCode, msg: &str, t0: Instant) -> Pending {
+    Pending::Ready(Frame::Error(WireError { code, msg: msg.to_string() }), t0)
+}
+
+fn err_code_for(e: &ProtoError) -> ErrCode {
+    match e {
+        ProtoError::Oversized { .. } => ErrCode::TooLarge,
+        _ => ErrCode::Malformed,
+    }
+}
+
+/// Highest approximation level the serving surface accepts (the PE
+/// models are defined for k through the accumulator width; hostile
+/// values would poison worker threads).
+const MAX_WIRE_K: u32 = 16;
+
+fn admit_gemm(state: &Arc<State>, req: proto::GemmReq, t0: Instant)
+              -> Pending {
+    let (m, kk, nn) = (req.m as usize, req.kk as usize, req.nn as usize);
+    if m == 0 || kk == 0 || nn == 0 {
+        return reply_err(ErrCode::Malformed,
+                         "gemm dimensions must be positive", t0);
+    }
+    if req.k > MAX_WIRE_K {
+        return reply_err(ErrCode::Unsupported,
+                         "approximation level k exceeds the supported range",
+                         t0);
+    }
+    // the decoder bounds the operands (m*kk, kk*nn), but the *result*
+    // is allocated pool-side as m x nn — bound it here too, or a tiny
+    // frame (e.g. kk = 1 with huge m, nn) could demand a terabyte-scale
+    // allocation and an unencodable reply
+    if (m as u64) * (nn as u64) > proto::MAX_GEMM_ELEMS as u64 {
+        return reply_err(ErrCode::TooLarge,
+                         "result matrix m*nn exceeds the wire element cap",
+                         t0);
+    }
+    // operand lengths were validated against m/kk/nn by the decoder;
+    // submit() fans the tiles across the shared pool without blocking
+    // this thread on execution (only on pool-queue backpressure)
+    let id = state.coord.submit(GemmRequest {
+        a: req.a,
+        b: req.b,
+        m,
+        kk,
+        nn,
+        k: req.k,
+    });
+    Pending::Gemm { id, t0 }
+}
+
+fn admit_app(state: &Arc<State>, req: proto::AppReq, t0: Instant) -> Pending {
+    if req.k > MAX_WIRE_K {
+        return reply_err(ErrCode::Unsupported,
+                         "approximation level k exceeds the supported range",
+                         t0);
+    }
+    let img = match decode_pgm(&req.pgm) {
+        Ok(i) => i,
+        Err(e) => {
+            return reply_err(ErrCode::BadImage,
+                             &format!("bad PGM payload: {e}"), t0);
+        }
+    };
+    match req.app {
+        AppKind::Dct if img.h % 8 != 0 || img.w % 8 != 0 => {
+            reply_err(ErrCode::BadImage,
+                      "dct needs multiple-of-8 image dimensions", t0)
+        }
+        AppKind::Edge if img.h < 3 || img.w < 3 => {
+            reply_err(ErrCode::BadImage,
+                      "edge needs an image of at least 3x3", t0)
+        }
+        AppKind::Bdcn if state.cfg.bdcn.is_none() => {
+            reply_err(ErrCode::Unsupported,
+                      "bdcn weights are not loaded on this server", t0)
+        }
+        app => Pending::App { app, k: req.k, img, t0 },
+    }
+}
+
+fn wire_stats(s: &ServiceStats, n: &NetStats) -> WireStats {
+    WireStats {
+        requests: s.requests,
+        tiles: s.tiles,
+        macs: s.sim_macs,
+        energy_fj: s.energy_fj,
+        metered_macs: s.metered_macs,
+        latency_p50_us: s.latency_percentile(0.50),
+        latency_p90_us: s.latency_percentile(0.90),
+        latency_p99_us: s.latency_percentile(0.99),
+        mean_latency_us: s.mean_latency_us(),
+        connections: n.connections_opened,
+        frames_in: n.frames_in,
+        frames_out: n.frames_out,
+        bytes_in: n.bytes_in,
+        bytes_out: n.bytes_out,
+        net_p50_us: n.latency_percentile(0.50),
+        net_p90_us: n.latency_percentile(0.90),
+        net_p99_us: n.latency_percentile(0.99),
+    }
+}
+
+/// Resolve one pending slot into its reply frame. GEMMs block on the
+/// pool's completion signal; app requests run the full served pipeline
+/// here (their GEMM stages fan out across the pool while the reader
+/// keeps admitting later requests).
+fn resolve(state: &State, p: Pending) -> (Frame, Instant) {
+    match p {
+        Pending::Ready(f, t0) => (f, t0),
+        Pending::Gemm { id, t0 } => {
+            let resp = state.coord.wait(id);
+            (Frame::GemmResp(GemmResp {
+                m: resp.m as u32,
+                nn: resp.nn as u32,
+                latency_us: resp.latency_us,
+                tiles: resp.tiles,
+                macs: resp.sa_stats.macs,
+                energy_fj: resp.sa_stats.energy_fj,
+                metered_macs: resp.sa_stats.metered_macs,
+                out: resp.out,
+            }), t0)
+        }
+        Pending::App { app, k, img, t0 } => {
+            let r = match app {
+                AppKind::Bdcn => {
+                    let blocks =
+                        state.cfg.bdcn.clone().expect("checked at admission");
+                    state.coord.serve_bdcn(&blocks, &img, k)
+                }
+                _ => state.coord.call_app(app, &img, k)
+                    .expect("weight-free app"),
+            };
+            (Frame::AppResp(AppResp {
+                app,
+                psnr_db: r.psnr_db,
+                latency_us: r.latency_us,
+                gemm_requests: r.gemm_requests,
+                energy_fj: r.sa_stats.energy_fj,
+                macs: r.sa_stats.macs,
+                h: r.out.h as u32,
+                w: r.out.w as u32,
+                pixels: r.out.data,
+            }), t0)
+        }
+        Pending::Stats(t0) => {
+            // snapshot both stat blocks under their own short locks,
+            // release, then encode — the coordinator's stats lock is
+            // never held across frame encoding
+            let s = state.coord.stats_snapshot();
+            let n = state.net_stats();
+            (Frame::StatsResp(wire_stats(&s, &n)), t0)
+        }
+    }
+}
+
+fn writer_loop(stream: TcpStream, state: Arc<State>,
+               cs: Arc<Mutex<NetStats>>, rx: Receiver<Pending>) {
+    let mut bw = BufWriter::new(stream);
+    let mut scratch = Vec::new();
+    loop {
+        // batch-friendly: only flush when no reply is immediately ready
+        let item = match rx.try_recv() {
+            Ok(i) => i,
+            Err(TryRecvError::Empty) => {
+                if bw.flush().is_err() {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(i) => i,
+                    Err(_) => break, // reader closed the queue: drained
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        // flush fully-encoded earlier replies before blocking in
+        // resolve (pool wait / app execution): a pipelined client must
+        // receive reply N as soon as it exists, not when N+1 finishes
+        if !matches!(&item, Pending::Ready(..)) && bw.flush().is_err() {
+            break;
+        }
+        let (frame, t0) = resolve(&state, item);
+        match proto::write_frame(&mut bw, &frame, &mut scratch) {
+            Ok(n) => {
+                let us = t0.elapsed().as_secs_f64() * 1e6;
+                let mut s = cs.lock().unwrap();
+                s.frames_out += 1;
+                s.bytes_out += n as u64;
+                s.record_latency(us);
+                if matches!(frame, Frame::Error(_)) {
+                    s.error_replies += 1;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = bw.flush();
+}

@@ -1,0 +1,382 @@
+//! Integration tests for the network serving layer: results served over
+//! TCP must be **bit-identical** to in-process `Coordinator` responses
+//! on every backend (GEMM and all three application pipelines),
+//! concurrent pipelined clients must see correct isolated in-order
+//! replies, and admission-gate overload must block — never drop or
+//! reorder — per-connection traffic.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use axsys::apps::bdcn::{self, Block, Tensor};
+use axsys::apps::image::scene;
+use axsys::apps::{CoordinatorGemm, Gemm};
+use axsys::bench::{xorshift_ints as ints, Json};
+use axsys::coordinator::{AppKind, BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
+use axsys::net::client::{Client, RemoteGemm};
+use axsys::net::loadgen::{self, LoadgenConfig};
+use axsys::net::proto::{self, ErrCode, Frame};
+use axsys::net::server::{NetServer, ServerConfig};
+use axsys::net::NetError;
+
+fn start(backend: BackendKind, workers: usize, cfg: ServerConfig)
+         -> (Arc<Coordinator>, NetServer) {
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers,
+        backend,
+        ..Default::default()
+    }));
+    let server = NetServer::bind("127.0.0.1:0", coord.clone(), cfg)
+        .expect("bind loopback");
+    (coord, server)
+}
+
+/// Tiny deterministic int8 BDCN cascade (1 -> 4 -> 4 channels per
+/// block) so the weight-dependent app is servable without artifacts.
+fn synthetic_blocks() -> Vec<Block> {
+    let mut seed = 0x0B5Eu64;
+    let mut cin = 1usize;
+    let mut blocks = Vec::new();
+    for _ in 0..bdcn::N_BLOCKS {
+        let c = 4usize;
+        let mk = |kh: usize, kw: usize, ci: usize, co: usize, s: u64| Tensor {
+            shape: [kh, kw, ci, co],
+            data: ints(s, kh * kw * ci * co),
+        };
+        blocks.push(Block {
+            w1: mk(3, 3, cin, c, seed),
+            w2: mk(3, 3, c, c, seed + 1),
+            side: mk(1, 1, c, 1, seed + 2),
+        });
+        seed += 3;
+        cin = c;
+    }
+    blocks
+}
+
+#[test]
+fn remote_gemm_bit_identical_to_in_process_for_all_backends() {
+    let cases: &[(usize, usize, usize, u32)] =
+        &[(20, 16, 24, 0), (17, 13, 40, 3), (8, 8, 8, 7)];
+    for backend in [BackendKind::Word, BackendKind::Lut,
+                    BackendKind::Systolic] {
+        let (coord, server) = start(backend, 3, ServerConfig::default());
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        for (i, &(m, kk, nn, k)) in cases.iter().enumerate() {
+            let a = ints(2 * i as u64 + 1, m * kk);
+            let b = ints(2 * i as u64 + 2, kk * nn);
+            let want = coord.call(GemmRequest {
+                a: a.clone(), b: b.clone(), m, kk, nn, k,
+            });
+            let got = client.gemm(&a, &b, m, kk, nn, k).unwrap();
+            assert_eq!(got.out, want.out, "{backend:?} case {i}: bits differ");
+            assert_eq!((got.m as usize, got.nn as usize), (m, nn));
+            // software backends count exactly m*kk*nn MACs; the systolic
+            // array also counts the MACs of tile-padding PEs
+            assert!(got.macs >= (m * kk * nn) as u64, "{backend:?} case {i}");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn remote_apps_bit_identical_to_in_process() {
+    let blocks = Arc::new(synthetic_blocks());
+    for backend in [BackendKind::Word, BackendKind::Lut,
+                    BackendKind::Systolic] {
+        let (coord, server) = start(backend, 3, ServerConfig {
+            bdcn: Some(blocks.clone()),
+            ..Default::default()
+        });
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        let img = scene(16, 16);
+        // the gate-level-metered systolic replay is ~1000x slower, so
+        // its CNN cascade runs on a smaller image (same invariant)
+        let bdcn_img = if backend == BackendKind::Systolic {
+            scene(8, 8)
+        } else {
+            img.clone()
+        };
+        for k in [0u32, 4] {
+            let want = coord.serve_dct(&img, k);
+            let got = client.app(AppKind::Dct, &img, k).unwrap();
+            assert_eq!(got.image().data, want.out.data,
+                       "{backend:?} dct k={k}: bits differ over TCP");
+            let want = coord.serve_edge(&img, k);
+            let got = client.app(AppKind::Edge, &img, k).unwrap();
+            assert_eq!(got.image().data, want.out.data,
+                       "{backend:?} edge k={k}: bits differ over TCP");
+            assert_eq!(got.psnr_db.is_finite(), want.psnr_db.is_finite(),
+                       "{backend:?} edge k={k}: quality class differs");
+            let want = coord.serve_bdcn(&blocks, &bdcn_img, k);
+            let got = client.app(AppKind::Bdcn, &bdcn_img, k).unwrap();
+            assert_eq!(got.image().data, want.out.data,
+                       "{backend:?} bdcn k={k}: bits differ over TCP");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn concurrent_pipelined_clients_get_isolated_ordered_replies() {
+    let (coord, server) = start(BackendKind::Lut, 4, ServerConfig::default());
+    let addr = server.local_addr();
+    const CLIENTS: usize = 5;
+    const PER: usize = 12;
+    let handles: Vec<_> = (0..CLIENTS).map(|ci| {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            // expectations via the in-process path first, then the same
+            // requests pipelined over one connection: send all, receive
+            // all — replies must come back in order, none lost, none
+            // from another client's stream
+            let mut shapes = Vec::new();
+            let mut want = Vec::new();
+            for i in 0..PER {
+                let s = (ci * 100 + i) as u64;
+                let m = 5 + (s % 20) as usize;
+                let kk = 4 + (s % 13) as usize;
+                let nn = 6 + (s % 17) as usize;
+                let k = (s % 6) as u32;
+                let a = ints(2 * s + 1, m * kk);
+                let b = ints(2 * s + 2, kk * nn);
+                want.push(coord.call(GemmRequest {
+                    a: a.clone(), b: b.clone(), m, kk, nn, k,
+                }).out);
+                shapes.push((a, b, m, kk, nn, k));
+            }
+            let mut client = Client::connect(addr).unwrap();
+            for (a, b, m, kk, nn, k) in &shapes {
+                client.send_gemm(a, b, *m, *kk, *nn, *k).unwrap();
+            }
+            for (i, w) in want.iter().enumerate() {
+                let got = client.recv_gemm().unwrap();
+                assert_eq!(&got.out, w,
+                           "client {ci} reply {i} lost/reordered/corrupted");
+            }
+        })
+    }).collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let ns = server.stats();
+    assert_eq!(ns.gemm_requests, (CLIENTS * PER) as u64);
+    assert!(ns.connections_opened >= CLIENTS as u64);
+    server.shutdown();
+}
+
+#[test]
+fn overloaded_admission_gate_blocks_and_loses_nothing() {
+    // max_inflight 2 with 64 requests pipelined before any reply is
+    // read: the gate must stall socket reads (backpressure), and every
+    // reply must still arrive, in order, bit-correct
+    let (coord, server) = start(BackendKind::Lut, 2, ServerConfig {
+        max_inflight: 2,
+        ..Default::default()
+    });
+    let (m, kk, nn, k) = (16usize, 8usize, 16usize, 3u32);
+    let mut want = Vec::new();
+    let mut reqs = Vec::new();
+    for i in 0..64u64 {
+        let a = ints(2 * i + 1, m * kk);
+        let b = ints(2 * i + 2, kk * nn);
+        want.push(coord.call(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn, k,
+        }).out);
+        reqs.push((a, b));
+    }
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let rstream = stream.try_clone().unwrap();
+    let writer = std::thread::spawn(move || {
+        let mut w = stream;
+        let mut scratch = Vec::new();
+        for (a, b) in reqs {
+            let f = Frame::GemmReq(proto::GemmReq {
+                k,
+                m: m as u32,
+                kk: kk as u32,
+                nn: nn as u32,
+                a,
+                b,
+            });
+            proto::write_frame(&mut w, &f, &mut scratch).unwrap();
+        }
+    });
+    let mut br = BufReader::new(rstream);
+    let mut scratch = Vec::new();
+    for (i, w) in want.iter().enumerate() {
+        match proto::read_frame(&mut br, &mut scratch).unwrap() {
+            Some(Frame::GemmResp(r)) => {
+                assert_eq!(&r.out, w, "reply {i} corrupted under overload");
+            }
+            other => panic!("reply {i}: expected GemmResp, got {other:?}"),
+        }
+    }
+    writer.join().expect("writer thread");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_typed_errors_and_server_survives() {
+    let (coord, server) = start(BackendKind::Lut, 2, ServerConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    // bad PGM payload -> typed BadImage error, connection stays usable
+    client.send(&Frame::AppReq(proto::AppReq {
+        app: AppKind::Dct,
+        k: 2,
+        pgm: b"P6 not a pgm".to_vec(),
+    })).unwrap();
+    match client.recv().unwrap() {
+        Frame::Error(e) => assert_eq!(e.code, ErrCode::BadImage, "{}", e.msg),
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // shape rule: dct needs multiple-of-8 dimensions
+    match client.app(AppKind::Dct, &scene(12, 12), 2) {
+        Err(NetError::Server { code, .. }) => {
+            assert_eq!(code, ErrCode::BadImage);
+        }
+        other => panic!("expected server error, got {other:?}"),
+    }
+    // bdcn without weights -> typed Unsupported
+    match client.app(AppKind::Bdcn, &scene(16, 16), 2) {
+        Err(NetError::Server { code, .. }) => {
+            assert_eq!(code, ErrCode::Unsupported);
+        }
+        other => panic!("expected server error, got {other:?}"),
+    }
+    // empty GEMM dims -> typed Malformed (a zero-tile request would
+    // never complete on the pool)
+    client.send(&Frame::GemmReq(proto::GemmReq {
+        k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![],
+    })).unwrap();
+    match client.recv().unwrap() {
+        Frame::Error(e) => assert_eq!(e.code, ErrCode::Malformed, "{}", e.msg),
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // the same connection still serves valid requests afterwards
+    let a = ints(1, 64);
+    let b = ints(2, 64);
+    let want = coord.call(GemmRequest {
+        a: a.clone(), b: b.clone(), m: 8, kk: 8, nn: 8, k: 2,
+    }).out;
+    assert_eq!(client.gemm(&a, &b, 8, 8, 8, 2).unwrap().out, want);
+    // garbage framing kills only that connection; the server survives
+    {
+        use std::io::Write as _;
+        let mut s2 = TcpStream::connect(server.local_addr()).unwrap();
+        s2.write_all(&[0xFF; 64]).unwrap();
+        let mut br = BufReader::new(s2.try_clone().unwrap());
+        let mut rb = Vec::new();
+        // the broken connection gets a typed error frame or a close
+        match proto::read_frame(&mut br, &mut rb) {
+            Ok(Some(Frame::Error(_))) | Ok(None) | Err(_) => {}
+            other => panic!("expected error/close, got {other:?}"),
+        }
+    }
+    let mut c3 = Client::connect(server.local_addr()).unwrap();
+    assert_eq!(c3.gemm(&a, &b, 8, 8, 8, 2).unwrap().out, want,
+               "a fresh connection must still be served");
+    let ns = server.stats();
+    assert!(ns.error_replies >= 4, "typed errors counted: {ns:?}");
+    server.shutdown();
+}
+
+#[test]
+fn remote_gemm_drops_into_app_pipelines_and_stats_flow() {
+    let (coord, server) = start(BackendKind::Lut, 3, ServerConfig::default());
+    let img = scene(16, 16);
+    // RemoteGemm implements Gemm: the DCT pipeline runs over TCP
+    // unchanged and must match the in-process CoordinatorGemm bits
+    let mut rg = RemoteGemm::connect(server.local_addr(), 5).unwrap();
+    let (recon, _) = axsys::apps::dct::pipeline(&mut rg, &img);
+    let mut cg = CoordinatorGemm::new(&coord, 5);
+    let (want, _) = axsys::apps::dct::pipeline(&mut cg, &img);
+    assert_eq!(recon.data, want.data,
+               "pipeline over RemoteGemm must be bit-identical");
+    assert!(rg.requests >= 4, "dct issues >= 4 GEMM stages: {}", rg.requests);
+    let st = rg.stats().unwrap();
+    assert!(st.macs > 0 && st.metered_macs == st.macs,
+            "lut-served requests are fully metered: {st:?}");
+    // the stats frame reflects the served traffic and the net counters
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let ws = c.stats().unwrap();
+    assert!(ws.requests >= rg.requests + cg.requests);
+    assert!(ws.energy_fj > 0.0 && ws.metered_macs > 0);
+    assert!(ws.frames_in >= rg.requests && ws.frames_out >= rg.requests);
+    assert!(ws.bytes_in > 0 && ws.bytes_out > 0);
+    assert!(ws.latency_p50_us > 0.0);
+    let ns = server.stats();
+    assert!(ns.connections_opened >= 2);
+    assert!(ns.gemm_requests >= rg.requests);
+    assert!(ns.latency_percentile(0.5) > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_replies() {
+    let (coord, server) = start(BackendKind::Lut, 2, ServerConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let (m, kk, nn, k) = (24usize, 8usize, 24usize, 2u32);
+    let mut want = Vec::new();
+    for i in 0..6u64 {
+        let a = ints(2 * i + 1, m * kk);
+        let b = ints(2 * i + 2, kk * nn);
+        want.push(coord.call(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn, k,
+        }).out);
+        client.send_gemm(&ints(2 * i + 1, m * kk), &ints(2 * i + 2, kk * nn),
+                         m, kk, nn, k).unwrap();
+    }
+    // give the reader time to admit everything, then drain-shutdown
+    // concurrently with the client reading its replies: every admitted
+    // request must still be answered before the connection closes
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let h = std::thread::spawn(move || server.shutdown());
+    for (i, w) in want.iter().enumerate() {
+        let got = client.recv_gemm();
+        assert_eq!(&got.expect("drained reply").out, w,
+                   "reply {i} lost in shutdown drain");
+    }
+    h.join().expect("shutdown thread");
+}
+
+#[test]
+fn loadgen_emits_serve_net_report_against_loopback() {
+    let (_coord, server) = start(BackendKind::Lut, 3, ServerConfig::default());
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        clients: 3,
+        requests: 24,
+        k_max: 4,
+        seed: 7,
+        apps: true,
+    };
+    let doc = loadgen::run(&cfg).expect("loadgen run");
+    match doc.get("throughput_req_per_sec") {
+        Some(&Json::Num(v)) => assert!(v > 0.0, "throughput {v}"),
+        other => panic!("throughput missing: {other:?}"),
+    }
+    assert_eq!(doc.get("served_requests"), Some(&Json::Int(24)));
+    let lat = doc.get("latency_us").expect("latency section");
+    match (lat.get("p50"), lat.get("p99")) {
+        (Some(&Json::Num(p50)), Some(&Json::Num(p99))) => {
+            assert!(p50 > 0.0 && p50 <= p99, "{p50} vs {p99}");
+        }
+        other => panic!("percentiles missing: {other:?}"),
+    }
+    let server_j = doc.get("server").expect("server section");
+    match server_j.get("energy_uj_total") {
+        Some(&Json::Num(v)) => assert!(v > 0.0, "served energy {v}"),
+        other => panic!("energy_uj_total missing: {other:?}"),
+    }
+    // the artifact serializes as a JSON document
+    let dir = std::env::temp_dir().join("axsys_net_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("BENCH_serve_net.json");
+    std::fs::write(&p, doc.pretty()).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    assert!(text.starts_with('{') && text.ends_with("}\n"), "{text}");
+    server.shutdown();
+}
