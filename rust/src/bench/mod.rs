@@ -102,7 +102,7 @@ pub fn run<F: FnMut()>(label: &str, budget_ms: u64, mut f: F) -> Measurement {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let m = Measurement {
         iters,
         median_ns: samples[samples.len() / 2],

@@ -50,7 +50,7 @@
 //! accumulation" deployment mode (DESIGN.md §3).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -226,7 +226,73 @@ struct TileJob {
     k: u32,
 }
 
-type Shared = Arc<(Mutex<HashMap<u64, Pending>>, Condvar)>;
+/// Stripe count of the pending-request completion map. Request ids
+/// distribute as `id % PENDING_STRIPES`, so submitters, waiters and
+/// committing workers of *different* requests rarely contend on the
+/// same lock (the previous design funneled all of them — and therefore
+/// every serving shard — through one map mutex).
+const PENDING_STRIPES: usize = 8;
+
+/// The striped completion map: each stripe pairs a mutex-guarded
+/// id → [`Pending`] map with a condvar for the waiters of requests that
+/// hash to it.
+struct SharedMap {
+    stripes: Vec<(Mutex<HashMap<u64, Pending>>, Condvar)>,
+}
+
+impl SharedMap {
+    fn new() -> Self {
+        SharedMap {
+            stripes: (0..PENDING_STRIPES)
+                .map(|_| (Mutex::new(HashMap::new()), Condvar::new()))
+                .collect(),
+        }
+    }
+
+    fn stripe(&self, id: u64) -> &(Mutex<HashMap<u64, Pending>>, Condvar) {
+        &self.stripes[(id % PENDING_STRIPES as u64) as usize]
+    }
+}
+
+type Shared = Arc<SharedMap>;
+
+/// Striped service statistics: one stripe per worker — written only by
+/// that worker, so dispatch and completion accounting never contends —
+/// with front-end writers (the app endpoints, which run on caller
+/// threads) round-robined across the stripes. Folded into one
+/// [`ServiceStats`] via [`ServiceStats::merge`] on snapshot.
+struct StatsStripes {
+    stripes: Vec<Mutex<ServiceStats>>,
+    /// Round-robin cursor for writers without a stripe of their own.
+    rr: AtomicUsize,
+}
+
+impl StatsStripes {
+    fn new(n: usize) -> Self {
+        StatsStripes {
+            stripes: (0..n.max(1))
+                .map(|_| Mutex::new(ServiceStats::default()))
+                .collect(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Any stripe, round-robined — for the app endpoints' caller-thread
+    /// records (the fold sums every stripe, so placement is free).
+    fn rotate(&self) -> &Mutex<ServiceStats> {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed);
+        &self.stripes[i % self.stripes.len()]
+    }
+
+    /// Fold every stripe into one fleet view (short lock per stripe).
+    fn fold(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in &self.stripes {
+            total.merge(&s.lock().unwrap());
+        }
+        total
+    }
+}
 
 /// Application pipelines servable end-to-end through the coordinator
 /// (paper §V). Every matrix product inside them is tiled and executed
@@ -346,6 +412,19 @@ impl AppStats {
             self.energy_fj * 1e-9 / self.requests as f64
         }
     }
+
+    /// Fold another app-stats block into this one (sums for counters,
+    /// max for worst-case latency) — the per-stripe fold behind
+    /// [`ServiceStats::merge`].
+    pub fn merge(&mut self, o: &AppStats) {
+        self.requests += o.requests;
+        self.gemm_requests += o.gemm_requests;
+        self.total_latency_us += o.total_latency_us;
+        self.max_latency_us = self.max_latency_us.max(o.max_latency_us);
+        self.psnr_sum_db += o.psnr_sum_db;
+        self.psnr_samples += o.psnr_samples;
+        self.energy_fj += o.energy_fj;
+    }
 }
 
 /// Per-GEMM-request latency samples retained for percentile reporting
@@ -408,10 +487,12 @@ impl LatencyRing {
     }
 
     /// Percentile over the retained window ([`percentile_sorted`] of
-    /// the sorted samples; 0.0 when empty).
+    /// the sorted samples; 0.0 when empty). NaN-safe: samples sort by
+    /// [`f64::total_cmp`] (NaN to the top end), so one poisoned sample
+    /// can never panic the stats path mid-serve.
     pub fn percentile(&self, p: f64) -> f64 {
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         percentile_sorted(&v, p)
     }
 }
@@ -540,6 +621,39 @@ impl ServiceStats {
     pub fn latency_percentile(&self, p: f64) -> f64 {
         self.latency.percentile(p)
     }
+
+    /// Fold another stats block into this one: sums for all counters
+    /// and totals, max for the worst-case fields, ring-merge for the
+    /// latency window, [`AppStats::merge`] per app. This is how
+    /// [`Coordinator::stats_snapshot`] collapses the per-worker stripes
+    /// into the one fleet view every caller sees.
+    pub fn merge(&mut self, o: &ServiceStats) {
+        self.requests += o.requests;
+        self.tiles += o.tiles;
+        self.total_latency_us += o.total_latency_us;
+        self.max_latency_us = self.max_latency_us.max(o.max_latency_us);
+        self.sim_cycles += o.sim_cycles;
+        self.sim_macs += o.sim_macs;
+        self.sim_toggles += o.sim_toggles;
+        self.energy_fj += o.energy_fj;
+        self.metered_macs += o.metered_macs;
+        self.worker_dispatches += o.worker_dispatches;
+        self.dispatched_tiles += o.dispatched_tiles;
+        self.max_dispatch_tiles =
+            self.max_dispatch_tiles.max(o.max_dispatch_tiles);
+        self.coalesced_calls += o.coalesced_calls;
+        self.dispatch_exec_us += o.dispatch_exec_us;
+        self.lut_macs += o.lut_macs;
+        // cache counters are process-wide gauges refreshed at snapshot
+        // time, not per-stripe counters — keep the max so a pre-refresh
+        // fold is still monotone
+        self.lut_cache_hits = self.lut_cache_hits.max(o.lut_cache_hits);
+        self.lut_builds = self.lut_builds.max(o.lut_builds);
+        self.dct.merge(&o.dct);
+        self.edge.merge(&o.edge);
+        self.bdcn.merge(&o.bdcn);
+        self.latency.merge(&o.latency);
+    }
 }
 
 /// The coordinator: tiler + bounded queue + worker pool + reassembly.
@@ -549,7 +663,7 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     shared: Shared,
     next_id: AtomicU64,
-    stats: Arc<Mutex<ServiceStats>>,
+    stats: Arc<StatsStripes>,
 }
 
 impl Coordinator {
@@ -564,8 +678,8 @@ impl Coordinator {
                  (and the xla crate; see rust/src/runtime/mod.rs)");
         let (tx, rx) = sync_channel::<TileJob>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let shared: Shared = Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
-        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let shared: Shared = Arc::new(SharedMap::new());
+        let stats = Arc::new(StatsStripes::new(cfg.workers.max(1)));
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let rx = rx.clone();
@@ -574,7 +688,7 @@ impl Coordinator {
             let wcfg = cfg.clone();
             workers.push(std::thread::Builder::new()
                 .name(format!("axsys-worker-{wid}"))
-                .spawn(move || worker_loop(wcfg, rx, shared, stats))
+                .spawn(move || worker_loop(wcfg, wid, rx, shared, stats))
                 .expect("spawn worker"));
         }
         Coordinator { cfg, tx: Some(tx), workers, shared,
@@ -592,7 +706,7 @@ impl Coordinator {
         let tiles_m = m.div_ceil(sa);
         let tiles_n = nn.div_ceil(sa);
         {
-            let (lock, _) = &*self.shared;
+            let (lock, _) = self.shared.stripe(id);
             lock.lock().unwrap().insert(id, Pending {
                 out: vec![0; m * nn],
                 m,
@@ -644,7 +758,7 @@ impl Coordinator {
 
     /// Block until a request completes and take its response.
     pub fn wait(&self, id: u64) -> GemmResponse {
-        let (lock, cvar) = &*self.shared;
+        let (lock, cvar) = self.shared.stripe(id);
         let mut map = lock.lock().unwrap();
         loop {
             if let Some(p) = map.get_mut(&id) {
@@ -666,15 +780,16 @@ impl Coordinator {
     }
 
     /// Cheap snapshot of the aggregate service statistics: one short
-    /// lock to clone the stats block, released before the caller
-    /// formats, encodes or aggregates anything. Concurrent readers — the
-    /// network server's stats frames, `loadgen` polling, CLI summaries —
-    /// must use this (or [`Self::stats`], its alias) so the stats lock
-    /// is never held across encoding while workers try to commit
-    /// results. LUT cache counters are refreshed from the process-wide
-    /// cache (lock-free atomics) after the clone.
+    /// lock per worker stripe to fold the per-stripe blocks into a
+    /// fresh total, every lock released before the caller formats,
+    /// encodes or aggregates anything. Concurrent readers — the network
+    /// server's stats frames, `loadgen` polling, CLI summaries — must
+    /// use this (or [`Self::stats`], its alias) so no stats lock is
+    /// ever held across encoding while workers try to commit results.
+    /// LUT cache counters are refreshed from the process-wide cache
+    /// (lock-free atomics) after the fold.
     pub fn stats_snapshot(&self) -> ServiceStats {
-        let mut s = { self.stats.lock().unwrap().clone() };
+        let mut s = self.stats.fold();
         let (hits, builds) = lut::cache_counters();
         s.lut_cache_hits = hits;
         s.lut_builds = builds;
@@ -757,7 +872,7 @@ impl Coordinator {
             gemm_requests += g.requests;
         }
         {
-            let mut s = self.stats.lock().unwrap();
+            let mut s = self.stats.rotate().lock().unwrap();
             let a = s.app_mut(app);
             a.requests += 1;
             a.gemm_requests += gemm_requests;
@@ -886,9 +1001,13 @@ fn make_device(cfg: &CoordinatorConfig) -> Device {
     }
 }
 
-fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
-               shared: Shared, stats: Arc<Mutex<ServiceStats>>) {
+fn worker_loop(cfg: CoordinatorConfig, wid: usize,
+               rx: Arc<Mutex<Receiver<TileJob>>>,
+               shared: Shared, stats: Arc<StatsStripes>) {
     let mut device = make_device(&cfg);
+    // every worker owns one stats stripe: dispatch/completion counters
+    // commit without contending with the other workers
+    let my = &stats.stripes[wid % stats.stripes.len()];
     loop {
         // pull a batch (first blocks, rest opportunistic)
         let mut batch = Vec::with_capacity(cfg.batch);
@@ -909,7 +1028,7 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
         let (results, device_calls) = execute_batch(&cfg, &mut device, &batch);
         let exec_us = t_exec.elapsed().as_secs_f64() * 1e6;
         {
-            let mut s = stats.lock().unwrap();
+            let mut s = my.lock().unwrap();
             s.worker_dispatches += 1;
             s.dispatched_tiles += batch.len() as u64;
             s.max_dispatch_tiles = s.max_dispatch_tiles.max(batch.len() as u64);
@@ -922,10 +1041,11 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
                 }
             }
         }
-        // commit results
-        let (lock, cvar) = &*shared;
-        let mut map = lock.lock().unwrap();
+        // commit results: each job locks only its request's stripe, so
+        // workers completing unrelated requests never serialize here
         for (job, (tile, tstats)) in batch.iter().zip(results) {
+            let (lock, cvar) = shared.stripe(job.req_id);
+            let mut map = lock.lock().unwrap();
             let p = map.get_mut(&job.req_id).expect("pending entry");
             for i in 0..job.th {
                 for j in 0..job.tw {
@@ -945,7 +1065,7 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Arc<Mutex<Receiver<TileJob>>>,
                     tiles: p.stats.tiles.max(1),
                     sa_stats: p.stats,
                 };
-                let mut s = stats.lock().unwrap();
+                let mut s = my.lock().unwrap();
                 s.requests += 1;
                 s.tiles += resp.sa_stats.tiles.max(1);
                 s.total_latency_us += latency_us;
@@ -1218,6 +1338,45 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn latency_percentile_is_nan_safe() {
+        // A poisoned (NaN) sample must not panic the percentile sort:
+        // total_cmp orders NaN past every finite sample, so the finite
+        // percentiles stay meaningful and only the top end reports NaN.
+        let mut r = LatencyRing::default();
+        r.record(5.0);
+        r.record(f64::NAN);
+        r.record(1.0);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(0.5), 5.0);
+        assert!(r.percentile(1.0).is_nan());
+    }
+
+    #[test]
+    fn service_stats_fold_matches_single_stripe_totals() {
+        // Folding split stripes must equal recording into one block.
+        let stripes = StatsStripes::new(3);
+        for (i, lat) in [120.0, 80.0, 240.0, 60.0].iter().enumerate() {
+            let mut s = stripes.stripes[i % 3].lock().unwrap();
+            s.requests += 1;
+            s.tiles += 2;
+            s.total_latency_us += lat;
+            s.max_latency_us = s.max_latency_us.max(*lat);
+            s.record_latency(*lat);
+            s.sim_macs += 10;
+            s.energy_fj += 1.5;
+        }
+        let total = stripes.fold();
+        assert_eq!(total.requests, 4);
+        assert_eq!(total.tiles, 8);
+        assert_eq!(total.sim_macs, 40);
+        assert!((total.total_latency_us - 500.0).abs() < 1e-9);
+        assert_eq!(total.max_latency_us, 240.0);
+        assert!((total.energy_fj - 6.0).abs() < 1e-9);
+        assert_eq!(total.latency.recorded(), 4);
+        assert_eq!(total.latency_percentile(1.0), 240.0);
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! | [`apps`]      | DCT / edge / BDCN pipelines (+ [`apps::im2col`] conv→GEMM lowering, [`apps::CoordinatorGemm`] serving adapter) + image I/O + PSNR/SSIM |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
 //! | [`coordinator`]| GEMM request router: tiler, batched+coalesced dispatch, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
-//! | [`net`]       | framed TCP serving layer: versioned wire protocol, thread-per-connection server with a max-inflight admission gate fronting the coordinator, blocking client + [`net::client::RemoteGemm`], load generator |
+//! | [`net`]       | framed TCP serving layer: versioned wire protocol, sharded `poll(2)` event-loop server (readiness-backoff admission gate, resolver pool) fronting the coordinator, blocking client + [`net::client::RemoteGemm`], load generator with a ≥1k-connection scale mode |
 //! | [`bench`]     | tiny criterion-free measurement harness + the `bench-report` JSON emitter |
 //!
 //! ## Choosing a GEMM backend

@@ -79,15 +79,16 @@ const COMMANDS: &[Cmd] = &[
           help: "BDCN-lite CNN edge detection (coordinator-served)" },
     Cmd { name: "serve",
           args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
-                 [--app gemm|{APPS}] [--k K] [--listen ADDR] \
+                 [--app gemm|{APPS}] [--k K] [--listen ADDR] [--shards N] \
                  [--max-inflight N] [--port-file PATH]",
           help: "run the GEMM coordinator on synthetic/app traffic, or \
                  serve it over TCP (--listen)" },
     Cmd { name: "loadgen",
           args: "--addr HOST:PORT [--clients N] [--requests R] [--k K] \
-                 [--seed S] [--gemm-only] [--out PATH]",
+                 [--seed S] [--gemm-only] [--conns N] [--per-conn R] \
+                 [--threads T] [--out PATH]",
           help: "framed-TCP load generator -> BENCH_serve_net.json \
-                 (against serve --listen)" },
+                 (against serve --listen; --conns: connection-scale mode)" },
     Cmd { name: "apps-report", args: "[--backend {BACKENDS}] [--size S]",
           help: "paper §V PSNR tables: all four cell families x k, served" },
     Cmd { name: "lut-report", args: "",
@@ -721,6 +722,9 @@ fn serve_listen(addr: &str, rest: &[String], backend: BackendKind,
     if let Some(v) = opt(rest, "--max-inflight").and_then(|v| v.parse().ok()) {
         scfg.max_inflight = v;
     }
+    if let Some(v) = opt(rest, "--shards").and_then(|v| v.parse().ok()) {
+        scfg.shards = v; // 0 keeps the auto-sizing
+    }
     // BDCN weights are optional: without the artifact, `bdcn` requests
     // get a typed Unsupported reply instead of a refusal to start
     scfg.bdcn = axsys::apps::bdcn::load_weights(
@@ -753,13 +757,47 @@ fn serve_listen(addr: &str, rest: &[String], backend: BackendKind,
 
 /// `loadgen`: drive a live `serve --listen` server with the seeded
 /// multi-client mix and write the `BENCH_serve_net.json` artifact.
+/// `--conns` switches to connection-scale mode: thousands of concurrent
+/// connections with tagged replies verified byte-for-byte.
 fn loadgen(rest: &[String]) -> i32 {
-    use axsys::net::loadgen::{self, LoadgenConfig};
+    use axsys::net::loadgen::{self, LoadgenConfig, ScaleConfig};
     let Some(addr) = opt(rest, "--addr") else {
         eprintln!("loadgen: --addr HOST:PORT is required (start a server \
                    with `axsys serve --listen 127.0.0.1:0`)");
         return 2;
     };
+    if let Some(conns) = opt(rest, "--conns").and_then(|v| v.parse().ok()) {
+        let mut scfg = ScaleConfig::new(addr);
+        scfg.conns = conns;
+        if let Some(v) = opt(rest, "--per-conn").and_then(|v| v.parse().ok()) {
+            scfg.per_conn = v;
+        }
+        if let Some(v) = opt(rest, "--threads").and_then(|v| v.parse().ok()) {
+            scfg.threads = v;
+        }
+        if scfg.conns == 0 || scfg.per_conn == 0 {
+            eprintln!("loadgen: --conns/--per-conn >= 1");
+            return 2;
+        }
+        let out = opt(rest, "--out").map(PathBuf::from)
+            .unwrap_or_else(loadgen::default_path);
+        println!("loadgen: addr={} conns={} per-conn={} (scale mode)",
+                 scfg.addr, scfg.conns, scfg.per_conn);
+        return match loadgen::run_scale(&scfg) {
+            Ok(doc) => {
+                if let Err(e) = std::fs::write(&out, doc.pretty()) {
+                    eprintln!("cannot write {}: {e}", out.display());
+                    return 1;
+                }
+                println!("  wrote {}", out.display());
+                0
+            }
+            Err(e) => {
+                eprintln!("loadgen: {e}");
+                1
+            }
+        };
+    }
     let mut cfg = LoadgenConfig::new(addr);
     if let Some(v) = opt(rest, "--clients").and_then(|v| v.parse().ok()) {
         cfg.clients = v;

@@ -72,7 +72,7 @@ impl Client {
         assert_eq!(a.len(), m * kk, "A shape");
         assert_eq!(b.len(), kk * nn, "B shape");
         proto::encode_gemm_req(k, m as u32, kk as u32, nn as u32, a, b,
-                               &mut self.wbuf);
+                               &mut self.wbuf)?;
         self.writer.write_all(&self.wbuf)?;
         Ok(())
     }

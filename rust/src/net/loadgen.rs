@@ -14,8 +14,18 @@
 //! *family* is a property of the server's pool configuration, so
 //! sweeping families means pointing the generator at differently
 //! configured servers.
+//!
+//! **Scale mode** ([`ScaleConfig`] / [`run_scale`], `loadgen --conns`)
+//! stresses the event-loop front-end instead of the pool: a few worker
+//! threads multiplex *thousands* of concurrent connections (all held
+//! open simultaneously behind a barrier), pipeline tiny tagged `1x1x1`
+//! GEMMs down each one, and verify every reply byte-for-byte — a lost,
+//! reordered or corrupted reply fails the run. Its summary is the
+//! `axsys-serve-scale/v1` document backing `BENCH_serve_net.json`'s
+//! concurrency numbers.
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use crate::apps::image::{scene, texture};
@@ -23,7 +33,7 @@ use crate::bench::{xorshift_ints, Json, XorShift};
 use crate::coordinator::{percentile_sorted, AppKind};
 
 use super::client::Client;
-use super::NetError;
+use super::{sys, NetError};
 
 /// Knobs of one load-generation run (all have CLI flags).
 #[derive(Clone, Debug)]
@@ -54,6 +64,31 @@ impl LoadgenConfig {
             seed: 0x5EED,
             apps: true,
         }
+    }
+}
+
+/// Knobs of one scale-mode run (`loadgen --conns`): connection-count
+/// stress against the event-loop front-end rather than pool throughput.
+#[derive(Clone, Debug)]
+pub struct ScaleConfig {
+    /// Server address (`HOST:PORT`).
+    pub addr: String,
+    /// Concurrent connections, all held open simultaneously (clamped to
+    /// what the process's open-files limit can hold after
+    /// [`run_scale`] raises it).
+    pub conns: usize,
+    /// Pipelined requests per connection.
+    pub per_conn: usize,
+    /// Worker threads multiplexing the connections (0 = auto-size from
+    /// the host's available parallelism).
+    pub threads: usize,
+}
+
+impl ScaleConfig {
+    /// Default stress shape against `addr`: 1000 connections, 4
+    /// pipelined requests each, auto thread count.
+    pub fn new(addr: String) -> Self {
+        ScaleConfig { addr, conns: 1000, per_conn: 4, threads: 0 }
     }
 }
 
@@ -164,10 +199,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
     let ws = probe.stats()?;
     let mut all: Vec<f64> =
         gemm_lat.iter().chain(app_lat.iter()).copied().collect();
-    let by = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
-    all.sort_by(by);
-    gemm_lat.sort_by(by);
-    app_lat.sort_by(by);
+    all.sort_by(f64::total_cmp);
+    gemm_lat.sort_by(f64::total_cmp);
+    app_lat.sort_by(f64::total_cmp);
     let served = all.len();
     println!("loadgen: {} requests over {} clients in {:.3}s ({:.1} req/s)",
              served, clients, wall, served as f64 / wall.max(1e-9));
@@ -217,4 +251,122 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
                 .set("p50", Json::Num(ws.net_p50_us))
                 .set("p90", Json::Num(ws.net_p90_us))
                 .set("p99", Json::Num(ws.net_p99_us)))))
+}
+
+/// The scale worker's slice: its connections all open before the
+/// barrier, so every slice across every thread is concurrent.
+fn scale_worker(addr: String, first: usize, count: usize, per_conn: usize,
+                barrier: Arc<Barrier>) -> Result<Vec<f64>, NetError> {
+    let mut clients = Vec::with_capacity(count);
+    for c in first..first + count {
+        clients.push((c, Client::connect(addr.as_str())?));
+    }
+    barrier.wait(); // every configured connection is now open at once
+    let mut lat = Vec::with_capacity(count * per_conn);
+    let mut t_send = Vec::with_capacity(per_conn);
+    for (c, client) in clients.iter_mut() {
+        // pipeline the whole batch, then read replies strictly in
+        // order: each reply must carry its request's tag back — a
+        // dropped, duplicated or reordered reply shifts every later
+        // tag and fails the verification below
+        t_send.clear();
+        for i in 0..per_conn {
+            let tag = ((*c as i64) << 20) | i as i64;
+            client.send_gemm(&[tag], &[1], 1, 1, 1, 0)?;
+            t_send.push(Instant::now());
+        }
+        for i in 0..per_conn {
+            let r = client.recv_gemm()?;
+            lat.push(t_send[i].elapsed().as_secs_f64() * 1e6);
+            let tag = ((*c as i64) << 20) | i as i64;
+            if r.out.as_slice() != [tag] {
+                return Err(NetError::Unexpected(
+                    "scale reply lost, reordered or corrupted"));
+            }
+        }
+    }
+    Ok(lat)
+}
+
+/// Run the connection-scale stress and return the
+/// `axsys-serve-scale/v1` summary document. A clean return proves zero
+/// lost/reordered/corrupted replies across every connection (each reply
+/// is verified against its request's unique tag); any violation — or
+/// any socket/protocol failure — aborts with the error.
+pub fn run_scale(cfg: &ScaleConfig) -> Result<Json, NetError> {
+    // thousands of sockets from one process: lift the soft open-files
+    // limit to the hard one, then clamp the plan to what actually fits
+    // (2 fds of headroom per connection: the socket plus kernel slack
+    // for accept-side churn, wake pairs and the probe)
+    let limit = sys::raise_nofile_limit().unwrap_or(1024);
+    let cap = (limit as usize / 2).saturating_sub(128).max(16);
+    let mut conns = cfg.conns.max(1);
+    if conns > cap {
+        eprintln!("loadgen: open-files limit {limit} caps the run at \
+                   {cap} connections (asked for {conns})");
+        conns = cap;
+    }
+    let per_conn = cfg.per_conn.max(1);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = match cfg.threads {
+        0 => (cores * 2).clamp(1, 64),
+        t => t,
+    }
+    .min(conns);
+    let mut probe = Client::connect(cfg.addr.as_str())?;
+    let barrier = Arc::new(Barrier::new(threads));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut first = 0usize;
+    for ti in 0..threads {
+        let count = conns / threads + usize::from(ti < conns % threads);
+        let addr = cfg.addr.clone();
+        let b = barrier.clone();
+        handles.push(std::thread::Builder::new()
+            .name(format!("axsys-scale-{ti}"))
+            .spawn(move || scale_worker(addr, first, count, per_conn, b))
+            .expect("spawn scale worker"));
+        first += count;
+    }
+    let mut lat = Vec::with_capacity(conns * per_conn);
+    for h in handles {
+        lat.extend(h.join().expect("scale worker thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ws = probe.stats()?;
+    lat.sort_by(f64::total_cmp);
+    let served = lat.len();
+    println!("loadgen scale: {} conns x {} requests in {:.3}s \
+              ({:.0} req/s, {} threads)",
+             conns, per_conn, wall,
+             served as f64 / wall.max(1e-9), threads);
+    println!("  latency µs: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+             percentile_sorted(&lat, 0.50), percentile_sorted(&lat, 0.90),
+             percentile_sorted(&lat, 0.99),
+             lat.last().copied().unwrap_or(0.0));
+    println!("  server: {} connections seen, {} frames in / {} out",
+             ws.connections, ws.frames_in, ws.frames_out);
+    Ok(Json::obj()
+        .set("schema", Json::Str("axsys-serve-scale/v1".into()))
+        .set("config", Json::obj()
+            .set("addr", Json::Str(cfg.addr.clone()))
+            .set("conns", Json::Int(conns as i64))
+            .set("per_conn", Json::Int(per_conn as i64))
+            .set("threads", Json::Int(threads as i64)))
+        .set("wall_s", Json::Num(wall))
+        .set("served_requests", Json::Int(served as i64))
+        .set("throughput_req_per_sec",
+             Json::Num(served as f64 / wall.max(1e-9)))
+        .set("latency_us", lat_json(&lat))
+        .set("server", Json::obj()
+            .set("connections", Json::Int(ws.connections as i64))
+            .set("frames_in", Json::Int(ws.frames_in as i64))
+            .set("frames_out", Json::Int(ws.frames_out as i64))
+            .set("bytes_in", Json::Int(ws.bytes_in as i64))
+            .set("bytes_out", Json::Int(ws.bytes_out as i64))
+            .set("net_p50_us", Json::Num(ws.net_p50_us))
+            .set("net_p90_us", Json::Num(ws.net_p90_us))
+            .set("net_p99_us", Json::Num(ws.net_p99_us))))
 }

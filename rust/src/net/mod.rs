@@ -1,6 +1,6 @@
 //! Network serving layer: a framed TCP boundary in front of the
-//! coordinator — std-only (threads + blocking sockets, no async
-//! runtime, no external crates).
+//! coordinator — std-only (a `poll(2)`-driven event loop over
+//! nonblocking sockets, no async runtime, no external crates).
 //!
 //! Until this module existed every request entered through an
 //! in-process [`crate::coordinator::Coordinator`] handle; the related
@@ -12,20 +12,28 @@
 //! * [`proto`] — the length-prefixed, versioned binary wire protocol:
 //!   GEMM requests/responses, application requests with inline PGM
 //!   payloads, stats snapshots and typed error replies, all
-//!   encoded/decoded through reusable buffers.
-//! * [`server`] — a thread-per-connection TCP server fronting a running
-//!   coordinator: per-connection request pipelining with in-order
-//!   replies, a configurable max-inflight admission gate that
-//!   **backpressures (blocks reads) rather than drops**, graceful drain
-//!   on shutdown, and per-connection + fleet
-//!   [`server::NetStats`].
+//!   encoded/decoded through reusable buffers, with
+//!   [`proto::try_decode`] for incremental reassembly from partial
+//!   buffers and cap-validated (never silently truncating) encoders.
+//! * [`server`] — a sharded, readiness-driven TCP server fronting a
+//!   running coordinator: the acceptor round-robins connections across
+//!   N shard event loops, each multiplexing thousands of nonblocking
+//!   sockets with per-connection frame-reassembly state machines and
+//!   in-order reply pipelining; a fixed resolver pool executes requests
+//!   on the worker pool so shards never block. The max-inflight
+//!   admission gate **backpressures (stops polling a saturated
+//!   connection for read) rather than drops**, shutdown drains
+//!   gracefully, and per-connection + fleet [`server::NetStats`] fold
+//!   per shard — no global lock on any hot path.
 //! * [`client`] — a blocking client library; [`client::RemoteGemm`]
 //!   implements the [`crate::apps::Gemm`] trait, so every existing
 //!   application pipeline and differential test runs over TCP
 //!   unchanged.
 //! * [`loadgen`] — a closed-loop multi-client load generator with a
-//!   seeded xorshift request mix, reporting throughput, latency
-//!   percentiles and server-metered energy as `BENCH_serve_net.json`.
+//!   seeded xorshift request mix plus a thread-multiplexed **scale
+//!   mode** (thousands of concurrent connections with per-reply
+//!   integrity checks), reporting throughput, latency percentiles and
+//!   server-metered energy as `BENCH_serve_net.json`.
 //!
 //! Results served over TCP are **bit-identical** to the in-process
 //! coordinator path on every backend: the wire carries exact `i64`
@@ -40,6 +48,7 @@ pub mod client;
 pub mod loadgen;
 pub mod proto;
 pub mod server;
+mod sys;
 
 use std::fmt;
 

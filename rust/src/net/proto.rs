@@ -13,10 +13,22 @@
 //! scratch `Vec`), so a busy connection allocates only for the decoded
 //! matrices themselves.
 //!
+//! The **encoder is fallible too**: every length that travels as a
+//! `u32` is validated against its protocol cap before a single byte is
+//! written ([`encode`] returns [`ProtoError`] instead of silently
+//! truncating a >4 GiB payload's length prefix), so a frame that
+//! encodes is always a frame that decodes.
+//!
+//! Readiness-driven callers that own raw receive buffers use
+//! [`try_decode`], the partial-buffer form of [`decode`]: `Ok(None)`
+//! means "frame incomplete, read more bytes", without ambiguity against
+//! genuinely malformed input.
+//!
 //! Round-trip identity (`decode(encode(f)) == f`) is fuzzed over 500
 //! seeded frames of every kind — including empty matrices and ragged
 //! shapes — in this module's tests; decoder rejection of hostile input
-//! is covered there too.
+//! and encoder rejection of cap-breaking payloads are covered there
+//! too.
 
 use crate::apps::image::{Image, MAX_PGM_DIM};
 use crate::coordinator::AppKind;
@@ -37,6 +49,10 @@ pub const MAX_GEMM_ELEMS: usize = (1 << 23) - 64;
 /// largest legal image ([`MAX_PGM_DIM`]² pixels) plus header room, so
 /// every PGM the decoder accepts is also receivable over the wire.
 pub const MAX_PGM_LEN: usize = MAX_PGM_DIM * MAX_PGM_DIM + 4096;
+/// Hard cap on a typed error reply's message bytes: the largest message
+/// that still fits [`MAX_FRAME_LEN`] with header room. Checked by the
+/// encoder so an error frame can never itself be unencodable.
+pub const MAX_ERR_MSG_LEN: usize = MAX_FRAME_LEN - 16;
 
 const K_GEMM_REQ: u8 = 1;
 const K_GEMM_RESP: u8 = 2;
@@ -370,8 +386,20 @@ fn app_from(code: u8) -> Result<AppKind, ProtoError> {
 /// client's hot path. Byte-identical to
 /// `encode(&Frame::GemmReq(..), out)` without materializing the owned
 /// wire struct (no operand copy beyond the serialization itself).
+///
+/// Fails (without touching `out`) when a dimension pair exceeds
+/// [`MAX_GEMM_ELEMS`] or an operand slice does not match its declared
+/// shape — the exact conditions under which the resulting bytes would
+/// not decode.
 pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
-                       b: &[i64], out: &mut Vec<u8>) {
+                       b: &[i64], out: &mut Vec<u8>)
+                       -> Result<(), ProtoError> {
+    let ea = checked_elems(m, kk)?;
+    let eb = checked_elems(kk, nn)?;
+    if a.len() != ea || b.len() != eb {
+        return Err(ProtoError::Malformed(
+            "operand length does not match the declared dimensions"));
+    }
     out.clear();
     out.extend_from_slice(&[0u8; 4]); // length, patched below
     put_u16(out, MAGIC);
@@ -385,15 +413,62 @@ pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
     put_i64s(out, b);
     let len = (out.len() - 4) as u32;
     out[..4].copy_from_slice(&len.to_le_bytes());
+    Ok(())
 }
 
 /// Encode `frame` into `out` (cleared first): the 4-byte length prefix,
 /// then magic/version/kind and the body. The buffer is reusable across
 /// calls — steady-state encoding allocates nothing beyond its high-water
 /// mark.
-pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
+///
+/// Every length that travels as a wire `u32` is validated against its
+/// cap **before any byte is written** ([`MAX_GEMM_ELEMS`],
+/// [`MAX_PGM_LEN`], [`MAX_PGM_DIM`], [`MAX_ERR_MSG_LEN`]); on failure
+/// `out` is left untouched. This closes the unchecked-`as u32` class of
+/// bug where a >4 GiB payload silently truncated its length prefix.
+pub fn encode(frame: &Frame, out: &mut Vec<u8>) -> Result<(), ProtoError> {
     if let Frame::GemmReq(r) = frame {
         return encode_gemm_req(r.k, r.m, r.kk, r.nn, &r.a, &r.b, out);
+    }
+    // validate first, then write: a cap-breaking frame never clobbers
+    // the caller's scratch buffer
+    match frame {
+        Frame::GemmResp(r) => {
+            let eo = checked_elems(r.m, r.nn)?;
+            if r.out.len() != eo {
+                return Err(ProtoError::Malformed(
+                    "result length does not match the declared dimensions"));
+            }
+        }
+        Frame::AppReq(r) => {
+            if r.pgm.len() > MAX_PGM_LEN {
+                return Err(ProtoError::Oversized {
+                    len: r.pgm.len(),
+                    max: MAX_PGM_LEN,
+                });
+            }
+        }
+        Frame::AppResp(r) => {
+            if r.h as usize > MAX_PGM_DIM || r.w as usize > MAX_PGM_DIM {
+                return Err(ProtoError::Oversized {
+                    len: r.h.max(r.w) as usize,
+                    max: MAX_PGM_DIM,
+                });
+            }
+            if r.pixels.len() != (r.h as usize) * (r.w as usize) {
+                return Err(ProtoError::Malformed(
+                    "pixel length does not match the declared dimensions"));
+            }
+        }
+        Frame::Error(e) => {
+            if e.msg.len() > MAX_ERR_MSG_LEN {
+                return Err(ProtoError::Oversized {
+                    len: e.msg.len(),
+                    max: MAX_ERR_MSG_LEN,
+                });
+            }
+        }
+        Frame::GemmReq(_) | Frame::StatsReq | Frame::StatsResp(_) => {}
     }
     out.clear();
     out.extend_from_slice(&[0u8; 4]); // length, patched below
@@ -461,6 +536,7 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
     }
     let len = (out.len() - 4) as u32;
     out[..4].copy_from_slice(&len.to_le_bytes());
+    Ok(())
 }
 
 // ---- decoding ------------------------------------------------------
@@ -632,12 +708,20 @@ fn decode_payload(buf: &[u8]) -> Result<Frame, ProtoError> {
     Ok(frame)
 }
 
-/// Decode one full frame (length prefix included) from the start of
-/// `buf`; returns the frame and the bytes consumed. Every failure is a
-/// typed error — the decoder never panics on arbitrary input.
-pub fn decode(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
+/// Decode one frame from the start of a **partial** receive buffer —
+/// the readiness-driven server's reassembly primitive. Returns:
+///
+/// * `Ok(Some((frame, consumed)))` — one complete frame decoded;
+///   `consumed` bytes (length prefix included) can be drained.
+/// * `Ok(None)` — the buffer holds a valid prefix of an incomplete
+///   frame; read more bytes and call again. Never returned for input
+///   that could not grow into a legal frame.
+/// * `Err(_)` — the buffer can never become a legal frame (bad length
+///   prefix, bad magic/version/kind, malformed body); the connection's
+///   framing is unrecoverable.
+pub fn try_decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, ProtoError> {
     if buf.len() < 4 {
-        return Err(ProtoError::Truncated { need: 4, have: buf.len() });
+        return Ok(None);
     }
     let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
     if len > MAX_FRAME_LEN {
@@ -647,9 +731,28 @@ pub fn decode(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
         return Err(ProtoError::Malformed("frame length below header size"));
     }
     if buf.len() < 4 + len {
-        return Err(ProtoError::Truncated { need: 4 + len, have: buf.len() });
+        return Ok(None);
     }
-    Ok((decode_payload(&buf[4..4 + len])?, 4 + len))
+    Ok(Some((decode_payload(&buf[4..4 + len])?, 4 + len)))
+}
+
+/// Decode one full frame (length prefix included) from the start of
+/// `buf`; returns the frame and the bytes consumed. Every failure is a
+/// typed error — the decoder never panics on arbitrary input. The
+/// complete-buffer form of [`try_decode`]: an incomplete frame is
+/// reported as [`ProtoError::Truncated`].
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
+    match try_decode(buf)? {
+        Some(r) => Ok(r),
+        None => {
+            let need = if buf.len() < 4 {
+                4
+            } else {
+                4 + u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize
+            };
+            Err(ProtoError::Truncated { need, have: buf.len() })
+        }
+    }
 }
 
 /// Read one frame from `r`. `Ok(None)` means clean EOF at a frame
@@ -690,14 +793,16 @@ pub fn read_frame<R: std::io::Read>(
 }
 
 /// Encode `frame` into `scratch` and write it whole to `w`; returns the
-/// total bytes written (length prefix included).
+/// total bytes written (length prefix included). Fails with the
+/// encoder's typed error on a cap-breaking frame (before writing) or
+/// [`ProtoError::Io`] on a stream failure.
 pub fn write_frame<W: std::io::Write>(
     w: &mut W,
     frame: &Frame,
     scratch: &mut Vec<u8>,
-) -> std::io::Result<usize> {
-    encode(frame, scratch);
-    w.write_all(scratch)?;
+) -> Result<usize, ProtoError> {
+    encode(frame, scratch)?;
+    w.write_all(scratch).map_err(ProtoError::Io)?;
     Ok(scratch.len())
 }
 
@@ -808,7 +913,7 @@ mod tests {
         let mut buf = Vec::new();
         for case in 0..500 {
             let f = rand_frame(&mut x);
-            encode(&f, &mut buf);
+            encode(&f, &mut buf).unwrap();
             let (back, used) =
                 decode(&buf).unwrap_or_else(|e| panic!("case {case}: {e}"));
             assert_eq!(used, buf.len(), "case {case}: partial consume");
@@ -823,7 +928,7 @@ mod tests {
         let mut stream = Vec::new();
         let mut buf = Vec::new();
         for f in &frames {
-            encode(f, &mut buf);
+            encode(f, &mut buf).unwrap();
             stream.extend_from_slice(&buf);
         }
         let mut cur = std::io::Cursor::new(stream);
@@ -842,7 +947,7 @@ mod tests {
         let mut buf = Vec::new();
         for _ in 0..50 {
             let f = rand_frame(&mut x);
-            encode(&f, &mut buf);
+            encode(&f, &mut buf).unwrap();
             // every strict prefix fails with a typed error, never panics
             let step = (buf.len() / 17).max(1);
             for cut in (0..buf.len()).step_by(step) {
@@ -851,15 +956,15 @@ mod tests {
             }
         }
         // corrupted magic
-        encode(&Frame::StatsReq, &mut buf);
+        encode(&Frame::StatsReq, &mut buf).unwrap();
         buf[4] ^= 0xFF;
         assert!(matches!(decode(&buf), Err(ProtoError::BadMagic(_))));
         // bad version
-        encode(&Frame::StatsReq, &mut buf);
+        encode(&Frame::StatsReq, &mut buf).unwrap();
         buf[6] = 99;
         assert!(matches!(decode(&buf), Err(ProtoError::BadVersion(99))));
         // unknown kind
-        encode(&Frame::StatsReq, &mut buf);
+        encode(&Frame::StatsReq, &mut buf).unwrap();
         buf[7] = 0xEE;
         assert!(matches!(decode(&buf), Err(ProtoError::UnknownKind(0xEE))));
         // oversized length prefix refuses before reading anything
@@ -871,7 +976,7 @@ mod tests {
         tiny.extend_from_slice(&[0u8, 0u8]);
         assert!(matches!(decode(&tiny), Err(ProtoError::Malformed(_))));
         // trailing garbage inside the declared payload is rejected
-        encode(&Frame::StatsReq, &mut buf);
+        encode(&Frame::StatsReq, &mut buf).unwrap();
         buf.push(0xAB);
         let len = (buf.len() - 4) as u32;
         buf[..4].copy_from_slice(&len.to_le_bytes());
@@ -879,14 +984,14 @@ mod tests {
         // oversized matrix dims reject before allocating
         encode(&Frame::GemmReq(GemmReq {
             k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![],
-        }), &mut buf);
+        }), &mut buf).unwrap();
         buf[12..16].copy_from_slice(&(1u32 << 16).to_le_bytes()); // m
         buf[16..20].copy_from_slice(&(1u32 << 16).to_le_bytes()); // kk
         assert!(matches!(decode(&buf), Err(ProtoError::Oversized { .. })));
         // oversized inline image length rejects before allocating
         encode(&Frame::AppReq(AppReq {
             app: AppKind::Dct, k: 0, pgm: vec![],
-        }), &mut buf);
+        }), &mut buf).unwrap();
         // payload layout: magic(2) ver(1) kind(1) app(1) k(4) len(4)
         buf[13..17].copy_from_slice(&((MAX_PGM_LEN as u32) + 1).to_le_bytes());
         assert!(matches!(decode(&buf), Err(ProtoError::Oversized { .. })));
@@ -907,9 +1012,9 @@ mod tests {
             let mut owned = Vec::new();
             encode(&Frame::GemmReq(GemmReq {
                 k, m, kk, nn, a: a.clone(), b: b.clone(),
-            }), &mut owned);
+            }), &mut owned).unwrap();
             let mut borrowed = Vec::new();
-            encode_gemm_req(k, m, kk, nn, &a, &b, &mut borrowed);
+            encode_gemm_req(k, m, kk, nn, &a, &b, &mut borrowed).unwrap();
             assert_eq!(owned, borrowed);
         }
     }
@@ -920,5 +1025,106 @@ mod tests {
             assert_eq!(ErrCode::from_code(c.code()), Some(c));
         }
         assert_eq!(ErrCode::from_code(999), None);
+    }
+
+    #[test]
+    fn encoder_rejects_cap_breaking_frames_without_writing() {
+        // regression for the unchecked `len as u32` class of bug: every
+        // encode path that writes a u32 length must validate it first
+        let sentinel = vec![0xAAu8; 8];
+        let mut buf = sentinel.clone();
+        // operand length inconsistent with the declared dims
+        let r = encode(&Frame::GemmReq(GemmReq {
+            k: 0, m: 2, kk: 2, nn: 2, a: vec![1; 3], b: vec![1; 4],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Malformed(_))));
+        assert_eq!(buf, sentinel, "failed encode must not touch the buffer");
+        // dims whose product exceeds the wire element cap
+        let r = encode(&Frame::GemmReq(GemmReq {
+            k: 0, m: 1 << 16, kk: 1 << 16, nn: 1, a: vec![], b: vec![],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Oversized { .. })));
+        let r = encode(&Frame::GemmResp(GemmResp {
+            m: 1 << 16, nn: 1 << 16, latency_us: 0.0, tiles: 0, macs: 0,
+            energy_fj: 0.0, metered_macs: 0, out: vec![],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Oversized { .. })));
+        // inline PGM payload over the wire cap
+        let r = encode(&Frame::AppReq(AppReq {
+            app: AppKind::Dct, k: 0, pgm: vec![0; MAX_PGM_LEN + 1],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Oversized { .. })));
+        // response image dims over the PGM cap / inconsistent pixels
+        let r = encode(&Frame::AppResp(AppResp {
+            app: AppKind::Edge, psnr_db: 0.0, latency_us: 0.0,
+            gemm_requests: 0, energy_fj: 0.0, macs: 0,
+            h: (MAX_PGM_DIM + 1) as u32, w: 1, pixels: vec![],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Oversized { .. })));
+        let r = encode(&Frame::AppResp(AppResp {
+            app: AppKind::Edge, psnr_db: 0.0, latency_us: 0.0,
+            gemm_requests: 0, energy_fj: 0.0, macs: 0,
+            h: 2, w: 2, pixels: vec![0; 5],
+        }), &mut buf);
+        assert!(matches!(r, Err(ProtoError::Malformed(_))));
+        assert_eq!(buf, sentinel, "failed encode must not touch the buffer");
+        // every rejected frame would also have been refused by the
+        // decoder — and the accepted ones still round-trip
+        let ok = Frame::Error(WireError {
+            code: ErrCode::Internal,
+            msg: "x".repeat(64),
+        });
+        encode(&ok, &mut buf).unwrap();
+        assert_eq!(decode(&buf).unwrap().0, ok);
+    }
+
+    #[test]
+    fn try_decode_resumes_cleanly_across_partial_buffers() {
+        let mut x = XorShift::new(0x9A37);
+        let frames: Vec<Frame> = (0..30).map(|_| rand_frame(&mut x)).collect();
+        let mut stream = Vec::new();
+        let mut buf = Vec::new();
+        for f in &frames {
+            encode(f, &mut buf).unwrap();
+            stream.extend_from_slice(&buf);
+        }
+        // feed the byte stream in adversarial chunk sizes; every frame
+        // must come out intact and in order, with exact byte accounting
+        for chunk in [1usize, 3, 7, 64, 1009] {
+            let mut rbuf: Vec<u8> = Vec::new();
+            let mut got = Vec::new();
+            let mut fed = 0;
+            while fed < stream.len() || !rbuf.is_empty() {
+                let n = chunk.min(stream.len() - fed);
+                rbuf.extend_from_slice(&stream[fed..fed + n]);
+                fed += n;
+                loop {
+                    match try_decode(&rbuf).unwrap() {
+                        Some((f, used)) => {
+                            rbuf.drain(..used);
+                            got.push(f);
+                        }
+                        None => break,
+                    }
+                }
+                if fed == stream.len() && rbuf.is_empty() {
+                    break;
+                }
+            }
+            assert_eq!(got, frames, "chunk size {chunk}");
+        }
+        // a buffer that can never become a legal frame errors out
+        // instead of asking for more bytes
+        let bad = ((MAX_FRAME_LEN as u32) + 1).to_le_bytes();
+        assert!(matches!(try_decode(&bad),
+                         Err(ProtoError::Oversized { .. })));
+        assert!(matches!(try_decode(&2u32.to_le_bytes()),
+                         Err(ProtoError::Malformed(_))));
+        // and a strict prefix of a legal frame is Ok(None), not an error
+        encode(&Frame::StatsReq, &mut buf).unwrap();
+        for cut in 0..buf.len() {
+            assert!(try_decode(&buf[..cut]).unwrap().is_none(),
+                    "prefix {cut} must ask for more bytes");
+        }
     }
 }

@@ -1,31 +1,48 @@
-//! Thread-per-connection TCP server fronting a running
+//! Readiness-driven event-loop TCP server fronting a running
 //! [`Coordinator`].
 //!
-//! Each accepted connection gets a **reader** thread (decodes frames,
-//! validates, submits GEMMs to the pool) and a **writer** thread
-//! (resolves pending replies in admission order, encodes them through a
-//! reusable buffer, flushes when the queue runs dry). The bounded
-//! channel between them is the **admission gate**: when
-//! [`ServerConfig::max_inflight`] replies are pending, the reader
-//! blocks handing over the next request, stops reading the socket, the
-//! kernel's receive window fills, and the client's writes stall — the
-//! server backpressures instead of dropping or reordering. Replies are
-//! written strictly in request order per connection, so pipelined
-//! clients can match replies to requests positionally.
+//! The acceptor thread round-robins accepted connections across a fixed
+//! set of **shards**; each shard thread runs a `poll(2)`-based event
+//! loop (the thin FFI binding lives in `net/sys.rs`) over its
+//! nonblocking sockets, with a
+//! per-connection state machine for frame reassembly (a growable read
+//! buffer parsed by [`proto::try_decode`]), in-order reply pipelining
+//! (a `VecDeque` of reply slots, encoded strictly in admission order)
+//! and the reusable encode scratch shared across the shard — the
+//! steady-state hot path allocates no per-request buffers.
+//!
+//! Requests are executed by a fixed **resolver** pool: shards never
+//! block, so a slow GEMM (pool-queue backpressure, app pipelines) on
+//! one connection cannot stall the thousands of others on its shard.
+//! Resolvers run the coordinator call, catch handler panics into typed
+//! `Internal` error replies, and post completions back to the owning
+//! shard through its inbox + wake socket.
+//!
+//! The admission gate is **readiness backoff**: while a connection has
+//! [`ServerConfig::max_inflight`] replies pending, its socket is
+//! dropped from the shard's `POLLIN` set and buffered bytes stay
+//! unparsed — the kernel's receive window fills and the client's writes
+//! stall. Backpressure, never drops, and reply order per connection is
+//! never disturbed, exactly as in the thread-per-connection
+//! predecessor.
 //!
 //! [`NetServer::shutdown`] drains gracefully: the listener stops
-//! accepting, every connection's read side is half-closed (no *new*
-//! requests are admitted), already-admitted requests complete on the
-//! pool and their replies flush before the connection threads are
-//! joined. Statistics are kept **per connection** and folded into fleet
-//! totals ([`NetServer::stats`], the stats frame) on demand, so no hot
-//! path ever contends on one global lock.
+//! accepting, every shard takes one final read sweep (everything the
+//! clients sent before the drain is still admitted), stops reading,
+//! lets admitted requests complete on the pool, flushes the replies and
+//! reaps its connections. Statistics are kept **per connection** and
+//! folded per shard into fleet totals ([`NetServer::stats`], the stats
+//! frame) on demand, so no hot path ever contends on one global lock —
+//! and every stats lock recovers from poisoning, so one panicking
+//! handler cannot take fleet observability down with it.
 
-use std::io::{BufReader, BufWriter, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::apps::bdcn::Block;
@@ -36,6 +53,15 @@ use crate::coordinator::{AppKind, Coordinator, GemmRequest, LatencyRing,
 
 use super::proto::{self, AppResp, ErrCode, Frame, GemmResp, ProtoError,
                    WireError, WireStats};
+use super::sys::{self, PollFd, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+
+/// Lock a stats mutex, recovering from poisoning: these blocks hold
+/// fold-only counters, so a panic mid-update leaves at worst one sample
+/// off — strictly better than poisoning fleet stats for every other
+/// connection (the pre-event-loop server's failure mode).
+fn lk<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Per-connection and fleet-level network counters. The latency ring is
 /// the same sampler [`ServiceStats`] uses
@@ -98,20 +124,26 @@ impl NetStats {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Admission gate: max replies pending per connection before the
-    /// reader stops reading the socket (0 selects
+    /// shard stops polling the socket for read (0 selects
     /// [`Self::DEFAULT_MAX_INFLIGHT`]). This bounds both memory and
     /// pool queue pressure per client; excess requests wait in the
     /// kernel's socket buffers on the *client's* side.
     pub max_inflight: usize,
-    /// Socket write timeout per connection (`None` = never time out).
-    /// A client that stops *reading* its replies eventually stalls the
-    /// connection's writer in `write`; this bounds that stall — and
-    /// therefore how long [`NetServer::shutdown`]'s drain can block on
-    /// an unresponsive client before abandoning its connection.
+    /// Write-stall timeout per connection (`None` = never time out).
+    /// A client that stops *reading* its replies eventually fills its
+    /// receive window; once a connection's pending output makes no
+    /// progress for this long it is abandoned — which also bounds how
+    /// long [`NetServer::shutdown`]'s drain can wait on it.
     pub write_timeout: Option<Duration>,
     /// Trained BDCN weights, if this server should serve `bdcn`
     /// requests (without them, `bdcn` gets a typed `Unsupported` reply).
     pub bdcn: Option<Arc<Vec<Block>>>,
+    /// Event-loop shards (acceptor round-robins connections across
+    /// them; 0 = auto-size from the host's available parallelism).
+    pub shards: usize,
+    /// Resolver threads executing admitted requests on the pool
+    /// (0 = auto-size from the shard count).
+    pub resolvers: usize,
 }
 
 impl ServerConfig {
@@ -125,8 +157,71 @@ impl Default for ServerConfig {
             max_inflight: Self::DEFAULT_MAX_INFLIGHT,
             write_timeout: Some(Duration::from_secs(30)),
             bdcn: None,
+            shards: 0,
+            resolvers: 0,
         }
     }
+}
+
+/// Bytes of unflushed reply data per connection above which the shard
+/// stops encoding further replies for it (they stay queued in their
+/// slots) until the socket drains.
+const WRITE_HIGH_WATER: usize = 256 * 1024;
+
+/// Shard poll timeout: bounds how stale a write-stall check can be and
+/// how long a stopped shard waits before re-checking its exit
+/// condition. Completions and new connections cut it short via the wake
+/// socket.
+const POLL_TIMEOUT_MS: i32 = 200;
+
+/// Read chunk size per readiness cycle.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// A message posted to a shard's inbox (drained on every wake).
+enum Msg {
+    /// A freshly accepted connection to adopt.
+    Conn(TcpStream),
+    /// A resolver finished the request `(conn, seq)`.
+    Done { conn: u64, seq: u64, frame: Frame },
+}
+
+/// One shard: inbox + wake channel + its slice of the sharded stats.
+struct Shard {
+    inbox: Mutex<Vec<Msg>>,
+    /// Write end of the shard's loopback wake pair (nonblocking: a
+    /// full pipe means a wake is already pending).
+    wake_tx: TcpStream,
+    /// Live per-connection stats blocks owned by this shard.
+    live: Mutex<Vec<Arc<Mutex<NetStats>>>>,
+    /// Folded stats of this shard's closed connections.
+    closed: Mutex<NetStats>,
+}
+
+impl Shard {
+    fn post(&self, msg: Msg) {
+        lk(&self.inbox).push(msg);
+        self.wake();
+    }
+
+    fn wake(&self) {
+        // one pending byte is enough; WouldBlock = already signalled
+        let _ = (&self.wake_tx).write(&[1u8]);
+    }
+}
+
+/// A unit of work handed to the resolver pool.
+enum Work {
+    Gemm(GemmRequest),
+    App { app: AppKind, k: u32, img: Image },
+    Stats,
+}
+
+/// A resolver job: which shard/connection/slot the reply belongs to.
+struct Job {
+    shard: usize,
+    conn: u64,
+    seq: u64,
+    work: Work,
 }
 
 struct State {
@@ -134,44 +229,40 @@ struct State {
     cfg: ServerConfig,
     opened: AtomicU64,
     closed_count: AtomicU64,
-    /// Folded stats of closed connections.
-    closed: Mutex<NetStats>,
-    /// Live per-connection stats blocks.
-    live: Mutex<Vec<Arc<Mutex<NetStats>>>>,
-    /// One cloned handle per **live** connection (keyed by connection
-    /// id), for the shutdown drain's read-side half-close. Entries are
-    /// pruned when their connection finishes — a long-running server
-    /// must not accumulate one dup'd fd per connection ever accepted.
-    conns: Mutex<Vec<(u64, TcpStream)>>,
+    shards: Vec<Shard>,
     stop: AtomicBool,
 }
 
 impl State {
-    /// Fleet totals: closed-connection accumulator + live blocks. Holds
-    /// the `live` registry lock across the fold so a connection moving
-    /// from live to closed (see `connection_loop`) is counted exactly
-    /// once — lock order is always `live` → `closed`/per-connection.
+    /// Fleet totals: every shard's closed-connection accumulator + live
+    /// blocks. Holds each shard's `live` registry lock across its fold
+    /// so a connection moving from live to closed (see `reap`) is
+    /// counted exactly once — lock order is always `live` →
+    /// `closed`/per-connection, never nested.
     fn net_stats(&self) -> NetStats {
-        let live = self.live.lock().unwrap();
-        let mut total = self.closed.lock().unwrap().clone();
-        for cs in live.iter() {
-            let snap = cs.lock().unwrap().clone();
-            total.merge(&snap);
+        let mut total = NetStats::default();
+        for shard in &self.shards {
+            let live = lk(&shard.live);
+            total.merge(&lk(&shard.closed).clone());
+            for cs in live.iter() {
+                let snap = lk(cs).clone();
+                total.merge(&snap);
+            }
         }
-        drop(live);
         total.connections_opened = self.opened.load(Ordering::Relaxed);
         total.connections_closed = self.closed_count.load(Ordering::Relaxed);
         total
     }
 }
 
-/// The TCP server: an accept loop plus two threads per live connection,
-/// all fronting one shared [`Coordinator`] worker pool.
+/// The TCP server: one acceptor, N shard event loops, M resolver
+/// threads, all fronting one shared [`Coordinator`] worker pool.
 pub struct NetServer {
     addr: SocketAddr,
     state: Arc<State>,
     accept: Option<std::thread::JoinHandle<()>>,
-    conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    shard_threads: Vec<std::thread::JoinHandle<()>>,
+    resolver_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl NetServer {
@@ -188,28 +279,75 @@ impl NetServer {
         if cfg.max_inflight == 0 {
             cfg.max_inflight = ServerConfig::DEFAULT_MAX_INFLIGHT;
         }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cfg.shards == 0 {
+            cfg.shards = cores.clamp(1, 4);
+        }
+        if cfg.resolvers == 0 {
+            cfg.resolvers = (cfg.shards * 2).max(4);
+        }
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut wake_rxs = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let (tx, rx) = wake_pair()?;
+            shards.push(Shard {
+                inbox: Mutex::new(Vec::new()),
+                wake_tx: tx,
+                live: Mutex::new(Vec::new()),
+                closed: Mutex::new(NetStats::default()),
+            });
+            wake_rxs.push(rx);
+        }
         let state = Arc::new(State {
             coord,
             cfg,
             opened: AtomicU64::new(0),
             closed_count: AtomicU64::new(0),
-            closed: Mutex::new(NetStats::default()),
-            live: Mutex::new(Vec::new()),
-            conns: Mutex::new(Vec::new()),
+            shards,
             stop: AtomicBool::new(false),
         });
-        let conn_threads = Arc::new(Mutex::new(Vec::new()));
+        let (jobs_tx, jobs_rx) = channel::<Job>();
+        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+        let mut resolver_threads = Vec::new();
+        for ri in 0..state.cfg.resolvers {
+            let st = state.clone();
+            let rx = jobs_rx.clone();
+            resolver_threads.push(std::thread::Builder::new()
+                .name(format!("axsys-net-resolve-{ri}"))
+                .spawn(move || resolver_loop(st, rx))
+                .expect("spawn resolver thread"));
+        }
+        let mut shard_threads = Vec::new();
+        for (si, wake_rx) in wake_rxs.into_iter().enumerate() {
+            let st = state.clone();
+            let jobs = jobs_tx.clone();
+            shard_threads.push(std::thread::Builder::new()
+                .name(format!("axsys-net-shard-{si}"))
+                .spawn(move || shard_loop(st, si, wake_rx, jobs))
+                .expect("spawn shard thread"));
+        }
+        // the shard threads now hold the only job senders: when the
+        // last shard exits at teardown, the resolvers see a closed
+        // channel and drain out
+        drop(jobs_tx);
         let accept = {
-            let state = state.clone();
-            let threads = conn_threads.clone();
+            let st = state.clone();
             std::thread::Builder::new()
                 .name("axsys-net-accept".into())
-                .spawn(move || accept_loop(listener, state, threads))
+                .spawn(move || accept_loop(listener, st))
                 .expect("spawn accept thread")
         };
-        Ok(NetServer { addr, state, accept: Some(accept), conn_threads })
+        Ok(NetServer {
+            addr,
+            state,
+            accept: Some(accept),
+            shard_threads,
+            resolver_threads,
+        })
     }
 
     /// The bound address (with the real port when bound to port 0).
@@ -217,16 +355,17 @@ impl NetServer {
         self.addr
     }
 
-    /// Fleet network statistics (closed + live connections folded).
+    /// Fleet network statistics (closed + live connections folded
+    /// across every shard).
     pub fn stats(&self) -> NetStats {
         self.state.net_stats()
     }
 
-    /// Graceful drain: stop accepting, half-close every connection's
-    /// read side so no new requests are admitted, let already-admitted
-    /// requests complete on the pool and their replies flush, then join
-    /// every thread. A connection whose client has stopped reading is
-    /// abandoned once its write stalls past
+    /// Graceful drain: stop accepting, let every shard sweep up the
+    /// bytes its clients already sent and stop reading, let
+    /// already-admitted requests complete on the pool and their replies
+    /// flush, then join every thread. A connection whose client has
+    /// stopped reading is abandoned once its pending output stalls past
     /// [`ServerConfig::write_timeout`], which bounds the drain. Also
     /// runs on `Drop`.
     pub fn shutdown(mut self) {
@@ -259,13 +398,14 @@ impl NetServer {
             // the accept thread rather than hang shutdown on its join —
             // it exits with the process and holds no request state
         }
-        // half-close read sides: readers see EOF, writers drain + flush
-        for (_, c) in self.state.conns.lock().unwrap().iter() {
-            let _ = c.shutdown(Shutdown::Read);
+        for shard in &self.state.shards {
+            shard.wake();
         }
-        let threads: Vec<_> =
-            self.conn_threads.lock().unwrap().drain(..).collect();
-        for h in threads {
+        for h in self.shard_threads.drain(..) {
+            let _ = h.join();
+        }
+        // all job senders are gone now: resolvers drain and exit
+        for h in self.resolver_threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -277,8 +417,20 @@ impl Drop for NetServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, state: Arc<State>,
-               threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>) {
+/// Build one loopback wake pair: any thread pokes the write end, the
+/// owning shard holds the nonblocking read end in its poll set.
+fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let lis = TcpListener::bind((std::net::Ipv4Addr::LOCALHOST, 0))?;
+    let tx = TcpStream::connect(lis.local_addr()?)?;
+    let (rx, _) = lis.accept()?;
+    tx.set_nodelay(true)?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((tx, rx))
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<State>) {
+    let nshards = state.shards.len() as u64;
     for stream in listener.incoming() {
         if state.stop.load(Ordering::SeqCst) {
             break;
@@ -293,134 +445,420 @@ fn accept_loop(listener: TcpListener, state: Arc<State>,
             }
         };
         let _ = stream.set_nodelay(true);
-        let id = state.opened.fetch_add(1, Ordering::Relaxed);
-        if let Ok(clone) = stream.try_clone() {
-            state.conns.lock().unwrap().push((id, clone));
+        if stream.set_nonblocking(true).is_err() {
+            continue;
         }
-        let st = state.clone();
-        let h = std::thread::Builder::new()
-            .name("axsys-net-conn".into())
-            .spawn(move || connection_loop(stream, st, id))
-            .expect("spawn connection thread");
-        // reap handles of connections that already finished (their
-        // threads have exited; dropping the handle just detaches) so a
-        // long-running server holds state only for live connections
-        let mut t = threads.lock().unwrap();
-        t.retain(|h| !h.is_finished());
-        t.push(h);
+        let id = state.opened.fetch_add(1, Ordering::Relaxed);
+        state.shards[(id % nshards) as usize].post(Msg::Conn(stream));
     }
 }
 
-/// A reply slot, enqueued by the reader in request order. `Ready`
-/// carries an immediately-known reply (typed errors); the others are
-/// resolved by the writer thread so the reader can keep admitting
-/// pipelined requests while earlier ones execute.
-enum Pending {
-    Ready(Frame, Instant),
-    Gemm { id: u64, t0: Instant },
-    App { app: AppKind, k: u32, img: Image, t0: Instant },
-    Stats(Instant),
+/// One reply slot, in admission order. `reply` is filled immediately
+/// for admission errors and by a resolver completion otherwise; the
+/// shard encodes slots strictly front-to-back, so pipelined clients can
+/// match replies to requests positionally.
+struct Slot {
+    seq: u64,
+    t0: Instant,
+    reply: Option<Frame>,
 }
 
-fn connection_loop(stream: TcpStream, state: Arc<State>, id: u64) {
-    let cs: Arc<Mutex<NetStats>> = Arc::new(Mutex::new(NetStats::default()));
-    state.live.lock().unwrap().push(cs.clone());
-    let finish = |state: &Arc<State>, cs: &Arc<Mutex<NetStats>>| {
-        // move this connection's block from live to closed atomically
-        // w.r.t. `State::net_stats` (same `live` → `closed` lock order)
-        let mut live = state.live.lock().unwrap();
-        let snap = cs.lock().unwrap().clone();
-        state.closed.lock().unwrap().merge(&snap);
-        live.retain(|e| !Arc::ptr_eq(e, cs));
-        drop(live);
-        // release this connection's dup'd drain handle (fd) too
-        state.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
-        state.closed_count.fetch_add(1, Ordering::Relaxed);
-    };
-    let wstream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => {
-            finish(&state, &cs);
+/// Per-connection state machine of the event loop. The buffers are the
+/// zero-allocation story: `rbuf`/`wbuf` grow to their steady-state
+/// high-water mark once and are reused for every subsequent frame.
+struct Conn {
+    stream: TcpStream,
+    stats: Arc<Mutex<NetStats>>,
+    /// Unparsed inbound bytes (frame reassembly buffer).
+    rbuf: Vec<u8>,
+    /// Encoded-but-unflushed outbound bytes.
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf`.
+    wpos: usize,
+    /// In-order reply pipeline.
+    pending: VecDeque<Slot>,
+    next_seq: u64,
+    /// No further bytes will be read (EOF, framing error, or drain).
+    read_closed: bool,
+    /// Tear down now, discarding anything unflushed.
+    dead: bool,
+    /// Last instant the socket accepted outbound bytes (write-stall
+    /// clock, armed only while `wbuf` is nonempty).
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, stats: Arc<Mutex<NetStats>>) -> Conn {
+        Conn {
+            stream,
+            stats,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            next_seq: 0,
+            read_closed: false,
+            dead: false,
+            last_progress: Instant::now(),
+        }
+    }
+
+    fn unflushed(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Drained and flushed: nothing left to answer or write.
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.read_closed
+                && self.pending.is_empty()
+                && self.unflushed() == 0)
+    }
+}
+
+fn shard_loop(state: Arc<State>, si: usize, wake_rx: TcpStream,
+              jobs: Sender<Job>) {
+    let shard = &state.shards[si];
+    let max_inflight = state.cfg.max_inflight;
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    let mut scratch = Vec::new();
+    let mut chunk = vec![0u8; READ_CHUNK];
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    let mut poll_ids: Vec<u64> = Vec::new();
+    loop {
+        let stopping = state.stop.load(Ordering::SeqCst);
+        // 1. inbox: adopt new connections, land resolver completions
+        for msg in lk(&shard.inbox).drain(..) {
+            match msg {
+                Msg::Conn(stream) => {
+                    let cs = Arc::new(Mutex::new(NetStats::default()));
+                    lk(&shard.live).push(cs.clone());
+                    let id = next_conn;
+                    next_conn += 1;
+                    conns.insert(id, Conn::new(stream, cs));
+                }
+                Msg::Done { conn, seq, frame } => {
+                    // the connection may have died while the request
+                    // executed; a completion for a reaped conn is noise
+                    if let Some(c) = conns.get_mut(&conn) {
+                        if let Some(slot) =
+                            c.pending.iter_mut().find(|s| s.seq == seq)
+                        {
+                            slot.reply = Some(frame);
+                        }
+                    }
+                }
+            }
+        }
+        // 2. drain entry: one final read sweep per connection picks up
+        // everything its client sent before shutdown, then the read
+        // side closes (idempotent, so connections adopted mid-drain —
+        // the accept race — are swept on their first iteration too)
+        if stopping {
+            for c in conns.values_mut() {
+                if !c.read_closed && !c.dead {
+                    read_some(c, &mut chunk);
+                    c.read_closed = true;
+                }
+            }
+        }
+        // 3. pump every connection: parse → admit → encode → flush
+        for (&id, c) in conns.iter_mut() {
+            pump(&state, si, id, c, &jobs, &mut scratch, stopping,
+                 max_inflight);
+        }
+        // 4. reap finished connections (stats move live → closed)
+        let finished: Vec<u64> = conns.iter()
+            .filter(|(_, c)| c.finished())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in finished {
+            let c = conns.remove(&id).expect("reaped conn");
+            reap(&state, shard, c);
+        }
+        if stopping && conns.is_empty() {
             return;
         }
-    };
-    // bound writer stalls on clients that stop reading (see
-    // ServerConfig::write_timeout) — a timed-out write errors the
-    // writer out, which also bounds the shutdown drain
-    let _ = wstream.set_write_timeout(state.cfg.write_timeout);
-    let (tx, rx) = sync_channel::<Pending>(state.cfg.max_inflight.max(1));
-    let writer = {
-        let st = state.clone();
-        let wcs = cs.clone();
-        std::thread::Builder::new()
-            .name("axsys-net-write".into())
-            .spawn(move || writer_loop(wstream, st, wcs, rx))
-            .expect("spawn writer thread")
-    };
-    reader_loop(stream, &state, &cs, tx);
-    let _ = writer.join();
-    finish(&state, &cs);
+        // 5. build the poll set: wake channel + per-connection interest.
+        // The admission gate lives here — a connection at its inflight
+        // budget contributes no POLLIN, so the shard simply stops
+        // reading it until replies retire (readiness backoff).
+        pollfds.clear();
+        poll_ids.clear();
+        pollfds.push(PollFd::new(raw_fd(&wake_rx), POLLIN));
+        poll_ids.push(u64::MAX);
+        for (&id, c) in conns.iter() {
+            let mut ev = 0i16;
+            if !c.read_closed && !c.dead && c.pending.len() < max_inflight {
+                ev |= POLLIN;
+            }
+            if c.unflushed() > 0 {
+                ev |= POLLOUT;
+            }
+            if ev != 0 {
+                pollfds.push(PollFd::new(raw_fd(&c.stream), ev));
+                poll_ids.push(id);
+            }
+        }
+        if sys::poll_fds(&mut pollfds, POLL_TIMEOUT_MS).is_err() {
+            // only reachable on EBADF-class bugs; retire the shard's
+            // write-stall clock checks still run next iteration
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // 6. readiness: drain the wake channel, read readable sockets
+        // (writes are flushed by the next pump pass)
+        if pollfds[0].revents & POLLIN != 0 {
+            let mut sink = [0u8; 64];
+            while let Ok(n) = (&wake_rx).read(&mut sink) {
+                if n == 0 || n < sink.len() {
+                    break;
+                }
+            }
+        }
+        for (pf, &id) in pollfds.iter().zip(&poll_ids).skip(1) {
+            let Some(c) = conns.get_mut(&id) else { continue };
+            if pf.revents & POLLNVAL != 0 {
+                c.dead = true;
+                continue;
+            }
+            if pf.revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                read_some(c, &mut chunk);
+            }
+        }
+        // 7. write-stall clock: a client that stopped reading holds
+        // unflushed replies forever — abandon it after the timeout
+        if let Some(t) = state.cfg.write_timeout {
+            for c in conns.values_mut() {
+                if c.unflushed() > 0 && c.last_progress.elapsed() > t {
+                    c.dead = true;
+                }
+            }
+        }
+    }
 }
 
-fn reader_loop(stream: TcpStream, state: &Arc<State>,
-               cs: &Arc<Mutex<NetStats>>, tx: SyncSender<Pending>) {
-    let mut br = BufReader::new(stream);
-    let mut scratch = Vec::new();
+fn raw_fd(s: &TcpStream) -> std::os::unix::io::RawFd {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+/// Nonblocking read sweep: append everything currently available to
+/// `rbuf`. EOF half-closes the read side; hard errors kill the conn.
+fn read_some(c: &mut Conn, chunk: &mut [u8]) {
     loop {
-        let frame = match proto::read_frame(&mut br, &mut scratch) {
-            Ok(Some(f)) => f,
-            Ok(None) => break,               // clean EOF (or drain half-close)
-            Err(ProtoError::Io(_)) => break, // connection died
+        match (&c.stream).read(chunk) {
+            Ok(0) => {
+                c.read_closed = true;
+                break;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&chunk[..n]);
+                if n < chunk.len() {
+                    break; // kernel buffer drained
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// One pump pass: parse admitted frames out of `rbuf`, encode every
+/// front-of-queue reply that is ready, flush, repeat until no progress
+/// (encoding retires slots, which frees admission budget, which may
+/// unlock more parsing — the loop runs that chain to quiescence).
+#[allow(clippy::too_many_arguments)]
+fn pump(state: &Arc<State>, si: usize, id: u64, c: &mut Conn,
+        jobs: &Sender<Job>, scratch: &mut Vec<u8>, stopping: bool,
+        max_inflight: usize) {
+    loop {
+        let parsed = parse_frames(state, si, id, c, jobs, stopping,
+                                  max_inflight);
+        let encoded = encode_ready(c, scratch);
+        if !(parsed || encoded) {
+            break;
+        }
+    }
+    flush(c);
+}
+
+/// Parse complete frames from the reassembly buffer while the inflight
+/// budget allows (the drain ignores the budget: everything already
+/// received is answered). Returns true when at least one frame was
+/// admitted.
+fn parse_frames(state: &Arc<State>, si: usize, id: u64, c: &mut Conn,
+                jobs: &Sender<Job>, stopping: bool, max_inflight: usize)
+                -> bool {
+    let mut off = 0;
+    let mut any = false;
+    loop {
+        if c.dead || (!stopping && c.pending.len() >= max_inflight) {
+            break;
+        }
+        match proto::try_decode(&c.rbuf[off..]) {
+            Ok(Some((frame, used))) => {
+                {
+                    let mut s = lk(&c.stats);
+                    s.frames_in += 1;
+                    s.bytes_in += used as u64;
+                }
+                off += used;
+                any = true;
+                admit(state, si, id, c, jobs, frame);
+            }
+            Ok(None) => break,
             Err(e) => {
                 // framing is unrecoverable: answer with a typed error,
                 // then close this connection (others are unaffected)
-                let _ = tx.send(Pending::Ready(
-                    Frame::Error(WireError {
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                c.pending.push_back(Slot {
+                    seq,
+                    t0: Instant::now(),
+                    reply: Some(Frame::Error(WireError {
                         code: err_code_for(&e),
                         msg: e.to_string(),
-                    }),
-                    Instant::now(),
-                ));
+                    })),
+                });
+                c.read_closed = true;
+                off = c.rbuf.len();
+                any = true;
                 break;
             }
-        };
-        {
-            let mut s = cs.lock().unwrap();
-            s.frames_in += 1;
-            s.bytes_in += (scratch.len() + 4) as u64;
-        }
-        let t0 = Instant::now();
-        let pending = match frame {
-            Frame::GemmReq(req) => {
-                cs.lock().unwrap().gemm_requests += 1;
-                admit_gemm(state, req, t0)
-            }
-            Frame::AppReq(req) => {
-                cs.lock().unwrap().app_requests += 1;
-                admit_app(state, req, t0)
-            }
-            Frame::StatsReq => {
-                cs.lock().unwrap().stats_requests += 1;
-                Pending::Stats(t0)
-            }
-            _ => reply_err(
-                ErrCode::Unsupported,
-                "server accepts gemm/app/stats request frames only",
-                t0,
-            ),
-        };
-        // the admission gate: blocks when `max_inflight` replies are
-        // already pending, which stops socket reads (backpressure, not
-        // drops — the reply order per connection is never disturbed)
-        if tx.send(pending).is_err() {
-            break; // writer gone (socket error)
         }
     }
-    // dropping tx lets the writer drain every admitted reply and exit
+    c.rbuf.drain(..off);
+    any
 }
 
-fn reply_err(code: ErrCode, msg: &str, t0: Instant) -> Pending {
-    Pending::Ready(Frame::Error(WireError { code, msg: msg.to_string() }), t0)
+/// Validate one request frame and enqueue its reply slot: admission
+/// failures answer immediately, valid work ships to the resolver pool.
+fn admit(state: &Arc<State>, si: usize, id: u64, c: &mut Conn,
+         jobs: &Sender<Job>, frame: Frame) {
+    let t0 = Instant::now();
+    let seq = c.next_seq;
+    c.next_seq += 1;
+    let admitted = match frame {
+        Frame::GemmReq(req) => {
+            lk(&c.stats).gemm_requests += 1;
+            admit_gemm(req)
+        }
+        Frame::AppReq(req) => {
+            lk(&c.stats).app_requests += 1;
+            admit_app(state, req)
+        }
+        Frame::StatsReq => {
+            lk(&c.stats).stats_requests += 1;
+            Ok(Work::Stats)
+        }
+        _ => Err(WireError {
+            code: ErrCode::Unsupported,
+            msg: "server accepts gemm/app/stats request frames only".into(),
+        }),
+    };
+    let reply = match admitted {
+        Ok(work) => {
+            match jobs.send(Job { shard: si, conn: id, seq, work }) {
+                Ok(()) => None,
+                // resolvers only disappear at teardown
+                Err(_) => Some(Frame::Error(WireError {
+                    code: ErrCode::Internal,
+                    msg: "server is shutting down".into(),
+                })),
+            }
+        }
+        Err(e) => Some(Frame::Error(e)),
+    };
+    c.pending.push_back(Slot { seq, t0, reply });
+}
+
+/// Encode every front-of-queue slot whose reply is ready, stopping at
+/// the write high-water mark. Stats are recorded at encode time (the
+/// reply now exists and is committed to the socket in order). Returns
+/// true when at least one slot retired.
+fn encode_ready(c: &mut Conn, scratch: &mut Vec<u8>) -> bool {
+    let mut any = false;
+    while let Some(front) = c.pending.front() {
+        if front.reply.is_none() || c.unflushed() >= WRITE_HIGH_WATER {
+            break;
+        }
+        let slot = c.pending.pop_front().expect("front exists");
+        let mut frame = slot.reply.expect("checked ready");
+        if proto::encode(&frame, scratch).is_err() {
+            // unreachable through admission (it bounds every reply),
+            // kept as defense in depth: substitute a typed error so the
+            // client's positional reply matching survives
+            frame = Frame::Error(WireError {
+                code: ErrCode::Internal,
+                msg: "reply exceeded wire limits".into(),
+            });
+            if proto::encode(&frame, scratch).is_err() {
+                c.dead = true;
+                return any;
+            }
+        }
+        c.wbuf.extend_from_slice(scratch);
+        let us = slot.t0.elapsed().as_secs_f64() * 1e6;
+        let mut s = lk(&c.stats);
+        s.frames_out += 1;
+        s.bytes_out += scratch.len() as u64;
+        s.record_latency(us);
+        if matches!(frame, Frame::Error(_)) {
+            s.error_replies += 1;
+        }
+        any = true;
+    }
+    any
+}
+
+/// Nonblocking flush of the connection's outbound buffer.
+fn flush(c: &mut Conn) {
+    while c.wpos < c.wbuf.len() {
+        match (&c.stream).write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.wpos += n;
+                c.last_progress = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+        c.last_progress = Instant::now();
+    } else if c.wpos >= WRITE_HIGH_WATER {
+        // reclaim the flushed prefix without waiting for full drain
+        c.wbuf.drain(..c.wpos);
+        c.wpos = 0;
+    }
+}
+
+/// Close a finished connection and move its stats block from the
+/// shard's live registry to its closed accumulator (same `live` →
+/// per-conn → `closed` order as [`State::net_stats`], never nested with
+/// `closed`).
+fn reap(state: &Arc<State>, shard: &Shard, c: Conn) {
+    let mut live = lk(&shard.live);
+    let snap = lk(&c.stats).clone();
+    lk(&shard.closed).merge(&snap);
+    live.retain(|e| !Arc::ptr_eq(e, &c.stats));
+    drop(live);
+    state.closed_count.fetch_add(1, Ordering::Relaxed);
+    let _ = c.stream.shutdown(Shutdown::Both);
 }
 
 fn err_code_for(e: &ProtoError) -> ErrCode {
@@ -435,68 +873,64 @@ fn err_code_for(e: &ProtoError) -> ErrCode {
 /// values would poison worker threads).
 const MAX_WIRE_K: u32 = 16;
 
-fn admit_gemm(state: &Arc<State>, req: proto::GemmReq, t0: Instant)
-              -> Pending {
+fn admit_gemm(req: proto::GemmReq) -> Result<Work, WireError> {
     let (m, kk, nn) = (req.m as usize, req.kk as usize, req.nn as usize);
     if m == 0 || kk == 0 || nn == 0 {
-        return reply_err(ErrCode::Malformed,
-                         "gemm dimensions must be positive", t0);
+        return Err(WireError {
+            code: ErrCode::Malformed,
+            msg: "gemm dimensions must be positive".into(),
+        });
     }
     if req.k > MAX_WIRE_K {
-        return reply_err(ErrCode::Unsupported,
-                         "approximation level k exceeds the supported range",
-                         t0);
+        return Err(WireError {
+            code: ErrCode::Unsupported,
+            msg: "approximation level k exceeds the supported range".into(),
+        });
     }
     // the decoder bounds the operands (m*kk, kk*nn), but the *result*
     // is allocated pool-side as m x nn — bound it here too, or a tiny
     // frame (e.g. kk = 1 with huge m, nn) could demand a terabyte-scale
     // allocation and an unencodable reply
     if (m as u64) * (nn as u64) > proto::MAX_GEMM_ELEMS as u64 {
-        return reply_err(ErrCode::TooLarge,
-                         "result matrix m*nn exceeds the wire element cap",
-                         t0);
+        return Err(WireError {
+            code: ErrCode::TooLarge,
+            msg: "result matrix m*nn exceeds the wire element cap".into(),
+        });
     }
-    // operand lengths were validated against m/kk/nn by the decoder;
-    // submit() fans the tiles across the shared pool without blocking
-    // this thread on execution (only on pool-queue backpressure)
-    let id = state.coord.submit(GemmRequest {
-        a: req.a,
-        b: req.b,
-        m,
-        kk,
-        nn,
-        k: req.k,
-    });
-    Pending::Gemm { id, t0 }
+    Ok(Work::Gemm(GemmRequest { a: req.a, b: req.b, m, kk, nn, k: req.k }))
 }
 
-fn admit_app(state: &Arc<State>, req: proto::AppReq, t0: Instant) -> Pending {
+fn admit_app(state: &Arc<State>, req: proto::AppReq)
+             -> Result<Work, WireError> {
     if req.k > MAX_WIRE_K {
-        return reply_err(ErrCode::Unsupported,
-                         "approximation level k exceeds the supported range",
-                         t0);
+        return Err(WireError {
+            code: ErrCode::Unsupported,
+            msg: "approximation level k exceeds the supported range".into(),
+        });
     }
     let img = match decode_pgm(&req.pgm) {
         Ok(i) => i,
         Err(e) => {
-            return reply_err(ErrCode::BadImage,
-                             &format!("bad PGM payload: {e}"), t0);
+            return Err(WireError {
+                code: ErrCode::BadImage,
+                msg: format!("bad PGM payload: {e}"),
+            });
         }
     };
     match req.app {
-        AppKind::Dct if img.h % 8 != 0 || img.w % 8 != 0 => {
-            reply_err(ErrCode::BadImage,
-                      "dct needs multiple-of-8 image dimensions", t0)
-        }
-        AppKind::Edge if img.h < 3 || img.w < 3 => {
-            reply_err(ErrCode::BadImage,
-                      "edge needs an image of at least 3x3", t0)
-        }
-        AppKind::Bdcn if state.cfg.bdcn.is_none() => {
-            reply_err(ErrCode::Unsupported,
-                      "bdcn weights are not loaded on this server", t0)
-        }
-        app => Pending::App { app, k: req.k, img, t0 },
+        AppKind::Dct if img.h % 8 != 0 || img.w % 8 != 0 => Err(WireError {
+            code: ErrCode::BadImage,
+            msg: "dct needs multiple-of-8 image dimensions".into(),
+        }),
+        AppKind::Edge if img.h < 3 || img.w < 3 => Err(WireError {
+            code: ErrCode::BadImage,
+            msg: "edge needs an image of at least 3x3".into(),
+        }),
+        AppKind::Bdcn if state.cfg.bdcn.is_none() => Err(WireError {
+            code: ErrCode::Unsupported,
+            msg: "bdcn weights are not loaded on this server".into(),
+        }),
+        app => Ok(Work::App { app, k: req.k, img }),
     }
 }
 
@@ -522,16 +956,46 @@ fn wire_stats(s: &ServiceStats, n: &NetStats) -> WireStats {
     }
 }
 
-/// Resolve one pending slot into its reply frame. GEMMs block on the
-/// pool's completion signal; app requests run the full served pipeline
-/// here (their GEMM stages fan out across the pool while the reader
-/// keeps admitting later requests).
-fn resolve(state: &State, p: Pending) -> (Frame, Instant) {
-    match p {
-        Pending::Ready(f, t0) => (f, t0),
-        Pending::Gemm { id, t0 } => {
+/// Resolver thread: execute admitted work on the shared pool and post
+/// the reply frame back to the owning shard. Handler panics are caught
+/// into typed `Internal` error replies — one poisoned request must not
+/// take down a resolver (or, transitively, the positional reply
+/// pipeline of its connection).
+fn resolver_loop(state: Arc<State>, rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = lk(&rx);
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // every shard exited: drain complete
+            }
+        };
+        let frame = catch_unwind(AssertUnwindSafe(|| {
+            resolve_work(&state, job.work)
+        }))
+        .unwrap_or_else(|_| {
+            Frame::Error(WireError {
+                code: ErrCode::Internal,
+                msg: "internal error while serving the request".into(),
+            })
+        });
+        state.shards[job.shard].post(Msg::Done {
+            conn: job.conn,
+            seq: job.seq,
+            frame,
+        });
+    }
+}
+
+/// Execute one admitted request. GEMMs submit to the pool and block on
+/// its completion signal *here*, in the resolver — never in a shard —
+/// so pool-queue backpressure throttles resolvers, not event loops.
+fn resolve_work(state: &State, work: Work) -> Frame {
+    match work {
+        Work::Gemm(req) => {
+            let id = state.coord.submit(req);
             let resp = state.coord.wait(id);
-            (Frame::GemmResp(GemmResp {
+            Frame::GemmResp(GemmResp {
                 m: resp.m as u32,
                 nn: resp.nn as u32,
                 latency_us: resp.latency_us,
@@ -540,9 +1004,9 @@ fn resolve(state: &State, p: Pending) -> (Frame, Instant) {
                 energy_fj: resp.sa_stats.energy_fj,
                 metered_macs: resp.sa_stats.metered_macs,
                 out: resp.out,
-            }), t0)
+            })
         }
-        Pending::App { app, k, img, t0 } => {
+        Work::App { app, k, img } => {
             let r = match app {
                 AppKind::Bdcn => {
                     let blocks =
@@ -552,7 +1016,7 @@ fn resolve(state: &State, p: Pending) -> (Frame, Instant) {
                 _ => state.coord.call_app(app, &img, k)
                     .expect("weight-free app"),
             };
-            (Frame::AppResp(AppResp {
+            Frame::AppResp(AppResp {
                 app,
                 psnr_db: r.psnr_db,
                 latency_us: r.latency_us,
@@ -562,58 +1026,39 @@ fn resolve(state: &State, p: Pending) -> (Frame, Instant) {
                 h: r.out.h as u32,
                 w: r.out.w as u32,
                 pixels: r.out.data,
-            }), t0)
+            })
         }
-        Pending::Stats(t0) => {
+        Work::Stats => {
             // snapshot both stat blocks under their own short locks,
-            // release, then encode — the coordinator's stats lock is
-            // never held across frame encoding
+            // release, then encode — no stats lock is ever held across
+            // frame encoding
             let s = state.coord.stats_snapshot();
             let n = state.net_stats();
-            (Frame::StatsResp(wire_stats(&s, &n)), t0)
+            Frame::StatsResp(wire_stats(&s, &n))
         }
     }
 }
 
-fn writer_loop(stream: TcpStream, state: Arc<State>,
-               cs: Arc<Mutex<NetStats>>, rx: Receiver<Pending>) {
-    let mut bw = BufWriter::new(stream);
-    let mut scratch = Vec::new();
-    loop {
-        // batch-friendly: only flush when no reply is immediately ready
-        let item = match rx.try_recv() {
-            Ok(i) => i,
-            Err(TryRecvError::Empty) => {
-                if bw.flush().is_err() {
-                    break;
-                }
-                match rx.recv() {
-                    Ok(i) => i,
-                    Err(_) => break, // reader closed the queue: drained
-                }
-            }
-            Err(TryRecvError::Disconnected) => break,
-        };
-        // flush fully-encoded earlier replies before blocking in
-        // resolve (pool wait / app execution): a pipelined client must
-        // receive reply N as soon as it exists, not when N+1 finishes
-        if !matches!(&item, Pending::Ready(..)) && bw.flush().is_err() {
-            break;
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisoned_stats_lock_recovers() {
+        // lk() must hand back the data of a poisoned mutex: stats are
+        // fold-only counters, so the worst case is one stale sample —
+        // never a panic cascade through every other connection
+        let m = Arc::new(Mutex::new(NetStats::default()));
+        {
+            let m = m.clone();
+            let _ = std::thread::spawn(move || {
+                let _guard = m.lock().unwrap();
+                panic!("poison the stats lock");
+            })
+            .join();
         }
-        let (frame, t0) = resolve(&state, item);
-        match proto::write_frame(&mut bw, &frame, &mut scratch) {
-            Ok(n) => {
-                let us = t0.elapsed().as_secs_f64() * 1e6;
-                let mut s = cs.lock().unwrap();
-                s.frames_out += 1;
-                s.bytes_out += n as u64;
-                s.record_latency(us);
-                if matches!(frame, Frame::Error(_)) {
-                    s.error_replies += 1;
-                }
-            }
-            Err(_) => break,
-        }
+        assert!(m.is_poisoned());
+        lk(&m).frames_in += 1;
+        assert_eq!(lk(&m).frames_in, 1);
     }
-    let _ = bw.flush();
 }

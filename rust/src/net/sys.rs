@@ -1,0 +1,144 @@
+//! Minimal `poll(2)` / `getrlimit(2)` FFI for the event-loop server.
+//!
+//! The crate is std-only, so readiness multiplexing binds the libc
+//! symbols directly instead of pulling in `libc`/`mio`. Only what the
+//! shard loops need is declared: `poll` with an EINTR retry wrapper,
+//! the event bits the loops inspect, and an open-files rlimit raiser so
+//! the scale load generator can hold thousands of sockets.
+//!
+//! Portable `poll` (not `epoll`/`kqueue`) keeps one code path across
+//! Linux and macOS; at the per-shard fd counts the server runs
+//! (thousands of connections split over N shards), the O(fds) scan per
+//! wakeup is far below the request-handling cost.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// Readiness: data available to read (or a pending accept).
+pub const POLLIN: i16 = 0x001;
+/// Readiness: writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Result only: error condition on the descriptor.
+pub const POLLERR: i16 = 0x008;
+/// Result only: peer hung up (read may still drain buffered bytes).
+pub const POLLHUP: i16 = 0x010;
+/// Result only: the descriptor is not open.
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry of a `poll(2)` set, ABI-compatible with `struct pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// Descriptor to watch (< 0 = ignore this entry).
+    pub fd: RawFd,
+    /// Requested events ([`POLLIN`] | [`POLLOUT`]).
+    pub events: i16,
+    /// Returned events, filled by the kernel.
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for `events`, with `revents` cleared.
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+}
+
+#[cfg(target_os = "macos")]
+type NfdsT = u32;
+#[cfg(not(target_os = "macos"))]
+type NfdsT = core::ffi::c_ulong;
+
+/// Process resource limit pair, ABI-compatible with `struct rlimit`
+/// (both fields are `u64` on the 64-bit Unixes this crate targets).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+#[cfg(target_os = "macos")]
+const RLIMIT_NOFILE: i32 = 8;
+#[cfg(not(target_os = "macos"))]
+const RLIMIT_NOFILE: i32 = 7;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+/// Block until a descriptor in `fds` is ready, `timeout_ms` elapses
+/// (`-1` = forever), or an error. Returns the number of entries with
+/// nonzero `revents`; retries transparently on `EINTR`.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms)
+        };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Raise the soft open-files limit to the hard limit and return the
+/// resulting soft value. Needed by the scale load generator, which can
+/// hold thousands of sockets from one process; a no-op when the soft
+/// limit already equals the hard one.
+pub fn raise_nofile_limit() -> io::Result<u64> {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if lim.cur >= lim.max {
+        return Ok(lim.cur);
+    }
+    let want = RLimit { cur: lim.max, max: lim.max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &want) } != 0 {
+        // Not fatal for callers: report the still-effective soft limit.
+        return Ok(lim.cur);
+    }
+    Ok(want.cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn poll_reports_readable_after_write() {
+        use std::os::unix::io::AsRawFd;
+        let lis = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut tx = TcpStream::connect(lis.local_addr().unwrap()).unwrap();
+        let (rx, _) = lis.accept().unwrap();
+        let mut fds = [PollFd::new(rx.as_raw_fd(), POLLIN)];
+        // nothing written yet: poll with a zero timeout sees no events
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        tx.write_all(b"x").unwrap();
+        tx.flush().unwrap();
+        let n = poll_fds(&mut fds, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_sane() {
+        let soft = raise_nofile_limit().unwrap();
+        assert!(soft >= 64, "soft open-files limit {soft} is implausible");
+    }
+}
+
+/// The event-loop server requires `poll(2)`; non-Unix targets have no
+/// readiness syscall to bind in a std-only crate.
+#[cfg(not(unix))]
+compile_error!(
+    "axsys::net requires a Unix target: the event-loop server binds poll(2)"
+);
