@@ -6,18 +6,26 @@
 //! comparable perf artifact behind:
 //!
 //! 1. **kernels** — `lut` naive walk vs the cache-blocked driver (lut and
-//!    word engines) vs the naive word walk on one `size³` GEMM at `k = 4`,
+//!    word engines, the word engine both with its 64-lane kernel and the
+//!    scalar walk) vs the naive word walk on one `size³` GEMM at `k = 4`,
 //!    each as MACs/second (results cross-checked bit-identical before any
 //!    timing — a perf number for a wrong kernel is worthless);
-//! 2. **serve** — coordinator throughput on the `lut` backend over a
+//! 2. **roofline** — achieved blocked-kernel MACs/sec against a
+//!    bandwidth-bound peak derived from a *measured* sequential memory
+//!    sweep (the LUT microkernel reads 8 bytes of table per MAC);
+//! 3. **serve** — coordinator throughput on the `lut` backend over a
 //!    deterministic mixed-size request fleet, with p50/p90/p99/max
 //!    latency and the batched-dispatch counters;
-//! 3. **apps** — single-request `serve_dct` / `serve_edge` latency at the
+//! 4. **apps** — single-request `serve_dct` / `serve_edge` latency at the
 //!    paper's headline approximation levels;
-//! 4. **energy** — the data-dependent per-MAC model on a fixed synthetic
+//! 5. **energy** — the data-dependent per-MAC model on a fixed synthetic
 //!    stream: mean fJ/MAC per design plus the 8×8-array savings vs the
 //!    conventional MAC (the golden-pinned headline), so the energy
 //!    trajectory is machine-readable across PRs alongside the perf one.
+//!
+//! The kernel/serve sections run at the process-wide pinned block sizes
+//! (`--block-sizes` or the startup autotune; recorded under
+//! `config.blocks`).
 //!
 //! All sizes shrink with [`ReportConfig::size`] so CI can smoke-run the
 //! identical suite in seconds (`axsys bench-report --size 32`).
@@ -73,7 +81,9 @@ fn meas_json(m: &Measurement, macs: f64) -> Json {
         .set("macs_per_sec", Json::Num(m.throughput(macs)))
 }
 
-fn kernel_section(rc: &ReportConfig) -> Json {
+/// Kernel timings plus the achieved MACs/sec of the two blocked engines
+/// (lut, word) — the roofline section reuses those instead of re-timing.
+fn kernel_section(rc: &ReportConfig) -> (Json, f64, f64) {
     let s = rc.size;
     let macs = (s * s * s) as f64;
     let budget = ((macs / 1e6) as u64).clamp(40, 1500);
@@ -81,13 +91,20 @@ fn kernel_section(rc: &ReportConfig) -> Json {
     let a = ints(5, s * s);
     let b = ints(6, s * s);
     let lut = ProductLut::try_build(&cfg).expect("8-bit point compiles");
-    let mut eng = BlockedGemm::default();
-    // cross-check every timed path before timing it
+    let mut eng = BlockedGemm::new(crate::gemm::effective_blocks());
+    let mut eng_scalar = BlockedGemm::new(crate::gemm::effective_blocks());
+    eng_scalar.set_lane_kernel(false);
+    // cross-check every timed path before timing it — including the
+    // 64-lane word kernel against its scalar walk (the lane gate needs
+    // size >= 32 columns to engage; at CI smoke sizes >= 48 this is a
+    // real bit-equality gate on the lane kernel)
     let want = word_matmul(&cfg, &a, &b, s, s, s);
     assert_eq!(lut.matmul(&a, &b, s, s, s), want, "naive lut != word");
     assert_eq!(eng.matmul(&cfg, &a, &b, s, s, s), want, "blocked lut != word");
     assert_eq!(eng.matmul_word(&cfg, &a, &b, s, s, s), want,
-               "blocked word != word");
+               "blocked word (lanes) != word");
+    assert_eq!(eng_scalar.matmul_word(&cfg, &a, &b, s, s, s), want,
+               "blocked word (scalar) != word");
 
     let m_word = run("bench-report word naive", budget, || {
         black_box(word_matmul(black_box(&cfg), &a, &b, s, s, s));
@@ -101,18 +118,66 @@ fn kernel_section(rc: &ReportConfig) -> Json {
     let m_blocked_w = run("bench-report word blocked", budget, || {
         black_box(eng.matmul_word(black_box(&cfg), &a, &b, s, s, s));
     });
-    Json::obj()
+    let m_scalar_w = run("bench-report word blocked scalar", budget, || {
+        black_box(eng_scalar.matmul_word(black_box(&cfg), &a, &b, s, s, s));
+    });
+    let doc = Json::obj()
         .set("size", Json::Int(s as i64))
         .set("k", Json::Int(rc.k as i64))
         .set("word_naive", meas_json(&m_word, macs))
         .set("lut_naive", meas_json(&m_lut, macs))
         .set("lut_blocked", meas_json(&m_blocked, macs))
         .set("word_blocked", meas_json(&m_blocked_w, macs))
+        .set("word_blocked_scalar", meas_json(&m_scalar_w, macs))
         .set("blocked_vs_naive_lut_speedup",
              Json::Num(speedup(&m_lut, &m_blocked)))
         .set("blocked_vs_naive_word_speedup",
              Json::Num(speedup(&m_word, &m_blocked_w)))
-        .set("lut_vs_word_speedup", Json::Num(speedup(&m_word, &m_blocked)))
+        .set("lane_vs_scalar_word_speedup",
+             Json::Num(speedup(&m_scalar_w, &m_blocked_w)))
+        .set("lut_vs_word_speedup", Json::Num(speedup(&m_word, &m_blocked)));
+    (doc, m_blocked.throughput(macs), m_blocked_w.throughput(macs))
+}
+
+/// Measured sequential read bandwidth: best-of-5 summing sweep over a
+/// 16 MiB `u64` buffer (far past L2, the streaming pattern of the LUT
+/// microkernel's table reads). Returns bytes/second.
+fn measured_bandwidth_bytes_per_sec() -> f64 {
+    const WORDS: usize = 1 << 21; // 16 MiB
+    let buf: Vec<u64> = (0..WORDS as u64)
+        .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .collect();
+    let mut best = f64::INFINITY;
+    let mut acc = 0u64;
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        let mut sum = 0u64;
+        for &v in &buf {
+            sum = sum.wrapping_add(v);
+        }
+        acc = acc.wrapping_add(sum);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    black_box(acc);
+    (WORDS * 8) as f64 / best.max(1e-12)
+}
+
+/// Achieved MACs/sec against the memory-bandwidth peak. The LUT
+/// microkernel reads 8 bytes of table per MAC (`prod` i32 + `trans`
+/// u32), so its bandwidth-bound peak is `bw / 8`; the word kernel is
+/// compute-bound and reported for context only.
+fn roofline_section(lut_macs_per_sec: f64, word_macs_per_sec: f64) -> Json {
+    let bw = measured_bandwidth_bytes_per_sec();
+    let bytes_per_mac = 8.0;
+    let peak = bw / bytes_per_mac;
+    Json::obj()
+        .set("mem_bw_bytes_per_sec", Json::Num(bw))
+        .set("table_bytes_per_mac", Json::Num(bytes_per_mac))
+        .set("peak_macs_per_sec", Json::Num(peak))
+        .set("lut_blocked_macs_per_sec", Json::Num(lut_macs_per_sec))
+        .set("lut_efficiency_pct",
+             Json::Num(lut_macs_per_sec / peak.max(1e-9) * 100.0))
+        .set("word_blocked_macs_per_sec", Json::Num(word_macs_per_sec))
 }
 
 fn serve_section(rc: &ReportConfig) -> Json {
@@ -247,16 +312,23 @@ pub fn collect(rc: &ReportConfig) -> Json {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as i64)
         .unwrap_or(0);
+    let bs = crate::gemm::effective_blocks();
+    let (kernels, lut_mps, word_mps) = kernel_section(rc);
     Json::obj()
-        .set("schema", Json::Str("axsys-bench-report/v2".into()))
+        .set("schema", Json::Str("axsys-bench-report/v3".into()))
         .set("generated_unix", Json::Int(generated_unix))
         .set("config", Json::obj()
             .set("size", Json::Int(rc.size as i64))
             .set("requests", Json::Int(rc.requests as i64))
             .set("workers", Json::Int(rc.workers as i64))
             .set("k", Json::Int(rc.k as i64))
-            .set("host_threads", Json::Int(threads as i64)))
-        .set("kernels", kernel_section(rc))
+            .set("host_threads", Json::Int(threads as i64))
+            .set("blocks", Json::obj()
+                .set("mc", Json::Int(bs.mc as i64))
+                .set("kc", Json::Int(bs.kc as i64))
+                .set("nc", Json::Int(bs.nc as i64))))
+        .set("kernels", kernels)
+        .set("roofline", roofline_section(lut_mps, word_mps))
         .set("serve", serve_section(rc))
         .set("apps", apps_section(rc))
         .set("energy", energy_section())
@@ -277,7 +349,8 @@ mod tests {
         let rc = ReportConfig { size: 16, requests: 4, workers: 2, k: 4 };
         let doc = collect(&rc);
         let kernels = doc.get("kernels").expect("kernels");
-        for key in ["word_naive", "lut_naive", "lut_blocked", "word_blocked"] {
+        for key in ["word_naive", "lut_naive", "lut_blocked", "word_blocked",
+                    "word_blocked_scalar"] {
             let m = kernels.get(key).expect(key);
             match m.get("macs_per_sec") {
                 Some(&Json::Num(v)) => assert!(v > 0.0, "{key}: {v}"),
@@ -285,6 +358,18 @@ mod tests {
             }
         }
         assert!(kernels.get("blocked_vs_naive_lut_speedup").is_some());
+        assert!(kernels.get("lane_vs_scalar_word_speedup").is_some());
+        // roofline: measured bandwidth and a finite efficiency
+        let roof = doc.get("roofline").expect("roofline");
+        for key in ["mem_bw_bytes_per_sec", "peak_macs_per_sec",
+                    "lut_blocked_macs_per_sec", "lut_efficiency_pct"] {
+            match roof.get(key) {
+                Some(&Json::Num(v)) => {
+                    assert!(v > 0.0 && v.is_finite(), "{key}: {v}");
+                }
+                other => panic!("{key}: {other:?}"),
+            }
+        }
         let serve = doc.get("serve").expect("serve");
         assert_eq!(serve.get("requests"), Some(&Json::Int(4)));
         let lat = serve.get("latency_us").expect("latency_us");

@@ -18,18 +18,31 @@
 //! batching (tested), and `Word`, `Lut` and `Systolic` are bit-identical
 //! to each other for every design point (`tests/backend_equiv.rs`).
 //!
-//! ## Batched dispatch
+//! ## Batched dispatch and intra-request fan-out
 //!
 //! Workers pull tiles in batches (up to [`CoordinatorConfig::batch`] per
-//! queue visit). On the software backends (`Word`/`Lut`) a batch is then
-//! **coalesced**: tiles that share one request's B panel (same request,
-//! same output-column origin, same `k`) — the shape the im2col-lowered
-//! conv tiles from [`crate::apps`] arrive in — are stacked row-wise and
-//! executed as a single cache-blocked GEMM through each worker's
-//! reusable [`BlockedGemm`] engine. Coalescing only concatenates
-//! *independent output rows*, so results stay bit-identical to per-tile
-//! execution (enforced by `tests/coordinator_invariance.rs`); batch-size
-//! and dispatch-latency counters land in [`ServiceStats`].
+//! queue visit, MAC-capped by [`CoordinatorConfig::batch_macs`]). On the
+//! software backends (`Word`/`Lut`) a batch is then **coalesced**: tiles
+//! that share one request's B panel (same request, same output-column
+//! origin, same `k`) — the shape the im2col-lowered conv tiles from
+//! [`crate::apps`] arrive in — are stacked row-wise and executed as a
+//! single cache-blocked GEMM through each worker's reusable
+//! [`BlockedGemm`] engine. Coalescing only concatenates *independent
+//! output rows*, so results stay bit-identical to per-tile execution
+//! (enforced by `tests/coordinator_invariance.rs`); batch-size and
+//! dispatch-latency counters land in [`ServiceStats`].
+//!
+//! The same mechanism runs in reverse for one *large* request: the
+//! software backends tile it into MC-row blocks
+//! ([`CoordinatorConfig::sw_tile`], B panels `Arc`-shared per column),
+//! and the MAC budget stops any single worker from vacuuming all of a
+//! request's row blocks into its batch — so the blocks fan out across
+//! idle workers. Tiling splits only output rows/columns (every output
+//! element's full-`kk` MAC chain runs unchanged in exactly one tile),
+//! so fan-out is bit-identical to single-threaded execution for every
+//! backend and worker count, and each tile's metered femtojoules are
+//! exact — the request total sums them in tile-commit order
+//! (`tests/prop_equiv.rs` pins both properties).
 //!
 //! ## Energy accounting
 //!
@@ -124,6 +137,22 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Max tiles a worker pulls per batch.
     pub batch: usize,
+    /// Output-tile geometry `(rows, cols)` for the software backends
+    /// (`Word`/`Lut`). `None` derives the row height from the process
+    /// block autotune ([`crate::gemm::effective_blocks`]`.mc`) and a
+    /// column width of four NC panels, so one large request splits into
+    /// MC-row blocks that fan out across idle workers while each tile
+    /// is still a full cache-blocked GEMM (wide enough for the 64-lane
+    /// word kernel). `Systolic`/`Pjrt` always tile by [`Self::sa_size`].
+    pub sw_tile: Option<(usize, usize)>,
+    /// Opportunistic batch-drain MAC budget. A worker's first queue
+    /// pull always blocks; it then keeps draining queued tiles only
+    /// while the MACs pulled so far stay under this budget (and the
+    /// tile count under [`Self::batch`]). Small im2col conv tiles still
+    /// coalesce deeply, but the large row-block tiles of one fanned-out
+    /// request hit the budget after one or two pulls and spread across
+    /// the pool instead of being vacuumed into a single worker's batch.
+    pub batch_macs: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -136,6 +165,29 @@ impl Default for CoordinatorConfig {
             sa_size: 8,
             queue_depth: 256,
             batch: 16,
+            sw_tile: None,
+            batch_macs: 1 << 20,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Resolved output-tile geometry `(rows, cols)` for this backend:
+    /// the software engines tile by [`Self::sw_tile`] (or the
+    /// autotune-derived default), the per-tile devices by
+    /// [`Self::sa_size`] squared.
+    fn tile_shape(&self) -> (usize, usize) {
+        match self.backend {
+            BackendKind::Word | BackendKind::Lut => {
+                let (tr, tc) = self.sw_tile.unwrap_or_else(|| {
+                    let bs = crate::gemm::effective_blocks();
+                    (bs.mc, bs.nc * 4)
+                });
+                (tr.max(1), tc.max(1))
+            }
+            BackendKind::Systolic | BackendKind::Pjrt => {
+                (self.sa_size, self.sa_size)
+            }
         }
     }
 }
@@ -224,6 +276,13 @@ struct TileJob {
     b_panel: Arc<Vec<i64>>,
     kk: usize,
     k: u32,
+}
+
+impl TileJob {
+    /// MAC count of this tile — the unit of the worker batch budget.
+    fn macs(&self) -> u64 {
+        (self.th * self.kk * self.tw) as u64
+    }
 }
 
 /// Stripe count of the pending-request completion map. Request ids
@@ -699,12 +758,16 @@ impl Coordinator {
     /// (backpressure). Returns the request id.
     pub fn submit(&self, req: GemmRequest) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let sa = self.cfg.sa_size;
+        // software backends fan one request out as (tr x tc) row-block
+        // tiles (bit-safe: tiling only splits output rows/columns, each
+        // element's full-kk MAC chain is untouched); the per-tile
+        // devices keep the systolic array's square geometry
+        let (tr, tc) = self.cfg.tile_shape();
         let (m, kk, nn) = (req.m, req.kk, req.nn);
         assert_eq!(req.a.len(), m * kk, "A shape");
         assert_eq!(req.b.len(), kk * nn, "B shape");
-        let tiles_m = m.div_ceil(sa);
-        let tiles_n = nn.div_ceil(sa);
+        let tiles_m = m.div_ceil(tr);
+        let tiles_n = nn.div_ceil(tc);
         {
             let (lock, _) = self.shared.stripe(id);
             lock.lock().unwrap().insert(id, Pending {
@@ -723,8 +786,8 @@ impl Coordinator {
         // share it too — which is exactly what the workers' batch
         // coalescer merges into a single stacked GEMM
         for bj in 0..tiles_n {
-            let tj = bj * sa;
-            let tw = (nn - tj).min(sa);
+            let tj = bj * tc;
+            let tw = (nn - tj).min(tc);
             let mut bp = vec![0i64; kk * tw];
             for t in 0..kk {
                 for j in 0..tw {
@@ -733,8 +796,8 @@ impl Coordinator {
             }
             let b_panel = Arc::new(bp);
             for bi in 0..tiles_m {
-                let ti = bi * sa;
-                let th = (m - ti).min(sa);
+                let ti = bi * tr;
+                let th = (m - ti).min(tr);
                 let mut a_panel = vec![0i64; th * kk];
                 for i in 0..th {
                     a_panel[i * kk..(i + 1) * kk]
@@ -923,9 +986,11 @@ impl SwDevice {
     fn new() -> Box<Self> {
         // single_threaded: the worker pool is the parallelism — a nested
         // per-call fan-out on large coalesced GEMMs would oversubscribe
-        // the host and allocate per-thread scratch on every dispatch
+        // the host and allocate per-thread scratch on every dispatch.
+        // Block sizes follow the process-wide pin (CLI override or
+        // startup autotune) so the serving path runs what was tuned.
         Box::new(SwDevice {
-            eng: BlockedGemm::single_threaded(Default::default()),
+            eng: BlockedGemm::single_threaded(crate::gemm::effective_blocks()),
             stack_a: Vec::new(),
         })
     }
@@ -1009,7 +1074,12 @@ fn worker_loop(cfg: CoordinatorConfig, wid: usize,
     // commit without contending with the other workers
     let my = &stats.stripes[wid % stats.stripes.len()];
     loop {
-        // pull a batch (first blocks, rest opportunistic)
+        // pull a batch (first blocks, rest opportunistic). The drain is
+        // MAC-budgeted: once the pulled work reaches `batch_macs` the
+        // worker stops taking more, so the row-block tiles of one
+        // fanned-out request spread across idle workers instead of all
+        // landing in the first worker's batch; small tiles stay far
+        // under budget and still coalesce up to `batch` deep.
         let mut batch = Vec::with_capacity(cfg.batch);
         {
             let rxl = rx.lock().unwrap();
@@ -1017,9 +1087,13 @@ fn worker_loop(cfg: CoordinatorConfig, wid: usize,
                 Ok(job) => batch.push(job),
                 Err(_) => return, // queue closed
             }
-            while batch.len() < cfg.batch {
+            let mut pulled_macs = batch[0].macs();
+            while batch.len() < cfg.batch && pulled_macs < cfg.batch_macs {
                 match rxl.try_recv() {
-                    Ok(job) => batch.push(job),
+                    Ok(job) => {
+                        pulled_macs += job.macs();
+                        batch.push(job);
+                    }
                     Err(_) => break,
                 }
             }
@@ -1574,6 +1648,68 @@ mod tests {
             assert_eq!(s.metered_macs, 2 * (m * kk * nn) as u64);
             assert!((s.energy_fj - total).abs() < 1e-9 * total.max(1.0));
             assert!(s.total_energy_uj() > 0.0 && s.mean_mac_fj() > 0.0);
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn intra_request_fanout_is_bit_identical_and_budgeted() {
+        // One request, forced into 8 single-tile dispatches: with a
+        // 1-MAC budget every batch stops after its blocking pull, so
+        // max_dispatch_tiles pins the budget and the result must still
+        // be bit-identical (and the metered energy equal to within
+        // summation-order rounding) vs one worker serving one big tile.
+        let (m, kk, nn) = (64, 12, 48);
+        let a = ints(31, m * kk);
+        let b = ints(32, kk * nn);
+        let fan = Coordinator::new(CoordinatorConfig {
+            workers: 4, backend: BackendKind::Word,
+            sw_tile: Some((8, 48)), batch_macs: 1, ..Default::default()
+        });
+        let rf = fan.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                        m, kk, nn, k: 4 });
+        let sf = fan.stats();
+        fan.shutdown();
+        assert_eq!(rf.tiles, 8, "64 rows / 8-row tiles");
+        assert_eq!(sf.dispatched_tiles, 8);
+        assert_eq!(sf.max_dispatch_tiles, 1, "MAC budget caps the drain");
+        assert_eq!(sf.worker_dispatches, 8);
+        let solo = Coordinator::new(CoordinatorConfig {
+            workers: 1, backend: BackendKind::Word,
+            sw_tile: Some((64, 48)), ..Default::default()
+        });
+        let rs = solo.call(GemmRequest { a, b, m, kk, nn, k: 4 });
+        solo.shutdown();
+        assert_eq!(rf.out, rs.out, "fan-out must be bit-identical");
+        assert_eq!(rf.sa_stats.metered_macs, rs.sa_stats.metered_macs);
+        let tol = 1e-9 * rs.sa_stats.energy_fj.max(1.0);
+        assert!((rf.sa_stats.energy_fj - rs.sa_stats.energy_fj).abs() < tol,
+                "per-tile metered energy must sum to the request total");
+    }
+
+    #[test]
+    fn wide_design_points_serve_unmetered_instead_of_panicking() {
+        // n = 16 is beyond the energy tables: the request must degrade
+        // to unmetered-with-coverage-recorded (ServiceStats contract),
+        // not panic a worker, and the bits must match the word model.
+        for backend in [BackendKind::Word, BackendKind::Lut] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers: 2, backend, n_bits: 16, ..Default::default()
+            });
+            let (m, kk, nn) = (12, 9, 40);
+            let a = ints(41, m * kk);
+            let b = ints(42, kk * nn);
+            let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
+                                            m, kk, nn, k: 3 });
+            let pc = PeConfig::new(16, true, Family::Proposed, 3);
+            let want = crate::pe::word::matmul(&pc, &a, &b, m, kk, nn);
+            assert_eq!(resp.out, want, "{backend:?}");
+            assert!(resp.sa_stats.macs > 0, "{backend:?}");
+            assert_eq!(resp.sa_stats.metered_macs, 0,
+                       "{backend:?}: wide point has no meter coverage");
+            assert_eq!(resp.sa_stats.energy_fj, 0.0, "{backend:?}");
+            let s = c.stats();
+            assert_eq!(s.metered_macs, 0);
             c.shutdown();
         }
     }

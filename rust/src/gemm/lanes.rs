@@ -1,0 +1,363 @@
+//! 64-lane transposed bit-plane word engine.
+//!
+//! The scalar word kernel ([`crate::pe::word::mac_step_planned`]) walks
+//! one MAC chain at a time: every `u64` holds the W accumulator bits of a
+//! *single* output element, and each of the N row updates costs ~15
+//! full-width bitwise ops per element. This module transposes the layout
+//! — the same trick `energy::EnergyLut::try_build` uses to tabulate
+//! netlists 64 design inputs at a time: a `u64` *plane* holds bit `i` of
+//! 64 **independent** MAC chains (bit `l` of plane `i` = bit `i` of lane
+//! `l`'s accumulator). Every bitwise op in the row update then advances
+//! all 64 lanes at once, and only the two value-preserving adds in the
+//! scalar kernel (the Baugh-Wooley constant injection and the per-row
+//! carry merge) need care: they become bit-serial ripple adders over the
+//! W planes (`sum = x ^ y ^ c`, `carry = maj(x, y, c)`), exactly the
+//! ripple form of the adds they replace.
+//!
+//! In the blocked GEMM driver a lane = one output column of the current
+//! block, so the broadcast operand `a` is shared by all lanes (same A row
+//! element) and only B differs per lane — B packs once per panel into N
+//! bit-planes per inner-dimension step. Op count per MAC drops from
+//! ~`15·N` per element to ~`(10·N² + 5·N·W) / 64` per element (~6× at
+//! `n = 8, w = 24`), before counting the removed per-element loop
+//! overhead.
+//!
+//! ## Why this cannot change the bits
+//!
+//! [`LanePlan::mac64`] computes, per lane, the *identical* boolean
+//! function as `mac_step_planned`: the per-plane cell expressions are the
+//! scalar per-bit expressions with each mask bit broadcast across lanes,
+//! and the two ripple adders are bit-exact expansions of the two
+//! `wrapping_add`s (carries out of plane `w-1` are dropped, matching the
+//! scalar `& word_mask()`). `tests::lane_matches_planned_chains` pins
+//! this per-lane over every family × signedness × k, and the blocked
+//! driver's fuzz (`tests/prop_equiv.rs`) pins the full GEMM path.
+
+use crate::pe::word::PeConfig;
+use crate::Family;
+
+/// Number of independent MAC chains one plane set carries.
+pub const LANES: usize = 64;
+
+/// Upper bound on the accumulator width W (matches [`PeConfig`]'s cap).
+pub const MAX_W: usize = 48;
+
+/// Per-row constants of the lane kernel: the scalar row masks of
+/// [`crate::pe::word`], kept in scalar (per-bit) form — the kernel
+/// broadcasts one bit across the 64 lanes as it visits each plane.
+#[derive(Clone, Copy)]
+struct LaneRow {
+    /// First plane of this row's bit span (`j`).
+    lo: usize,
+    /// One past the last span plane (`min(j + n, w)`).
+    hi: usize,
+    /// NPPC (complemented-product) positions, absolute bit weights.
+    nm: u64,
+    /// Approximate-column positions within the span (`span & (2^k - 1)`).
+    aa: u64,
+}
+
+/// Hoisted per-design-point plan for the 64-lane MAC kernel — the
+/// transposed counterpart of [`crate::pe::word::MacPlan`].
+#[derive(Clone)]
+pub struct LanePlan {
+    /// The design point the plan was built for.
+    pub cfg: PeConfig,
+    w: usize,
+    n_rows: usize,
+    fam: u8,
+    /// Baugh-Wooley correction constant (0 when unsigned).
+    bw: u64,
+    opmask: u64,
+    rows: [LaneRow; 16],
+}
+
+impl LanePlan {
+    /// Build the plan (one-time cost per GEMM call, like `MacPlan`).
+    pub fn new(cfg: &PeConfig) -> Self {
+        assert!(cfg.n <= 16, "operand width capped at 16 bits");
+        assert!((cfg.w as usize) <= MAX_W, "accumulator width capped at 48");
+        let w = cfg.w as usize;
+        let mw = cfg.word_mask();
+        let amask = (1u64 << cfg.k) - 1;
+        let mut rows = [LaneRow { lo: 0, hi: 0, nm: 0, aa: 0 }; 16];
+        for j in 0..cfg.n as usize {
+            let span = (((1u64 << cfg.n) - 1) << j) & mw;
+            rows[j] = LaneRow {
+                lo: j,
+                hi: (j + cfg.n as usize).min(w),
+                nm: cfg.nppc_mask(j as u32),
+                aa: span & amask,
+            };
+        }
+        LanePlan {
+            cfg: *cfg,
+            w,
+            n_rows: cfg.n as usize,
+            fam: match cfg.family {
+                Family::Proposed => 0,
+                Family::Axsa5 => 1,
+                Family::Sips12 => 2,
+                Family::Nano6 => 3,
+            },
+            bw: if cfg.signed { cfg.bw_const() } else { 0 },
+            opmask: (1u64 << cfg.n) - 1,
+            rows,
+        }
+    }
+
+    /// Accumulator width in planes (`cfg.w`).
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.w
+    }
+
+    /// Operand width in bit-planes (`cfg.n` — the length `b_planes` must
+    /// have in [`Self::mac64`]).
+    #[inline]
+    pub fn b_planes(&self) -> usize {
+        self.n_rows
+    }
+
+    /// One fused MAC across 64 independent chains.
+    ///
+    /// * `a` — the broadcast A-operand encoding (shared by every lane);
+    /// * `b_planes` — the 64 lanes' B encodings, transposed: bit `l` of
+    ///   `b_planes[j]` is bit `j` of lane `l`'s operand (see
+    ///   [`pack_b_lanes`]);
+    /// * `sp` / `kp` — the sum/carry rails as `w` planes, updated in
+    ///   place (bit `l` of plane `i` = bit `i` of lane `l`'s rail).
+    #[inline]
+    pub fn mac64(&self, a: u64, b_planes: &[u64], sp: &mut [u64],
+                 kp: &mut [u64]) {
+        debug_assert_eq!(b_planes.len(), self.n_rows);
+        debug_assert!(sp.len() >= self.w && kp.len() >= self.w);
+        match self.fam {
+            0 => self.mac64_rows::<0>(a, b_planes, sp, kp),
+            1 => self.mac64_rows::<1>(a, b_planes, sp, kp),
+            2 => self.mac64_rows::<2>(a, b_planes, sp, kp),
+            _ => self.mac64_rows::<3>(a, b_planes, sp, kp),
+        }
+    }
+
+    #[inline(always)]
+    fn mac64_rows<const FAM: u8>(&self, a: u64, bp: &[u64], sp: &mut [u64],
+                                 kp: &mut [u64]) {
+        let w = self.w;
+        let au = a & self.opmask;
+        // the scalar `kc = kc.wrapping_add(bw)`: ripple-add the broadcast
+        // constant bit-serially over the planes (carry out of plane w-1
+        // drops, matching the scalar `& word_mask()`)
+        if self.bw != 0 {
+            let mut carry = 0u64;
+            for (i, k) in kp.iter_mut().enumerate().take(w) {
+                let bb = 0u64.wrapping_sub((self.bw >> i) & 1);
+                let old = *k;
+                *k = old ^ bb ^ carry;
+                carry = (old & bb) | (old & carry) | (bb & carry);
+            }
+        }
+        let mut c_out = [0u64; MAX_W];
+        for (j, rm) in self.rows[..self.n_rows].iter().enumerate() {
+            // per-lane product-row select: bit j of each lane's b
+            let sel = bp[j];
+            // cell layer: planes inside the span. Each plane's new sum
+            // bit depends only on that plane, so s updates in place; the
+            // produced carries are buffered (they land one plane up).
+            for i in rm.lo..rm.hi {
+                let abit = 0u64.wrapping_sub((au >> (i - j)) & 1);
+                let p = sel & abit;
+                let x = p ^ 0u64.wrapping_sub((rm.nm >> i) & 1);
+                let s = sp[i];
+                let k = kp[i];
+                let (s2, c) = if (rm.aa >> i) & 1 == 0 {
+                    // exact 3:2 compressor (PPC and NPPC share it: x
+                    // already carries the complement)
+                    (x ^ s ^ k, (x & s) | (x & k) | (s & k))
+                } else {
+                    let osk = s | k;
+                    match FAM {
+                        0 => {
+                            if (rm.nm >> i) & 1 == 0 {
+                                (osk & !x, x) // proposed PPC cell
+                            } else {
+                                (!osk | !x, osk & x) // proposed NPPC cell
+                            }
+                        }
+                        1 => (x ^ s ^ k, 0), // AxSA [5]: carry elided
+                        2 => (!(x ^ s), k),  // SiPS [12]
+                        _ => (!s, x & k),    // NANOARCH [6]
+                    }
+                };
+                sp[i] = s2;
+                c_out[i] = c;
+            }
+            // the scalar `kc = (carries << 1).wrapping_add(kc & !span)`:
+            // shift = carries land one plane up; the add ripples from the
+            // span bottom (below it nothing changes), carry out of plane
+            // w-1 drops
+            let mut carry = 0u64;
+            for i in rm.lo..w {
+                let add = if i > rm.lo && i <= rm.hi { c_out[i - 1] } else { 0 };
+                let pass = if i >= rm.hi { kp[i] } else { 0 };
+                kp[i] = add ^ pass ^ carry;
+                carry = (add & pass) | (add & carry) | (pass & carry);
+            }
+        }
+    }
+}
+
+/// Pack up to 64 B-operand encodings into `n` transposed bit-planes:
+/// bit `l` of `planes[j]` = bit `j` of `bvals[l]`. Lanes past
+/// `bvals.len()` pack as zero (they compute garbage nobody reads).
+pub fn pack_b_lanes(n: usize, bvals: &[u64], planes: &mut [u64]) {
+    debug_assert!(bvals.len() <= LANES && planes.len() >= n);
+    for p in planes[..n].iter_mut() {
+        *p = 0;
+    }
+    for (l, &b) in bvals.iter().enumerate() {
+        for (j, p) in planes[..n].iter_mut().enumerate() {
+            *p |= ((b >> j) & 1) << l;
+        }
+    }
+}
+
+/// Gather lane `l`'s W-bit rail value out of a plane array.
+#[inline]
+pub fn lane_get(planes: &[u64], l: usize) -> u64 {
+    let mut v = 0u64;
+    for (i, &p) in planes.iter().enumerate() {
+        v |= ((p >> l) & 1) << i;
+    }
+    v
+}
+
+/// Scatter a W-bit rail value into lane `l` of a plane array (test and
+/// seeding helper — the GEMM driver always starts from zeroed planes).
+pub fn lane_set(planes: &mut [u64], l: usize, v: u64) {
+    for (i, p) in planes.iter_mut().enumerate() {
+        *p = (*p & !(1u64 << l)) | (((v >> i) & 1) << l);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::word::{mac_step_planned, MacPlan};
+
+    fn rnd(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    #[test]
+    fn lane_roundtrip_set_get() {
+        let mut planes = [0u64; 24];
+        let mut st = 0x5EED_u64;
+        let vals: Vec<u64> =
+            (0..LANES).map(|_| rnd(&mut st) & 0xFF_FFFF).collect();
+        for (l, &v) in vals.iter().enumerate() {
+            lane_set(&mut planes, l, v);
+        }
+        for (l, &v) in vals.iter().enumerate() {
+            assert_eq!(lane_get(&planes, l), v, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn lane_matches_planned_chains() {
+        // 64 independent random chains, stepped together through mac64,
+        // must match 64 scalar mac_step_planned walks bit-for-bit — for
+        // every family, signedness, and k (including k > n clamps).
+        let mut st = 0xABCDEF_u64;
+        for family in Family::ALL {
+            for signed in [false, true] {
+                for k in [1u32, 3, 8, 12] {
+                    let cfg = PeConfig::new(8, signed, family, k);
+                    let plan = MacPlan::new(&cfg);
+                    let lp = LanePlan::new(&cfg);
+                    let w = lp.width();
+                    let mut sp = vec![0u64; w];
+                    let mut kp = vec![0u64; w];
+                    let mut s = [0u64; LANES];
+                    let mut kc = [0u64; LANES];
+                    for l in 0..LANES {
+                        s[l] = rnd(&mut st) & cfg.word_mask();
+                        kc[l] = rnd(&mut st) & cfg.word_mask();
+                        lane_set(&mut sp, l, s[l]);
+                        lane_set(&mut kp, l, kc[l]);
+                    }
+                    let mut bplanes = vec![0u64; lp.b_planes()];
+                    for step in 0..6 {
+                        let a = rnd(&mut st) & 0xFF;
+                        let bs: Vec<u64> =
+                            (0..LANES).map(|_| rnd(&mut st) & 0xFF).collect();
+                        pack_b_lanes(lp.b_planes(), &bs, &mut bplanes);
+                        lp.mac64(a, &bplanes, &mut sp, &mut kp);
+                        for l in 0..LANES {
+                            let (s2, k2) =
+                                mac_step_planned(&plan, a, bs[l], s[l], kc[l]);
+                            s[l] = s2;
+                            kc[l] = k2;
+                            assert_eq!(
+                                (lane_get(&sp, l), lane_get(&kp, l)),
+                                (s2, k2),
+                                "{family:?} signed={signed} k={k} \
+                                 step={step} lane={l}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_chain_resolves_like_scalar() {
+        // from reset, a full MAC chain resolved through MacPlan::resolve
+        // equals the scalar chain's value (the GEMM-driver usage)
+        let mut st = 0x1234_u64;
+        let cfg = PeConfig::new(8, true, Family::Proposed, 5);
+        let plan = MacPlan::new(&cfg);
+        let lp = LanePlan::new(&cfg);
+        let mut sp = vec![0u64; lp.width()];
+        let mut kp = vec![0u64; lp.width()];
+        let mut scalar: Vec<(u64, u64)> = vec![(0, 0); LANES];
+        let mut bplanes = vec![0u64; lp.b_planes()];
+        for _ in 0..32 {
+            let a = rnd(&mut st) & 0xFF;
+            let bs: Vec<u64> = (0..LANES).map(|_| rnd(&mut st) & 0xFF).collect();
+            pack_b_lanes(lp.b_planes(), &bs, &mut bplanes);
+            lp.mac64(a, &bplanes, &mut sp, &mut kp);
+            for (l, sk) in scalar.iter_mut().enumerate() {
+                *sk = mac_step_planned(&plan, a, bs[l], sk.0, sk.1);
+            }
+        }
+        for (l, &(s, kc)) in scalar.iter().enumerate() {
+            assert_eq!(plan.resolve(lane_get(&sp, l), lane_get(&kp, l)),
+                       plan.resolve(s, kc), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn short_lane_groups_pack_zero_tails() {
+        // a ragged (tail) lane group: only 5 live lanes; the packed tail
+        // lanes must read back as b = 0 and not disturb the live ones
+        let cfg = PeConfig::new(8, false, Family::Sips12, 4);
+        let plan = MacPlan::new(&cfg);
+        let lp = LanePlan::new(&cfg);
+        let mut sp = vec![0u64; lp.width()];
+        let mut kp = vec![0u64; lp.width()];
+        let mut bplanes = vec![0u64; lp.b_planes()];
+        let bs = [3u64, 250, 0, 77, 128];
+        pack_b_lanes(lp.b_planes(), &bs, &mut bplanes);
+        lp.mac64(200, &bplanes, &mut sp, &mut kp);
+        for (l, &b) in bs.iter().enumerate() {
+            let (s2, k2) = mac_step_planned(&plan, 200, b, 0, 0);
+            assert_eq!((lane_get(&sp, l), lane_get(&kp, l)), (s2, k2),
+                       "live lane {l}");
+        }
+    }
+}

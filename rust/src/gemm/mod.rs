@@ -10,21 +10,29 @@
 //!   kernel is plain wrapping-i64 MACs on decoded operands (same bits as
 //!   the word model's exact fast path, tested there);
 //! * **lut** (`k > 0`, LUT-compilable point): two table reads + two adds
-//!   per MAC against the process-shared [`ProductLut`] tables;
-//! * **word** (`k > 0`, non-compilable point): the bit-plane walk via
-//!   [`mac_step_planned`].
+//!   per MAC against the process-shared [`ProductLut`] tables, 8
+//!   accumulator/automaton chains in flight;
+//! * **word** (`k > 0`, non-compilable point): the bit-plane walk — the
+//!   64-lane transposed kernel ([`lanes`]) on unmetered wide blocks,
+//!   the scalar [`mac_step_planned`] 4-chain kernel otherwise.
 //!
 //! ## Why blocking helps, and why it cannot change the bits
 //!
 //! The driver encodes A once per call (natural row stride), copy-packs
 //! each NC×KC transposed panel of B into contiguous scratch (L1/L2
-//! resident at the default sizes), and walks a 4-wide register
-//! microkernel over MC×NC output blocks: four output
-//! columns advance together, which turns the serially-dependent
-//! per-element automaton/carry-save chain into four independent
-//! dependency chains the CPU can overlap. That is where the speedup over
-//! the naive one-chain-at-a-time loop comes from (see `benches/hotpath.rs`,
-//! `blocked_vs_naive`).
+//! resident at the default sizes), and walks a multi-chain register
+//! microkernel over MC×NC output blocks: 8 output columns (LUT) or a
+//! 64-wide lane group (word) advance together, which turns the
+//! serially-dependent per-element automaton/carry-save chain into many
+//! independent dependency chains the CPU can overlap. That is where the
+//! speedup over the naive one-chain-at-a-time loop comes from (see
+//! `benches/hotpath.rs`, `blocked_vs_naive`).
+//!
+//! Blocking parameters default to [`BlockSizes::default`]; long-lived
+//! serving processes pin a measured choice instead — either an explicit
+//! [`set_block_override`] (the CLI `--block-sizes MCxKCxNC`) or the
+//! [`autotune_blocks`] startup sweep. Both are process-wide and
+//! perf-only: block sizes can never change the bits.
 //!
 //! Bit-identity is structural: tiling and packing only *reorder
 //! independent output elements*. Each output element `C[i][j]` still
@@ -68,11 +76,16 @@
 //! ```
 
 use std::cell::RefCell;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use crate::energy::EnergyLut;
 use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::{mac_step_planned, MacPlan, PeConfig};
+
+pub mod lanes;
+
+use lanes::{lane_get, pack_b_lanes, LanePlan, LANES};
 
 /// Cache-blocking parameters of the driver: C is computed in MC×NC
 /// blocks, each fed by KC-deep packed operand panels.
@@ -96,6 +109,77 @@ impl Default for BlockSizes {
     fn default() -> Self {
         BlockSizes { mc: 64, kc: 256, nc: 64 }
     }
+}
+
+impl BlockSizes {
+    /// Parse a `MCxKCxNC` triple (the CLI `--block-sizes` syntax), e.g.
+    /// `"64x256x64"`. Every component must be a positive integer.
+    pub fn parse(s: &str) -> Option<BlockSizes> {
+        let mut it = s.split('x');
+        let mc = it.next()?.parse().ok()?;
+        let kc = it.next()?.parse().ok()?;
+        let nc = it.next()?.parse().ok()?;
+        if it.next().is_some() || mc == 0 || kc == 0 || nc == 0 {
+            return None;
+        }
+        Some(BlockSizes { mc, kc, nc })
+    }
+}
+
+/// The process-wide pinned blocking (None until an override or autotune
+/// pins one). Library constructors never pin implicitly — results are
+/// bit-identical for every choice, so this is purely a perf knob and the
+/// defaults stay deterministic for tests and one-shot callers.
+static PINNED_BLOCKS: OnceLock<BlockSizes> = OnceLock::new();
+
+/// Pin the process-wide blocking (the CLI `--block-sizes` override).
+/// First pin wins — returns `false` if autotune or an earlier override
+/// already pinned a value (which then stays in force).
+pub fn set_block_override(bs: BlockSizes) -> bool {
+    PINNED_BLOCKS.set(bs).is_ok()
+}
+
+/// The blocking new engines should use: the pinned value if an override
+/// or [`autotune_blocks`] ran, the [`BlockSizes::default`] otherwise.
+pub fn effective_blocks() -> BlockSizes {
+    PINNED_BLOCKS.get().copied().unwrap_or_default()
+}
+
+/// Run a short startup sweep over a candidate MC/KC/NC grid on the LUT
+/// serving kernel and pin the fastest triple process-wide (once — later
+/// calls return the pinned value immediately). ~tens of ms; the CLI
+/// entry points call this at startup unless `--block-sizes` pinned an
+/// explicit choice. Bit-identity is unconditional on block sizes, so
+/// the sweep only ever changes speed.
+pub fn autotune_blocks() -> BlockSizes {
+    *PINNED_BLOCKS.get_or_init(|| {
+        let cfg = PeConfig::new(8, true, crate::Family::Proposed, 4);
+        let s = 96usize;
+        let a = crate::bench::xorshift_ints(11, s * s);
+        let b = crate::bench::xorshift_ints(12, s * s);
+        let mut best = (f64::INFINITY, BlockSizes::default());
+        for mc in [32, 64, 128] {
+            for kc in [128, 256] {
+                for nc in [32, 64, 128] {
+                    let bs = BlockSizes { mc, kc, nc };
+                    let mut eng = BlockedGemm::single_threaded(bs);
+                    // warm the scratch, then best-of-2
+                    eng.matmul(&cfg, &a, &b, s, s, s);
+                    let mut dt = f64::INFINITY;
+                    for _ in 0..2 {
+                        let t0 = Instant::now();
+                        std::hint::black_box(
+                            eng.matmul(&cfg, &a, &b, s, s, s));
+                        dt = dt.min(t0.elapsed().as_secs_f64());
+                    }
+                    if dt < best.0 {
+                        best = (dt, bs);
+                    }
+                }
+            }
+        }
+        best.1
+    })
 }
 
 /// Reusable packing + per-block state buffers (grow-only, never freed
@@ -122,6 +206,12 @@ struct Scratch {
     s_rail: Vec<u64>,
     /// Per-element carry rail of the current block (word).
     k_rail: Vec<u64>,
+    /// Packed B bit-planes of the current panel (lane word kernel).
+    bpl: Vec<u64>,
+    /// Per-lane-group sum planes of the current block (lane word kernel).
+    spl: Vec<u64>,
+    /// Per-lane-group carry planes of the current block (lane word kernel).
+    kpl: Vec<u64>,
 }
 
 /// Dimensions of one (block, panel) microkernel invocation. The A
@@ -162,6 +252,9 @@ pub struct BlockedGemm {
     pub blocks: BlockSizes,
     /// Whether large problems may fan out across scoped threads.
     parallel: bool,
+    /// Whether the unmetered word path may use the 64-lane bit-plane
+    /// kernel ([`lanes`]) on wide-enough blocks (default on).
+    lanes: bool,
     scratch: Scratch,
     /// Optional per-MAC energy meter (see module docs, §Energy metering).
     meter: Option<Arc<EnergyLut>>,
@@ -181,8 +274,9 @@ impl BlockedGemm {
     /// Large problems are split across threads; callers that already
     /// run inside a worker pool should use [`Self::single_threaded`].
     pub fn new(blocks: BlockSizes) -> Self {
-        BlockedGemm { blocks, parallel: true, scratch: Scratch::default(),
-                      meter: None, energy_fj: 0.0 }
+        BlockedGemm { blocks, parallel: true, lanes: true,
+                      scratch: Scratch::default(), meter: None,
+                      energy_fj: 0.0 }
     }
 
     /// A driver that never spawns threads: every call runs sequentially
@@ -192,8 +286,17 @@ impl BlockedGemm {
     /// and nested fan-out from an already-parallel pool would
     /// oversubscribe the host.
     pub fn single_threaded(blocks: BlockSizes) -> Self {
-        BlockedGemm { blocks, parallel: false, scratch: Scratch::default(),
-                      meter: None, energy_fj: 0.0 }
+        BlockedGemm { blocks, parallel: false, lanes: true,
+                      scratch: Scratch::default(), meter: None,
+                      energy_fj: 0.0 }
+    }
+
+    /// Enable/disable the 64-lane word kernel (default on). The lane
+    /// and scalar kernels are bit-identical — this exists for A/B
+    /// benchmarking (`bench-report` reports the speedup) and for the
+    /// differential fuzz that proves the identity.
+    pub fn set_lane_kernel(&mut self, on: bool) {
+        self.lanes = on;
     }
 
     /// Install (or clear) the per-MAC energy meter. The table must match
@@ -285,6 +388,7 @@ impl BlockedGemm {
             .map(|p| p.get()).unwrap_or(1).min(8);
         if self.parallel && work >= 1 << 18 && threads > 1 && m >= 2 * threads {
             let bs = self.blocks;
+            let lanes = self.lanes;
             let chunk = m.div_ceil(threads);
             // per-chunk energies summed in chunk order afterwards, so the
             // metered total is deterministic for a given thread split
@@ -297,14 +401,14 @@ impl BlockedGemm {
                     scope.spawn(move || {
                         let mut local = Scratch::default();
                         *fj = drive_rows(eng, &bs, &mut local, op, meter,
-                                         ci * chunk, rows);
+                                         lanes, ci * chunk, rows);
                     });
                 }
             });
             self.energy_fj += chunk_fj.into_iter().sum::<f64>();
         } else {
             self.energy_fj += drive_rows(eng, &self.blocks, &mut self.scratch,
-                                         &op, meter, 0, &mut out);
+                                         &op, meter, self.lanes, 0, &mut out);
         }
         out
     }
@@ -317,8 +421,20 @@ impl BlockedGemm {
 /// every output element's MAC chain identical to the unblocked walk.
 /// Returns the femtojoules metered over these rows (0.0 unmetered).
 fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
-              meter: Option<&EnergyLut>, i0: usize, out_rows: &mut [i64])
-              -> f64 {
+              meter: Option<&EnergyLut>, lanes: bool, i0: usize,
+              out_rows: &mut [i64]) -> f64 {
+    // The 64-lane transposed kernel covers the unmetered word path on
+    // wide-enough outputs: metering needs the scalar per-MAC rails
+    // (`EnergyLut::state_of_rails` reads them before every step), and
+    // narrow outputs under-fill the lane groups, so both keep the
+    // scalar 4-chain kernel. The choice is fixed per call — block state
+    // layouts never mix.
+    if let Eng::Word(plan) = eng {
+        if lanes && meter.is_none() && op.nn >= LANE_MIN_COLS {
+            drive_rows_word_lanes(plan, bs, sc, op, i0, out_rows);
+            return 0.0;
+        }
+    }
     let nn = op.nn;
     let kk = op.kk;
     let h = out_rows.len() / nn;
@@ -442,6 +558,108 @@ fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
     energy_fj
 }
 
+/// Minimum output width before the 64-lane word kernel pays for itself:
+/// below this the lane groups are mostly padding lanes and the scalar
+/// 4-chain kernel is cheaper. Any value is bit-safe — this is a pure
+/// perf threshold.
+const LANE_MIN_COLS: usize = 32;
+
+/// The word-engine block driver on the 64-lane transposed kernel
+/// ([`lanes::LanePlan::mac64`]): same MC×KC×NC block walk and the same
+/// per-element KC-panel state carrying as [`drive_rows`], but the block
+/// state lives as bit-planes per 64-output-column lane group instead of
+/// scalar rails. Unmetered only (see the gate in [`drive_rows`]).
+///
+/// Bit-identity: a lane is one output column; its plane bits walk the
+/// exact `mac_step_planned` chain (pinned per-lane in `lanes::tests`),
+/// and the block/panel order here never reassociates any chain — it is
+/// the same schedule as the scalar driver.
+fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
+                         op: &Operands, i0: usize, out_rows: &mut [i64]) {
+    let lp = LanePlan::new(&plan.cfg);
+    let w = lp.width();
+    let nb = lp.b_planes();
+    let nn = op.nn;
+    let kk = op.kk;
+    let h = out_rows.len() / nn;
+    let mc = bs.mc.max(1);
+    let kc = bs.kc.max(1);
+    let nc = bs.nc.max(1);
+    // A encoded once per call, exactly like the scalar word arm
+    sc.a64.resize(h * kk, 0);
+    for i in 0..h {
+        let src = &op.a[(i0 + i) * kk..(i0 + i + 1) * kk];
+        let dst = &mut sc.a64[i * kk..(i + 1) * kk];
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = plan.cfg.encode(v);
+        }
+    }
+    let groups_max = nc.div_ceil(LANES);
+    sc.spl.resize(mc * groups_max * w, 0);
+    sc.kpl.resize(mc * groups_max * w, 0);
+    sc.bpl.resize(groups_max * kc * nb, 0);
+    let mut benc = [0u64; LANES];
+    let mut icb = 0;
+    while icb < h {
+        let mh = (h - icb).min(mc);
+        let mut jcb = 0;
+        while jcb < nn {
+            let nw = (nn - jcb).min(nc);
+            let groups = nw.div_ceil(LANES);
+            sc.spl[..mh * groups * w].fill(0);
+            sc.kpl[..mh * groups * w].fill(0);
+            // KC panels in increasing t order: plane state survives from
+            // one panel to the next, same contract as the scalar driver
+            let mut pcb = 0;
+            while pcb < kk {
+                let kw = (kk - pcb).min(kc);
+                // pack this panel of B into bit-planes per (group, t):
+                // bit l of plane j = bit j of encode(B[t][jcb + g*64 + l])
+                for g in 0..groups {
+                    let l0 = jcb + g * LANES;
+                    let gl = (nw - g * LANES).min(LANES);
+                    for t in 0..kw {
+                        let src = &op.b[(pcb + t) * nn + l0..][..gl];
+                        for (e, &v) in benc[..gl].iter_mut().zip(src) {
+                            *e = plan.cfg.encode(v);
+                        }
+                        pack_b_lanes(nb, &benc[..gl],
+                                     &mut sc.bpl[(g * kc + t) * nb..][..nb]);
+                    }
+                }
+                for i in 0..mh {
+                    let arow = &sc.a64[(icb + i) * kk + pcb..][..kw];
+                    for g in 0..groups {
+                        let base = (i * groups + g) * w;
+                        let (spl, kpl) = (&mut sc.spl[base..base + w],
+                                          &mut sc.kpl[base..base + w]);
+                        for (t, &av) in arow.iter().enumerate() {
+                            lp.mac64(av, &sc.bpl[(g * kc + t) * nb..][..nb],
+                                     spl, kpl);
+                        }
+                    }
+                }
+                pcb += kw;
+            }
+            // resolve + write back: gather each lane's rails out of the
+            // planes and drain through the same exact merge adder
+            for i in 0..mh {
+                let dst = &mut out_rows[(icb + i) * nn + jcb
+                                        ..(icb + i) * nn + jcb + nw];
+                for (j, o) in dst.iter_mut().enumerate() {
+                    let g = j / LANES;
+                    let l = j % LANES;
+                    let base = (i * groups + g) * w;
+                    *o = plan.resolve(lane_get(&sc.spl[base..base + w], l),
+                                      lane_get(&sc.kpl[base..base + w], l));
+                }
+            }
+            jcb += nw;
+        }
+        icb += mh;
+    }
+}
+
 /// Copy-pack the B(pc0.., col0..) panel transposed as decoded i64
 /// operands (nw×kw, unit-stride inner dimension).
 fn pack_b_exact(cfg: &PeConfig, sc: &mut Scratch, op: &Operands,
@@ -532,11 +750,25 @@ fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64],
     efj
 }
 
-/// Table-driven microkernel: 4 output columns advance together, so four
-/// independent (accumulator, automaton-state) chains are in flight — the
-/// ILP the naive per-element loop cannot expose. With a meter, each MAC
-/// adds one energy-table read indexed by the very automaton state the
-/// kernel chases anyway. Returns metered fJ.
+/// How many (accumulator, automaton-state) chains the LUT microkernel
+/// keeps in flight per sweep. Two table reads + two adds per MAC leave
+/// the CPU starved for independent work at 4 chains; 8 fills the
+/// load/ALU ports without spilling the chain registers.
+const LUT_CHAINS: usize = 8;
+
+/// Mask extracting the next-state index out of a packed
+/// [`ProductLut::trans_entry`] (`err i16 << 16 | state u16`). The width
+/// is load-bearing: a state index wider than 16 bits would be silently
+/// truncated here, so [`kernel_lut`] asserts every compiled table fits
+/// (the builder already refuses to emit one that does not — this pins
+/// the two layers to the same contract).
+const STATE_MASK: usize = 0xFFFF;
+
+/// Table-driven microkernel: [`LUT_CHAINS`] output columns advance
+/// together, so eight independent (accumulator, automaton-state) chains
+/// are in flight — the ILP the naive per-element loop cannot expose.
+/// With a meter, each MAC adds one energy-table read indexed by the very
+/// automaton state the kernel chases anyway. Returns metered fJ.
 fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
               acc: &mut [i64], st: &mut [u16], elut: Option<&EnergyLut>)
               -> f64 {
@@ -545,68 +777,49 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
     let two_n = 2 * n as usize;
     let kb = lut.window_bits() as usize;
     let kmask = (1usize << kb) - 1;
+    // state indices ride the low 16 bits of the packed transition entry;
+    // a wider automaton would corrupt state silently below, so refuse it
+    // loudly (the table builder bounds states to u16::MAX — this assert
+    // ties the microkernel to that contract, incl. the widest n=8/k=8
+    // point, see tests::widest_window_states_fit_the_packed_mask)
+    assert!(lut.states() <= STATE_MASK + 1,
+            "ProductLut has {} states; the packed-entry mask carries at \
+             most {}", lut.states(), STATE_MASK + 1);
+    debug_assert!(kb as u32 == lut.cfg.k || lut.cfg.k == 0,
+                  "window width / design-point k mismatch");
     let mut efj = 0f64;
     for i in 0..mh {
         let arow = &a16[sh.a_base + i * sh.a_stride..][..kw];
         let racc = &mut acc[i * nw..(i + 1) * nw];
         let rst = &mut st[i * nw..(i + 1) * nw];
         let mut j = 0;
-        while j + 4 <= nw {
-            let b0 = &b16[j * kw..(j + 1) * kw];
-            let b1 = &b16[(j + 1) * kw..(j + 2) * kw];
-            let b2 = &b16[(j + 2) * kw..(j + 3) * kw];
-            let b3 = &b16[(j + 3) * kw..(j + 4) * kw];
-            let (mut c0, mut c1, mut c2, mut c3) =
-                (racc[j], racc[j + 1], racc[j + 2], racc[j + 3]);
-            let (mut s0, mut s1, mut s2, mut s3) =
-                (rst[j] as usize, rst[j + 1] as usize,
-                 rst[j + 2] as usize, rst[j + 3] as usize);
+        while j + LUT_CHAINS <= nw {
+            let b: [&[u16]; LUT_CHAINS] =
+                core::array::from_fn(|u| &b16[(j + u) * kw..(j + u + 1) * kw]);
+            let mut c: [i64; LUT_CHAINS] =
+                core::array::from_fn(|u| racc[j + u]);
+            let mut s: [usize; LUT_CHAINS] =
+                core::array::from_fn(|u| rst[j + u] as usize);
             for t in 0..kw {
                 let ai = arow[t] as usize;
                 let ahi = ai << n;
                 let alo = (ai & kmask) << kb;
-                let bi = b0[t] as usize;
-                c0 += lut.prod_entry(ahi | bi);
-                if let Some(el) = elut {
-                    efj += el.entry((s0 << two_n) | ahi | bi);
+                for u in 0..LUT_CHAINS {
+                    let bi = b[u][t] as usize;
+                    c[u] += lut.prod_entry(ahi | bi);
+                    if let Some(el) = elut {
+                        efj += el.entry((s[u] << two_n) | ahi | bi);
+                    }
+                    let e = lut.trans_entry(s[u], alo | (bi & kmask));
+                    c[u] += (e >> 16) as i16 as i64;
+                    s[u] = e as usize & STATE_MASK;
                 }
-                let e = lut.trans_entry(s0, alo | (bi & kmask));
-                c0 += (e >> 16) as i16 as i64;
-                s0 = (e & 0xFFFF) as usize;
-                let bi = b1[t] as usize;
-                c1 += lut.prod_entry(ahi | bi);
-                if let Some(el) = elut {
-                    efj += el.entry((s1 << two_n) | ahi | bi);
-                }
-                let e = lut.trans_entry(s1, alo | (bi & kmask));
-                c1 += (e >> 16) as i16 as i64;
-                s1 = (e & 0xFFFF) as usize;
-                let bi = b2[t] as usize;
-                c2 += lut.prod_entry(ahi | bi);
-                if let Some(el) = elut {
-                    efj += el.entry((s2 << two_n) | ahi | bi);
-                }
-                let e = lut.trans_entry(s2, alo | (bi & kmask));
-                c2 += (e >> 16) as i16 as i64;
-                s2 = (e & 0xFFFF) as usize;
-                let bi = b3[t] as usize;
-                c3 += lut.prod_entry(ahi | bi);
-                if let Some(el) = elut {
-                    efj += el.entry((s3 << two_n) | ahi | bi);
-                }
-                let e = lut.trans_entry(s3, alo | (bi & kmask));
-                c3 += (e >> 16) as i16 as i64;
-                s3 = (e & 0xFFFF) as usize;
             }
-            racc[j] = c0;
-            racc[j + 1] = c1;
-            racc[j + 2] = c2;
-            racc[j + 3] = c3;
-            rst[j] = s0 as u16;
-            rst[j + 1] = s1 as u16;
-            rst[j + 2] = s2 as u16;
-            rst[j + 3] = s3 as u16;
-            j += 4;
+            for u in 0..LUT_CHAINS {
+                racc[j + u] = c[u];
+                rst[j + u] = s[u] as u16;
+            }
+            j += LUT_CHAINS;
         }
         while j < nw {
             let bj = &b16[j * kw..(j + 1) * kw];
@@ -621,7 +834,7 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
                 }
                 let e = lut.trans_entry(s, ((ai & kmask) << kb) | (bi & kmask));
                 c += (e >> 16) as i16 as i64;
-                s = (e & 0xFFFF) as usize;
+                s = e as usize & STATE_MASK;
             }
             racc[j] = c;
             rst[j] = s as u16;
@@ -695,7 +908,8 @@ fn kernel_word(plan: &MacPlan, sh: &BlockShape, a64: &[u64], b64: &[u64],
 }
 
 thread_local! {
-    static ENGINE: RefCell<BlockedGemm> = RefCell::new(BlockedGemm::default());
+    static ENGINE: RefCell<BlockedGemm> =
+        RefCell::new(BlockedGemm::new(effective_blocks()));
 }
 
 /// Blocked GEMM through a thread-local [`BlockedGemm`] (default block
@@ -865,5 +1079,96 @@ mod tests {
                         "{label} k={k}: {e} vs {want_fj}");
             }
         }
+    }
+
+    #[test]
+    fn lane_word_kernel_is_bit_identical_to_scalar() {
+        // the 64-lane transposed kernel vs the scalar 4-chain kernel vs
+        // the naive word walk, over ragged shapes that leave a partial
+        // lane group, at 8- and 16-bit operand widths
+        let (m, kk, nn) = (9usize, 21usize, 45usize);
+        let a = ints(31, m * kk);
+        let b = ints(32, kk * nn);
+        let bs = BlockSizes { mc: 4, kc: 5, nc: 40 };
+        for n in [8u32, 16] {
+            for family in Family::ALL {
+                let cfg = PeConfig::new(n, true, family, 3);
+                let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+                let mut on = BlockedGemm::single_threaded(bs);
+                let mut off = BlockedGemm::single_threaded(bs);
+                off.set_lane_kernel(false);
+                assert_eq!(on.matmul_word(&cfg, &a, &b, m, kk, nn), want,
+                           "lanes on: n={n} {family:?}");
+                assert_eq!(off.matmul_word(&cfg, &a, &b, m, kk, nn), want,
+                           "lanes off: n={n} {family:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn metered_word_path_ignores_lane_toggle() {
+        // a metered engine must take the scalar path (the meter reads
+        // per-MAC rails) whatever the toggle says — bits and energy both
+        let (m, kk, nn) = (4usize, 9usize, 36usize);
+        let a = ints(41, m * kk);
+        let b = ints(42, kk * nn);
+        let cfg = PeConfig::new(8, true, Family::Proposed, 3);
+        let elut = crate::energy::cached(&cfg).expect("8-bit tabulates");
+        let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+        let mut eng = BlockedGemm::single_threaded(BlockSizes::default());
+        eng.set_meter(Some(elut));
+        assert_eq!(eng.matmul_word(&cfg, &a, &b, m, kk, nn), want);
+        assert!(eng.take_energy_fj() > 0.0, "meter must still run");
+    }
+
+    #[test]
+    fn widest_window_states_fit_the_packed_mask() {
+        // regression for the packed-entry state mask: at the widest
+        // compilable window the automaton must still fit the 16-bit
+        // state field the microkernel unpacks with STATE_MASK, and the
+        // blocked LUT path must stay bit-identical to the word model
+        let mut widest = None;
+        for k in (1..=8u32).rev() {
+            let cfg = PeConfig::new(8, true, Family::Proposed, k);
+            if let Some(l) = lut::cached(&cfg) {
+                widest = Some((cfg, l));
+                break;
+            }
+        }
+        let (cfg, l) = widest.expect("some 8-bit window compiles");
+        assert!(l.states() <= STATE_MASK + 1,
+                "{} states overflow the packed mask", l.states());
+        let (m, kk, nn) = (6usize, 17usize, 11usize);
+        let a = ints(51, m * kk);
+        let b = ints(52, kk * nn);
+        let mut eng = BlockedGemm::default();
+        assert_eq!(eng.matmul_lut(&l, &a, &b, m, kk, nn),
+                   word_matmul(&cfg, &a, &b, m, kk, nn),
+                   "widest window k={}", cfg.k);
+    }
+
+    #[test]
+    fn block_sizes_parse_cli_triples() {
+        assert_eq!(BlockSizes::parse("64x256x64"),
+                   Some(BlockSizes { mc: 64, kc: 256, nc: 64 }));
+        assert_eq!(BlockSizes::parse("1x1x1"),
+                   Some(BlockSizes { mc: 1, kc: 1, nc: 1 }));
+        for bad in ["", "64", "64x256", "64x256x64x2", "0x1x1", "axbxc"] {
+            assert_eq!(BlockSizes::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn process_blocking_pins_once_and_stays() {
+        // whoever pins first (this test's autotune or a concurrent
+        // override) wins for the process; later pins must not repin.
+        // Bit-identity across block sizes makes sharing the process-wide
+        // pin with other tests safe.
+        let first = autotune_blocks();
+        assert!(first.mc >= 1 && first.kc >= 1 && first.nc >= 1);
+        assert_eq!(effective_blocks(), first);
+        assert_eq!(autotune_blocks(), first);
+        assert!(!set_block_override(BlockSizes { mc: 1, kc: 1, nc: 1 }));
+        assert_eq!(effective_blocks(), first);
     }
 }

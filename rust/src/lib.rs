@@ -22,7 +22,7 @@
 //! | [`netlist`]   | gate-level netlists: evaluation, STA, toggle power |
 //! | [`tech`]      | 90 nm-class standard-cell library + calibration |
 //! | [`pe`]        | PE functional models ([`pe::word`] bit-plane walk, [`pe::lut`] product-LUT tables) + PE netlist builders |
-//! | [`gemm`]      | cache-blocked (MC×KC×NC, packed-panel) GEMM driver all software backends route through |
+//! | [`gemm`]      | cache-blocked (MC×KC×NC, packed-panel) GEMM driver all software backends route through: 8-chain LUT microkernel, 64-lane bit-plane word kernel, startup block-size autotune |
 //! | [`energy`]    | data-dependent per-MAC energy model: netlist activity replay + per-design-point [`energy::EnergyLut`] tables the meters read |
 //! | [`systolic`]  | cycle-accurate output-stationary systolic array |
 //! | [`error`]     | ED / NMED / MRED sweeps (paper Table V, Figs 9-10) |

@@ -140,6 +140,7 @@ fn dispatch_counters_track_batches_and_coalescing() {
         workers: 1,
         batch: 64,
         backend: BackendKind::Lut,
+        sw_tile: Some((8, 8)), // pin the historical 8x8 tile geometry
         ..Default::default()
     });
     let (m, kk, nn) = (64usize, 8usize, 8usize); // 8 tiles, all tj = 0
@@ -174,6 +175,7 @@ fn saturated_queue_blocks_submit_instead_of_dropping() {
         queue_depth: 1,
         batch: 1,
         backend: BackendKind::Lut,
+        sw_tile: Some((8, 8)), // many tiny tiles: the saturation scenario
         ..Default::default()
     }));
     let (m, kk, nn) = (128usize, 8usize, 128usize); // 256 tiles of 8x8
@@ -214,6 +216,7 @@ fn shutdown_with_saturated_queue_joins_all_workers() {
             queue_depth: 1,
             batch: 1,
             backend: BackendKind::Lut,
+            sw_tile: Some((8, 8)),
             ..Default::default()
         });
         let (m, kk, nn) = (64usize, 8usize, 64usize); // 64 tiles, depth 1
@@ -232,6 +235,7 @@ fn shutdown_with_saturated_queue_joins_all_workers() {
             queue_depth: 1,
             batch: 1,
             backend: BackendKind::Lut,
+            sw_tile: Some((8, 8)),
             ..Default::default()
         });
         for r in 0..3u64 {
@@ -245,6 +249,58 @@ fn shutdown_with_saturated_queue_joins_all_workers() {
     });
     done_rx.recv_timeout(std::time::Duration::from_secs(120)).expect(
         "coordinator teardown hung: workers left parked on the request channel");
+}
+
+#[test]
+fn fanout_and_coalescing_coexist_bit_identically() {
+    // A fanned-out large request (8-row blocks spread under a tiny MAC
+    // budget) and a stream of small coalescable requests share one
+    // pool: the big request's row blocks hit the budget after one or
+    // two pulls while the small requests' same-B tiles still stack into
+    // single device calls. Every result — bits, meter coverage, energy
+    // up to summation-order rounding — must match strictly per-tile
+    // serial execution.
+    let big = (48usize, 10usize, 32usize, 3u32);
+    let small: Vec<(usize, usize, usize, u32)> =
+        (0..6).map(|i| (16, 8, 8, (i % 4) as u32 * 2)).collect();
+    let run_with = |workers: usize, batch: usize, batch_macs: u64| {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers,
+            batch,
+            batch_macs,
+            backend: BackendKind::Lut,
+            sw_tile: Some((8, 32)),
+            ..Default::default()
+        });
+        let mut reqs = vec![big];
+        reqs.extend(small.iter().copied());
+        let ids: Vec<u64> = reqs.iter().enumerate()
+            .map(|(i, &(m, kk, nn, k))| c.submit(GemmRequest {
+                a: ints(3 * i as u64 + 1, m * kk),
+                b: ints(3 * i as u64 + 2, kk * nn),
+                m, kk, nn, k,
+            }))
+            .collect();
+        let outs: Vec<(Vec<i64>, f64, u64)> = ids.into_iter().map(|id| {
+            let r = c.wait(id);
+            (r.out, r.sa_stats.energy_fj, r.sa_stats.metered_macs)
+        }).collect();
+        let s = c.stats();
+        c.shutdown();
+        (outs, s)
+    };
+    let (want, _) = run_with(1, 1, 1); // strictly per-tile serial
+    let (got, s) = run_with(4, 16, 2_000);
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(g.0, w.0, "request {i}: fan-out changed the bits");
+        assert_eq!(g.2, w.2, "request {i}: meter coverage");
+        let tol = 1e-9 * w.1.max(1.0);
+        assert!((g.1 - w.1).abs() < tol, "request {i}: energy sum");
+    }
+    // 48/8 = 6 row blocks for the big request, 16/8 = 2 tiles per small
+    assert_eq!(s.dispatched_tiles, 6 + 6 * 2);
+    assert!(s.coalesced_calls <= s.dispatched_tiles);
+    assert!(s.max_dispatch_tiles >= 1);
 }
 
 #[test]

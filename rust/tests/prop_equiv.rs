@@ -9,7 +9,11 @@
 //!   the same sweep;
 //! * `CoordinatorGemm` (the served, tiled, multi-worker path) equals the
 //!   single-threaded `WordGemm` on the same sweep (signed — the
-//!   coordinator's device configs are signed).
+//!   coordinator's device configs are signed);
+//! * intra-request fan-out (row/column-block tiling across worker
+//!   counts and MAC-budgeted batch drains) equals both the
+//!   single-threaded blocked engine and the naive word walk, and its
+//!   per-tile metered energy sums to the single-threaded total.
 //!
 //! Deterministic xorshift PRNG. The master seed comes from `PROP_SEED`
 //! (CI pins it; default below), and every case derives its own sub-seed
@@ -18,7 +22,9 @@
 //! reported per-case seed identifies the single shrunk repro.
 
 use axsys::apps::{CoordinatorGemm, Gemm, WordGemm};
-use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use axsys::coordinator::{BackendKind, Coordinator, CoordinatorConfig,
+                         GemmRequest};
+use axsys::energy;
 use axsys::gemm::{BlockSizes, BlockedGemm};
 use axsys::pe::lut::matmul as lut_matmul;
 use axsys::pe::word::{matmul as word_matmul, PeConfig};
@@ -167,6 +173,74 @@ fn fuzz_blocked_matches_naive_over_ragged_shapes() {
             assert_eq!(word, want, "blocked(word)[{ei}] != word [{i}] {}",
                        case.describe(master));
         }
+    }
+}
+
+#[test]
+fn fuzz_fanout_matches_single_threaded_blocked_and_naive() {
+    // Intra-request fan-out: a served request split into row/column
+    // blocks across several workers under a MAC-budgeted batch drain
+    // must stay bit-identical to both the single-threaded blocked
+    // engine and the naive word walk, with the per-tile metered
+    // femtojoules summing to the single-threaded meter's total (exact
+    // in real arithmetic — same multiset of per-MAC table reads — so
+    // only f64 summation-order rounding is tolerated).
+    let master = master_seed();
+    let mut rng = XorShift::new(master.wrapping_add(3));
+    let cases = if cfg!(debug_assertions) { 10 } else { 30 };
+    // (workers, sw tile, batch MAC budget): serial per-tile, paired
+    // workers with an aggressive budget, and a wide ragged-tile pool
+    let pools: Vec<(Coordinator, String)> =
+        [(1usize, (8usize, 8usize), 1u64 << 20),
+         (2, (16, 24), 1),
+         (5, (8, 40), 2_000)]
+        .into_iter()
+        .map(|(workers, (tr, tc), batch_macs)| {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers,
+                backend: BackendKind::Word,
+                sw_tile: Some((tr, tc)),
+                batch_macs,
+                ..Default::default()
+            });
+            (c, format!("workers={workers} tile={tr}x{tc} \
+                         budget={batch_macs}"))
+        })
+        .collect();
+    for i in 0..cases {
+        let mut case = Case::draw(rng.next(), true);
+        case.family = Family::Proposed; // meterable design points
+        let cfg = case.cfg();
+        let want = word_matmul(&cfg, &case.a, &case.b,
+                               case.m, case.kk, case.nn);
+        let meter = energy::cached(&cfg);
+        let mut eng = BlockedGemm::single_threaded(BlockSizes::default());
+        eng.set_meter(meter.clone());
+        let st = eng.matmul_word(&cfg, &case.a, &case.b,
+                                 case.m, case.kk, case.nn);
+        let ref_fj = eng.take_energy_fj();
+        assert_eq!(st, want, "blocked != word [{i}] {}",
+                   case.describe(master));
+        let macs = (case.m * case.kk * case.nn) as u64;
+        let expect_metered = if meter.is_some() { macs } else { 0 };
+        for (c, desc) in &pools {
+            let resp = c.call(GemmRequest {
+                a: case.a.clone(), b: case.b.clone(),
+                m: case.m, kk: case.kk, nn: case.nn, k: case.k,
+            });
+            assert_eq!(resp.out, want, "fanout({desc}) != word [{i}] {}",
+                       case.describe(master));
+            assert_eq!(resp.sa_stats.metered_macs, expect_metered,
+                       "fanout({desc}) meter coverage [{i}] {}",
+                       case.describe(master));
+            let tol = 1e-9 * ref_fj.abs().max(1.0);
+            assert!((resp.sa_stats.energy_fj - ref_fj).abs() < tol,
+                    "fanout({desc}) energy {} != {} [{i}] {}",
+                    resp.sa_stats.energy_fj, ref_fj, case.describe(master));
+        }
+    }
+    for (c, _) in pools {
+        c.shutdown();
     }
 }
 
