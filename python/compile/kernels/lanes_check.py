@@ -80,6 +80,12 @@ def lane_mac64(a: int, b_planes: list[int], sp: list[int], kp: list[int],
                 s2, c = ~(x ^ s) & M64, kc
             elif family == "nano6":
                 s2, c = ~s & M64, x & kc
+            elif family == "trunc":
+                t = x ^ p  # drop the product: the nm tie-off alone remains
+                s2 = t ^ s ^ kc
+                c = (t & s) | (t & kc) | (s & kc)
+            elif family == "loa":
+                s2, c = (x | s) & M64, kc
             else:
                 raise ValueError(family)
             sp[i] = s2 & M64

@@ -22,6 +22,13 @@ Cell families (paper Table I + reconstructed baselines, DESIGN.md §2):
     S = ~(x ^ Sin), C = Cin.
 * ``nano6``   — Chen/Lombardi NANOARCH'15 [6]: inexact cell,
     S = ~Sin, C = x & Cin.
+* ``trunc``   — truncated partial products (zoo variant): the AND gate of
+  an approximate column is dropped entirely (the cell sees ``x = nm``, the
+  Baugh-Wooley complement tie-off alone) but the 3:2 compression stays
+  exact.  Classic fixed-width truncated-multiplier behaviour.
+* ``loa``     — lower-part OR adder (zoo variant, Mahdiani et al. LOA):
+  approximate columns OR the incoming partial product into the sum rail,
+    S = x | Sin, C = Cin (carry passes through, no generation).
 
 The exact cells are full adders on ``p`` (PPC) / ``~p`` (NPPC); Baugh-Wooley
 sign handling adds the width-W correction constant per multiplication.
@@ -32,7 +39,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-FAMILIES = ("proposed", "axsa5", "sips12", "nano6")
+FAMILIES = ("proposed", "axsa5", "sips12", "nano6", "trunc", "loa")
 
 # Default widths: operand bits N, accumulator bits W (guard bits allow
 # >= 2^(W-2N) accumulations without overflow).
@@ -109,6 +116,15 @@ def mac_scalar(a: int, b: int, s: int, kc: int, k: int, n: int = DEF_N,
         elif family == "axsa5":
             s_a = (x ^ s ^ kc) & aa   # exact sum, carry elided
             c_a = 0
+            k_pass = 0
+        elif family == "trunc":
+            # partial product dropped: cell input is nm alone, exact 3:2
+            s_a = (nm ^ s ^ kc) & aa
+            c_a = ((nm & s) | (nm & kc) | (s & kc)) & aa
+            k_pass = 0
+        elif family == "loa":
+            s_a = (x | s) & aa        # OR-fold the product into the sum
+            c_a = kc & aa             # carry passes, never generated
             k_pass = 0
         else:
             raise ValueError(f"unknown family {family!r}")
@@ -199,6 +215,14 @@ def mac_step(a_enc, b_enc, s, kc, kmask, n: int = DEF_N, w: int = DEF_W,
         elif family == "nano6":
             s_a = (~s) & aa
             c_a = (x & kc) & aa
+            k_pass = _u32(0)
+        elif family == "trunc":
+            s_a = (nm ^ s ^ kc) & aa
+            c_a = ((nm & s) | (nm & kc) | (s & kc)) & aa
+            k_pass = _u32(0)
+        elif family == "loa":
+            s_a = (x | s) & aa
+            c_a = kc & aa
             k_pass = _u32(0)
         else:  # axsa5: exact sum, carry elided
             s_a = (x ^ s ^ kc) & aa

@@ -102,6 +102,7 @@ fn batch_size() {
         let reqs = 24;
         let ids: Vec<u64> = (0..reqs).map(|_| c.submit(GemmRequest {
             a: a.clone(), b: b.clone(), m, kk, nn, k: 7,
+            ..Default::default()
         })).collect();
         for id in ids {
             c.wait(id);

@@ -136,6 +136,7 @@ fn main() {
             coord.submit(GemmRequest {
                 a: a.clone(), b: b.clone(), m: 64, kk: 64, nn: 64,
                 k: (i % 8) as u32,
+                ..Default::default()
             })
         }).collect();
         for id in ids {
@@ -154,6 +155,7 @@ fn main() {
             coord_lut.submit(GemmRequest {
                 a: a.clone(), b: b.clone(), m: 64, kk: 64, nn: 64,
                 k: (i % 8) as u32,
+                ..Default::default()
             })
         }).collect();
         for id in ids {

@@ -103,6 +103,10 @@ pub struct CoordinatorGemm<'a> {
     coord: &'a Coordinator,
     /// Approximation level submitted with every request.
     pub k: u32,
+    /// Multiplier-family override submitted with every request (`None`
+    /// = the pool's configured family). Set by the SLO-routed app
+    /// endpoints so a routed design point pins *both* family and `k`.
+    pub family: Option<crate::Family>,
     /// Execution stats merged from every response so far.
     pub stats: SaStats,
     /// GEMM requests issued through the coordinator so far.
@@ -112,7 +116,15 @@ pub struct CoordinatorGemm<'a> {
 impl<'a> CoordinatorGemm<'a> {
     /// Adapter submitting every product to `coord` at approximation `k`.
     pub fn new(coord: &'a Coordinator, k: u32) -> Self {
-        CoordinatorGemm { coord, k, stats: SaStats::default(), requests: 0 }
+        Self::with_family(coord, None, k)
+    }
+
+    /// Adapter pinning the full design point: every product runs at
+    /// `family` (`None` = pool default) and approximation `k`.
+    pub fn with_family(coord: &'a Coordinator, family: Option<crate::Family>,
+                       k: u32) -> Self {
+        CoordinatorGemm { coord, k, family, stats: SaStats::default(),
+                          requests: 0 }
     }
 }
 
@@ -126,6 +138,8 @@ impl Gemm for CoordinatorGemm<'_> {
             kk,
             nn,
             k: self.k,
+            family: self.family,
+            ..Default::default()
         });
         self.requests += 1;
         self.stats.merge(&resp.sa_stats);

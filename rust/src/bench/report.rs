@@ -209,6 +209,7 @@ fn serve_section(rc: &ReportConfig) -> Json {
             b: ints(rng.next_u64(), kk * nn),
             m, kk, nn,
             k: (r % 8) as u32,
+            ..Default::default()
         }));
     }
     for id in ids {

@@ -43,11 +43,22 @@ pub enum CellKind {
     Axsa5Ppc,
     /// NAND-product flavor of the AxSA cell (sign row/column positions).
     Axsa5Nppc,
+    /// Truncated PPC (zoo variant): the AND gate is dropped entirely and
+    /// the cell degenerates to a half adder on `(Cin, Sin)`.
+    TruncPpc,
+    /// Truncated NPPC: the NAND output is tied high (Baugh-Wooley
+    /// complement of the dropped product), i.e. a full adder with `x = 1`.
+    TruncNppc,
+    /// Lower-part-OR PPC (zoo variant, Mahdiani et al. LOA): the product
+    /// is OR-folded into the sum rail, `S = p | Sin`, `C = Cin`.
+    LoaPpc,
+    /// NAND-product flavor of the LOA cell: `S = ~(a·b) | Sin`, `C = Cin`.
+    LoaNppc,
 }
 
 impl CellKind {
     /// Every cell variant, in Table II presentation order.
-    pub const ALL: [CellKind; 12] = [
+    pub const ALL: [CellKind; 16] = [
         CellKind::ExactPpc,
         CellKind::ExactNppc,
         CellKind::PropExactPpc,
@@ -60,6 +71,10 @@ impl CellKind {
         CellKind::Nano6Nppc,
         CellKind::Axsa5Ppc,
         CellKind::Axsa5Nppc,
+        CellKind::TruncPpc,
+        CellKind::TruncNppc,
+        CellKind::LoaPpc,
+        CellKind::LoaNppc,
     ];
 
     /// Stable lower-case name (Verilog module names, CLI output).
@@ -77,6 +92,10 @@ impl CellKind {
             CellKind::Nano6Nppc => "nano6_nppc",
             CellKind::Axsa5Ppc => "axsa5_ppc",
             CellKind::Axsa5Nppc => "axsa5_nppc",
+            CellKind::TruncPpc => "trunc_ppc",
+            CellKind::TruncNppc => "trunc_nppc",
+            CellKind::LoaPpc => "loa_ppc",
+            CellKind::LoaNppc => "loa_nppc",
         }
     }
 
@@ -84,7 +103,8 @@ impl CellKind {
     pub fn is_nppc(self) -> bool {
         matches!(self, CellKind::ExactNppc | CellKind::PropExactNppc
                      | CellKind::PropApxNppc | CellKind::Axsa5Nppc
-                     | CellKind::Sips12Nppc | CellKind::Nano6Nppc)
+                     | CellKind::Sips12Nppc | CellKind::Nano6Nppc
+                     | CellKind::TruncNppc | CellKind::LoaNppc)
     }
 }
 
@@ -111,6 +131,10 @@ pub fn eval(kind: CellKind, a: u8, b: u8, cin: u8, sin: u8) -> CS {
         CellKind::Nano6Nppc => (x & cin, sin ^ 1),
         CellKind::Axsa5Ppc => (0, p ^ cin ^ sin),
         CellKind::Axsa5Nppc => (0, x ^ cin ^ sin),
+        CellKind::TruncPpc => (cin & sin, cin ^ sin),
+        CellKind::TruncNppc => (cin | sin, (cin ^ sin) ^ 1),
+        CellKind::LoaPpc => (cin, p | sin),
+        CellKind::LoaNppc => (cin, x | sin),
     }
 }
 

@@ -76,6 +76,7 @@ use crate::pe::lut::{self, ProductLut};
 use crate::pe::word::PeConfig;
 use crate::runtime::{Runtime, TensorI32};
 use crate::systolic::{SaStats, Systolic};
+use crate::zoo::{self, AccuracySlo, RouteError, Tier};
 use crate::Family;
 
 /// Which device each worker instantiates.
@@ -193,7 +194,18 @@ impl CoordinatorConfig {
 }
 
 /// One GEMM request: `C(m x nn) = A(m x kk) @ B(kk x nn)` at level `k`.
-#[derive(Clone, Debug)]
+///
+/// The design point a request runs at resolves in precedence order:
+///
+/// 1. [`Self::slo`] — the accuracy SLO is routed through the zoo
+///    ([`crate::zoo::route`]) and the chosen entry's family *and* `k`
+///    override everything below (a typed [`RouteError`] refuses the
+///    request when no registered point satisfies it);
+/// 2. [`Self::family`] — explicit per-request family override at the
+///    request's own `k`;
+/// 3. the pool default ([`CoordinatorConfig::family`]) at the
+///    request's `k`.
+#[derive(Clone, Debug, Default)]
 pub struct GemmRequest {
     /// Left operand, row-major `m x kk`.
     pub a: Vec<i64>,
@@ -205,8 +217,15 @@ pub struct GemmRequest {
     pub kk: usize,
     /// Output columns.
     pub nn: usize,
-    /// Approximation level for this request (0 = exact).
+    /// Approximation level for this request (0 = exact; ignored when
+    /// [`Self::slo`] routes the design point).
     pub k: u32,
+    /// Per-request multiplier-family override (`None` = pool default;
+    /// ignored when [`Self::slo`] routes the design point).
+    pub family: Option<Family>,
+    /// Accuracy SLO: when present the zoo router picks the cheapest
+    /// registered design point meeting it ([`Coordinator::try_submit`]).
+    pub slo: Option<AccuracySlo>,
 }
 
 /// Completed response.
@@ -275,6 +294,8 @@ struct TileJob {
     /// the coalescer merges exactly those tiles into one stacked GEMM)
     b_panel: Arc<Vec<i64>>,
     kk: usize,
+    /// resolved design point (SLO/override routing already applied)
+    family: Family,
     k: u32,
 }
 
@@ -599,6 +620,17 @@ pub struct ServiceStats {
     pub lut_cache_hits: u64,
     /// Process-wide LUT table builds observed at snapshot time.
     pub lut_builds: u64,
+    /// Requests that carried an accuracy SLO and were routed through
+    /// the zoo ([`crate::zoo::route`]).
+    pub slo_requests: u64,
+    /// SLO-routed requests that resolved to the bit-exact design point.
+    pub slo_exact: u64,
+    /// SLO-routed requests per accuracy tier of the chosen design point
+    /// ([`Tier::ALL`] order: exact, high, mid, low).
+    pub slo_tier: [u64; 4],
+    /// SLO-carrying requests refused with a typed
+    /// [`RouteError::Unsatisfiable`] (never silently served exact).
+    pub slo_unsatisfiable: u64,
     /// Per-app serving counters for `serve_dct` requests.
     pub dct: AppStats,
     /// Per-app serving counters for `serve_edge` requests.
@@ -708,6 +740,12 @@ impl ServiceStats {
         // fold is still monotone
         self.lut_cache_hits = self.lut_cache_hits.max(o.lut_cache_hits);
         self.lut_builds = self.lut_builds.max(o.lut_builds);
+        self.slo_requests += o.slo_requests;
+        self.slo_exact += o.slo_exact;
+        for (t, v) in self.slo_tier.iter_mut().zip(o.slo_tier) {
+            *t += v;
+        }
+        self.slo_unsatisfiable += o.slo_unsatisfiable;
         self.dct.merge(&o.dct);
         self.edge.merge(&o.edge);
         self.bdcn.merge(&o.bdcn);
@@ -754,9 +792,67 @@ impl Coordinator {
                       next_id: AtomicU64::new(1), stats }
     }
 
+    /// Route a request's accuracy SLO against the zoo registry for this
+    /// pool's word shape, recording the outcome in the SLO counters of
+    /// [`ServiceStats`]. Returns the chosen design entry.
+    pub fn route_slo(&self, slo: &AccuracySlo)
+                     -> Result<&'static zoo::DesignEntry, RouteError> {
+        match zoo::route(self.cfg.n_bits, true, slo) {
+            Ok(e) => {
+                let mut s = self.stats.rotate().lock().unwrap();
+                s.slo_requests += 1;
+                s.slo_tier[e.tier().idx()] += 1;
+                if e.tier() == Tier::Exact {
+                    s.slo_exact += 1;
+                }
+                Ok(e)
+            }
+            Err(err) => {
+                if matches!(err, RouteError::Unsatisfiable { .. }) {
+                    let mut s = self.stats.rotate().lock().unwrap();
+                    s.slo_requests += 1;
+                    s.slo_unsatisfiable += 1;
+                }
+                Err(err)
+            }
+        }
+    }
+
+    /// Resolve the design point a request runs at (see [`GemmRequest`]
+    /// for the precedence), routing and counting its SLO when present.
+    fn resolve_point(&self, req: &GemmRequest)
+                     -> Result<(Family, u32), RouteError> {
+        match &req.slo {
+            Some(slo) => {
+                let e = self.route_slo(slo)?;
+                Ok((e.design.family, e.design.k))
+            }
+            None => Ok((req.family.unwrap_or(self.cfg.family), req.k)),
+        }
+    }
+
+    /// Submit a request; blocks only when the tile queue is full
+    /// (backpressure). Returns the request id, or a typed
+    /// [`RouteError`] when the request's SLO is malformed or no
+    /// registered design point satisfies it (the request is refused —
+    /// never silently served at a different accuracy).
+    pub fn try_submit(&self, req: GemmRequest) -> Result<u64, RouteError> {
+        let (family, k) = self.resolve_point(&req)?;
+        Ok(self.submit_at(req, family, k))
+    }
+
     /// Submit a request; blocks only when the tile queue is full
     /// (backpressure). Returns the request id.
+    ///
+    /// # Panics
+    ///
+    /// On an unroutable [`GemmRequest::slo`] — SLO callers who want the
+    /// typed error use [`Self::try_submit`].
     pub fn submit(&self, req: GemmRequest) -> u64 {
+        self.try_submit(req).expect("SLO routing failed")
+    }
+
+    fn submit_at(&self, req: GemmRequest, family: Family, k: u32) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // software backends fan one request out as (tr x tc) row-block
         // tiles (bit-safe: tiling only splits output rows/columns, each
@@ -804,7 +900,7 @@ impl Coordinator {
                         .copy_from_slice(&req.a[(ti + i) * kk..(ti + i + 1) * kk]);
                 }
                 let job = TileJob { req_id: id, ti, tj, th, tw, a_panel,
-                                    b_panel: b_panel.clone(), kk, k: req.k };
+                                    b_panel: b_panel.clone(), kk, family, k };
                 // Blocking send = backpressure: the channel parks this
                 // thread until a worker frees queue capacity (replaces
                 // the old try_send spin loop, which burned a core per
@@ -837,9 +933,20 @@ impl Coordinator {
     }
 
     /// Submit and wait (simple synchronous call).
+    ///
+    /// # Panics
+    ///
+    /// On an unroutable [`GemmRequest::slo`] — see [`Self::try_call`].
     pub fn call(&self, req: GemmRequest) -> GemmResponse {
         let id = self.submit(req);
         self.wait(id)
+    }
+
+    /// Submit and wait, with SLO routing errors surfaced typed instead
+    /// of panicking (the network server's entry point).
+    pub fn try_call(&self, req: GemmRequest) -> Result<GemmResponse, RouteError> {
+        let id = self.try_submit(req)?;
+        Ok(self.wait(id))
     }
 
     /// Cheap snapshot of the aggregate service statistics: one short
@@ -870,8 +977,24 @@ impl Coordinator {
     /// (`img` dimensions must be multiples of 8). `psnr_db` is the
     /// paper's compression quality: reconstruction vs input.
     pub fn serve_dct(&self, img: &Image, k: u32) -> AppResponse {
+        self.serve_dct_at(img, None, k)
+    }
+
+    /// [`Self::serve_dct`] with the design point routed by an accuracy
+    /// SLO: the cheapest registered zoo entry meeting `slo` runs the
+    /// pipeline. Typed refusal when the SLO is malformed or
+    /// unsatisfiable — the image is never silently served at a
+    /// different accuracy.
+    pub fn serve_dct_slo(&self, img: &Image, slo: &AccuracySlo)
+                         -> Result<AppResponse, RouteError> {
+        let e = self.route_slo(slo)?;
+        Ok(self.serve_dct_at(img, Some(e.design.family), e.design.k))
+    }
+
+    fn serve_dct_at(&self, img: &Image, family: Option<Family>, k: u32)
+                    -> AppResponse {
         let t0 = Instant::now();
-        let mut g = CoordinatorGemm::new(self, k);
+        let mut g = CoordinatorGemm::with_family(self, family, k);
         let (recon, _) = dct::pipeline(&mut g, img);
         let quality = psnr(&img.data, &recon.data);
         self.finish_app(AppKind::Dct, recon, quality, t0, &[&g])
@@ -882,9 +1005,24 @@ impl Coordinator {
     /// produced through the same served path and `psnr_db` is
     /// approximate-vs-exact (the paper's §V-B metric).
     pub fn serve_edge(&self, img: &Image, k: u32) -> AppResponse {
+        self.serve_edge_at(img, None, k)
+    }
+
+    /// [`Self::serve_edge`] with the design point routed by an accuracy
+    /// SLO (see [`Self::serve_dct_slo`]).
+    pub fn serve_edge_slo(&self, img: &Image, slo: &AccuracySlo)
+                          -> Result<AppResponse, RouteError> {
+        let e = self.route_slo(slo)?;
+        Ok(self.serve_edge_at(img, Some(e.design.family), e.design.k))
+    }
+
+    fn serve_edge_at(&self, img: &Image, family: Option<Family>, k: u32)
+                     -> AppResponse {
         let t0 = Instant::now();
-        let mut g = CoordinatorGemm::new(self, k);
+        let mut g = CoordinatorGemm::with_family(self, family, k);
         let e = edge::pipeline(&mut g, img);
+        // the exact reference is family-independent (k = 0 drops every
+        // approximate column in every registered family)
         let mut g0 = CoordinatorGemm::new(self, 0);
         let quality = if k == 0 {
             f64::INFINITY
@@ -922,6 +1060,24 @@ impl Coordinator {
             AppKind::Dct => Some(self.serve_dct(img, k)),
             AppKind::Edge => Some(self.serve_edge(img, k)),
             AppKind::Bdcn => None,
+        }
+    }
+
+    /// [`Self::call_app`] with the design point routed by an accuracy
+    /// SLO. `Ok(None)` keeps `call_app`'s meaning (the app needs
+    /// weights); a routing failure is the typed outer error.
+    pub fn call_app_slo(&self, app: AppKind, img: &Image, slo: &AccuracySlo)
+                        -> Result<Option<AppResponse>, RouteError> {
+        match app {
+            AppKind::Dct => self.serve_dct_slo(img, slo).map(Some),
+            AppKind::Edge => self.serve_edge_slo(img, slo).map(Some),
+            AppKind::Bdcn => {
+                // validate + count the SLO even though the app itself
+                // is unservable without weights, so refusal semantics
+                // stay uniform
+                self.route_slo(slo)?;
+                Ok(None)
+            }
         }
     }
 
@@ -1000,32 +1156,33 @@ enum Device {
     Word {
         pc: PeConfig,
         /// Per-worker memo of the process-wide shared energy tables,
-        /// keyed by the request's approximation level k (`None` = not
-        /// tabulable → the request runs unmetered).
-        etables: HashMap<u32, Option<Arc<EnergyLut>>>,
+        /// keyed by the request's routed design point `(family, k)`
+        /// (`None` = not tabulable → the request runs unmetered).
+        etables: HashMap<(Family, u32), Option<Arc<EnergyLut>>>,
         sw: Box<SwDevice>,
     },
     Lut {
         pc: PeConfig,
-        /// Per-worker memo of the process-wide shared tables, keyed by the
-        /// request's approximation level k (`None` = not LUT-compilable,
-        /// word-model fallback). The `Arc`s point into `lut::cached`'s
-        /// global map, so workers share one table per design point.
-        tables: HashMap<u32, Option<Arc<ProductLut>>>,
+        /// Per-worker memo of the process-wide shared tables, keyed by
+        /// the request's routed design point `(family, k)` (`None` = not
+        /// LUT-compilable, word-model fallback). The `Arc`s point into
+        /// `lut::cached`'s global map, so workers share one table per
+        /// design point.
+        tables: HashMap<(Family, u32), Option<Arc<ProductLut>>>,
         /// Energy-table memo, same keying (see `Device::Word`).
-        etables: HashMap<u32, Option<Arc<EnergyLut>>>,
+        etables: HashMap<(Family, u32), Option<Arc<EnergyLut>>>,
         /// MACs served without the bit-plane walk since the last drain.
         lut_macs: u64,
         sw: Box<SwDevice>,
     },
     Systolic {
         pc: PeConfig,
-        /// One metered array per approximation level served so far: the
+        /// One metered array per design point served so far: the
         /// gate-netlist meter ([`Systolic::enable_meter`]) is built once
-        /// per `k`, not per k-switch (mixed-k traffic — e.g. the app
-        /// endpoints' approx + exact-reference runs — alternates every
-        /// request).
-        arrays: HashMap<u32, Box<Systolic>>,
+        /// per `(family, k)`, not per switch (mixed traffic — e.g. the
+        /// app endpoints' approx + exact-reference runs — alternates
+        /// every request).
+        arrays: HashMap<(Family, u32), Box<Systolic>>,
     },
     Pjrt {
         rt: Runtime,
@@ -1159,16 +1316,17 @@ fn worker_loop(cfg: CoordinatorConfig, wid: usize,
 }
 
 /// Group batch indices by shared B panel: tiles of the same request with
-/// the same output-column origin, inner dimension, tile width and `k`
-/// were carved from the same B region, so their panels are identical and
-/// their A panels can be stacked row-wise into one GEMM. Returns groups
-/// in first-seen order; every batch index appears in exactly one group.
+/// the same output-column origin, inner dimension, tile width and design
+/// point were carved from the same B region, so their panels are
+/// identical and their A panels can be stacked row-wise into one GEMM.
+/// Returns groups in first-seen order; every batch index appears in
+/// exactly one group.
 fn coalesce(batch: &[TileJob]) -> Vec<Vec<usize>> {
     let mut groups: Vec<Vec<usize>> = Vec::new();
-    let mut index: HashMap<(u64, usize, usize, usize, u32), usize> =
+    let mut index: HashMap<(u64, usize, usize, usize, Family, u32), usize> =
         HashMap::new();
     for (i, job) in batch.iter().enumerate() {
-        let key = (job.req_id, job.tj, job.kk, job.tw, job.k);
+        let key = (job.req_id, job.tj, job.kk, job.tw, job.family, job.k);
         match index.get(&key) {
             Some(&g) => groups[g].push(i),
             None => {
@@ -1251,9 +1409,11 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
             let mut results: Vec<Option<(Vec<i64>, SaStats)>> =
                 (0..batch.len()).map(|_| None).collect();
             for group in &groups {
+                let first = &batch[group[0]];
                 let mut pc2 = *pc;
-                pc2.k = batch[group[0]].k;
-                let elut = etables.entry(pc2.k)
+                pc2.family = first.family;
+                pc2.k = first.k;
+                let elut = etables.entry((first.family, first.k))
                     .or_insert_with(|| energy::cached(&pc2))
                     .clone();
                 let metered = elut.is_some();
@@ -1272,8 +1432,9 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
             for group in &groups {
                 let first = &batch[group[0]];
                 let mut pc2 = *pc;
+                pc2.family = first.family;
                 pc2.k = first.k;
-                let table = tables.entry(first.k)
+                let table = tables.entry((first.family, first.k))
                     .or_insert_with(|| lut::cached(&pc2))
                     .clone();
                 if table.is_some() {
@@ -1281,7 +1442,7 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
                         group.iter().map(|&i| batch[i].th).sum();
                     *lut_macs += (total_th * first.kk * first.tw) as u64;
                 }
-                let elut = etables.entry(first.k)
+                let elut = etables.entry((first.family, first.k))
                     .or_insert_with(|| energy::cached(&pc2))
                     .clone();
                 let metered = elut.is_some();
@@ -1295,8 +1456,9 @@ fn execute_batch(cfg: &CoordinatorConfig, device: &mut Device,
         }
         Device::Systolic { pc, arrays } => {
             let out = batch.iter().map(|job| {
-                let sa = arrays.entry(job.k).or_insert_with(|| {
+                let sa = arrays.entry((job.family, job.k)).or_insert_with(|| {
                     let mut pc2 = *pc;
+                    pc2.family = job.family;
                     pc2.k = job.k;
                     let mut sa = Systolic::square(pc2, cfg.sa_size);
                     // gate-level ground truth on the slow path
@@ -1473,7 +1635,7 @@ mod tests {
             let a = ints(1, m * kk);
             let b = ints(2, kk * nn);
             let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                            m, kk, nn, k: 0 });
+                                            m, kk, nn, k: 0, ..Default::default() });
             assert_eq!(resp.out, exact(&a, &b, m, kk, nn), "{backend:?}");
             c.shutdown();
         }
@@ -1490,7 +1652,7 @@ mod tests {
                 workers, backend: BackendKind::Word, ..Default::default()
             });
             let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                            m, kk, nn, k: 5 });
+                                            m, kk, nn, k: 5, ..Default::default() });
             results.push(resp.out);
             c.shutdown();
         }
@@ -1510,6 +1672,7 @@ mod tests {
                 a: ints(r * 2 + 1, m * kk),
                 b: ints(r * 2 + 2, kk * nn),
                 m, kk, nn, k: (r % 8) as u32,
+                ..Default::default()
             })));
         }
         for (_, id) in ids {
@@ -1530,6 +1693,7 @@ mod tests {
         let (m, kk, nn) = (16, 8, 16);
         let resp = c.call(GemmRequest {
             a: ints(5, m * kk), b: ints(6, kk * nn), m, kk, nn, k: 0,
+            ..Default::default()
         });
         assert!(resp.sa_stats.total_cycles() > 0);
         assert!(resp.sa_stats.macs > 0);
@@ -1549,9 +1713,9 @@ mod tests {
             let a = ints(7, m * kk);
             let b = ints(8, kk * nn);
             let r0 = c.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                          m, kk, nn, k: 0 });
+                                          m, kk, nn, k: 0, ..Default::default() });
             let r7 = c.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                          m, kk, nn, k: 7 });
+                                          m, kk, nn, k: 7, ..Default::default() });
             assert_eq!(r0.out, exact(&a, &b, m, kk, nn), "{backend:?}");
             assert_ne!(r0.out, r7.out, "{backend:?}: k=7 must differ");
             c.shutdown();
@@ -1615,6 +1779,7 @@ mod tests {
         let (m, kk, nn) = (16, 8, 16);
         let resp = c.call(GemmRequest {
             a: ints(9, m * kk), b: ints(10, kk * nn), m, kk, nn, k: 3,
+            ..Default::default()
         });
         assert!(resp.macs_per_sec() > 0.0);
         let s = c.stats();
@@ -1638,6 +1803,7 @@ mod tests {
                 let resp = c.call(GemmRequest {
                     a: ints(seed, m * kk), b: ints(seed + 1, kk * nn),
                     m, kk, nn, k,
+                    ..Default::default()
                 });
                 assert_eq!(resp.sa_stats.metered_macs, resp.sa_stats.macs,
                            "{backend:?} k={k}: full meter coverage");
@@ -1667,7 +1833,7 @@ mod tests {
             sw_tile: Some((8, 48)), batch_macs: 1, ..Default::default()
         });
         let rf = fan.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                        m, kk, nn, k: 4 });
+                                        m, kk, nn, k: 4, ..Default::default() });
         let sf = fan.stats();
         fan.shutdown();
         assert_eq!(rf.tiles, 8, "64 rows / 8-row tiles");
@@ -1678,7 +1844,7 @@ mod tests {
             workers: 1, backend: BackendKind::Word,
             sw_tile: Some((64, 48)), ..Default::default()
         });
-        let rs = solo.call(GemmRequest { a, b, m, kk, nn, k: 4 });
+        let rs = solo.call(GemmRequest { a, b, m, kk, nn, k: 4, ..Default::default() });
         solo.shutdown();
         assert_eq!(rf.out, rs.out, "fan-out must be bit-identical");
         assert_eq!(rf.sa_stats.metered_macs, rs.sa_stats.metered_macs);
@@ -1700,7 +1866,7 @@ mod tests {
             let a = ints(41, m * kk);
             let b = ints(42, kk * nn);
             let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(),
-                                            m, kk, nn, k: 3 });
+                                            m, kk, nn, k: 3, ..Default::default() });
             let pc = PeConfig::new(16, true, Family::Proposed, 3);
             let want = crate::pe::word::matmul(&pc, &a, &b, m, kk, nn);
             assert_eq!(resp.out, want, "{backend:?}");
@@ -1712,6 +1878,127 @@ mod tests {
             assert_eq!(s.metered_macs, 0);
             c.shutdown();
         }
+    }
+
+    #[test]
+    fn slo_requests_route_to_cheapest_and_count_tiers() {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2, backend: BackendKind::Word, ..Default::default()
+        });
+        let (m, kk, nn) = (12, 8, 10);
+        let a = ints(51, m * kk);
+        let b = ints(52, kk * nn);
+        // exact SLO: bits must equal the exact integer product
+        let slo = AccuracySlo::exact();
+        let r = c.try_call(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn,
+            k: 7, // ignored: the SLO routes the design point
+            slo: Some(slo), ..Default::default()
+        }).unwrap();
+        assert_eq!(r.out, exact(&a, &b, m, kk, nn));
+        // loose SLO: must serve the same bits as the routed entry's
+        // design point run directly
+        let loose = AccuracySlo { max_nmed: Some(5e-3), min_psnr_db: None };
+        let e = zoo::route(8, true, &loose).unwrap();
+        let r2 = c.try_call(GemmRequest {
+            a: a.clone(), b: b.clone(), m, kk, nn,
+            slo: Some(loose), ..Default::default()
+        }).unwrap();
+        let pc = PeConfig::from_design(&e.design);
+        assert_eq!(r2.out, crate::pe::word::matmul(&pc, &a, &b, m, kk, nn),
+                   "SLO-routed bits must match the routed design point");
+        let s = c.stats();
+        assert_eq!(s.slo_requests, 2);
+        assert_eq!(s.slo_exact, 1);
+        assert_eq!(s.slo_tier.iter().sum::<u64>(), 2);
+        assert_eq!(s.slo_tier[Tier::Exact.idx()], 1);
+        assert_eq!(s.slo_tier[e.tier().idx()], 1);
+        assert_eq!(s.slo_unsatisfiable, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unroutable_slos_are_refused_typed_not_served() {
+        // 16-bit pool: the registry covers only 8-bit signed, so any
+        // SLO is a typed Unsatisfiable — and no request must be served
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 1, backend: BackendKind::Word, n_bits: 16,
+            ..Default::default()
+        });
+        let err = c.try_call(GemmRequest {
+            a: vec![1; 4], b: vec![1; 4], m: 2, kk: 2, nn: 2,
+            slo: Some(AccuracySlo::exact()), ..Default::default()
+        }).unwrap_err();
+        assert!(matches!(err, RouteError::Unsatisfiable { n_bits: 16, .. }));
+        // malformed SLO on a routable pool: typed Invalid
+        let c8 = Coordinator::new(CoordinatorConfig {
+            workers: 1, backend: BackendKind::Word, ..Default::default()
+        });
+        let err = c8.try_call(GemmRequest {
+            a: vec![1; 4], b: vec![1; 4], m: 2, kk: 2, nn: 2,
+            slo: Some(AccuracySlo::default()), ..Default::default()
+        }).unwrap_err();
+        assert!(matches!(err, RouteError::Invalid(_)));
+        let s = c.stats();
+        assert_eq!(s.requests, 0, "refused requests never execute");
+        assert_eq!(s.slo_requests, 1);
+        assert_eq!(s.slo_unsatisfiable, 1);
+        // Invalid is the caller's bug, not a routing miss: not counted
+        assert_eq!(c8.stats().slo_requests, 0);
+        c.shutdown();
+        c8.shutdown();
+    }
+
+    #[test]
+    fn family_override_serves_the_zoo_variant_bits() {
+        let (m, kk, nn) = (10, 8, 12);
+        let a = ints(61, m * kk);
+        let b = ints(62, kk * nn);
+        for family in [Family::Trunc, Family::Loa] {
+            let c = Coordinator::new(CoordinatorConfig {
+                workers: 2, backend: BackendKind::Lut, ..Default::default()
+            });
+            let r = c.call(GemmRequest {
+                a: a.clone(), b: b.clone(), m, kk, nn, k: 4,
+                family: Some(family), ..Default::default()
+            });
+            let pc = PeConfig::new(8, true, family, 4);
+            let want = crate::pe::word::matmul(&pc, &a, &b, m, kk, nn);
+            assert_eq!(r.out, want, "{family:?}");
+            // and the override actually changes the arithmetic
+            let rd = c.call(GemmRequest {
+                a: a.clone(), b: b.clone(), m, kk, nn, k: 4,
+                ..Default::default()
+            });
+            assert_ne!(r.out, rd.out,
+                       "{family:?} at k=4 must differ from proposed");
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn slo_routed_apps_count_and_refuse_like_gemm() {
+        use crate::apps::image::scene;
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2, backend: BackendKind::Word, ..Default::default()
+        });
+        let img = scene(16, 16);
+        let loose = AccuracySlo { max_nmed: Some(1e-2), min_psnr_db: None };
+        let r = c.serve_edge_slo(&img, &loose).unwrap();
+        assert_eq!(r.app, AppKind::Edge);
+        let e = zoo::route(8, true, &loose).unwrap();
+        // served bits match the routed design point run directly
+        let mut g = crate::apps::WordGemm {
+            cfg: PeConfig::from_design(&e.design),
+        };
+        let want = edge::pipeline(&mut g, &img);
+        assert_eq!(r.out.data, want.data);
+        let bad = AccuracySlo { max_nmed: Some(-3.0), min_psnr_db: None };
+        assert!(c.serve_dct_slo(&img, &bad).is_err());
+        let s = c.stats();
+        assert_eq!(s.slo_requests, 1);
+        assert_eq!(s.app(AppKind::Edge).requests, 1);
+        c.shutdown();
     }
 
     #[test]

@@ -99,6 +99,8 @@ impl LanePlan {
                 Family::Axsa5 => 1,
                 Family::Sips12 => 2,
                 Family::Nano6 => 3,
+                Family::Trunc => 4,
+                Family::Loa => 5,
             },
             bw: if cfg.signed { cfg.bw_const() } else { 0 },
             opmask: (1u64 << cfg.n) - 1,
@@ -136,7 +138,9 @@ impl LanePlan {
             0 => self.mac64_rows::<0>(a, b_planes, sp, kp),
             1 => self.mac64_rows::<1>(a, b_planes, sp, kp),
             2 => self.mac64_rows::<2>(a, b_planes, sp, kp),
-            _ => self.mac64_rows::<3>(a, b_planes, sp, kp),
+            3 => self.mac64_rows::<3>(a, b_planes, sp, kp),
+            4 => self.mac64_rows::<4>(a, b_planes, sp, kp),
+            _ => self.mac64_rows::<5>(a, b_planes, sp, kp),
         }
     }
 
@@ -186,7 +190,14 @@ impl LanePlan {
                         }
                         1 => (x ^ s ^ k, 0), // AxSA [5]: carry elided
                         2 => (!(x ^ s), k),  // SiPS [12]
-                        _ => (!s, x & k),    // NANOARCH [6]
+                        3 => (!s, x & k),    // NANOARCH [6]
+                        4 => {
+                            // truncated: drop the product — the cell
+                            // input collapses to the nm tie-off (x ^ p)
+                            let t = x ^ p;
+                            (t ^ s ^ k, (t & s) | (t & k) | (s & k))
+                        }
+                        _ => (x | s, k), // LOA: OR-fold, pass the carry
                     }
                 };
                 sp[i] = s2;

@@ -31,6 +31,7 @@
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
 //! | [`coordinator`]| GEMM request router: tiler, batched+coalesced dispatch, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
 //! | [`net`]       | framed TCP serving layer: versioned wire protocol, sharded `poll(2)` event-loop server (readiness-backoff admission gate, resolver pool) fronting the coordinator, blocking client + [`net::client::RemoteGemm`], load generator with a ≥1k-connection scale mode |
+//! | [`zoo`]       | design-point registry (families × k with oracle-pinned energy/error columns) + the [`zoo::AccuracySlo`] router that picks the cheapest point meeting a per-request accuracy SLO |
 //! | [`bench`]     | tiny criterion-free measurement harness + the `bench-report` JSON emitter |
 //!
 //! ## Choosing a GEMM backend
@@ -92,6 +93,7 @@
 //!     a: vec![1; 8 * 8], b: vec![2; 8 * 8],
 //!     m: 8, kk: 8, nn: 8,
 //!     k: 0, // exact request
+//!     ..Default::default() // no family override, no accuracy SLO
 //! });
 //! assert_eq!(resp.out[0], 16); // sum of 8 products of 1*2
 //! let stats = pool.stats();
@@ -158,15 +160,26 @@ pub mod pe;
 pub mod runtime;
 pub mod systolic;
 pub mod tech;
+pub mod zoo;
 
-/// Approximate-cell families evaluated throughout the paper.
+/// Approximate-cell families evaluated throughout the paper, plus the
+/// zoo variants registered by [`zoo`].
 ///
-/// `Proposed` is the paper's contribution (Table I); the other three are
-/// reconstructions of the baselines it compares against (DESIGN.md §2):
+/// `Proposed` is the paper's contribution (Table I); `Axsa5`/`Sips12`/
+/// `Nano6` are reconstructions of the baselines it compares against
+/// (DESIGN.md §2):
 /// * `Axsa5`  — Waris et al., IEEE TC 2021 \[5\]: carry-elided compressor
 ///   (exact 3-input XOR sum, carry output removed).
 /// * `Sips12` — Waris et al., SiPS 2019 \[12\]: XNOR-based inexact cell.
 /// * `Nano6`  — Chen/Lombardi, NANOARCH 2015 \[6\]: inexact cell.
+///
+/// The last two are classic approximate-multiplier techniques from the
+/// wider literature, expressed in the same PPC/NPPC cell grid so the
+/// [`zoo`] registry spans more of the energy/accuracy plane:
+/// * `Trunc` — truncated partial products: the AND gate of every
+///   approximate column is dropped, 3:2 compression stays exact.
+/// * `Loa`   — lower-part OR adder (Mahdiani et al.): approximate
+///   columns OR the product into the sum rail and pass carries through.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum Family {
     /// The paper's proposed approximate PPC/NPPC cells (Table I).
@@ -177,12 +190,18 @@ pub enum Family {
     Sips12,
     /// Inexact cell baseline (Chen/Lombardi, NANOARCH 2015).
     Nano6,
+    /// Truncated-partial-product zoo variant (dropped AND gates).
+    Trunc,
+    /// Lower-part-OR-adder zoo variant (Mahdiani et al. LOA).
+    Loa,
 }
 
 impl Family {
-    /// Every family, in the paper's comparison order.
-    pub const ALL: [Family; 4] =
-        [Family::Proposed, Family::Axsa5, Family::Sips12, Family::Nano6];
+    /// Every family: the paper's four in comparison order, then the zoo
+    /// variants.
+    pub const ALL: [Family; 6] =
+        [Family::Proposed, Family::Axsa5, Family::Sips12, Family::Nano6,
+         Family::Trunc, Family::Loa];
 
     /// Stable lower-case name (CLI + cache keys).
     pub fn name(self) -> &'static str {
@@ -191,6 +210,8 @@ impl Family {
             Family::Axsa5 => "axsa5",
             Family::Sips12 => "sips12",
             Family::Nano6 => "nano6",
+            Family::Trunc => "trunc",
+            Family::Loa => "loa",
         }
     }
 
@@ -199,13 +220,16 @@ impl Family {
         Self::ALL.iter().copied().find(|f| f.name() == s)
     }
 
-    /// Label used in the paper's tables.
+    /// Label used in the paper's tables (zoo variants use their
+    /// literature names — they do not appear in the paper).
     pub fn paper_label(self) -> &'static str {
         match self {
             Family::Proposed => "Proposed",
             Family::Axsa5 => "Design [5]",
             Family::Sips12 => "Design [12]",
             Family::Nano6 => "Design [6]",
+            Family::Trunc => "Truncated",
+            Family::Loa => "LOA",
         }
     }
 }

@@ -31,6 +31,7 @@ fn main() {
         "loadgen" => loadgen(rest),
         "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
+        "zoo-report" => zoo_report(rest),
         "energy-report" => energy_report(rest),
         "bench-report" => bench_report(rest),
         "emit-verilog" => emit_verilog(rest),
@@ -79,21 +80,26 @@ const COMMANDS: &[Cmd] = &[
           help: "BDCN-lite CNN edge detection (coordinator-served)" },
     Cmd { name: "serve",
           args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
-                 [--app gemm|{APPS}] [--k K] [--block-sizes MCxKCxNC] \
-                 [--listen ADDR] [--shards N] [--max-inflight N] \
-                 [--port-file PATH]",
+                 [--app gemm|{APPS}] [--k K] [--slo SPEC] \
+                 [--block-sizes MCxKCxNC] [--listen ADDR] [--shards N] \
+                 [--max-inflight N] [--port-file PATH]",
           help: "run the GEMM coordinator on synthetic/app traffic, or \
-                 serve it over TCP (--listen)" },
+                 serve it over TCP (--listen); --slo routes requests by \
+                 accuracy (nmed=X and/or psnr=Y)" },
     Cmd { name: "loadgen",
           args: "--addr HOST:PORT [--clients N] [--requests R] [--k K] \
-                 [--seed S] [--gemm-only] [--conns N] [--per-conn R] \
-                 [--threads T] [--out PATH]",
+                 [--slo SPEC] [--seed S] [--gemm-only] [--conns N] \
+                 [--per-conn R] [--threads T] [--out PATH]",
           help: "framed-TCP load generator -> BENCH_serve_net.json \
-                 (against serve --listen; --conns: connection-scale mode)" },
+                 (against serve --listen; --conns: connection-scale mode; \
+                 --slo: attach an accuracy SLO to half the mix)" },
     Cmd { name: "apps-report", args: "[--backend {BACKENDS}] [--size S]",
-          help: "paper §V PSNR tables: all four cell families x k, served" },
+          help: "paper §V PSNR tables: all six cell families x k, served" },
     Cmd { name: "lut-report", args: "",
           help: "product-LUT table sizes per design point" },
+    Cmd { name: "zoo-report", args: "[--out PATH]",
+          help: "design-point zoo: oracle-pinned energy/error columns per \
+                 entry + per-tier cheapest table -> ZOO_report.json" },
     Cmd { name: "energy-report", args: "[--size S] [--k K] [--out PATH]",
           help: "array-level energy savings + accuracy-vs-energy scatter \
                  at real workload activity" },
@@ -523,6 +529,69 @@ fn lut_report() -> i32 {
     0
 }
 
+/// Default artifact location for `zoo-report`: repo root, next to the
+/// other report artifacts.
+fn zoo_report_default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("ZOO_report.json")
+}
+
+/// `zoo-report`: the design-point zoo as a table — oracle-derived
+/// energy/error/PSNR columns per registered entry plus the cheapest
+/// entry per accuracy tier (what the SLO router picks) — and as the
+/// `ZOO_report.json` artifact. Every number comes from the cached
+/// registry, so this is also what serving-time routing decisions see.
+fn zoo_report(rest: &[String]) -> i32 {
+    use axsys::zoo::{registry, report_json, route_among, AccuracySlo, Tier,
+                     ZOO_N_BITS};
+    let out = opt(rest, "--out").map(PathBuf::from)
+        .unwrap_or_else(zoo_report_default_path);
+    let reg = registry();
+    let exact_fj = reg.iter()
+        .find(|e| e.design.k == 0)
+        .map(|e| e.mean_mac_fj)
+        .unwrap_or(f64::NAN);
+    println!("== design-point zoo ({} entries, {ZOO_N_BITS}-bit signed) ==",
+             reg.len());
+    println!("  {:<12} {:<5} | {:>8} {:>7} | {:>10} {:>8} {:>6} | {:>8} {:>9}",
+             "entry", "tier", "fJ/MAC", "saving", "nmed", "mred", "max_ed",
+             "psnr_dct", "psnr_edge");
+    for e in reg {
+        let saving = (1.0 - e.mean_mac_fj / exact_fj) * 100.0;
+        println!("  {:<12} {:<5} | {:>8.3} {:>6.1}% | {:>10.3e} {:>8.5} \
+                  {:>6} | {:>8.2} {:>9.2}",
+                 e.label(), e.tier().name(), e.mean_mac_fj, saving, e.nmed,
+                 e.mred, e.max_ed, e.psnr_dct, e.psnr_edge);
+    }
+    println!("== cheapest per tier (what an SLO at the tier bound routes) ==");
+    for t in Tier::ALL {
+        let pool: Vec<_> = reg.iter().filter(|e| e.tier() == t).collect();
+        // cheapest within the tier via the router itself (an SLO loose
+        // enough to admit everything), so the table can never disagree
+        // with serving-time behaviour
+        let slo = AccuracySlo { max_nmed: Some(f64::MAX), min_psnr_db: None };
+        match route_among(pool.iter().copied(), &slo) {
+            Some(c) => {
+                let saving = (1.0 - c.mean_mac_fj / exact_fj) * 100.0;
+                println!("  {:<5} | {:>2} entries | cheapest {:<12} \
+                          {:>8.3} fJ/MAC ({:>5.1}% vs exact)",
+                         t.name(), pool.len(), c.label(), c.mean_mac_fj,
+                         saving);
+            }
+            None => println!("  {:<5} | {:>2} entries", t.name(), pool.len()),
+        }
+    }
+    let doc = report_json();
+    if let Err(e) = std::fs::write(&out, doc.pretty()) {
+        eprintln!("cannot write {}: {e}", out.display());
+        return 1;
+    }
+    println!("  wrote {}", out.display());
+    0
+}
+
 /// Default artifact location for `energy-report`: repo root, next to
 /// `BENCH_hotpath.json`.
 fn energy_report_default_path() -> PathBuf {
@@ -713,6 +782,18 @@ fn serve(rest: &[String]) -> i32 {
             }
         }
     };
+    // accuracy SLO for the synthetic mix: parsed (and refused with exit
+    // code 2) before the pool spins up, routed per request below
+    let slo = match opt(rest, "--slo") {
+        Some(spec) => match axsys::zoo::AccuracySlo::parse(&spec) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("serve: bad --slo '{spec}': {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     println!("serve: backend={backend:?} workers={workers} requests={requests} \
               k={k} app={app}");
     let c = Coordinator::new(CoordinatorConfig {
@@ -738,7 +819,17 @@ fn serve(rest: &[String]) -> i32 {
         let nn = 8 + (rnd() % 57) as usize;
         let a: Vec<i64> = (0..m * kk).map(|_| (rnd() as i64 & 255) - 128).collect();
         let b: Vec<i64> = (0..kk * nn).map(|_| (rnd() as i64 & 255) - 128).collect();
-        ids.push(c.submit(GemmRequest { a, b, m, kk, nn, k }));
+        let req = GemmRequest { a, b, m, kk, nn, k, slo, ..Default::default() };
+        match c.try_submit(req) {
+            Ok(id) => ids.push(id),
+            Err(e) => {
+                // unsatisfiable against this pool: refuse the whole run
+                // (typed, never a silent exact fallback)
+                eprintln!("serve: {e}");
+                c.shutdown();
+                return 2;
+            }
+        }
     }
     for id in ids {
         c.wait(id);
@@ -761,6 +852,11 @@ fn serve(rest: &[String]) -> i32 {
                   data-dependent model)",
                  s.total_energy_uj(), s.mean_mac_fj(), s.metered_macs,
                  s.sim_macs);
+    }
+    if let Some(slo) = &slo {
+        println!("  slo '{slo}': {} routed ({} exact, {} unsatisfiable); \
+                  tiers exact/high/mid/low = {:?}",
+                 s.slo_requests, s.slo_exact, s.slo_unsatisfiable, s.slo_tier);
     }
     c.shutdown();
     0
@@ -868,6 +964,15 @@ fn loadgen(rest: &[String]) -> i32 {
     }
     if rest.iter().any(|a| a == "--gemm-only") {
         cfg.apps = false;
+    }
+    if let Some(spec) = opt(rest, "--slo") {
+        match axsys::zoo::AccuracySlo::parse(&spec) {
+            Ok(s) => cfg.slo = Some(s),
+            Err(e) => {
+                eprintln!("loadgen: bad --slo '{spec}': {e}");
+                return 2;
+            }
+        }
     }
     if cfg.clients == 0 || cfg.requests == 0 || cfg.k_max > 8 {
         eprintln!("loadgen: --clients/--requests >= 1, --k 0..=8");
@@ -1065,10 +1170,11 @@ mod tests {
         // every dispatched command is documented and vice versa
         for name in ["selftest", "hw-report", "error-sweep", "dct", "edge",
                      "cnn", "serve", "loadgen", "apps-report", "lut-report",
-                     "energy-report", "bench-report", "emit-verilog", "help"] {
+                     "zoo-report", "energy-report", "bench-report",
+                     "emit-verilog", "help"] {
             assert!(COMMANDS.iter().any(|c| c.name == name),
                     "{name} missing from COMMANDS");
         }
-        assert_eq!(COMMANDS.len(), 14, "new commands must be dispatched too");
+        assert_eq!(COMMANDS.len(), 15, "new commands must be dispatched too");
     }
 }

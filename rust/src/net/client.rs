@@ -18,6 +18,8 @@ use crate::apps::Gemm;
 use crate::coordinator::AppKind;
 use crate::systolic::SaStats;
 
+use crate::zoo::AccuracySlo;
+
 use super::proto::{self, AppResp, Frame, GemmResp, WireStats};
 use super::NetError;
 
@@ -69,10 +71,21 @@ impl Client {
     /// no owned wire struct, no operand double-copy on the hot path.
     pub fn send_gemm(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize,
                      nn: usize, k: u32) -> Result<(), NetError> {
+        self.send_gemm_slo(a, b, m, kk, nn, k, None)
+    }
+
+    /// [`Self::send_gemm`] with an optional accuracy SLO: when stated,
+    /// the server routes the cheapest registered design point meeting
+    /// it (and `k` is advisory only); an unsatisfiable SLO comes back
+    /// as a typed [`super::proto::ErrCode::SloUnsatisfiable`] reply.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_gemm_slo(&mut self, a: &[i64], b: &[i64], m: usize,
+                         kk: usize, nn: usize, k: u32,
+                         slo: Option<&AccuracySlo>) -> Result<(), NetError> {
         assert_eq!(a.len(), m * kk, "A shape");
         assert_eq!(b.len(), kk * nn, "B shape");
-        proto::encode_gemm_req(k, m as u32, kk as u32, nn as u32, a, b,
-                               &mut self.wbuf)?;
+        proto::encode_gemm_req_slo(k, m as u32, kk as u32, nn as u32, a, b,
+                                   slo, &mut self.wbuf)?;
         self.writer.write_all(&self.wbuf)?;
         Ok(())
     }
@@ -95,14 +108,31 @@ impl Client {
         self.recv_gemm()
     }
 
+    /// Synchronous SLO-routed GEMM call: the server picks the cheapest
+    /// registered design point satisfying `slo`.
+    pub fn gemm_slo(&mut self, a: &[i64], b: &[i64], m: usize, kk: usize,
+                    nn: usize, slo: &AccuracySlo)
+                    -> Result<GemmResp, NetError> {
+        self.send_gemm_slo(a, b, m, kk, nn, 0, Some(slo))?;
+        self.recv_gemm()
+    }
+
     /// Synchronous application call: the image travels inline as a
     /// binary PGM payload and the server runs the full served pipeline.
     pub fn app(&mut self, app: AppKind, img: &Image, k: u32)
                -> Result<AppResp, NetError> {
+        self.app_slo(app, img, k, None)
+    }
+
+    /// [`Self::app`] with an optional accuracy SLO (when stated, the
+    /// server routes the design point and `k` is advisory only).
+    pub fn app_slo(&mut self, app: AppKind, img: &Image, k: u32,
+                   slo: Option<&AccuracySlo>) -> Result<AppResp, NetError> {
         self.send(&Frame::AppReq(proto::AppReq {
             app,
             k,
             pgm: encode_pgm(img),
+            slo: slo.copied(),
         }))?;
         match self.recv()? {
             Frame::AppResp(r) => Ok(r),

@@ -31,6 +31,7 @@ use std::time::Instant;
 use crate::apps::image::{scene, texture};
 use crate::bench::{xorshift_ints, Json, XorShift};
 use crate::coordinator::{percentile_sorted, AppKind};
+use crate::zoo::AccuracySlo;
 
 use super::client::Client;
 use super::{sys, NetError};
@@ -50,6 +51,10 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Include `dct`/`edge` application requests in the mix.
     pub apps: bool,
+    /// Accuracy SLO attached to every other request (`--slo`): half the
+    /// mix is SLO-routed by the server, half runs at the drawn `k`, so
+    /// one run exercises both admission paths.
+    pub slo: Option<AccuracySlo>,
 }
 
 impl LoadgenConfig {
@@ -63,6 +68,7 @@ impl LoadgenConfig {
             k_max: 6,
             seed: 0x5EED,
             apps: true,
+            slo: None,
         }
     }
 }
@@ -107,8 +113,8 @@ struct WorkerOut {
     macs: u64,
 }
 
-fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool)
-          -> Result<WorkerOut, NetError> {
+fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool,
+          slo: Option<AccuracySlo>) -> Result<WorkerOut, NetError> {
     let mut client = Client::connect(addr.as_str())?;
     let mut rng = XorShift::new(seed);
     let mut out = WorkerOut {
@@ -118,6 +124,8 @@ fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool)
     };
     for i in 0..n {
         let k = (rng.next_u64() % (k_max as u64 + 1)) as u32;
+        // with --slo, every other request is SLO-routed by the server
+        let rslo = if i % 2 == 0 { slo.as_ref() } else { None };
         if apps && i % 8 == 7 {
             // every 8th request exercises an app pipeline end-to-end
             // (dct and edge alternate; both image sizes are 8-aligned)
@@ -127,7 +135,7 @@ fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool)
                 (AppKind::Edge, texture(24, 24, seed ^ i as u64))
             };
             let t0 = Instant::now();
-            let r = client.app(app, &img, k)?;
+            let r = client.app_slo(app, &img, k, rslo)?;
             out.app_lat.push(t0.elapsed().as_secs_f64() * 1e6);
             out.macs += r.macs;
         } else {
@@ -137,7 +145,8 @@ fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool)
             let a = xorshift_ints(rng.next_u64(), m * kk);
             let b = xorshift_ints(rng.next_u64(), kk * nn);
             let t0 = Instant::now();
-            let r = client.gemm(&a, &b, m, kk, nn, k)?;
+            client.send_gemm_slo(&a, &b, m, kk, nn, k, rslo)?;
+            let r = client.recv_gemm()?;
             out.gemm_lat.push(t0.elapsed().as_secs_f64() * 1e6);
             out.macs += r.macs;
         }
@@ -178,10 +187,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
         }
         let addr = cfg.addr.clone();
         let seed = cfg.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(ci as u64 + 1);
-        let (k_max, apps) = (cfg.k_max, cfg.apps);
+        let (k_max, apps, slo) = (cfg.k_max, cfg.apps, cfg.slo);
         handles.push(std::thread::Builder::new()
             .name(format!("axsys-loadgen-{ci}"))
-            .spawn(move || worker(addr, n, seed, k_max, apps))
+            .spawn(move || worker(addr, n, seed, k_max, apps, slo))
             .expect("spawn loadgen client"));
     }
     let mut gemm_lat = Vec::new();
@@ -213,6 +222,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
               {} frames in / {} out",
              ws.requests, ws.total_energy_uj(), ws.mean_mac_fj(),
              ws.frames_in, ws.frames_out);
+    if cfg.slo.is_some() {
+        println!("  slo: {} routed ({} exact tier, tiers {:?}), \
+                  {} unsatisfiable",
+                 ws.slo_requests, ws.slo_exact, ws.slo_tier,
+                 ws.slo_unsatisfiable);
+    }
     Ok(Json::obj()
         .set("schema", Json::Str("axsys-serve-net/v1".into()))
         .set("config", Json::obj()
@@ -221,7 +236,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
             .set("requests", Json::Int(cfg.requests as i64))
             .set("k_max", Json::Int(cfg.k_max as i64))
             .set("seed", Json::Int(cfg.seed as i64))
-            .set("apps", Json::Bool(cfg.apps)))
+            .set("apps", Json::Bool(cfg.apps))
+            .set("slo", match &cfg.slo {
+                Some(s) => Json::Str(s.to_string()),
+                None => Json::Null,
+            }))
         .set("wall_s", Json::Num(wall))
         .set("served_requests", Json::Int(served as i64))
         .set("throughput_req_per_sec",
@@ -242,6 +261,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json, NetError> {
                 .set("p90", Json::Num(ws.latency_p90_us))
                 .set("p99", Json::Num(ws.latency_p99_us))
                 .set("mean", Json::Num(ws.mean_latency_us)))
+            .set("slo", Json::obj()
+                .set("requests", Json::Int(ws.slo_requests as i64))
+                .set("exact", Json::Int(ws.slo_exact as i64))
+                .set("unsatisfiable",
+                     Json::Int(ws.slo_unsatisfiable as i64))
+                .set("tiers", Json::Arr(ws.slo_tier.iter()
+                    .map(|&t| Json::Int(t as i64)).collect())))
             .set("net", Json::obj()
                 .set("connections", Json::Int(ws.connections as i64))
                 .set("frames_in", Json::Int(ws.frames_in as i64))

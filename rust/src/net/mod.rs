@@ -15,6 +15,12 @@
 //!   encoded/decoded through reusable buffers, with
 //!   [`proto::try_decode`] for incremental reassembly from partial
 //!   buffers and cap-validated (never silently truncating) encoders.
+//!   GEMM and application requests carry an optional accuracy-SLO
+//!   suffix ([`crate::zoo::AccuracySlo`]) so clients can ask for
+//!   "cheapest design point meeting this error bound" instead of a
+//!   fixed `k`; unsatisfiable SLOs come back as typed
+//!   [`proto::ErrCode::SloUnsatisfiable`] error frames, never as
+//!   silently-degraded results.
 //! * [`server`] — a sharded, readiness-driven TCP server fronting a
 //!   running coordinator: the acceptor round-robins connections across
 //!   N shard event loops, each multiplexing thousands of nonblocking
@@ -24,7 +30,8 @@
 //!   admission gate **backpressures (stops polling a saturated
 //!   connection for read) rather than drops**, shutdown drains
 //!   gracefully, and per-connection + fleet [`server::NetStats`] fold
-//!   per shard — no global lock on any hot path.
+//!   per shard (including SLO-routed request and rejection counts) —
+//!   no global lock on any hot path.
 //! * [`client`] — a blocking client library; [`client::RemoteGemm`]
 //!   implements the [`crate::apps::Gemm`] trait, so every existing
 //!   application pipeline and differential test runs over TCP

@@ -19,6 +19,15 @@
 //! truncating a >4 GiB payload's length prefix), so a frame that
 //! encodes is always a frame that decodes.
 //!
+//! Requests may carry an **accuracy SLO** ([`AccuracySlo`]) as a
+//! trailing suffix on [`GemmReq`]/[`AppReq`] — one flags byte plus one
+//! f64 per stated bound. Pre-SLO frames simply end before the suffix
+//! and decode as `slo: None`, so version 1 stays wire-compatible in
+//! both directions; a *present* suffix is validated strictly (zero or
+//! unknown flags, truncated or out-of-range bounds → typed errors).
+//! Stats frames grow the same way: the SLO routing counters ride a
+//! trailing suffix that decodes as zeros when absent.
+//!
 //! Readiness-driven callers that own raw receive buffers use
 //! [`try_decode`], the partial-buffer form of [`decode`]: `Ok(None)`
 //! means "frame incomplete, read more bytes", without ambiguity against
@@ -32,6 +41,7 @@
 
 use crate::apps::image::{Image, MAX_PGM_DIM};
 use crate::coordinator::AppKind;
+use crate::zoo::AccuracySlo;
 
 /// Magic tag at the start of every frame payload.
 pub const MAGIC: u16 = 0xA551;
@@ -129,13 +139,18 @@ pub enum ErrCode {
     TooLarge,
     /// The server failed internally.
     Internal,
+    /// The request's accuracy SLO cannot be met by any design point the
+    /// server's zoo registers for its operand shape. The request was
+    /// **not** executed — the protocol never silently degrades accuracy.
+    SloUnsatisfiable,
 }
 
 impl ErrCode {
     /// Every code, in wire-value order.
-    pub const ALL: [ErrCode; 5] = [ErrCode::Malformed, ErrCode::BadImage,
+    pub const ALL: [ErrCode; 6] = [ErrCode::Malformed, ErrCode::BadImage,
                                    ErrCode::Unsupported, ErrCode::TooLarge,
-                                   ErrCode::Internal];
+                                   ErrCode::Internal,
+                                   ErrCode::SloUnsatisfiable];
 
     /// Stable wire value.
     pub fn code(self) -> u16 {
@@ -145,6 +160,7 @@ impl ErrCode {
             ErrCode::Unsupported => 3,
             ErrCode::TooLarge => 4,
             ErrCode::Internal => 5,
+            ErrCode::SloUnsatisfiable => 6,
         }
     }
 
@@ -170,6 +186,12 @@ pub struct GemmReq {
     pub a: Vec<i64>,
     /// Right operand, row-major `kk x nn`.
     pub b: Vec<i64>,
+    /// Optional accuracy SLO: travels as a trailing suffix (flags byte
+    /// + one f64 per stated bound) so pre-SLO frames — which simply end
+    /// after `b` — still decode as `None`. When set, the server routes
+    /// the design point (family *and* `k`) and the request's own `k` is
+    /// advisory only.
+    pub slo: Option<AccuracySlo>,
 }
 
 /// One GEMM response (the wire form of
@@ -211,6 +233,9 @@ pub struct AppReq {
     pub k: u32,
     /// Inline binary PGM (P5) image payload.
     pub pgm: Vec<u8>,
+    /// Optional accuracy SLO, same trailing-suffix wire form (and the
+    /// same backward compatibility) as [`GemmReq::slo`].
+    pub slo: Option<AccuracySlo>,
 }
 
 /// One application response (the wire form of
@@ -295,6 +320,17 @@ pub struct WireStats {
     pub net_p90_us: f64,
     /// Server-side request latency p99, µs.
     pub net_p99_us: f64,
+    /// SLO-routed requests admitted (GEMM + app). Travels — with the
+    /// three fields after it — as a trailing suffix, so stats frames
+    /// from pre-SLO servers decode with zeros here.
+    pub slo_requests: u64,
+    /// SLO-routed requests that landed on the exact tier.
+    pub slo_exact: u64,
+    /// Requests refused with [`ErrCode::SloUnsatisfiable`].
+    pub slo_unsatisfiable: u64,
+    /// SLO-routed requests per accuracy tier
+    /// ([`crate::zoo::Tier::ALL`] order: exact, high, mid, low).
+    pub slo_tier: [u64; 4],
 }
 
 impl WireStats {
@@ -371,6 +407,41 @@ fn put_i64s(out: &mut Vec<u8>, s: &[i64]) {
     }
 }
 
+// SLO wire suffix: one flags byte (bit 0 = `max_nmed` present, bit 1 =
+// `min_psnr_db` present), then one f64 per present bound in bit order.
+// Absence of the suffix (payload ends first) means "no SLO" — that is
+// exactly what a pre-SLO encoder emits, so old frames stay decodable.
+const SLO_F_NMED: u8 = 1 << 0;
+const SLO_F_PSNR: u8 = 1 << 1;
+
+fn put_slo(out: &mut Vec<u8>, slo: &AccuracySlo) {
+    let mut flags = 0u8;
+    if slo.max_nmed.is_some() {
+        flags |= SLO_F_NMED;
+    }
+    if slo.min_psnr_db.is_some() {
+        flags |= SLO_F_PSNR;
+    }
+    put_u8(out, flags);
+    if let Some(v) = slo.max_nmed {
+        put_f64(out, v);
+    }
+    if let Some(v) = slo.min_psnr_db {
+        put_f64(out, v);
+    }
+}
+
+/// Encoder-side SLO validation: a frame that encodes must decode, so
+/// the same bound checks the decoder applies run before any byte is
+/// written (empty SLOs travel as `None`, never as a zero flags byte).
+fn check_slo(slo: Option<&AccuracySlo>) -> Result<(), ProtoError> {
+    if let Some(s) = slo {
+        s.validate()
+            .map_err(|_| ProtoError::Malformed("SLO bounds out of range"))?;
+    }
+    Ok(())
+}
+
 fn app_code(app: AppKind) -> u8 {
     AppKind::ALL.iter().position(|&a| a == app).unwrap_or(0) as u8
 }
@@ -394,12 +465,24 @@ fn app_from(code: u8) -> Result<AppKind, ProtoError> {
 pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
                        b: &[i64], out: &mut Vec<u8>)
                        -> Result<(), ProtoError> {
+    encode_gemm_req_slo(k, m, kk, nn, a, b, None, out)
+}
+
+/// [`encode_gemm_req`] with an optional accuracy SLO — the suffix-aware
+/// form every GEMM-request encode routes through. A stated SLO is
+/// validated before any byte is written (same bounds the decoder
+/// enforces); `None` emits a byte-identical pre-SLO frame.
+pub fn encode_gemm_req_slo(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
+                           b: &[i64], slo: Option<&AccuracySlo>,
+                           out: &mut Vec<u8>)
+                           -> Result<(), ProtoError> {
     let ea = checked_elems(m, kk)?;
     let eb = checked_elems(kk, nn)?;
     if a.len() != ea || b.len() != eb {
         return Err(ProtoError::Malformed(
             "operand length does not match the declared dimensions"));
     }
+    check_slo(slo)?;
     out.clear();
     out.extend_from_slice(&[0u8; 4]); // length, patched below
     put_u16(out, MAGIC);
@@ -411,6 +494,9 @@ pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
     put_u32(out, nn);
     put_i64s(out, a);
     put_i64s(out, b);
+    if let Some(s) = slo {
+        put_slo(out, s);
+    }
     let len = (out.len() - 4) as u32;
     out[..4].copy_from_slice(&len.to_le_bytes());
     Ok(())
@@ -428,7 +514,8 @@ pub fn encode_gemm_req(k: u32, m: u32, kk: u32, nn: u32, a: &[i64],
 /// bug where a >4 GiB payload silently truncated its length prefix.
 pub fn encode(frame: &Frame, out: &mut Vec<u8>) -> Result<(), ProtoError> {
     if let Frame::GemmReq(r) = frame {
-        return encode_gemm_req(r.k, r.m, r.kk, r.nn, &r.a, &r.b, out);
+        return encode_gemm_req_slo(r.k, r.m, r.kk, r.nn, &r.a, &r.b,
+                                   r.slo.as_ref(), out);
     }
     // validate first, then write: a cap-breaking frame never clobbers
     // the caller's scratch buffer
@@ -447,6 +534,7 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) -> Result<(), ProtoError> {
                     max: MAX_PGM_LEN,
                 });
             }
+            check_slo(r.slo.as_ref())?;
         }
         Frame::AppResp(r) => {
             if r.h as usize > MAX_PGM_DIM || r.w as usize > MAX_PGM_DIM {
@@ -493,6 +581,9 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) -> Result<(), ProtoError> {
             put_u32(out, r.k);
             put_u32(out, r.pgm.len() as u32);
             out.extend_from_slice(&r.pgm);
+            if let Some(s) = &r.slo {
+                put_slo(out, s);
+            }
         }
         Frame::AppResp(r) => {
             put_u8(out, K_APP_RESP);
@@ -526,6 +617,16 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) -> Result<(), ProtoError> {
             put_f64(out, s.net_p50_us);
             put_f64(out, s.net_p90_us);
             put_f64(out, s.net_p99_us);
+            // SLO counter suffix (pre-SLO decoders never see it: they
+            // stop at net_p99_us and reject the trailing bytes, which
+            // is version-correct — a stats *reader* must understand
+            // what the server measured)
+            put_u64(out, s.slo_requests);
+            put_u64(out, s.slo_exact);
+            put_u64(out, s.slo_unsatisfiable);
+            for t in s.slo_tier {
+                put_u64(out, t);
+            }
         }
         Frame::Error(e) => {
             put_u8(out, K_ERROR);
@@ -593,6 +694,29 @@ impl<'a> Rd<'a> {
     }
 }
 
+/// Decode the optional SLO suffix at the current read position. A
+/// payload that simply ends here is a pre-SLO frame (`None`); a present
+/// suffix must be well-formed — a zero or unknown flags byte, a
+/// truncated bound, or bound values the router would reject (non-finite
+/// or out of range) are all typed errors, never a silently dropped SLO.
+fn rd_slo(rd: &mut Rd) -> Result<Option<AccuracySlo>, ProtoError> {
+    if rd.remaining() == 0 {
+        return Ok(None);
+    }
+    let flags = rd.u8()?;
+    if flags == 0 || flags & !(SLO_F_NMED | SLO_F_PSNR) != 0 {
+        return Err(ProtoError::Malformed("invalid SLO flags byte"));
+    }
+    let max_nmed =
+        if flags & SLO_F_NMED != 0 { Some(rd.f64()?) } else { None };
+    let min_psnr_db =
+        if flags & SLO_F_PSNR != 0 { Some(rd.f64()?) } else { None };
+    let slo = AccuracySlo { max_nmed, min_psnr_db };
+    slo.validate()
+        .map_err(|_| ProtoError::Malformed("SLO bounds out of range"))?;
+    Ok(Some(slo))
+}
+
 fn checked_elems(x: u32, y: u32) -> Result<usize, ProtoError> {
     let n = (x as u64) * (y as u64);
     if n > MAX_GEMM_ELEMS as u64 {
@@ -624,8 +748,9 @@ fn decode_payload(buf: &[u8]) -> Result<Frame, ProtoError> {
             let nn = rd.u32()?;
             let ea = checked_elems(m, kk)?;
             let eb = checked_elems(kk, nn)?;
-            Frame::GemmReq(GemmReq { k, m, kk, nn, a: rd.i64s(ea)?,
-                                     b: rd.i64s(eb)? })
+            let (a, b) = (rd.i64s(ea)?, rd.i64s(eb)?);
+            Frame::GemmReq(GemmReq { k, m, kk, nn, a, b,
+                                     slo: rd_slo(&mut rd)? })
         }
         K_GEMM_RESP => {
             let m = rd.u32()?;
@@ -647,7 +772,8 @@ fn decode_payload(buf: &[u8]) -> Result<Frame, ProtoError> {
             if len > MAX_PGM_LEN {
                 return Err(ProtoError::Oversized { len, max: MAX_PGM_LEN });
             }
-            Frame::AppReq(AppReq { app, k, pgm: rd.take(len)?.to_vec() })
+            let pgm = rd.take(len)?.to_vec();
+            Frame::AppReq(AppReq { app, k, pgm, slo: rd_slo(&mut rd)? })
         }
         K_APP_RESP => {
             let app = app_from(rd.u8()?)?;
@@ -670,25 +796,38 @@ fn decode_payload(buf: &[u8]) -> Result<Frame, ProtoError> {
                                      pixels: rd.take(px)?.to_vec() })
         }
         K_STATS_REQ => Frame::StatsReq,
-        K_STATS_RESP => Frame::StatsResp(WireStats {
-            requests: rd.u64()?,
-            tiles: rd.u64()?,
-            macs: rd.u64()?,
-            energy_fj: rd.f64()?,
-            metered_macs: rd.u64()?,
-            latency_p50_us: rd.f64()?,
-            latency_p90_us: rd.f64()?,
-            latency_p99_us: rd.f64()?,
-            mean_latency_us: rd.f64()?,
-            connections: rd.u64()?,
-            frames_in: rd.u64()?,
-            frames_out: rd.u64()?,
-            bytes_in: rd.u64()?,
-            bytes_out: rd.u64()?,
-            net_p50_us: rd.f64()?,
-            net_p90_us: rd.f64()?,
-            net_p99_us: rd.f64()?,
-        }),
+        K_STATS_RESP => {
+            let mut s = WireStats {
+                requests: rd.u64()?,
+                tiles: rd.u64()?,
+                macs: rd.u64()?,
+                energy_fj: rd.f64()?,
+                metered_macs: rd.u64()?,
+                latency_p50_us: rd.f64()?,
+                latency_p90_us: rd.f64()?,
+                latency_p99_us: rd.f64()?,
+                mean_latency_us: rd.f64()?,
+                connections: rd.u64()?,
+                frames_in: rd.u64()?,
+                frames_out: rd.u64()?,
+                bytes_in: rd.u64()?,
+                bytes_out: rd.u64()?,
+                net_p50_us: rd.f64()?,
+                net_p90_us: rd.f64()?,
+                net_p99_us: rd.f64()?,
+                ..Default::default()
+            };
+            // SLO counter suffix: absent on pre-SLO servers → zeros
+            if rd.remaining() != 0 {
+                s.slo_requests = rd.u64()?;
+                s.slo_exact = rd.u64()?;
+                s.slo_unsatisfiable = rd.u64()?;
+                for t in s.slo_tier.iter_mut() {
+                    *t = rd.u64()?;
+                }
+            }
+            Frame::StatsResp(s)
+        }
         K_ERROR => {
             let raw = rd.u16()?;
             let code = match ErrCode::from_code(raw) {
@@ -815,6 +954,25 @@ mod tests {
         (x.next_u64() % 1_000_000) as f64 / 7.0
     }
 
+    fn rand_slo(x: &mut XorShift) -> Option<AccuracySlo> {
+        // half None (the pre-SLO wire form), half every flags combo
+        match x.next_u64() % 6 {
+            0 => Some(AccuracySlo {
+                max_nmed: Some((x.next_u64() % 1000) as f64 * 1e-5),
+                min_psnr_db: None,
+            }),
+            1 => Some(AccuracySlo {
+                max_nmed: None,
+                min_psnr_db: Some(1.0 + (x.next_u64() % 60) as f64),
+            }),
+            2 => Some(AccuracySlo {
+                max_nmed: Some((x.next_u64() % 1000) as f64 * 1e-5),
+                min_psnr_db: Some(1.0 + (x.next_u64() % 60) as f64),
+            }),
+            _ => None,
+        }
+    }
+
     fn rand_frame(x: &mut XorShift) -> Frame {
         match x.next_u64() % 7 {
             0 => {
@@ -831,6 +989,7 @@ mod tests {
                         .collect(),
                     b: (0..(kk * nn) as usize).map(|_| x.next_u64() as i64)
                         .collect(),
+                    slo: rand_slo(x),
                 })
             }
             1 => {
@@ -854,6 +1013,7 @@ mod tests {
                 pgm: (0..(x.next_u64() % 300) as usize)
                     .map(|_| x.next_u64() as u8)
                     .collect(),
+                slo: rand_slo(x),
             }),
             3 => {
                 let h = (x.next_u64() % 10) as u32;
@@ -894,11 +1054,16 @@ mod tests {
                 net_p50_us: rand_f(x),
                 net_p90_us: rand_f(x),
                 net_p99_us: rand_f(x),
+                slo_requests: x.next_u64() % 10_000,
+                slo_exact: x.next_u64() % 10_000,
+                slo_unsatisfiable: x.next_u64() % 100,
+                slo_tier: [x.next_u64() % 100, x.next_u64() % 100,
+                           x.next_u64() % 100, x.next_u64() % 100],
             }),
             _ => {
                 let n = (x.next_u64() % 40) as usize;
                 Frame::Error(WireError {
-                    code: ErrCode::ALL[(x.next_u64() % 5) as usize],
+                    code: ErrCode::ALL[(x.next_u64() % 6) as usize],
                     msg: (0..n)
                         .map(|_| char::from(b'a' + (x.next_u64() % 26) as u8))
                         .collect(),
@@ -983,14 +1148,14 @@ mod tests {
         assert!(matches!(decode(&buf), Err(ProtoError::Malformed(_))));
         // oversized matrix dims reject before allocating
         encode(&Frame::GemmReq(GemmReq {
-            k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![],
+            k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![], slo: None,
         }), &mut buf).unwrap();
         buf[12..16].copy_from_slice(&(1u32 << 16).to_le_bytes()); // m
         buf[16..20].copy_from_slice(&(1u32 << 16).to_le_bytes()); // kk
         assert!(matches!(decode(&buf), Err(ProtoError::Oversized { .. })));
         // oversized inline image length rejects before allocating
         encode(&Frame::AppReq(AppReq {
-            app: AppKind::Dct, k: 0, pgm: vec![],
+            app: AppKind::Dct, k: 0, pgm: vec![], slo: None,
         }), &mut buf).unwrap();
         // payload layout: magic(2) ver(1) kind(1) app(1) k(4) len(4)
         buf[13..17].copy_from_slice(&((MAX_PGM_LEN as u32) + 1).to_le_bytes());
@@ -1009,13 +1174,21 @@ mod tests {
                 (0..(m * kk) as usize).map(|_| x.next_u64() as i64).collect();
             let b: Vec<i64> =
                 (0..(kk * nn) as usize).map(|_| x.next_u64() as i64).collect();
+            let slo = rand_slo(&mut x);
             let mut owned = Vec::new();
             encode(&Frame::GemmReq(GemmReq {
-                k, m, kk, nn, a: a.clone(), b: b.clone(),
+                k, m, kk, nn, a: a.clone(), b: b.clone(), slo,
             }), &mut owned).unwrap();
             let mut borrowed = Vec::new();
-            encode_gemm_req(k, m, kk, nn, &a, &b, &mut borrowed).unwrap();
+            encode_gemm_req_slo(k, m, kk, nn, &a, &b, slo.as_ref(),
+                                &mut borrowed).unwrap();
             assert_eq!(owned, borrowed);
+            if slo.is_none() {
+                // the SLO-less borrowed form is byte-identical too
+                let mut legacy = Vec::new();
+                encode_gemm_req(k, m, kk, nn, &a, &b, &mut legacy).unwrap();
+                assert_eq!(owned, legacy);
+            }
         }
     }
 
@@ -1036,12 +1209,14 @@ mod tests {
         // operand length inconsistent with the declared dims
         let r = encode(&Frame::GemmReq(GemmReq {
             k: 0, m: 2, kk: 2, nn: 2, a: vec![1; 3], b: vec![1; 4],
+            slo: None,
         }), &mut buf);
         assert!(matches!(r, Err(ProtoError::Malformed(_))));
         assert_eq!(buf, sentinel, "failed encode must not touch the buffer");
         // dims whose product exceeds the wire element cap
         let r = encode(&Frame::GemmReq(GemmReq {
             k: 0, m: 1 << 16, kk: 1 << 16, nn: 1, a: vec![], b: vec![],
+            slo: None,
         }), &mut buf);
         assert!(matches!(r, Err(ProtoError::Oversized { .. })));
         let r = encode(&Frame::GemmResp(GemmResp {
@@ -1052,6 +1227,7 @@ mod tests {
         // inline PGM payload over the wire cap
         let r = encode(&Frame::AppReq(AppReq {
             app: AppKind::Dct, k: 0, pgm: vec![0; MAX_PGM_LEN + 1],
+            slo: None,
         }), &mut buf);
         assert!(matches!(r, Err(ProtoError::Oversized { .. })));
         // response image dims over the PGM cap / inconsistent pixels
@@ -1076,6 +1252,117 @@ mod tests {
         });
         encode(&ok, &mut buf).unwrap();
         assert_eq!(decode(&buf).unwrap().0, ok);
+    }
+
+    fn patch_len(buf: &mut [u8]) {
+        let len = (buf.len() - 4) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    #[test]
+    fn slo_suffix_round_trips_and_pre_slo_frames_still_decode() {
+        let base = GemmReq {
+            k: 3, m: 2, kk: 2, nn: 2,
+            a: vec![1, 2, 3, 4], b: vec![5, 6, 7, 8], slo: None,
+        };
+        let mut buf = Vec::new();
+        // every flags combination round-trips bit-exactly (inf psnr
+        // bound is invalid, so bounds here are finite)
+        for slo in [
+            AccuracySlo { max_nmed: Some(2.5e-4), min_psnr_db: None },
+            AccuracySlo { max_nmed: None, min_psnr_db: Some(30.0) },
+            AccuracySlo { max_nmed: Some(1e-3), min_psnr_db: Some(25.5) },
+        ] {
+            let f = Frame::GemmReq(GemmReq { slo: Some(slo), ..base.clone() });
+            encode(&f, &mut buf).unwrap();
+            assert_eq!(decode(&buf).unwrap().0, f);
+            let g = Frame::AppReq(AppReq {
+                app: AppKind::Edge, k: 2, pgm: b"P5 1 1 255 x".to_vec(),
+                slo: Some(slo),
+            });
+            encode(&g, &mut buf).unwrap();
+            assert_eq!(decode(&buf).unwrap().0, g);
+        }
+        // a frame encoded without an SLO is byte-for-byte the pre-SLO
+        // wire form — its payload ends right after the `b` operand —
+        // and decodes to `slo: None` (old clients keep working)
+        encode(&Frame::GemmReq(base.clone()), &mut buf).unwrap();
+        assert_eq!(buf.len(), 4 + 2 + 1 + 1 + 16 + 32 + 32);
+        match decode(&buf).unwrap().0 {
+            Frame::GemmReq(r) => assert_eq!(r.slo, None),
+            other => panic!("wrong frame kind: {other:?}"),
+        }
+        // a stats frame from a pre-SLO server (no counter suffix)
+        // decodes with the SLO counters zeroed
+        let stats = WireStats {
+            requests: 7, slo_requests: 3, slo_exact: 1,
+            slo_unsatisfiable: 2, slo_tier: [1, 1, 1, 0],
+            ..Default::default()
+        };
+        encode(&Frame::StatsResp(stats.clone()), &mut buf).unwrap();
+        assert_eq!(decode(&buf).unwrap().0, Frame::StatsResp(stats));
+        buf.truncate(buf.len() - 7 * 8); // strip the SLO suffix
+        patch_len(&mut buf);
+        match decode(&buf).unwrap().0 {
+            Frame::StatsResp(s) => {
+                assert_eq!(s.requests, 7);
+                assert_eq!(s.slo_requests, 0);
+                assert_eq!(s.slo_tier, [0; 4]);
+            }
+            other => panic!("wrong frame kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_slo_suffixes_are_rejected_typed() {
+        let base = GemmReq {
+            k: 0, m: 1, kk: 1, nn: 1, a: vec![9], b: vec![9], slo: None,
+        };
+        let mut clean = Vec::new();
+        encode(&Frame::GemmReq(base.clone()), &mut clean).unwrap();
+        let with_suffix = |suffix: &[u8]| {
+            let mut b = clean.clone();
+            b.extend_from_slice(suffix);
+            patch_len(&mut b);
+            b
+        };
+        // a zero flags byte states no bound: not a legal suffix
+        assert!(matches!(decode(&with_suffix(&[0])),
+                         Err(ProtoError::Malformed(_))));
+        // unknown flag bits are from the future: refuse, don't guess
+        assert!(matches!(decode(&with_suffix(&[0b100])),
+                         Err(ProtoError::Malformed(_))));
+        // flags promise a bound the payload doesn't carry
+        assert!(matches!(decode(&with_suffix(&[SLO_F_NMED, 1, 2, 3])),
+                         Err(ProtoError::Truncated { .. })));
+        // non-finite and out-of-range bounds are refused at the wire
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            let mut s = vec![SLO_F_NMED];
+            s.extend_from_slice(&bad.to_bits().to_le_bytes());
+            assert!(matches!(decode(&with_suffix(&s)),
+                             Err(ProtoError::Malformed(_))),
+                    "max_nmed = {bad} must be rejected");
+        }
+        // bytes *after* a well-formed suffix are trailing garbage
+        let mut s = vec![SLO_F_NMED];
+        s.extend_from_slice(&1e-3f64.to_bits().to_le_bytes());
+        s.push(0xAB);
+        assert!(matches!(decode(&with_suffix(&s)),
+                         Err(ProtoError::Malformed(_))));
+        // and the encoder refuses the same bounds the decoder would
+        for bad in [
+            AccuracySlo { max_nmed: None, min_psnr_db: None },
+            AccuracySlo { max_nmed: Some(f64::NAN), min_psnr_db: None },
+            AccuracySlo { max_nmed: None, min_psnr_db: Some(-2.0) },
+        ] {
+            let sentinel = vec![0x5A; 6];
+            let mut buf = sentinel.clone();
+            let r = encode(&Frame::GemmReq(GemmReq {
+                slo: Some(bad), ..base.clone()
+            }), &mut buf);
+            assert!(matches!(r, Err(ProtoError::Malformed(_))));
+            assert_eq!(buf, sentinel, "failed encode must not write");
+        }
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::apps::image::decode_pgm;
 use crate::apps::image::Image;
 use crate::coordinator::{AppKind, Coordinator, GemmRequest, LatencyRing,
                          ServiceStats};
+use crate::zoo::{AccuracySlo, RouteError};
 
 use super::proto::{self, AppResp, ErrCode, Frame, GemmResp, ProtoError,
                    WireError, WireStats};
@@ -87,6 +88,12 @@ pub struct NetStats {
     pub app_requests: u64,
     /// Stats request frames seen.
     pub stats_requests: u64,
+    /// Request frames that carried an accuracy SLO (valid or not).
+    pub slo_requests: u64,
+    /// [`ErrCode::SloUnsatisfiable`] replies sent (the SLO named an
+    /// accuracy no registered design point provides — the request was
+    /// refused, never silently served exact).
+    pub slo_rejections: u64,
     /// Typed error frames sent.
     pub error_replies: u64,
     latency: LatencyRing,
@@ -115,6 +122,8 @@ impl NetStats {
         self.gemm_requests += other.gemm_requests;
         self.app_requests += other.app_requests;
         self.stats_requests += other.stats_requests;
+        self.slo_requests += other.slo_requests;
+        self.slo_rejections += other.slo_rejections;
         self.error_replies += other.error_replies;
         self.latency.merge(&other.latency);
     }
@@ -212,7 +221,7 @@ impl Shard {
 /// A unit of work handed to the resolver pool.
 enum Work {
     Gemm(GemmRequest),
-    App { app: AppKind, k: u32, img: Image },
+    App { app: AppKind, k: u32, img: Image, slo: Option<AccuracySlo> },
     Stats,
 }
 
@@ -745,11 +754,21 @@ fn admit(state: &Arc<State>, si: usize, id: u64, c: &mut Conn,
     c.next_seq += 1;
     let admitted = match frame {
         Frame::GemmReq(req) => {
-            lk(&c.stats).gemm_requests += 1;
+            let mut s = lk(&c.stats);
+            s.gemm_requests += 1;
+            if req.slo.is_some() {
+                s.slo_requests += 1;
+            }
+            drop(s);
             admit_gemm(req)
         }
         Frame::AppReq(req) => {
-            lk(&c.stats).app_requests += 1;
+            let mut s = lk(&c.stats);
+            s.app_requests += 1;
+            if req.slo.is_some() {
+                s.slo_requests += 1;
+            }
+            drop(s);
             admit_app(state, req)
         }
         Frame::StatsReq => {
@@ -808,8 +827,11 @@ fn encode_ready(c: &mut Conn, scratch: &mut Vec<u8>) -> bool {
         s.frames_out += 1;
         s.bytes_out += scratch.len() as u64;
         s.record_latency(us);
-        if matches!(frame, Frame::Error(_)) {
+        if let Frame::Error(e) = &frame {
             s.error_replies += 1;
+            if e.code == ErrCode::SloUnsatisfiable {
+                s.slo_rejections += 1;
+            }
         }
         any = true;
     }
@@ -897,7 +919,21 @@ fn admit_gemm(req: proto::GemmReq) -> Result<Work, WireError> {
             msg: "result matrix m*nn exceeds the wire element cap".into(),
         });
     }
-    Ok(Work::Gemm(GemmRequest { a: req.a, b: req.b, m, kk, nn, k: req.k }))
+    Ok(Work::Gemm(GemmRequest { a: req.a, b: req.b, m, kk, nn, k: req.k,
+                                slo: req.slo, ..Default::default() }))
+}
+
+/// Map a routing failure to its wire reply: an unsatisfiable SLO is its
+/// own machine-readable code (the client can renegotiate), a malformed
+/// one is the client's framing bug.
+fn route_error_frame(e: &RouteError) -> Frame {
+    Frame::Error(WireError {
+        code: match e {
+            RouteError::Unsatisfiable { .. } => ErrCode::SloUnsatisfiable,
+            RouteError::Invalid(_) => ErrCode::Malformed,
+        },
+        msg: e.to_string(),
+    })
 }
 
 fn admit_app(state: &Arc<State>, req: proto::AppReq)
@@ -930,7 +966,14 @@ fn admit_app(state: &Arc<State>, req: proto::AppReq)
             code: ErrCode::Unsupported,
             msg: "bdcn weights are not loaded on this server".into(),
         }),
-        app => Ok(Work::App { app, k: req.k, img }),
+        // the zoo's accuracy columns cover the weight-free pipelines;
+        // bdcn has no registered profile, so an SLO on it would have to
+        // be guessed — refuse instead of silently approximating
+        AppKind::Bdcn if req.slo.is_some() => Err(WireError {
+            code: ErrCode::Unsupported,
+            msg: "bdcn does not support SLO routing".into(),
+        }),
+        app => Ok(Work::App { app, k: req.k, img, slo: req.slo }),
     }
 }
 
@@ -953,6 +996,10 @@ fn wire_stats(s: &ServiceStats, n: &NetStats) -> WireStats {
         net_p50_us: n.latency_percentile(0.50),
         net_p90_us: n.latency_percentile(0.90),
         net_p99_us: n.latency_percentile(0.99),
+        slo_requests: s.slo_requests,
+        slo_exact: s.slo_exact,
+        slo_unsatisfiable: s.slo_unsatisfiable,
+        slo_tier: s.slo_tier,
     }
 }
 
@@ -993,7 +1040,13 @@ fn resolver_loop(state: Arc<State>, rx: Arc<Mutex<Receiver<Job>>>) {
 fn resolve_work(state: &State, work: Work) -> Frame {
     match work {
         Work::Gemm(req) => {
-            let id = state.coord.submit(req);
+            // SLO routing happens pool-side; an unroutable request is a
+            // typed refusal, never a silently-exact (or silently
+            // degraded) execution
+            let id = match state.coord.try_submit(req) {
+                Ok(id) => id,
+                Err(e) => return route_error_frame(&e),
+            };
             let resp = state.coord.wait(id);
             Frame::GemmResp(GemmResp {
                 m: resp.m as u32,
@@ -1006,15 +1059,21 @@ fn resolve_work(state: &State, work: Work) -> Frame {
                 out: resp.out,
             })
         }
-        Work::App { app, k, img } => {
+        Work::App { app, k, img, slo } => {
             let r = match app {
                 AppKind::Bdcn => {
                     let blocks =
                         state.cfg.bdcn.clone().expect("checked at admission");
                     state.coord.serve_bdcn(&blocks, &img, k)
                 }
-                _ => state.coord.call_app(app, &img, k)
-                    .expect("weight-free app"),
+                _ => match slo {
+                    Some(s) => match state.coord.call_app_slo(app, &img, &s) {
+                        Ok(r) => r.expect("weight-free app"),
+                        Err(e) => return route_error_frame(&e),
+                    },
+                    None => state.coord.call_app(app, &img, k)
+                        .expect("weight-free app"),
+                },
             };
             Frame::AppResp(AppResp {
                 app,

@@ -103,6 +103,27 @@ pub fn build_cell(nl: &mut Netlist, kind: CellKind, a: NetId, b: NetId,
             let z = nl.const0();
             (z, s)
         }
+        // truncated: the product gate is removed entirely. PPC positions
+        // degenerate to a half adder on (cin, sin); NPPC positions see
+        // the dropped product's Baugh-Wooley complement tied high, i.e.
+        // a full adder with x = 1: C = OR, S = XNOR.
+        CellKind::TruncPpc => nl.half_adder(cin, sin),
+        CellKind::TruncNppc => {
+            let c = nl.or2(cin, sin);
+            let s = nl.xnor2(cin, sin);
+            (c, s)
+        }
+        // LOA: S = product | sin, C = cin (wire — no carry logic at all)
+        CellKind::LoaPpc => {
+            let p = nl.and2(a, b);
+            let s = nl.or2(p, sin);
+            (cin, s)
+        }
+        CellKind::LoaNppc => {
+            let x = nl.nand2(a, b);
+            let s = nl.or2(x, sin);
+            (cin, s)
+        }
     }
 }
 
@@ -183,6 +204,8 @@ fn approx_kinds(family: Family) -> (CellKind, CellKind) {
         Family::Sips12 => (CellKind::Sips12Ppc, CellKind::Sips12Nppc),
         Family::Nano6 => (CellKind::Nano6Ppc, CellKind::Nano6Nppc),
         Family::Axsa5 => (CellKind::Axsa5Ppc, CellKind::Axsa5Nppc),
+        Family::Trunc => (CellKind::TruncPpc, CellKind::TruncNppc),
+        Family::Loa => (CellKind::LoaPpc, CellKind::LoaNppc),
     }
 }
 

@@ -200,6 +200,11 @@ pub fn mac_step(cfg: &PeConfig, a: u64, b: u64, s0: u64, k0: u64) -> (u64, u64) 
             Family::Nano6 => ((!s) & aa, (x & kc) & aa, 0),
             // AxSA [5]: carry-elided compressor — exact sum, no carry out
             Family::Axsa5 => ((x ^ s ^ kc) & aa, 0, 0),
+            // Truncated: product dropped, exact 3:2 on the nm tie-off
+            Family::Trunc => ((nm ^ s ^ kc) & aa,
+                              ((nm & s) | (nm & kc) | (s & kc)) & aa, 0),
+            // LOA: OR-fold the product into the sum, pass the carry
+            Family::Loa => ((x | s) & aa, kc & aa, 0),
         };
         let s_e = (x ^ s ^ kc) & ee;
         let c_e = ((x & s) | (x & kc) | (s & kc)) & ee;
@@ -287,6 +292,8 @@ pub fn mac_step_planned(plan: &MacPlan, a: u64, b: u64, s0: u64, k0: u64)
         Family::Axsa5 => mac_rows::<1>(plan, a, b, s0, k0),
         Family::Sips12 => mac_rows::<2>(plan, a, b, s0, k0),
         Family::Nano6 => mac_rows::<3>(plan, a, b, s0, k0),
+        Family::Trunc => mac_rows::<4>(plan, a, b, s0, k0),
+        Family::Loa => mac_rows::<5>(plan, a, b, s0, k0),
     }
 }
 
@@ -308,7 +315,10 @@ fn mac_rows<const FAM: u8>(plan: &MacPlan, a: u64, b: u64, s0: u64, k0: u64)
                   (x & rm.ap) | ((osk & x) & rm.an)),
             1 => ((x ^ s ^ kc) & rm.aa, 0),
             2 => ((!(x ^ s)) & rm.aa, kc & rm.aa),
-            _ => ((!s) & rm.aa, (x & kc) & rm.aa),
+            3 => ((!s) & rm.aa, (x & kc) & rm.aa),
+            4 => ((rm.nm ^ s ^ kc) & rm.aa,
+                  ((rm.nm & s) | (rm.nm & kc) | (s & kc)) & rm.aa),
+            _ => ((x | s) & rm.aa, kc & rm.aa),
         };
         let s_e = (x ^ s ^ kc) & rm.ee;
         let c_e = ((x & s) | (x & kc) | (s & kc)) & rm.ee;

@@ -1,0 +1,554 @@
+//! The design-point zoo: a registry of approximate-multiplier variants
+//! with oracle-derived energy/error columns, and the accuracy-SLO router
+//! that makes approximation a negotiated service property.
+//!
+//! # Registry
+//!
+//! [`registry`] enumerates every servable design point — the paper's
+//! proposed PPC/NPPC family across `k = 0..=n` plus the two zoo variants
+//! ([`Family::Trunc`], [`Family::Loa`]) expressed in the same cell grid —
+//! each carrying a [`DesignEntry`] computed **once** (then cached for the
+//! process lifetime) from the existing machinery:
+//!
+//! * `nmed` / `mred` / `max_ed` — [`crate::error::exhaustive_metrics`],
+//!   the paper's Table V sweep (all operand pairs, single MAC). Pinned
+//!   against the Python oracle in `tests/zoo_goldens.rs` (generator:
+//!   `python/compile/kernels/zoo_goldens.py`).
+//! * `mean_mac_fj` — gate-netlist activity replay
+//!   ([`crate::energy::mean_mac_fj_chains`]) over a fixed seeded operand
+//!   stream, so every entry is metered on the *same* traffic.
+//! * `psnr_dct` / `psnr_edge` — the §V application pipelines run at the
+//!   design point vs the exact-arithmetic result (`f64::INFINITY` for
+//!   exact entries, as the paper reports).
+//!
+//! `loa` is registered from `k = 2`: at `k = 1` the OR-fold is
+//! single-MAC exact (zero exhaustive NMED) while it still errs under
+//! chained accumulation, so registering it would let the router
+//! silently degrade requests that asked for exact arithmetic.
+//!
+//! # Routing
+//!
+//! An [`AccuracySlo`] is an upper bound on NMED and/or a lower bound on
+//! application PSNR. [`route`] picks the **cheapest** (lowest
+//! `mean_mac_fj`) registered entry satisfying every stated bound for the
+//! pool's word shape; an SLO no entry satisfies is a typed
+//! [`RouteError::Unsatisfiable`] — never a silent fallback in either
+//! direction. The coordinator threads the routed design point through
+//! request execution ([`crate::coordinator::GemmRequest::slo`]), the wire
+//! protocol carries it end-to-end (`net::proto`), and `zoo-report` emits
+//! the energy-per-accuracy-tier table.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use crate::apps::image::{psnr, scene};
+use crate::apps::{dct, edge, WordGemm};
+use crate::bench::{xorshift_ints, Json};
+use crate::error::exhaustive_metrics;
+use crate::pe::word::PeConfig;
+use crate::pe::{Design, Signedness};
+use crate::Family;
+
+/// Operand width every registry entry is built at (the paper's setting;
+/// the only width the error/energy oracles pin exhaustively).
+pub const ZOO_N_BITS: u32 = 8;
+
+/// Side of the deterministic scene the PSNR columns are computed on.
+const PSNR_SIDE: usize = 32;
+
+/// Accuracy tier of a design point, by exhaustive NMED. Tier counters in
+/// `ServiceStats`/`NetStats` aggregate routed traffic per tier.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Tier {
+    /// Bit-exact arithmetic (NMED = 0).
+    Exact,
+    /// NMED ≤ 2.5e-4 — visually lossless on the §V pipelines.
+    High,
+    /// NMED ≤ 2.5e-3 — the paper's headline operating region.
+    Mid,
+    /// Everything deeper.
+    Low,
+}
+
+impl Tier {
+    /// Every tier, strictest first.
+    pub const ALL: [Tier; 4] = [Tier::Exact, Tier::High, Tier::Mid, Tier::Low];
+
+    /// Tier of an exhaustive-NMED value.
+    pub fn of(nmed: f64) -> Tier {
+        if nmed == 0.0 {
+            Tier::Exact
+        } else if nmed <= 2.5e-4 {
+            Tier::High
+        } else if nmed <= 2.5e-3 {
+            Tier::Mid
+        } else {
+            Tier::Low
+        }
+    }
+
+    /// Stable lower-case name (stats keys, report columns).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Exact => "exact",
+            Tier::High => "high",
+            Tier::Mid => "mid",
+            Tier::Low => "low",
+        }
+    }
+
+    /// Index into per-tier counter arrays (`Tier::ALL` order).
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Tier::Exact => 0,
+            Tier::High => 1,
+            Tier::Mid => 2,
+            Tier::Low => 3,
+        }
+    }
+}
+
+/// One registered design point with its oracle-derived service columns.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignEntry {
+    /// The hardware design point (8-bit signed for every zoo entry).
+    pub design: Design,
+    /// Mean per-MAC replay energy (fJ) over the fixed seeded stream.
+    pub mean_mac_fj: f64,
+    /// Exhaustive single-MAC NMED (Table V setting).
+    pub nmed: f64,
+    /// Exhaustive single-MAC MRED.
+    pub mred: f64,
+    /// Worst-case single-MAC error distance.
+    pub max_ed: u64,
+    /// DCT-pipeline PSNR vs exact arithmetic (dB, `inf` when exact).
+    pub psnr_dct: f64,
+    /// Edge-pipeline PSNR vs exact arithmetic (dB, `inf` when exact).
+    pub psnr_edge: f64,
+}
+
+impl DesignEntry {
+    /// Accuracy tier of this entry.
+    pub fn tier(&self) -> Tier {
+        Tier::of(self.nmed)
+    }
+
+    /// Stable label, e.g. `proposed/k4` (CLI tables, stats keys).
+    pub fn label(&self) -> String {
+        format!("{}/k{}", self.design.family.name(), self.design.k)
+    }
+
+    /// Worst application PSNR across the two pipeline columns — the
+    /// value a `min_psnr_db` bound is checked against.
+    pub fn psnr_floor(&self) -> f64 {
+        self.psnr_dct.min(self.psnr_edge)
+    }
+
+    /// Does this entry satisfy every bound the SLO states?
+    pub fn satisfies(&self, slo: &AccuracySlo) -> bool {
+        if let Some(mx) = slo.max_nmed {
+            if self.nmed > mx {
+                return false;
+            }
+        }
+        if let Some(mn) = slo.min_psnr_db {
+            if self.psnr_floor() < mn {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+fn entry_for(design: Design) -> DesignEntry {
+    let cfg = PeConfig::from_design(&design);
+    let em = exhaustive_metrics(&cfg);
+    // fixed seeded operand stream: every entry metered on the same
+    // traffic (8 chains x 48 MACs of full-range signed operands)
+    let chains: Vec<Vec<(i64, i64)>> = (0..8u64)
+        .map(|c| {
+            let a = xorshift_ints(0xA5_000 + c, 48);
+            let b = xorshift_ints(0xB0_000 + c, 48);
+            a.into_iter().zip(b).collect()
+        })
+        .collect();
+    let mean_mac_fj = crate::energy::mean_mac_fj_chains(&design, &chains);
+    let img = scene(PSNR_SIDE, PSNR_SIDE);
+    let run_dct = |c: PeConfig| dct::pipeline(&mut WordGemm { cfg: c }, &img).0;
+    let run_edge = |c: PeConfig| edge::pipeline(&mut WordGemm { cfg: c }, &img);
+    let exact = PeConfig::new(design.n, design.is_signed(), design.family, 0);
+    let psnr_dct = psnr(&run_dct(exact).data, &run_dct(cfg).data);
+    let psnr_edge = psnr(&run_edge(exact).data, &run_edge(cfg).data);
+    DesignEntry {
+        design,
+        mean_mac_fj,
+        nmed: em.nmed,
+        mred: em.mred,
+        max_ed: em.max_ed,
+        psnr_dct,
+        psnr_edge,
+    }
+}
+
+/// Every registered design point, cheapest-last not guaranteed — the
+/// order is (family, k) as documented in the module header. Built once
+/// per process (exhaustive sweeps + netlist replay + two pipelines per
+/// entry) and cached.
+pub fn registry() -> &'static [DesignEntry] {
+    static REG: OnceLock<Vec<DesignEntry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let s = Signedness::Signed;
+        let mut entries =
+            vec![entry_for(Design::proposed_exact(ZOO_N_BITS, s))];
+        for k in 1..=ZOO_N_BITS {
+            entries.push(entry_for(Design::approximate(
+                ZOO_N_BITS, s, Family::Proposed, k)));
+        }
+        for k in 1..=ZOO_N_BITS {
+            entries.push(entry_for(Design::approximate(
+                ZOO_N_BITS, s, Family::Trunc, k)));
+        }
+        // loa starts at k = 2 (see module header)
+        for k in 2..=ZOO_N_BITS {
+            entries.push(entry_for(Design::approximate(
+                ZOO_N_BITS, s, Family::Loa, k)));
+        }
+        entries
+    })
+}
+
+/// A per-request accuracy service-level objective: an upper bound on
+/// exhaustive NMED and/or a lower bound on application PSNR (dB). At
+/// least one bound must be stated.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct AccuracySlo {
+    /// Maximum acceptable exhaustive NMED (0 demands exact arithmetic).
+    pub max_nmed: Option<f64>,
+    /// Minimum acceptable application PSNR in dB (checked against the
+    /// worst of the registry's two pipeline columns).
+    pub min_psnr_db: Option<f64>,
+}
+
+impl AccuracySlo {
+    /// SLO demanding bit-exact arithmetic.
+    pub fn exact() -> AccuracySlo {
+        AccuracySlo { max_nmed: Some(0.0), min_psnr_db: None }
+    }
+
+    /// No bounds stated? (An empty SLO is invalid to route.)
+    pub fn is_empty(&self) -> bool {
+        self.max_nmed.is_none() && self.min_psnr_db.is_none()
+    }
+
+    /// Structural validity: at least one bound, every bound finite and
+    /// in range (`max_nmed >= 0`, `min_psnr_db > 0`).
+    pub fn validate(&self) -> Result<(), RouteError> {
+        if self.is_empty() {
+            return Err(RouteError::Invalid(
+                "SLO states no bound (need max_nmed and/or min_psnr_db)"
+                    .into(),
+            ));
+        }
+        if let Some(v) = self.max_nmed {
+            if !v.is_finite() || v < 0.0 {
+                return Err(RouteError::Invalid(format!(
+                    "max_nmed must be finite and >= 0, got {v}")));
+            }
+        }
+        if let Some(v) = self.min_psnr_db {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(RouteError::Invalid(format!(
+                    "min_psnr_db must be finite and > 0, got {v}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI/loadgen form: comma-separated `nmed=<f64>` /
+    /// `psnr=<f64>` clauses, e.g. `nmed=1e-3`, `psnr=35`,
+    /// `nmed=1e-3,psnr=35`.
+    pub fn parse(s: &str) -> Result<AccuracySlo, RouteError> {
+        let mut slo = AccuracySlo::default();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            let (key, val) = clause.split_once('=').ok_or_else(|| {
+                RouteError::Invalid(format!(
+                    "SLO clause `{clause}` is not key=value"))
+            })?;
+            let num: f64 = val.trim().parse().map_err(|_| {
+                RouteError::Invalid(format!(
+                    "SLO clause `{clause}`: `{val}` is not a number"))
+            })?;
+            match key.trim() {
+                "nmed" => slo.max_nmed = Some(num),
+                "psnr" => slo.min_psnr_db = Some(num),
+                other => {
+                    return Err(RouteError::Invalid(format!(
+                        "unknown SLO key `{other}` (want nmed/psnr)")))
+                }
+            }
+        }
+        slo.validate()?;
+        Ok(slo)
+    }
+}
+
+impl fmt::Display for AccuracySlo {
+    // renders as the parse() form, so Display -> parse round-trips
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        if let Some(v) = self.max_nmed {
+            write!(f, "nmed={v}")?;
+            first = false;
+        }
+        if let Some(v) = self.min_psnr_db {
+            if !first {
+                write!(f, ",")?;
+            }
+            write!(f, "psnr={v}")?;
+        }
+        if self.is_empty() {
+            write!(f, "(empty)")?;
+        }
+        Ok(())
+    }
+}
+
+/// Why a request's SLO could not be routed. Returned typed — the
+/// coordinator and the wire protocol both refuse rather than silently
+/// degrade or silently promote.
+#[derive(Clone, PartialEq, Debug)]
+pub enum RouteError {
+    /// The SLO itself is malformed (empty, non-finite, out of range).
+    Invalid(String),
+    /// No registered design point for this word shape satisfies the SLO.
+    Unsatisfiable {
+        /// The SLO that could not be met.
+        slo: AccuracySlo,
+        /// Operand width the pool serves.
+        n_bits: u32,
+        /// Signedness the pool serves.
+        signed: bool,
+    },
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::Invalid(msg) => write!(f, "invalid SLO: {msg}"),
+            RouteError::Unsatisfiable { slo, n_bits, signed } => write!(
+                f,
+                "unsatisfiable SLO `{slo}`: no registered design point \
+                 for n={n_bits} signed={signed} meets it"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Cheapest entry among `entries` satisfying `slo` (the selection core
+/// [`route`] applies to the registry; exposed so the property fuzz can
+/// drive it over arbitrary subsets). Ties on energy break toward lower
+/// NMED, then lower `k` — fully deterministic.
+pub fn route_among<'a>(
+    entries: impl IntoIterator<Item = &'a DesignEntry>,
+    slo: &AccuracySlo,
+) -> Option<&'a DesignEntry> {
+    entries
+        .into_iter()
+        .filter(|e| e.satisfies(slo))
+        .min_by(|a, b| {
+            a.mean_mac_fj
+                .total_cmp(&b.mean_mac_fj)
+                .then(a.nmed.total_cmp(&b.nmed))
+                .then(a.design.k.cmp(&b.design.k))
+        })
+}
+
+/// Route an SLO for a pool serving `n_bits`/`signed` words: the cheapest
+/// registered design point of that word shape meeting every bound.
+///
+/// Errors are typed: a malformed SLO is [`RouteError::Invalid`], an SLO
+/// nothing satisfies (including any SLO against a word shape the
+/// registry does not cover — only 8-bit signed is registered) is
+/// [`RouteError::Unsatisfiable`]. No silent fallback happens in either
+/// direction: a satisfiable SLO may route *to* the exact point (it
+/// satisfies everything), but an unsatisfiable one never silently runs
+/// exact — the caller decides.
+pub fn route(
+    n_bits: u32,
+    signed: bool,
+    slo: &AccuracySlo,
+) -> Result<&'static DesignEntry, RouteError> {
+    slo.validate()?;
+    let shape = registry().iter().filter(|e| {
+        e.design.n == n_bits && e.design.is_signed() == signed
+    });
+    route_among(shape, slo).ok_or(RouteError::Unsatisfiable {
+        slo: *slo,
+        n_bits,
+        signed,
+    })
+}
+
+/// The `zoo-report` document: every entry's columns plus per-tier
+/// cheapest-point summary (`axsys zoo-report` writes this JSON and
+/// prints the table form).
+pub fn report_json() -> Json {
+    let reg = registry();
+    let exact_fj = reg
+        .iter()
+        .find(|e| e.tier() == Tier::Exact)
+        .map(|e| e.mean_mac_fj)
+        .unwrap_or(f64::NAN);
+    let entries = reg
+        .iter()
+        .map(|e| {
+            Json::obj()
+                .set("family", Json::Str(e.design.family.name().into()))
+                .set("k", Json::Int(e.design.k as i64))
+                .set("tier", Json::Str(e.tier().name().into()))
+                .set("mean_mac_fj", Json::Num(e.mean_mac_fj))
+                .set("nmed", Json::Num(e.nmed))
+                .set("mred", Json::Num(e.mred))
+                .set("max_ed", Json::Int(e.max_ed as i64))
+                .set("psnr_dct_db", Json::Num(e.psnr_dct))
+                .set("psnr_edge_db", Json::Num(e.psnr_edge))
+                .set("saving_vs_exact_pct",
+                     Json::Num((1.0 - e.mean_mac_fj / exact_fj) * 100.0))
+        })
+        .collect();
+    let tiers = Tier::ALL
+        .iter()
+        .map(|&t| {
+            let cheapest = route_among(
+                reg.iter().filter(|e| e.tier() == t),
+                &AccuracySlo { max_nmed: Some(f64::MAX), min_psnr_db: None },
+            );
+            let mut o = Json::obj()
+                .set("tier", Json::Str(t.name().into()))
+                .set("entries",
+                     Json::Int(reg.iter()
+                         .filter(|e| e.tier() == t).count() as i64));
+            if let Some(c) = cheapest {
+                o = o
+                    .set("cheapest", Json::Str(c.label()))
+                    .set("cheapest_mean_mac_fj", Json::Num(c.mean_mac_fj))
+                    .set("saving_vs_exact_pct",
+                         Json::Num((1.0 - c.mean_mac_fj / exact_fj) * 100.0));
+            }
+            o
+        })
+        .collect();
+    Json::obj()
+        .set("schema", Json::Str("axsys-zoo-report/v1".into()))
+        .set("n_bits", Json::Int(ZOO_N_BITS as i64))
+        .set("signed", Json::Bool(true))
+        .set("psnr_scene_side", Json::Int(PSNR_SIDE as i64))
+        .set("entries", Json::Arr(entries))
+        .set("tiers", Json::Arr(tiers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_shape_and_exact_point() {
+        let reg = registry();
+        assert_eq!(reg.len(), 9 + 8 + 7);
+        let exact: Vec<_> =
+            reg.iter().filter(|e| e.tier() == Tier::Exact).collect();
+        assert_eq!(exact.len(), 1, "exactly one exact entry");
+        let e = exact[0];
+        assert_eq!(e.design.k, 0);
+        assert_eq!(e.nmed, 0.0);
+        assert_eq!(e.max_ed, 0);
+        assert!(e.psnr_dct.is_infinite() && e.psnr_edge.is_infinite());
+    }
+
+    #[test]
+    fn error_monotone_within_each_family() {
+        let reg = registry();
+        for family in [Family::Proposed, Family::Trunc, Family::Loa] {
+            let mut prev = -1.0;
+            for e in reg.iter().filter(|e| e.design.family == family) {
+                assert!(e.nmed >= prev, "{} nmed regressed", e.label());
+                prev = e.nmed;
+            }
+        }
+    }
+
+    #[test]
+    fn route_exact_slo_picks_the_exact_point() {
+        let e = route(8, true, &AccuracySlo::exact()).unwrap();
+        assert_eq!(e.nmed, 0.0);
+        assert_eq!(e.design.k, 0);
+    }
+
+    #[test]
+    fn route_is_cheapest_satisfying() {
+        let slo = AccuracySlo { max_nmed: Some(1e-3), min_psnr_db: None };
+        let got = route(8, true, &slo).unwrap();
+        for e in registry() {
+            if e.satisfies(&slo) {
+                assert!(got.mean_mac_fj <= e.mean_mac_fj,
+                        "{} cheaper than routed {}", e.label(), got.label());
+            }
+        }
+        assert!(got.nmed <= 1e-3);
+    }
+
+    #[test]
+    fn unsupported_word_shape_is_typed_unsatisfiable() {
+        let slo = AccuracySlo { max_nmed: Some(1.0), min_psnr_db: None };
+        match route(16, true, &slo) {
+            Err(RouteError::Unsatisfiable { n_bits: 16, .. }) => {}
+            other => panic!("want Unsatisfiable, got {other:?}"),
+        }
+        match route(8, false, &slo) {
+            Err(RouteError::Unsatisfiable { signed: false, .. }) => {}
+            other => panic!("want Unsatisfiable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_malformed_slos_are_invalid() {
+        assert!(matches!(route(8, true, &AccuracySlo::default()),
+                         Err(RouteError::Invalid(_))));
+        let bad = AccuracySlo { max_nmed: Some(-1.0), min_psnr_db: None };
+        assert!(matches!(route(8, true, &bad), Err(RouteError::Invalid(_))));
+        let nan = AccuracySlo { max_nmed: Some(f64::NAN), min_psnr_db: None };
+        assert!(matches!(route(8, true, &nan), Err(RouteError::Invalid(_))));
+    }
+
+    #[test]
+    fn slo_parse_round_trips() {
+        let slo = AccuracySlo::parse("nmed=1e-3,psnr=35").unwrap();
+        assert_eq!(slo.max_nmed, Some(1e-3));
+        assert_eq!(slo.min_psnr_db, Some(35.0));
+        let back = AccuracySlo::parse(&slo.to_string()).unwrap();
+        assert_eq!(back, slo);
+        assert!(AccuracySlo::parse("nmed=abc").is_err());
+        assert!(AccuracySlo::parse("qps=9").is_err());
+        assert!(AccuracySlo::parse("").is_err());
+    }
+
+    #[test]
+    fn report_covers_every_entry() {
+        let doc = report_json();
+        if let Json::Obj(fields) = &doc {
+            let entries = fields.iter().find(|(k, _)| k == "entries");
+            match entries {
+                Some((_, Json::Arr(a))) => {
+                    assert_eq!(a.len(), registry().len())
+                }
+                _ => panic!("entries array missing"),
+            }
+        } else {
+            panic!("report is not an object");
+        }
+    }
+}

@@ -7,7 +7,7 @@
 //! * `lut`      — product table + carry-save-window automaton;
 //! * `systolic` — cycle-accurate array simulation.
 //!
-//! Sweep: all four `Family` variants x k in {0, 2, 4} x signed/unsigned on
+//! Sweep: all six `Family` variants x k in {0, 2, 4} x signed/unsigned on
 //! seeded-random matrices, plus spot checks beyond the sweep (k = 7,
 //! ragged shapes, accumulation-heavy inner dimensions). `Proposed` with
 //! k = 0 must additionally equal exact i64 GEMM.

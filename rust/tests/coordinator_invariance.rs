@@ -65,6 +65,7 @@ fn lut_results_invariant_to_worker_count_and_batch() {
                 });
                 let resp = c.call(GemmRequest {
                     a: a.clone(), b: b.clone(), m, kk, nn, k,
+                    ..Default::default()
                 });
                 assert_eq!(resp.out, want,
                            "k={k} workers={workers} batch={batch}");
@@ -87,6 +88,7 @@ fn lut_and_word_backends_agree_through_the_service() {
             });
             outs.push(c.call(GemmRequest {
                 a: a.clone(), b: b.clone(), m, kk, nn, k,
+                ..Default::default()
             }).out);
             c.shutdown();
         }
@@ -117,6 +119,7 @@ fn coalesced_batches_bit_identical_to_one_at_a_time() {
                     a: ints(2 * i as u64 + 1, m * kk),
                     b: ints(2 * i as u64 + 2, kk * nn),
                     m, kk, nn, k,
+                    ..Default::default()
                 }))
                 .collect();
             let outs = ids.into_iter().map(|id| c.wait(id).out).collect();
@@ -146,7 +149,7 @@ fn dispatch_counters_track_batches_and_coalescing() {
     let (m, kk, nn) = (64usize, 8usize, 8usize); // 8 tiles, all tj = 0
     let a = ints(11, m * kk);
     let b = ints(12, kk * nn);
-    let resp = c.call(GemmRequest { a, b, m, kk, nn, k: 4 });
+    let resp = c.call(GemmRequest { a, b, m, kk, nn, k: 4, ..Default::default() });
     assert_eq!(resp.tiles, 8);
     let s = c.stats();
     assert!(s.worker_dispatches >= 1, "{}", s.worker_dispatches);
@@ -187,7 +190,7 @@ fn saturated_queue_blocks_submit_instead_of_dropping() {
         let submitted = submitted.clone();
         let (a, b) = (a.clone(), b.clone());
         let h = std::thread::spawn(move || {
-            let id = c.submit(GemmRequest { a, b, m, kk, nn, k: 0 });
+            let id = c.submit(GemmRequest { a, b, m, kk, nn, k: 0, ..Default::default() });
             submitted.store(true, Ordering::SeqCst);
             id
         });
@@ -222,6 +225,7 @@ fn shutdown_with_saturated_queue_joins_all_workers() {
         let (m, kk, nn) = (64usize, 8usize, 64usize); // 64 tiles, depth 1
         let id = c.submit(GemmRequest {
             a: vec![1; m * kk], b: vec![1; kk * nn], m, kk, nn, k: 0,
+            ..Default::default()
         });
         let resp = c.wait(id);
         assert!(resp.out.iter().all(|&v| v == kk as i64));
@@ -242,6 +246,7 @@ fn shutdown_with_saturated_queue_joins_all_workers() {
             c2.submit(GemmRequest {
                 a: ints(r + 1, 32 * 8), b: ints(r + 2, 8 * 32),
                 m: 32, kk: 8, nn: 32, k: 0,
+                ..Default::default()
             });
         }
         drop(c2);
@@ -279,6 +284,7 @@ fn fanout_and_coalescing_coexist_bit_identically() {
                 a: ints(3 * i as u64 + 1, m * kk),
                 b: ints(3 * i as u64 + 2, kk * nn),
                 m, kk, nn, k,
+                ..Default::default()
             }))
             .collect();
         let outs: Vec<(Vec<i64>, f64, u64)> = ids.into_iter().map(|id| {
@@ -315,7 +321,8 @@ fn interleaved_ks_under_lut_do_not_cross_talk() {
     let b = ints(6, kk * nn);
     let ids: Vec<(u32, u64)> = (0..24).map(|i| {
         let k = (i % 4) * 2; // 0, 2, 4, 6
-        (k, c.submit(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k }))
+        (k, c.submit(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k,
+                                   ..Default::default() }))
     }).collect();
     for (k, id) in ids {
         let cfg = PeConfig::new(8, true, Family::Proposed, k);

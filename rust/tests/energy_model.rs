@@ -1,6 +1,6 @@
 //! Energy-subsystem consistency + golden tests (DESIGN.md §4).
 //!
-//! * **Consistency:** for random operand streams across all four cell
+//! * **Consistency:** for random operand streams across all six cell
 //!   families × signedness × k, `EnergyLut` aggregation equals direct
 //!   netlist activity-replay energy **exactly** (same f64 values, same
 //!   order), and the systolic-sim meter (netlist replay per MAC) agrees
@@ -112,6 +112,7 @@ fn served_energy_is_backend_independent_and_fully_covered() {
         });
         let resp = c.call(GemmRequest {
             a: a.clone(), b: b.clone(), m, kk, nn, k: 2,
+            ..Default::default()
         });
         assert_eq!(resp.sa_stats.metered_macs, resp.sa_stats.macs,
                    "{backend:?}: full meter coverage");
@@ -144,7 +145,8 @@ fn wide_design_points_serve_unmetered_but_correct() {
     let (m, kk, nn) = (9usize, 6usize, 7usize);
     let a = ints(61, m * kk);
     let b = ints(62, kk * nn);
-    let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 3 });
+    let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn,
+                                    k: 3, ..Default::default() });
     let cfg = PeConfig::new(16, true, Family::Proposed, 3);
     // reference through the same tiling the coordinator applies
     let mut want = vec![0i64; m * nn];

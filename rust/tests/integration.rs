@@ -97,7 +97,8 @@ fn coordinator_matches_direct_word_model() {
     let a: Vec<i64> = (0..m * kk).map(|i| ((i * 41) % 255) as i64 - 127).collect();
     let b: Vec<i64> = (0..kk * nn).map(|i| ((i * 59) % 255) as i64 - 127).collect();
     for k in [0u32, 5] {
-        let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k });
+        let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk,
+                                        nn, k, ..Default::default() });
         // per-tile word model with the same 8-wide tiling the coordinator
         // performs (approximate state walks are tile-local)
         let mut want = vec![0i64; m * nn];
@@ -133,7 +134,7 @@ fn coordinator_backpressure_small_queue() {
     let (m, kk, nn) = (64usize, 8usize, 64usize); // 64 tiles
     let a = vec![1i64; m * kk];
     let b = vec![1i64; kk * nn];
-    let resp = c.call(GemmRequest { a, b, m, kk, nn, k: 0 });
+    let resp = c.call(GemmRequest { a, b, m, kk, nn, k: 0, ..Default::default() });
     assert!(resp.out.iter().all(|&v| v == kk as i64));
     c.shutdown();
 }
@@ -149,7 +150,8 @@ fn coordinator_interleaved_ks_do_not_cross_talk() {
     // submit alternating k, verify each against a direct computation
     let ids: Vec<(u32, u64)> = (0..16).map(|i| {
         let k = (i % 4) * 2;
-        (k, c.submit(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k }))
+        (k, c.submit(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k,
+                                   ..Default::default() }))
     }).collect();
     for (k, id) in ids {
         let resp = c.wait(id);
@@ -226,7 +228,8 @@ fn pjrt_coordinator_backend_exact_path() {
     let a: Vec<i64> = (0..m * kk).map(|i| ((i * 23) % 255) as i64 - 127).collect();
     let b: Vec<i64> = (0..kk * nn).map(|i| ((i * 71) % 255) as i64 - 127).collect();
     // exact requests are bit-identical regardless of K chunking
-    let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn, k: 0 });
+    let resp = c.call(GemmRequest { a: a.clone(), b: b.clone(), m, kk, nn,
+                                    k: 0, ..Default::default() });
     let mut want = vec![0i64; m * nn];
     for i in 0..m {
         for j in 0..nn {

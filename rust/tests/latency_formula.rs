@@ -68,6 +68,7 @@ fn served_systolic_requests_report_the_formula_cycles() {
         kk: 8,
         nn: 8,
         k: 0,
+        ..Default::default()
     });
     assert_eq!(resp.sa_stats.tiles, 1);
     assert_eq!(resp.sa_stats.cycles, 22);

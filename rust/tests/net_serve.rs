@@ -69,6 +69,7 @@ fn remote_gemm_bit_identical_to_in_process_for_all_backends() {
             let b = ints(2 * i as u64 + 2, kk * nn);
             let want = coord.call(GemmRequest {
                 a: a.clone(), b: b.clone(), m, kk, nn, k,
+                ..Default::default()
             });
             let got = client.gemm(&a, &b, m, kk, nn, k).unwrap();
             assert_eq!(got.out, want.out, "{backend:?} case {i}: bits differ");
@@ -144,6 +145,7 @@ fn concurrent_pipelined_clients_get_isolated_ordered_replies() {
                 let b = ints(2 * s + 2, kk * nn);
                 want.push(coord.call(GemmRequest {
                     a: a.clone(), b: b.clone(), m, kk, nn, k,
+                    ..Default::default()
                 }).out);
                 shapes.push((a, b, m, kk, nn, k));
             }
@@ -184,6 +186,7 @@ fn overloaded_admission_gate_blocks_and_loses_nothing() {
         let b = ints(2 * i + 2, kk * nn);
         want.push(coord.call(GemmRequest {
             a: a.clone(), b: b.clone(), m, kk, nn, k,
+            ..Default::default()
         }).out);
         reqs.push((a, b));
     }
@@ -200,6 +203,7 @@ fn overloaded_admission_gate_blocks_and_loses_nothing() {
                 nn: nn as u32,
                 a,
                 b,
+                slo: None,
             });
             proto::write_frame(&mut w, &f, &mut scratch).unwrap();
         }
@@ -227,6 +231,7 @@ fn malformed_requests_get_typed_errors_and_server_survives() {
         app: AppKind::Dct,
         k: 2,
         pgm: b"P6 not a pgm".to_vec(),
+        slo: None,
     })).unwrap();
     match client.recv().unwrap() {
         Frame::Error(e) => assert_eq!(e.code, ErrCode::BadImage, "{}", e.msg),
@@ -249,7 +254,7 @@ fn malformed_requests_get_typed_errors_and_server_survives() {
     // empty GEMM dims -> typed Malformed (a zero-tile request would
     // never complete on the pool)
     client.send(&Frame::GemmReq(proto::GemmReq {
-        k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![],
+        k: 0, m: 0, kk: 0, nn: 0, a: vec![], b: vec![], slo: None,
     })).unwrap();
     match client.recv().unwrap() {
         Frame::Error(e) => assert_eq!(e.code, ErrCode::Malformed, "{}", e.msg),
@@ -260,6 +265,7 @@ fn malformed_requests_get_typed_errors_and_server_survives() {
     let b = ints(2, 64);
     let want = coord.call(GemmRequest {
         a: a.clone(), b: b.clone(), m: 8, kk: 8, nn: 8, k: 2,
+        ..Default::default()
     }).out;
     assert_eq!(client.gemm(&a, &b, 8, 8, 8, 2).unwrap().out, want);
     // garbage framing kills only that connection; the server survives
@@ -315,6 +321,85 @@ fn remote_gemm_drops_into_app_pipelines_and_stats_flow() {
 }
 
 #[test]
+fn slo_routed_requests_over_tcp_match_in_process_routing() {
+    use axsys::pe::word::{matmul, PeConfig};
+    use axsys::zoo::{self, AccuracySlo};
+    let (coord, server) = start(BackendKind::Word, 3, ServerConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let (m, kk, nn) = (12usize, 9usize, 14usize);
+    let a = ints(41, m * kk);
+    let b = ints(42, kk * nn);
+    // a loose NMED bound must route an approximate point, and the wire
+    // reply must be bit-identical to the word kernel at that point
+    let loose = AccuracySlo { max_nmed: Some(5e-3), min_psnr_db: None };
+    let e = zoo::route(8, true, &loose).expect("loose bound is satisfiable");
+    assert!(e.nmed > 0.0, "loose bound should route an approximate point");
+    let want = matmul(&PeConfig::from_design(&e.design), &a, &b, m, kk, nn);
+    let got = client.gemm_slo(&a, &b, m, kk, nn, &loose).unwrap();
+    assert_eq!(got.out, want, "SLO-routed TCP reply != routed word kernel");
+    // ... and to the in-process SLO path against the same pool
+    let inproc = coord.try_call(GemmRequest {
+        a: a.clone(), b: b.clone(), m, kk, nn, k: 0, slo: Some(loose),
+        ..Default::default()
+    }).expect("in-process routing");
+    assert_eq!(inproc.out, got.out, "wire and in-process routing disagree");
+    // an exact SLO is bit-identical to an unrouted exact request
+    let exact = AccuracySlo { max_nmed: Some(0.0), min_psnr_db: None };
+    let got0 = client.gemm_slo(&a, &b, m, kk, nn, &exact).unwrap();
+    let want0 = client.gemm(&a, &b, m, kk, nn, 0).unwrap();
+    assert_eq!(got0.out, want0.out, "exact SLO != exact arithmetic");
+    // SLO-routed apps serve the routed design point's bits
+    let img = scene(16, 16);
+    let got = client.app_slo(AppKind::Edge, &img, 7, Some(&loose)).unwrap();
+    let want = coord.serve_edge_slo(&img, &loose).expect("edge routes");
+    assert_eq!(got.image().data, want.out.data,
+               "SLO-routed edge over TCP: bits differ");
+    // the coordinator's SLO counters travel in the stats frame (the
+    // three wire requests above plus the one in-process try_call)
+    let ws = client.stats().unwrap();
+    assert_eq!(ws.slo_requests, 4, "{ws:?}");
+    assert!(ws.slo_exact >= 1, "{ws:?}");
+    assert_eq!(ws.slo_unsatisfiable, 0, "{ws:?}");
+    assert_eq!(ws.slo_tier.iter().sum::<u64>(), ws.slo_requests, "{ws:?}");
+    let ns = server.stats();
+    assert_eq!(ns.slo_requests, 3, "wire-admitted SLO requests: {ns:?}");
+    assert_eq!(ns.slo_rejections, 0, "{ns:?}");
+    server.shutdown();
+
+    // a pool whose word shape the registry does not cover refuses SLO
+    // traffic with a typed wire error — and the connection survives
+    let coord16 = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        backend: BackendKind::Word,
+        n_bits: 16,
+        ..Default::default()
+    }));
+    let server16 = NetServer::bind("127.0.0.1:0", coord16.clone(),
+                                   ServerConfig::default()).expect("bind");
+    let mut c16 = Client::connect(server16.local_addr()).unwrap();
+    match c16.gemm_slo(&a, &b, m, kk, nn, &loose) {
+        Err(NetError::Server { code, msg }) => {
+            assert_eq!(code, ErrCode::SloUnsatisfiable, "{msg}");
+            assert!(msg.contains("n=16"), "refusal names the shape: {msg}");
+        }
+        other => panic!("expected SloUnsatisfiable, got {other:?}"),
+    }
+    let want16 = coord16.call(GemmRequest {
+        a: a.clone(), b: b.clone(), m, kk, nn, k: 0, ..Default::default()
+    });
+    let got16 = c16.gemm(&a, &b, m, kk, nn, 0).unwrap();
+    assert_eq!(got16.out, want16.out,
+               "connection must survive a refused SLO");
+    let ws16 = c16.stats().unwrap();
+    assert_eq!(ws16.slo_requests, 1, "{ws16:?}");
+    assert_eq!(ws16.slo_unsatisfiable, 1, "{ws16:?}");
+    let ns16 = server16.stats();
+    assert_eq!(ns16.slo_requests, 1, "{ns16:?}");
+    assert_eq!(ns16.slo_rejections, 1, "{ns16:?}");
+    server16.shutdown();
+}
+
+#[test]
 fn shutdown_drains_inflight_replies() {
     let (coord, server) = start(BackendKind::Lut, 2, ServerConfig::default());
     let mut client = Client::connect(server.local_addr()).unwrap();
@@ -325,6 +410,7 @@ fn shutdown_drains_inflight_replies() {
         let b = ints(2 * i + 2, kk * nn);
         want.push(coord.call(GemmRequest {
             a: a.clone(), b: b.clone(), m, kk, nn, k,
+            ..Default::default()
         }).out);
         client.send_gemm(&ints(2 * i + 1, m * kk), &ints(2 * i + 2, kk * nn),
                          m, kk, nn, k).unwrap();
@@ -352,6 +438,7 @@ fn loadgen_emits_serve_net_report_against_loopback() {
         k_max: 4,
         seed: 7,
         apps: true,
+        slo: None,
     };
     let doc = loadgen::run(&cfg).expect("loadgen run");
     match doc.get("throughput_req_per_sec") {

@@ -2,7 +2,7 @@
 //! shapes, every engine must produce bit-identical GEMM results.
 //!
 //! * `lut == word == systolic` over (m, kk, nn) up to 48, three operand
-//!   ranges, all four cell families, k in 0..=6, signed and unsigned;
+//!   ranges, all six cell families, k in 0..=6, signed and unsigned;
 //! * the cache-blocked driver (`gemm::BlockedGemm`, both lut and word
 //!   engines, including deliberately ragged block sizes that never
 //!   divide the problem shape) equals the naive `lut`/`word` walks on
@@ -13,7 +13,11 @@
 //! * intra-request fan-out (row/column-block tiling across worker
 //!   counts and MAC-budgeted batch drains) equals both the
 //!   single-threaded blocked engine and the naive word walk, and its
-//!   per-tile metered energy sums to the single-threaded total.
+//!   per-tile metered energy sums to the single-threaded total;
+//! * the zoo's accuracy router (`zoo::route` / `zoo::route_among`)
+//!   picks the cheapest satisfying design point — or refuses with a
+//!   typed error — on 256 seeded random SLOs, word shapes, and
+//!   registry subsets.
 //!
 //! Deterministic xorshift PRNG. The master seed comes from `PROP_SEED`
 //! (CI pins it; default below), and every case derives its own sub-seed
@@ -80,7 +84,7 @@ impl Case {
     /// Derive everything from one per-case seed (the shrunk repro unit).
     fn draw(seed: u64, force_signed: bool) -> Case {
         let mut r = XorShift::new(seed);
-        let family = Family::ALL[r.below(4) as usize];
+        let family = Family::ALL[r.below(Family::ALL.len() as u64) as usize];
         let signed = force_signed || r.below(2) == 0;
         let k = r.below(7) as u32; // 0..=6
         let m = 1 + r.below(48) as usize;
@@ -227,6 +231,7 @@ fn fuzz_fanout_matches_single_threaded_blocked_and_naive() {
             let resp = c.call(GemmRequest {
                 a: case.a.clone(), b: case.b.clone(),
                 m: case.m, kk: case.kk, nn: case.nn, k: case.k,
+                ..Default::default()
             });
             assert_eq!(resp.out, want, "fanout({desc}) != word [{i}] {}",
                        case.describe(master));
@@ -242,6 +247,130 @@ fn fuzz_fanout_matches_single_threaded_blocked_and_naive() {
     for (c, _) in pools {
         c.shutdown();
     }
+}
+
+/// The accuracy-router property fuzz: seeded random SLOs (and word
+/// shapes, and registry subsets) against the zoo's selection core.
+const ROUTER_CASES: usize = 256;
+
+#[test]
+fn fuzz_router_picks_cheapest_satisfying_point_or_refuses_typed() {
+    use axsys::zoo::{registry, route, route_among, AccuracySlo, RouteError};
+    let master = master_seed();
+    let mut rng = XorShift::new(master.wrapping_add(4));
+    let reg = registry();
+    let (mut routed, mut unsat) = (0usize, 0usize);
+    for i in 0..ROUTER_CASES {
+        let seed = rng.next();
+        let mut r = XorShift::new(seed);
+        // random SLO spanning the registry's occupied NMED/PSNR ranges,
+        // from demands-exact through looser-than-everything
+        let max_nmed = match r.below(4) {
+            0 => None,
+            1 => Some(0.0), // demands bit-exact arithmetic
+            2 => Some(r.below(2_200) as f64 * 1e-5), // 0..0.022
+            _ => Some(r.below(100) as f64 * 1e-7),   // ultra-tight
+        };
+        let min_psnr_db = match r.below(3) {
+            0 => None,
+            1 => Some(0.1 + r.below(800) as f64 * 0.1), // 0.1..80.1 dB
+            _ => Some(200.0 + r.below(100) as f64),     // exact-only
+        };
+        let slo = AccuracySlo { max_nmed, min_psnr_db };
+        // word shapes: mostly the registered 8-bit signed pool, with
+        // uncovered shapes mixed in (the only unsatisfiable direction —
+        // the registry's exact point satisfies every valid SLO)
+        let (n_bits, signed) = match r.below(8) {
+            0 => (16, true),
+            1 => (8, false),
+            _ => (8, true),
+        };
+        let who = format!("case seed {seed:#x} (master PROP_SEED={master}) \
+                           [{i}]: slo `{slo}` n={n_bits} signed={signed}");
+        if max_nmed.is_none() && min_psnr_db.is_none() {
+            // an empty SLO is a client error: typed Invalid, never a
+            // default route, never Unsatisfiable
+            assert!(matches!(route(n_bits, signed, &slo),
+                             Err(RouteError::Invalid(_))),
+                    "{who}: empty SLO not refused as Invalid");
+            continue;
+        }
+        match route(n_bits, signed, &slo) {
+            Ok(e) => {
+                routed += 1;
+                assert_eq!((e.design.n, e.design.is_signed()),
+                           (n_bits, signed), "{who}: wrong word shape");
+                assert!(e.satisfies(&slo),
+                        "{who}: routed {} violates the SLO", e.label());
+                // cheapest: no satisfying registered point is cheaper
+                for other in reg {
+                    if other.satisfies(&slo) {
+                        assert!(e.mean_mac_fj <= other.mean_mac_fj,
+                                "{who}: {} beaten by {}",
+                                e.label(), other.label());
+                    }
+                }
+                if max_nmed == Some(0.0) {
+                    assert_eq!(e.nmed, 0.0,
+                               "{who}: exact demand served approximate");
+                }
+            }
+            Err(RouteError::Unsatisfiable { n_bits: nb, signed: sg, .. }) => {
+                unsat += 1;
+                assert_eq!((nb, sg), (n_bits, signed), "{who}");
+                assert!(
+                    !reg.iter().any(|e| e.design.n == n_bits
+                        && e.design.is_signed() == signed
+                        && e.satisfies(&slo)),
+                    "{who}: refused but a satisfying point is registered");
+            }
+            Err(e) => panic!("{who}: unexpected {e:?}"),
+        }
+        // the same SLO over a random registry subset: the selection
+        // core must agree with a linear scan of that subset
+        let mask = r.next();
+        let subset: Vec<_> = reg.iter().enumerate()
+            .filter(|(j, _)| mask >> (j % 64) & 1 == 1)
+            .map(|(_, e)| e)
+            .collect();
+        let want_fj = subset.iter()
+            .filter(|e| e.satisfies(&slo))
+            .map(|e| e.mean_mac_fj)
+            .fold(f64::INFINITY, f64::min);
+        match route_among(subset.iter().copied(), &slo) {
+            Some(e) => {
+                assert!(e.satisfies(&slo), "{who}: subset pick violates");
+                assert!(subset.iter().any(|s| std::ptr::eq(*s, e)),
+                        "{who}: pick outside the subset");
+                assert_eq!(e.mean_mac_fj, want_fj,
+                           "{who}: subset pick not cheapest");
+            }
+            None => assert!(want_fj.is_infinite(),
+                            "{who}: subset refused with a satisfying point"),
+        }
+    }
+    // the sweep must genuinely exercise both outcomes under any seed
+    // (expected ~68% routed / ~21% unsatisfiable of 256 cases)
+    assert!(routed >= 80 && unsat >= 25,
+            "sweep degenerate: routed={routed} unsatisfiable={unsat} \
+             of {ROUTER_CASES} (master PROP_SEED={master})");
+    // malformed SLOs are Invalid — never Unsatisfiable, never a route
+    for bad in [AccuracySlo { max_nmed: Some(f64::NAN), min_psnr_db: None },
+                AccuracySlo { max_nmed: Some(-1e-3), min_psnr_db: None },
+                AccuracySlo { max_nmed: None,
+                              min_psnr_db: Some(f64::INFINITY) },
+                AccuracySlo { max_nmed: None, min_psnr_db: Some(0.0) },
+                AccuracySlo::default()] {
+        assert!(matches!(route(8, true, &bad), Err(RouteError::Invalid(_))),
+                "not refused as Invalid: {bad:?}");
+    }
+    // uncovered word shapes are typed-unsatisfiable even for the
+    // loosest SLO (the registry is 8-bit signed only)
+    let loose = AccuracySlo { max_nmed: Some(1.0), min_psnr_db: None };
+    assert!(matches!(route(16, true, &loose),
+                     Err(RouteError::Unsatisfiable { n_bits: 16, .. })));
+    assert!(matches!(route(8, false, &loose),
+                     Err(RouteError::Unsatisfiable { signed: false, .. })));
 }
 
 #[test]
