@@ -12,6 +12,18 @@ kernel into Python and a differential test against :func:`ref.mac_scalar`
 It exercises every family x signedness x k (including k > n clamps) over
 randomized multi-step chains and fails loudly on the first mismatching
 lane/plane. No JAX required — pure ints, like the scalar oracle.
+
+Since the metered fast path fused energy accounting into the lane
+kernel, the script also validates the fused meter's *structure*: the
+per-lane pre-step windows it charges (the k-bit low region of each
+lane's carry-save rails, gathered from the shared bit planes) must
+stream identically to the windows of the scalar reference walk. A
+deterministic synthetic per-MAC energy function stands in for the
+technology table so per-lane energy sums compare with exact integer
+equality, and the fixed-seed grand total is pinned as a golden — any
+drift in lane packing, window extraction, or charge ordering moves it.
+(Real-fJ agreement between the fused and scalar Rust meters is pinned
+separately by `rust/tests/energy_model.rs` / `prop_equiv.rs`.)
 """
 from __future__ import annotations
 
@@ -103,16 +115,42 @@ def lane_get(planes: list[int], l: int) -> int:
     return sum(((p >> l) & 1) << i for i, p in enumerate(planes))
 
 
+def synth_fj(win_s: int, win_kc: int, a: int, b: int) -> int:
+    """Deterministic synthetic per-MAC energy (integer, exact).
+
+    Stands in for the ``EnergyLut`` state-major table read: any change
+    to the pre-step window or operand encodings changes the value, so
+    summed charges only agree when the fused walk reads the identical
+    (window, a, b) stream as the scalar reference walk.
+    """
+    return (win_s * 1000003 ^ win_kc * 8191 ^ a * 131 ^ b) & 0xFFFFFFFF
+
+
+def lane_window(sp: list[int], kp: list[int], l: int, kb: int) -> tuple[int, int]:
+    """Lane ``l``'s pre-step automaton window: the ``kb`` low rail bits
+    gathered from the shared planes — exactly what the fused meter
+    charges before each ``mac64`` step."""
+    ws = sum(((sp[i] >> l) & 1) << i for i in range(kb))
+    wk = sum(((kp[i] >> l) & 1) << i for i in range(kb))
+    return ws, wk
+
+
 def lane_set(planes: list[int], l: int, v: int) -> None:
     for i in range(len(planes)):
         planes[i] = (planes[i] & ~(1 << l)) | (((v >> i) & 1) << l)
 
 
 def check_point(rng: random.Random, k: int, n: int, w: int, signed: bool,
-                family: str, steps: int = 5) -> None:
+                family: str, steps: int = 5) -> int:
+    """Differential chain check of one design point; returns the summed
+    per-lane synthetic energy (for the golden grand total)."""
+    kb = min(k, w)
+    kmask = (1 << kb) - 1
     sp, kp = [0] * w, [0] * w
     s = [rng.getrandbits(w) for _ in range(LANES)]
     kc = [rng.getrandbits(w) for _ in range(LANES)]
+    fused_e = [0] * LANES
+    scalar_e = [0] * LANES
     for l in range(LANES):
         lane_set(sp, l, s[l])
         lane_set(kp, l, kc[l])
@@ -121,8 +159,17 @@ def check_point(rng: random.Random, k: int, n: int, w: int, signed: bool,
         bs = [rng.getrandbits(n) for _ in range(LANES)]
         b_planes = [sum(((bs[l] >> j) & 1) << l for l in range(LANES))
                     for j in range(n)]
+        # fused meter: charge every lane its pre-step window energy from
+        # the shared planes, THEN run the compute step — the order the
+        # Rust kernel uses (EnergyLut::mac_fj_lanes before mac64)
+        for l in range(LANES):
+            ws, wk = lane_window(sp, kp, l, kb)
+            fused_e[l] += synth_fj(ws, wk, a, bs[l])
         lane_mac64(a, b_planes, sp, kp, k, n, w, signed, family)
         for l in range(LANES):
+            # scalar reference meter: same pre-step convention on the
+            # lane's private rails
+            scalar_e[l] += synth_fj(s[l] & kmask, kc[l] & kmask, a, bs[l])
             s[l], kc[l] = ref.mac_scalar(a, bs[l], s[l], kc[l], k, n, w,
                                          signed, family)
             got = (lane_get(sp, l), lane_get(kp, l))
@@ -130,19 +177,35 @@ def check_point(rng: random.Random, k: int, n: int, w: int, signed: bool,
                 raise SystemExit(
                     f"MISMATCH {family} n={n} k={k} signed={signed} "
                     f"step={step} lane={l}: lane={got} scalar={(s[l], kc[l])}")
+    for l in range(LANES):
+        if fused_e[l] != scalar_e[l]:
+            raise SystemExit(
+                f"ENERGY MISMATCH {family} n={n} k={k} signed={signed} "
+                f"lane={l}: fused={fused_e[l]} scalar={scalar_e[l]}")
+    return sum(fused_e)
+
+
+#: Golden grand total of the per-lane synthetic energy sums over the
+#: whole fixed-seed sweep. Deterministic: any change to lane packing,
+#: window extraction, charge ordering, or the PRNG draw order moves it.
+GOLDEN_ENERGY_SUM = 25235898928358
 
 
 def main() -> None:
     rng = random.Random(20260808)
     points = 0
+    energy_sum = 0
     for family in ref.FAMILIES:
         for signed in (False, True):
             for n, w in ((8, 24), (16, 40), (4, 16)):
                 for k in (0, 1, 3, n, n + 4):
-                    check_point(rng, k, n, w, signed, family)
+                    energy_sum += check_point(rng, k, n, w, signed, family)
                     points += 1
+    if energy_sum != GOLDEN_ENERGY_SUM:
+        raise SystemExit(f"ENERGY GOLDEN DRIFT: sweep total {energy_sum} "
+                         f"!= pinned {GOLDEN_ENERGY_SUM}")
     print(f"lane kernel == scalar oracle on {points} design points "
-          f"x {LANES} lanes: OK")
+          f"x {LANES} lanes (per-lane energy sums exact): OK")
 
 
 if __name__ == "__main__":

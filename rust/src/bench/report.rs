@@ -13,19 +13,22 @@
 //! 2. **roofline** — achieved blocked-kernel MACs/sec against a
 //!    bandwidth-bound peak derived from a *measured* sequential memory
 //!    sweep (the LUT microkernel reads 8 bytes of table per MAC);
-//! 3. **serve** — coordinator throughput on the `lut` backend over a
-//!    deterministic mixed-size request fleet, with p50/p90/p99/max
-//!    latency and the batched-dispatch counters;
-//! 4. **apps** — single-request `serve_dct` / `serve_edge` latency at the
-//!    paper's headline approximation levels;
-//! 5. **energy** — the data-dependent per-MAC model on a fixed synthetic
-//!    stream: mean fJ/MAC per design plus the 8×8-array savings vs the
-//!    conventional MAC (the golden-pinned headline), so the energy
-//!    trajectory is machine-readable across PRs alongside the perf one.
+//! 3. **metered_kernels** — the same GEMM with the energy meter
+//!    attached: metered-vs-unmetered A/B for both engines (word and lut,
+//!    each scalar and lane), the fused path's headline. Every metered
+//!    lane run is asserted bit-identical to the unmetered result and its
+//!    accumulated fJ cross-checked against the scalar meter to 1e-9-rel
+//!    before any timing;
+//! 4. **roofline** (cont.), **serve**, **apps**, **energy** — as above:
+//!    coordinator throughput on a deterministic mixed-size fleet,
+//!    single-request app latency, and the data-dependent per-MAC model
+//!    on a fixed synthetic stream (mean fJ/MAC per design plus the
+//!    8×8-array savings vs the conventional MAC).
 //!
 //! The kernel/serve sections run at the process-wide pinned block sizes
 //! (`--block-sizes` or the startup autotune; recorded under
-//! `config.blocks`).
+//! `config.blocks`) and the pinned fan-out tile (`--sw-tile` or its
+//! autotune; recorded under `config.sw_tile`).
 //!
 //! All sizes shrink with [`ReportConfig::size`] so CI can smoke-run the
 //! identical suite in seconds (`axsys bench-report --size 32`).
@@ -137,6 +140,95 @@ fn kernel_section(rc: &ReportConfig) -> (Json, f64, f64) {
              Json::Num(speedup(&m_scalar_w, &m_blocked_w)))
         .set("lut_vs_word_speedup", Json::Num(speedup(&m_word, &m_blocked)));
     (doc, m_blocked.throughput(macs), m_blocked_w.throughput(macs))
+}
+
+/// One metered/unmetered A/B pair for a single engine+kernel combination:
+/// times the closure with and without the meter and reports both rates,
+/// the metered/unmetered ratio, and the mean fJ/MAC of the metered runs.
+fn meter_ab(label: &str, budget: u64, macs: f64,
+            eng: &mut BlockedGemm,
+            elut: &std::sync::Arc<energy::EnergyLut>,
+            mut gemm: impl FnMut(&mut BlockedGemm) -> Vec<i64>) -> Json {
+    eng.set_meter(None);
+    let _ = eng.take_energy_fj();
+    let m_plain = run(&format!("bench-report {label} unmetered"), budget,
+                      || { black_box(gemm(black_box(eng))); });
+    eng.set_meter(Some(elut.clone()));
+    let _ = eng.take_energy_fj();
+    let mut fj_per_mac = 0.0;
+    let m_meter = run(&format!("bench-report {label} metered"), budget, || {
+        black_box(gemm(black_box(eng)));
+        fj_per_mac = eng.take_energy_fj() / macs;
+    });
+    eng.set_meter(None);
+    Json::obj()
+        .set("unmetered", meas_json(&m_plain, macs))
+        .set("metered", meas_json(&m_meter, macs))
+        .set("metered_vs_unmetered",
+             Json::Num(m_plain.median_ns / m_meter.median_ns.max(1e-12)))
+        .set("mean_mac_fj", Json::Num(fj_per_mac))
+}
+
+/// The fused-path headline: metered-vs-unmetered A/B for scalar/lane ×
+/// word/lut on the same `size³` GEMM the kernel section times. Before
+/// any timing, every metered variant is asserted bit-identical to the
+/// unmetered reference and the lane meters are cross-checked against
+/// the scalar meter to 1e-9 relative — a throughput number for a kernel
+/// that miscounts femtojoules is worthless.
+fn metered_kernels_section(rc: &ReportConfig) -> Json {
+    let s = rc.size;
+    let macs = (s * s * s) as f64;
+    let budget = ((macs / 1e6) as u64).clamp(40, 1500);
+    let cfg = PeConfig::new(8, true, Family::Proposed, rc.k);
+    let a = ints(7, s * s);
+    let b = ints(8, s * s);
+    let elut = energy::cached(&cfg).expect("8-bit point meters");
+    let want = word_matmul(&cfg, &a, &b, s, s, s);
+    let bs = crate::gemm::effective_blocks();
+    let mut lane = BlockedGemm::new(bs);
+    let mut scalar = BlockedGemm::new(bs);
+    scalar.set_lane_kernel(false);
+
+    // correctness gate: bits identical on every metered path, lane
+    // meters within 1e-9-rel of the scalar meter (at sizes below the
+    // 32-column lane gate both engines take the scalar walk and the
+    // cross-check degenerates to exact equality — still asserted)
+    let mut fj = |eng: &mut BlockedGemm, word: bool, label: &str| -> f64 {
+        eng.set_meter(Some(elut.clone()));
+        let _ = eng.take_energy_fj();
+        let got = if word { eng.matmul_word(&cfg, &a, &b, s, s, s) }
+                  else { eng.matmul(&cfg, &a, &b, s, s, s) };
+        assert_eq!(got, want, "{label}: metered bits != reference");
+        let e = eng.take_energy_fj();
+        assert!(e > 0.0, "{label}: meter accumulated nothing");
+        eng.set_meter(None);
+        e
+    };
+    let fj_word_scalar = fj(&mut scalar, true, "word scalar");
+    let fj_word_lane = fj(&mut lane, true, "word lane");
+    let fj_lut_scalar = fj(&mut scalar, false, "lut scalar");
+    let fj_lut_lane = fj(&mut lane, false, "lut lane");
+    for (l, sc, label) in [(fj_word_lane, fj_word_scalar, "word"),
+                           (fj_lut_lane, fj_lut_scalar, "lut")] {
+        assert!((l - sc).abs() <= 1e-9 * sc.abs(),
+                "{label}: lane meter {l} fJ != scalar meter {sc} fJ");
+    }
+
+    Json::obj()
+        .set("size", Json::Int(s as i64))
+        .set("k", Json::Int(rc.k as i64))
+        .set("word_lane", meter_ab("word lane", budget, macs, &mut lane,
+                                   &elut,
+                                   |e| e.matmul_word(&cfg, &a, &b, s, s, s)))
+        .set("word_scalar", meter_ab("word scalar", budget, macs,
+                                     &mut scalar, &elut,
+                                     |e| e.matmul_word(&cfg, &a, &b, s, s, s)))
+        .set("lut_lane", meter_ab("lut lane", budget, macs, &mut lane,
+                                  &elut,
+                                  |e| e.matmul(&cfg, &a, &b, s, s, s)))
+        .set("lut_scalar", meter_ab("lut scalar", budget, macs, &mut scalar,
+                                    &elut,
+                                    |e| e.matmul(&cfg, &a, &b, s, s, s)))
 }
 
 /// Measured sequential read bandwidth: best-of-5 summing sweep over a
@@ -314,9 +406,14 @@ pub fn collect(rc: &ReportConfig) -> Json {
         .map(|d| d.as_secs() as i64)
         .unwrap_or(0);
     let bs = crate::gemm::effective_blocks();
+    // the fan-out tile resolution mirrors CoordinatorConfig::tile_shape:
+    // process-wide pin (--sw-tile / autotune) first, blocks-derived
+    // fallback otherwise
+    let (tr, tc) = crate::coordinator::effective_sw_tile()
+        .unwrap_or((bs.mc, bs.nc * 4));
     let (kernels, lut_mps, word_mps) = kernel_section(rc);
     Json::obj()
-        .set("schema", Json::Str("axsys-bench-report/v3".into()))
+        .set("schema", Json::Str("axsys-bench-report/v4".into()))
         .set("generated_unix", Json::Int(generated_unix))
         .set("config", Json::obj()
             .set("size", Json::Int(rc.size as i64))
@@ -327,8 +424,12 @@ pub fn collect(rc: &ReportConfig) -> Json {
             .set("blocks", Json::obj()
                 .set("mc", Json::Int(bs.mc as i64))
                 .set("kc", Json::Int(bs.kc as i64))
-                .set("nc", Json::Int(bs.nc as i64))))
+                .set("nc", Json::Int(bs.nc as i64)))
+            .set("sw_tile", Json::obj()
+                .set("rows", Json::Int(tr as i64))
+                .set("cols", Json::Int(tc as i64))))
         .set("kernels", kernels)
+        .set("metered_kernels", metered_kernels_section(rc))
         .set("roofline", roofline_section(lut_mps, word_mps))
         .set("serve", serve_section(rc))
         .set("apps", apps_section(rc))
@@ -360,6 +461,38 @@ mod tests {
         }
         assert!(kernels.get("blocked_vs_naive_lut_speedup").is_some());
         assert!(kernels.get("lane_vs_scalar_word_speedup").is_some());
+        // the metered A/B: all four engine x kernel pairs, both sides
+        // timed, and a recorded fJ/MAC (size 16 sits below the 32-column
+        // lane gate, so this also covers the scalar-fallback shape —
+        // collect() ran the bit-equality and 1e-9-rel meter cross-check
+        // asserts on the way here)
+        let mk = doc.get("metered_kernels").expect("metered_kernels");
+        for key in ["word_lane", "word_scalar", "lut_lane", "lut_scalar"] {
+            let ab = mk.get(key).expect(key);
+            for side in ["unmetered", "metered"] {
+                match ab.get(side).and_then(|m| m.get("macs_per_sec")) {
+                    Some(&Json::Num(v)) => {
+                        assert!(v > 0.0, "{key}.{side}: {v}");
+                    }
+                    other => panic!("{key}.{side}: {other:?}"),
+                }
+            }
+            match (ab.get("metered_vs_unmetered"), ab.get("mean_mac_fj")) {
+                (Some(&Json::Num(r)), Some(&Json::Num(fj))) => {
+                    assert!(r > 0.0 && fj > 0.0, "{key}: {r} {fj}");
+                }
+                other => panic!("{key} ratios: {other:?}"),
+            }
+        }
+        // config carries the resolved fan-out tile
+        let tile = doc.get("config").and_then(|c| c.get("sw_tile"))
+            .expect("config.sw_tile");
+        match (tile.get("rows"), tile.get("cols")) {
+            (Some(&Json::Int(r)), Some(&Json::Int(c))) => {
+                assert!(r >= 1 && c >= 1, "{r}x{c}");
+            }
+            other => panic!("sw_tile: {other:?}"),
+        }
         // roofline: measured bandwidth and a finite efficiency
         let roof = doc.get("roofline").expect("roofline");
         for key in ["mem_bw_bytes_per_sec", "peak_macs_per_sec",

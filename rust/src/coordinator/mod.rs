@@ -44,6 +44,14 @@
 //! exact — the request total sums them in tile-commit order
 //! (`tests/prop_equiv.rs` pins both properties).
 //!
+//! Both fan-out knobs are measured, not guessed: [`autotune_sw_tile`]
+//! sweeps candidate tile shapes through a real worker pool at startup
+//! and pins the fastest (the CLI `--sw-tile RxC` overrides it), and
+//! [`calibrate_batch_macs`] sizes the drain budget from the measured
+//! *metered* kernel rate — the fused lane meter made metered and
+//! unmetered throughput comparable, so one rate sizes the drain for
+//! both kinds of traffic.
+//!
 //! ## Energy accounting
 //!
 //! Every request served by a meterable design point reports calibrated,
@@ -65,7 +73,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::apps::image::{psnr, Image};
@@ -139,12 +147,15 @@ pub struct CoordinatorConfig {
     /// Max tiles a worker pulls per batch.
     pub batch: usize,
     /// Output-tile geometry `(rows, cols)` for the software backends
-    /// (`Word`/`Lut`). `None` derives the row height from the process
-    /// block autotune ([`crate::gemm::effective_blocks`]`.mc`) and a
-    /// column width of four NC panels, so one large request splits into
-    /// MC-row blocks that fan out across idle workers while each tile
-    /// is still a full cache-blocked GEMM (wide enough for the 64-lane
-    /// word kernel). `Systolic`/`Pjrt` always tile by [`Self::sa_size`].
+    /// (`Word`/`Lut`). `None` falls back to the process-wide pinned
+    /// value when [`autotune_sw_tile`] / [`set_sw_tile_override`] (the
+    /// CLI `--sw-tile RxC`) pinned one, else derives the row height
+    /// from the process block autotune
+    /// ([`crate::gemm::effective_blocks`]`.mc`) and a column width of
+    /// four NC panels — so one large request splits into MC-row blocks
+    /// that fan out across idle workers while each tile is still a
+    /// full cache-blocked GEMM (wide enough for the 64-lane kernels).
+    /// `Systolic`/`Pjrt` always tile by [`Self::sa_size`].
     pub sw_tile: Option<(usize, usize)>,
     /// Opportunistic batch-drain MAC budget. A worker's first queue
     /// pull always blocks; it then keeps draining queued tiles only
@@ -153,6 +164,11 @@ pub struct CoordinatorConfig {
     /// coalesce deeply, but the large row-block tiles of one fanned-out
     /// request hit the budget after one or two pulls and spread across
     /// the pool instead of being vacuumed into a single worker's batch.
+    /// The default comes from [`default_batch_macs`]: a fixed 1 MiMAC
+    /// until [`calibrate_batch_macs`] pins a budget measured against
+    /// the *metered* kernel rate — since the metered path is as wide as
+    /// the unmetered one, a single measured rate now sizes the drain
+    /// for both kinds of traffic.
     pub batch_macs: u64,
 }
 
@@ -167,7 +183,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 256,
             batch: 16,
             sw_tile: None,
-            batch_macs: 1 << 20,
+            batch_macs: default_batch_macs(),
         }
     }
 }
@@ -180,10 +196,12 @@ impl CoordinatorConfig {
     fn tile_shape(&self) -> (usize, usize) {
         match self.backend {
             BackendKind::Word | BackendKind::Lut => {
-                let (tr, tc) = self.sw_tile.unwrap_or_else(|| {
-                    let bs = crate::gemm::effective_blocks();
-                    (bs.mc, bs.nc * 4)
-                });
+                let (tr, tc) = self.sw_tile
+                    .or_else(effective_sw_tile)
+                    .unwrap_or_else(|| {
+                        let bs = crate::gemm::effective_blocks();
+                        (bs.mc, bs.nc * 4)
+                    });
                 (tr.max(1), tc.max(1))
             }
             BackendKind::Systolic | BackendKind::Pjrt => {
@@ -191,6 +209,136 @@ impl CoordinatorConfig {
             }
         }
     }
+}
+
+/// The process-wide pinned fan-out tile shape (None until an override
+/// or [`autotune_sw_tile`] pins one). Same contract as the gemm block
+/// pin: explicit per-config [`CoordinatorConfig::sw_tile`] always wins,
+/// the pin covers configs that left it `None`, and the shape is purely
+/// a perf knob — tiling splits only output rows/columns, so it can
+/// never change the bits.
+static PINNED_SW_TILE: OnceLock<(usize, usize)> = OnceLock::new();
+
+/// The process-wide pinned batch-drain MAC budget (None until
+/// [`calibrate_batch_macs`] measures one).
+static PINNED_BATCH_MACS: OnceLock<u64> = OnceLock::new();
+
+/// How long one worker's batch drain should keep it busy. Long enough
+/// to amortize a dispatch, short enough that one large request's row
+/// blocks spread across the pool instead of queueing behind one
+/// worker. [`calibrate_batch_macs`] converts it to MACs at the
+/// *measured metered* kernel rate.
+const BATCH_DRAIN_TARGET_S: f64 = 2e-3;
+
+/// Parse the CLI `--sw-tile RxC` syntax, e.g. `"64x256"`. Both
+/// components must be positive integers.
+pub fn parse_sw_tile(s: &str) -> Option<(usize, usize)> {
+    let (r, c) = s.split_once('x')?;
+    let r: usize = r.parse().ok()?;
+    let c: usize = c.parse().ok()?;
+    if r == 0 || c == 0 {
+        return None;
+    }
+    Some((r, c))
+}
+
+/// Pin the process-wide fan-out tile shape (the CLI `--sw-tile`
+/// override). First pin wins — returns `false` if autotune or an
+/// earlier override already pinned a value (which then stays in force).
+pub fn set_sw_tile_override(t: (usize, usize)) -> bool {
+    PINNED_SW_TILE.set((t.0.max(1), t.1.max(1))).is_ok()
+}
+
+/// The pinned fan-out tile shape, if an override or
+/// [`autotune_sw_tile`] ran (`None` otherwise — configs then derive the
+/// shape from the block autotune, see [`CoordinatorConfig::sw_tile`]).
+pub fn effective_sw_tile() -> Option<(usize, usize)> {
+    PINNED_SW_TILE.get().copied()
+}
+
+/// Measure the fan-out tile shape the way [`crate::gemm::autotune_blocks`]
+/// measures MC/KC/NC: sweep a small candidate grid (row heights and
+/// column widths derived from the pinned blocking) by timing one large
+/// GEMM through a real pool of `workers` workers per candidate, and pin
+/// the fastest shape process-wide (once — later calls return the pinned
+/// value immediately). The CLI entry points call this at startup unless
+/// `--sw-tile` pinned an explicit shape. Bit-identity is unconditional
+/// on tile shape, so the sweep only ever changes speed.
+pub fn autotune_sw_tile(workers: usize) -> (usize, usize) {
+    *PINNED_SW_TILE.get_or_init(|| {
+        let bs = crate::gemm::effective_blocks();
+        let (m, kk, nn) = (192usize, 96usize, 192usize);
+        let a = crate::bench::xorshift_ints(21, m * kk);
+        let b = crate::bench::xorshift_ints(22, kk * nn);
+        let mut best = (f64::INFINITY, (bs.mc, bs.nc * 4));
+        for tr in [(bs.mc / 2).max(1), bs.mc] {
+            for tc in [bs.nc * 2, bs.nc * 4, bs.nc * 8] {
+                let c = Coordinator::new(CoordinatorConfig {
+                    workers: workers.max(2),
+                    backend: BackendKind::Lut,
+                    sw_tile: Some((tr, tc)),
+                    ..Default::default()
+                });
+                let req = || GemmRequest {
+                    a: a.clone(), b: b.clone(), m, kk, nn, k: 4,
+                    ..Default::default()
+                };
+                // warm (table builds, worker scratch), then best-of-2
+                c.call(req());
+                let mut dt = f64::INFINITY;
+                for _ in 0..2 {
+                    let t0 = Instant::now();
+                    std::hint::black_box(c.call(req()));
+                    dt = dt.min(t0.elapsed().as_secs_f64());
+                }
+                c.shutdown();
+                if dt < best.0 {
+                    best = (dt, (tr, tc));
+                }
+            }
+        }
+        best.1
+    })
+}
+
+/// The batch-drain MAC budget new configs should default to: the
+/// calibrated value if [`calibrate_batch_macs`] ran, a fixed 1 MiMAC
+/// otherwise (deterministic for tests and one-shot callers).
+pub fn default_batch_macs() -> u64 {
+    PINNED_BATCH_MACS.get().copied().unwrap_or(1 << 20)
+}
+
+/// Measure the *metered* blocked-kernel rate and pin the batch-drain
+/// MAC budget to [`BATCH_DRAIN_TARGET_S`] worth of it (once — later
+/// calls return the pinned value immediately). Before the fused lane
+/// meter, the budget was sized against the unmetered MACs/s estimate
+/// only, so metered traffic — an order of magnitude slower on the old
+/// scalar walk — drained batches far past the latency target; now the
+/// metered and unmetered rates are close and one measured number sizes
+/// both. Runs with the meter attached on the LUT serving point; the
+/// result is clamped to a sane range so a noisy measurement can never
+/// starve coalescing (floor) or disable fan-out (ceiling).
+pub fn calibrate_batch_macs() -> u64 {
+    *PINNED_BATCH_MACS.get_or_init(|| {
+        let cfg = PeConfig::new(8, true, Family::Proposed, 4);
+        let s = 96usize;
+        let a = crate::bench::xorshift_ints(31, s * s);
+        let b = crate::bench::xorshift_ints(32, s * s);
+        let mut eng = BlockedGemm::single_threaded(
+            crate::gemm::effective_blocks());
+        eng.set_meter(energy::cached(&cfg));
+        // warm: energy/product table builds + packing scratch
+        eng.matmul(&cfg, &a, &b, s, s, s);
+        let mut dt = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            std::hint::black_box(eng.matmul(&cfg, &a, &b, s, s, s));
+            dt = dt.min(t0.elapsed().as_secs_f64());
+        }
+        let _ = eng.take_energy_fj();
+        let rate = (s * s * s) as f64 / dt.max(1e-9);
+        ((rate * BATCH_DRAIN_TARGET_S) as u64).clamp(1 << 16, 1 << 24)
+    })
 }
 
 /// One GEMM request: `C(m x nn) = A(m x kk) @ B(kk x nn)` at level `k`.
@@ -1999,6 +2147,54 @@ mod tests {
         assert_eq!(s.slo_requests, 1);
         assert_eq!(s.app(AppKind::Edge).requests, 1);
         c.shutdown();
+    }
+
+    #[test]
+    fn sw_tile_parses_pins_once_and_yields_to_explicit_config() {
+        for bad in ["", "8", "x8", "8x", "0x8", "8x0", "axb", "8x8x8"] {
+            assert_eq!(parse_sw_tile(bad), None, "{bad:?}");
+        }
+        assert_eq!(parse_sw_tile("16x128"), Some((16, 128)));
+        // whoever pins first (this override or a concurrent autotune)
+        // wins for the process; later pins must not repin. Tile shape
+        // is bit-safe, so sharing the pin with other tests is safe.
+        let first = if set_sw_tile_override((16, 128)) {
+            (16, 128)
+        } else {
+            effective_sw_tile().expect("a pin exists if override lost")
+        };
+        assert_eq!(effective_sw_tile(), Some(first));
+        assert!(!set_sw_tile_override((1, 1)));
+        assert_eq!(effective_sw_tile(), Some(first));
+        assert_eq!(autotune_sw_tile(2), first,
+                   "autotune returns the pinned value without sweeping");
+        // the pin covers configs without an explicit shape ...
+        let cfg = CoordinatorConfig {
+            backend: BackendKind::Lut, ..Default::default()
+        };
+        assert_eq!(cfg.tile_shape(), first);
+        // ... but an explicit per-config shape still wins
+        let cfg = CoordinatorConfig {
+            backend: BackendKind::Word, sw_tile: Some((8, 48)),
+            ..Default::default()
+        };
+        assert_eq!(cfg.tile_shape(), (8, 48));
+        // and the per-tile device backends ignore it entirely
+        let cfg = CoordinatorConfig {
+            backend: BackendKind::Systolic, sa_size: 8, ..Default::default()
+        };
+        assert_eq!(cfg.tile_shape(), (8, 8));
+    }
+
+    #[test]
+    fn batch_macs_calibration_pins_once_within_bounds() {
+        let v = calibrate_batch_macs();
+        assert!((1u64 << 16..=1 << 24).contains(&v),
+                "calibrated budget out of range: {v}");
+        assert_eq!(default_batch_macs(), v);
+        assert_eq!(calibrate_batch_macs(), v, "second call returns the pin");
+        assert_eq!(CoordinatorConfig::default().batch_macs, v,
+                   "new configs pick up the calibrated budget");
     }
 
     #[test]

@@ -244,22 +244,59 @@ impl EnergyLut {
                        | (kc & kmask) as usize] as usize
     }
 
+    /// Advance the automaton state by one MAC from operand encodings.
+    /// The fused lane kernels in [`crate::gemm`] chase one state per
+    /// lane with this instead of re-deriving it from live rails; the
+    /// two are equal by construction (`state_of_rails` after a step ==
+    /// `next_state` of the pre-step state — pinned by
+    /// `tests::rails_state_lookup_matches_chain_walk`).
+    #[inline(always)]
+    pub(crate) fn next_state(&self, state: usize, a_enc: u64, b_enc: u64)
+                             -> usize {
+        if self.kb == 0 {
+            return 0;
+        }
+        let kb = self.kb as usize;
+        let kmask = (1usize << kb) - 1;
+        self.plut.next_state(state, ((a_enc as usize & kmask) << kb)
+                             | (b_enc as usize & kmask))
+    }
+
+    /// Fused lane-group metering step: charge every lane of one
+    /// lane-group frame its canonical pre-step energy (state-major
+    /// table gathers — 64 independent read streams), then advance the
+    /// per-lane automaton states. `b_enc`/`st` are the live lanes of
+    /// one `(group, t)` frame; the broadcast A operand is shared.
+    /// Returns the frame's femtojoules. This is the whole metering
+    /// cost of the 64-lane word kernel: the compute planes are never
+    /// touched, so it cannot change the bits.
+    #[inline]
+    pub(crate) fn mac_fj_lanes(&self, a_enc: u64, b_enc: &[u16],
+                               st: &mut [u16]) -> f64 {
+        let n = self.cfg.n as usize;
+        let m = (1usize << n) - 1;
+        let ahi = (a_enc as usize & m) << n;
+        let mut fj = 0.0;
+        for (s, &be) in st.iter_mut().zip(b_enc) {
+            let bi = be as usize & m;
+            fj += self.e[((*s as usize) << (2 * n)) | ahi | bi];
+            *s = self.next_state(*s as usize, a_enc, be as u64) as u16;
+        }
+        fj
+    }
+
     /// Aggregate one MAC chain's energy through the tables (state from
     /// reset; fJ). Must equal [`Replayer::chain_fj`] *exactly* — the
     /// consistency contract `tests/energy_model.rs` enforces.
     pub fn chain_fj(&self, ops: &[(i64, i64)]) -> f64 {
         let n = self.cfg.n as usize;
-        let kb = self.kb as usize;
-        let kmask = (1usize << kb) - 1;
         let mut st = 0usize;
         let mut total = 0.0;
         for &(a, b) in ops {
             let ae = self.cfg.encode(a) as usize;
             let be = self.cfg.encode(b) as usize;
             total += self.e[(st << (2 * n)) | (ae << n) | be];
-            if kb > 0 {
-                st = self.plut.next_state(st, ((ae & kmask) << kb) | (be & kmask));
-            }
+            st = self.next_state(st, ae as u64, be as u64);
         }
         total
     }
@@ -599,6 +636,50 @@ mod tests {
             kc = k2;
         }
         assert_eq!(total, lut.chain_fj(&ops));
+    }
+
+    #[test]
+    fn fused_lane_metering_equals_per_lane_chain_walks_exactly() {
+        // mac_fj_lanes charges frame-major (all lanes of step t, then
+        // t+1); per lane that is exactly the chain walk — same table
+        // entries, same per-lane state sequence, and f64 addition over
+        // the same per-lane value sequence, so the per-lane partial
+        // sums are reproduced exactly, not just to rounding.
+        let d = Design::approximate(8, Signedness::Signed, Family::Proposed, 3);
+        let lut = EnergyLut::try_build(&d).unwrap();
+        let cfg = lut.cfg;
+        let lanes = 5usize;
+        let steps = 40usize;
+        let chains: Vec<Vec<(i64, i64)>> = (0..lanes)
+            .map(|l| chain(100 + l as u64, steps)).collect();
+        // the broadcast A operand is shared across lanes (the lane
+        // kernel's layout), so overwrite each chain's a with lane 0's
+        let a_ops: Vec<i64> = chains[0].iter().map(|o| o.0).collect();
+        let mut st = vec![0u16; lanes];
+        let mut total = 0.0;
+        for (t, &a) in a_ops.iter().enumerate() {
+            let be: Vec<u16> = chains.iter()
+                .map(|c| cfg.encode(c[t].1) as u16).collect();
+            total += lut.mac_fj_lanes(cfg.encode(a), &be, &mut st);
+        }
+        let want: f64 = chains.iter().map(|c| {
+            let ops: Vec<(i64, i64)> = c.iter().enumerate()
+                .map(|(t, o)| (a_ops[t], o.1)).collect();
+            lut.chain_fj(&ops)
+        }).sum();
+        assert!(total > 0.0);
+        assert!((total - want).abs() <= 1e-9 * want,
+                "fused {total} vs per-lane chains {want}");
+        // final per-lane states equal the scalar rails-derived states
+        let plan = MacPlan::new(&cfg);
+        for (l, c) in chains.iter().enumerate() {
+            let (mut s, mut kc) = (0u64, 0u64);
+            for (t, o) in c.iter().enumerate() {
+                let (ae, be) = (cfg.encode(a_ops[t]), cfg.encode(o.1));
+                (s, kc) = mac_step_planned(&plan, ae, be, s, kc);
+            }
+            assert_eq!(st[l] as usize, lut.state_of_rails(s, kc), "lane {l}");
+        }
     }
 
     #[test]

@@ -32,6 +32,28 @@
 //! scalar `& word_mask()`). `tests::lane_matches_planned_chains` pins
 //! this per-lane over every family × signedness × k, and the blocked
 //! driver's fuzz (`tests/prop_equiv.rs`) pins the full GEMM path.
+//!
+//! ## Fused energy metering
+//!
+//! Attaching a meter no longer drops this path back to the scalar walk.
+//! The per-MAC energy is an exact function of `(a, b, window state)`
+//! (DESIGN.md §4), and the window state is a bijection of the low-`k`
+//! rail bits the planes already carry — so the metered driver
+//! (`gemm::drive_rows_word_lanes`) chases one `u16` automaton state per
+//! lane beside the planes and charges each `(group, t)` frame with a
+//! single 64-lane state-major table gather
+//! (`energy::EnergyLut::mac_fj_lanes`) *before* the frame's [`mac64`]
+//! step — the same pre-step read the scalar meter does via
+//! `state_of_rails`. The meter reads lane-major B encodings stashed at
+//! pack time and never touches a compute plane, so metered lane results
+//! are bit-identical to unmetered ones and the metered total equals the
+//! scalar meter's to f64 summation order (identical per-MAC reads).
+//! Pinned by `gemm::tests::metered_lane_kernels_match_the_scalar_meter`,
+//! the metered-lane fuzz in `tests/prop_equiv.rs`, and the extended
+//! Python oracle (`python/compile/kernels/lanes_check.py`, which walks
+//! per-lane energy-index streams against scalar rail windows).
+//!
+//! [`mac64`]: LanePlan::mac64
 
 use crate::pe::word::PeConfig;
 use crate::Family;

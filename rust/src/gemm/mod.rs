@@ -10,11 +10,13 @@
 //!   kernel is plain wrapping-i64 MACs on decoded operands (same bits as
 //!   the word model's exact fast path, tested there);
 //! * **lut** (`k > 0`, LUT-compilable point): two table reads + two adds
-//!   per MAC against the process-shared [`ProductLut`] tables, 8
-//!   accumulator/automaton chains in flight;
+//!   per MAC against the process-shared [`ProductLut`] tables — 64
+//!   accumulator/automaton chains in flight on wide sweeps, 8
+//!   otherwise;
 //! * **word** (`k > 0`, non-compilable point): the bit-plane walk — the
-//!   64-lane transposed kernel ([`lanes`]) on unmetered wide blocks,
-//!   the scalar [`mac_step_planned`] 4-chain kernel otherwise.
+//!   64-lane transposed kernel ([`lanes`]) on wide blocks (metered or
+//!   not), the scalar [`mac_step_planned`] 4-chain kernel on narrow
+//!   (< 32-column) fallbacks.
 //!
 //! ## Why blocking helps, and why it cannot change the bits
 //!
@@ -53,8 +55,12 @@
 //! An engine can carry an [`EnergyLut`] meter ([`BlockedGemm::set_meter`]):
 //! each kernel then charges every MAC its canonical data-dependent energy
 //! with one extra table read — the LUT kernel indexes with the automaton
-//! state it already chases, the word kernel recovers the state from its
-//! live rails, the exact kernel uses the stateless `k = 0` row. The
+//! state it already chases, the scalar word kernel recovers the state
+//! from its live rails, the 64-lane word kernel chases one automaton
+//! state per lane next to the compute planes and charges whole lane
+//! frames per step (`EnergyLut::mac_fj_lanes` — the fused metering
+//! path, so attaching a meter no longer drops the hot path to the
+//! scalar walk), the exact kernel uses the stateless `k = 0` row. The
 //! accumulated femtojoules drain through [`BlockedGemm::take_energy_fj`].
 //! Metering only *reads* operands and states the kernels already hold —
 //! it cannot reorder a MAC chain, so metered results are bit-identical
@@ -212,6 +218,13 @@ struct Scratch {
     spl: Vec<u64>,
     /// Per-lane-group carry planes of the current block (lane word kernel).
     kpl: Vec<u64>,
+    /// Per-(group, t, lane) B encodings of the current panel (metered
+    /// lane word kernel: the meter gathers them lane-major, the planes
+    /// in `bpl` are bit-major).
+    ben: Vec<u16>,
+    /// Per-(row, group, lane) automaton states of the current block
+    /// (metered lane word kernel).
+    lst: Vec<u16>,
 }
 
 /// Dimensions of one (block, panel) microkernel invocation. The A
@@ -252,8 +265,9 @@ pub struct BlockedGemm {
     pub blocks: BlockSizes,
     /// Whether large problems may fan out across scoped threads.
     parallel: bool,
-    /// Whether the unmetered word path may use the 64-lane bit-plane
-    /// kernel ([`lanes`]) on wide-enough blocks (default on).
+    /// Whether the word path may use the 64-lane bit-plane kernel
+    /// ([`lanes`]) on wide-enough blocks — metered or not — and the
+    /// LUT path its 64-chain sweep (default on).
     lanes: bool,
     scratch: Scratch,
     /// Optional per-MAC energy meter (see module docs, §Energy metering).
@@ -291,10 +305,12 @@ impl BlockedGemm {
                       energy_fj: 0.0 }
     }
 
-    /// Enable/disable the 64-lane word kernel (default on). The lane
-    /// and scalar kernels are bit-identical — this exists for A/B
-    /// benchmarking (`bench-report` reports the speedup) and for the
-    /// differential fuzz that proves the identity.
+    /// Enable/disable the 64-lane kernels (default on): the word
+    /// engine's bit-plane lane kernel and the LUT engine's 64-chain
+    /// sweep. The lane and scalar kernels are bit-identical (metered
+    /// or not) — this exists for A/B benchmarking (`bench-report`
+    /// reports the speedups) and for the differential fuzz that proves
+    /// the identity.
     pub fn set_lane_kernel(&mut self, on: bool) {
         self.lanes = on;
     }
@@ -423,16 +439,17 @@ impl BlockedGemm {
 fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
               meter: Option<&EnergyLut>, lanes: bool, i0: usize,
               out_rows: &mut [i64]) -> f64 {
-    // The 64-lane transposed kernel covers the unmetered word path on
-    // wide-enough outputs: metering needs the scalar per-MAC rails
-    // (`EnergyLut::state_of_rails` reads them before every step), and
-    // narrow outputs under-fill the lane groups, so both keep the
-    // scalar 4-chain kernel. The choice is fixed per call — block state
-    // layouts never mix.
+    // The 64-lane transposed kernel covers the word path on wide-enough
+    // outputs, metered or not: the meter chases one automaton state per
+    // lane next to the compute planes (`EnergyLut::mac_fj_lanes`), so
+    // it no longer needs the scalar rails. Narrow outputs under-fill
+    // the lane groups, so they keep the scalar 4-chain kernel — the
+    // scalar walk is solely the < LANE_MIN_COLS fallback. The choice is
+    // fixed per call — block state layouts never mix.
     if let Eng::Word(plan) = eng {
-        if lanes && meter.is_none() && op.nn >= LANE_MIN_COLS {
-            drive_rows_word_lanes(plan, bs, sc, op, i0, out_rows);
-            return 0.0;
+        if lanes && op.nn >= LANE_MIN_COLS {
+            return drive_rows_word_lanes(plan, bs, sc, op, meter, i0,
+                                         out_rows);
         }
     }
     let nn = op.nn;
@@ -518,7 +535,7 @@ fn drive_rows(eng: &Eng, bs: &BlockSizes, sc: &mut Scratch, op: &Operands,
                     Eng::Lut(l) => {
                         pack_b_enc16(&l.cfg, sc, op, bt, &sh);
                         kernel_lut(l, &sh, &sc.a16, &sc.b16, &mut sc.acc,
-                                   &mut sc.st, meter)
+                                   &mut sc.st, meter, lanes)
                     }
                     Eng::Word(plan) => {
                         pack_b_enc64(&plan.cfg, sc, op, bt, &sh);
@@ -568,14 +585,28 @@ const LANE_MIN_COLS: usize = 32;
 /// ([`lanes::LanePlan::mac64`]): same MC×KC×NC block walk and the same
 /// per-element KC-panel state carrying as [`drive_rows`], but the block
 /// state lives as bit-planes per 64-output-column lane group instead of
-/// scalar rails. Unmetered only (see the gate in [`drive_rows`]).
+/// scalar rails. Returns the femtojoules metered over these rows (0.0
+/// unmetered).
+///
+/// Metering is fused into the lane loop: one `u16` automaton state per
+/// (block row, lane) is reset with the block and chased across KC
+/// panels exactly like the plane state, and each `(group, t)` frame
+/// charges all live lanes with one state-major table gather
+/// ([`EnergyLut::mac_fj_lanes`]) *before* its `mac64` step — the same
+/// pre-step convention as the scalar meter. Padding lanes of a short
+/// group are never charged. The meter only reads the lane-major B
+/// encodings stashed at pack time (`Scratch::ben`) and its own state
+/// row — the compute planes are untouched, so metering cannot change
+/// the bits; the metered total equals the scalar meter's to summation
+/// order (every per-MAC table read is identical).
 ///
 /// Bit-identity: a lane is one output column; its plane bits walk the
 /// exact `mac_step_planned` chain (pinned per-lane in `lanes::tests`),
 /// and the block/panel order here never reassociates any chain — it is
 /// the same schedule as the scalar driver.
 fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
-                         op: &Operands, i0: usize, out_rows: &mut [i64]) {
+                         op: &Operands, meter: Option<&EnergyLut>, i0: usize,
+                         out_rows: &mut [i64]) -> f64 {
     let lp = LanePlan::new(&plan.cfg);
     let w = lp.width();
     let nb = lp.b_planes();
@@ -598,6 +629,11 @@ fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
     sc.spl.resize(mc * groups_max * w, 0);
     sc.kpl.resize(mc * groups_max * w, 0);
     sc.bpl.resize(groups_max * kc * nb, 0);
+    if meter.is_some() {
+        sc.ben.resize(groups_max * kc * LANES, 0);
+        sc.lst.resize(mc * groups_max * LANES, 0);
+    }
+    let mut energy_fj = 0f64;
     let mut benc = [0u64; LANES];
     let mut icb = 0;
     while icb < h {
@@ -608,6 +644,11 @@ fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
             let groups = nw.div_ceil(LANES);
             sc.spl[..mh * groups * w].fill(0);
             sc.kpl[..mh * groups * w].fill(0);
+            if meter.is_some() {
+                // per-lane automaton states reset with the block, like
+                // the plane state (and the scalar rails)
+                sc.lst[..mh * groups * LANES].fill(0);
+            }
             // KC panels in increasing t order: plane state survives from
             // one panel to the next, same contract as the scalar driver
             let mut pcb = 0;
@@ -625,6 +666,13 @@ fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
                         }
                         pack_b_lanes(nb, &benc[..gl],
                                      &mut sc.bpl[(g * kc + t) * nb..][..nb]);
+                        if meter.is_some() {
+                            // lane-major copy for the meter's gathers
+                            let dst = &mut sc.ben[(g * kc + t) * LANES..][..gl];
+                            for (d, &e) in dst.iter_mut().zip(&benc[..gl]) {
+                                *d = e as u16;
+                            }
+                        }
                     }
                 }
                 for i in 0..mh {
@@ -633,9 +681,26 @@ fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
                         let base = (i * groups + g) * w;
                         let (spl, kpl) = (&mut sc.spl[base..base + w],
                                           &mut sc.kpl[base..base + w]);
-                        for (t, &av) in arow.iter().enumerate() {
-                            lp.mac64(av, &sc.bpl[(g * kc + t) * nb..][..nb],
-                                     spl, kpl);
+                        if let Some(el) = meter {
+                            // fused metering: charge the frame's live
+                            // lanes at their pre-step states, then step
+                            let gl = (nw - g * LANES).min(LANES);
+                            let lb = (i * groups + g) * LANES;
+                            let lst = &mut sc.lst[lb..lb + gl];
+                            for (t, &av) in arow.iter().enumerate() {
+                                energy_fj += el.mac_fj_lanes(
+                                    av, &sc.ben[(g * kc + t) * LANES..][..gl],
+                                    lst);
+                                lp.mac64(av,
+                                         &sc.bpl[(g * kc + t) * nb..][..nb],
+                                         spl, kpl);
+                            }
+                        } else {
+                            for (t, &av) in arow.iter().enumerate() {
+                                lp.mac64(av,
+                                         &sc.bpl[(g * kc + t) * nb..][..nb],
+                                         spl, kpl);
+                            }
                         }
                     }
                 }
@@ -658,6 +723,7 @@ fn drive_rows_word_lanes(plan: &MacPlan, bs: &BlockSizes, sc: &mut Scratch,
         }
         icb += mh;
     }
+    energy_fj
 }
 
 /// Copy-pack the B(pc0.., col0..) panel transposed as decoded i64
@@ -756,6 +822,14 @@ fn kernel_exact(sh: &BlockShape, ai: &[i64], bi: &[i64], acc: &mut [i64],
 /// load/ALU ports without spilling the chain registers.
 const LUT_CHAINS: usize = 8;
 
+/// Chains per sweep of the LUT microkernel's lane variant: 64
+/// independent chains — the word engine's lane width — batched through
+/// the state-major product/energy/transition tables, so the memory
+/// system sees 64 concurrent read streams per step instead of 8. The
+/// chain state spills to L1 (1.5 KiB per sweep), which table-read
+/// latency hides; narrow remainders fall back to the 8-chain sweep.
+const LUT_LANES: usize = 64;
+
 /// Mask extracting the next-state index out of a packed
 /// [`ProductLut::trans_entry`] (`err i16 << 16 | state u16`). The width
 /// is load-bearing: a state index wider than 16 bits would be silently
@@ -764,14 +838,19 @@ const LUT_CHAINS: usize = 8;
 /// the two layers to the same contract).
 const STATE_MASK: usize = 0xFFFF;
 
-/// Table-driven microkernel: [`LUT_CHAINS`] output columns advance
-/// together, so eight independent (accumulator, automaton-state) chains
-/// are in flight — the ILP the naive per-element loop cannot expose.
-/// With a meter, each MAC adds one energy-table read indexed by the very
-/// automaton state the kernel chases anyway. Returns metered fJ.
+/// Table-driven microkernel: [`LUT_LANES`] output columns advance
+/// together on wide sweeps (when `lanes` is on), [`LUT_CHAINS`]
+/// otherwise — many independent (accumulator, automaton-state) chains
+/// in flight is the ILP the naive per-element loop cannot expose, and
+/// the 64-chain sweep additionally batches the state-major table reads
+/// into 64 concurrent streams. Chain grouping cannot change the bits:
+/// every chain is one output column walking its own full-`t` order.
+/// With a meter, each MAC adds one energy-table read indexed by the
+/// very automaton state the kernel chases anyway. Returns metered fJ.
+#[allow(clippy::too_many_arguments)]
 fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
-              acc: &mut [i64], st: &mut [u16], elut: Option<&EnergyLut>)
-              -> f64 {
+              acc: &mut [i64], st: &mut [u16], elut: Option<&EnergyLut>,
+              lanes: bool) -> f64 {
     let (mh, nw, kw) = (sh.mh, sh.nw, sh.kw);
     let n = lut.cfg.n;
     let two_n = 2 * n as usize;
@@ -793,6 +872,34 @@ fn kernel_lut(lut: &ProductLut, sh: &BlockShape, a16: &[u16], b16: &[u16],
         let racc = &mut acc[i * nw..(i + 1) * nw];
         let rst = &mut st[i * nw..(i + 1) * nw];
         let mut j = 0;
+        while lanes && j + LUT_LANES <= nw {
+            let b: [&[u16]; LUT_LANES] =
+                core::array::from_fn(|u| &b16[(j + u) * kw..(j + u + 1) * kw]);
+            let mut c: [i64; LUT_LANES] =
+                core::array::from_fn(|u| racc[j + u]);
+            let mut s: [usize; LUT_LANES] =
+                core::array::from_fn(|u| rst[j + u] as usize);
+            for t in 0..kw {
+                let ai = arow[t] as usize;
+                let ahi = ai << n;
+                let alo = (ai & kmask) << kb;
+                for u in 0..LUT_LANES {
+                    let bi = b[u][t] as usize;
+                    c[u] += lut.prod_entry(ahi | bi);
+                    if let Some(el) = elut {
+                        efj += el.entry((s[u] << two_n) | ahi | bi);
+                    }
+                    let e = lut.trans_entry(s[u], alo | (bi & kmask));
+                    c[u] += (e >> 16) as i16 as i64;
+                    s[u] = e as usize & STATE_MASK;
+                }
+            }
+            for u in 0..LUT_LANES {
+                racc[j + u] = c[u];
+                rst[j + u] = s[u] as u16;
+            }
+            j += LUT_LANES;
+        }
         while j + LUT_CHAINS <= nw {
             let b: [&[u16]; LUT_CHAINS] =
                 core::array::from_fn(|u| &b16[(j + u) * kw..(j + u + 1) * kw]);
@@ -1106,12 +1213,59 @@ mod tests {
     }
 
     #[test]
-    fn metered_word_path_ignores_lane_toggle() {
-        // a metered engine must take the scalar path (the meter reads
-        // per-MAC rails) whatever the toggle says — bits and energy both
-        let (m, kk, nn) = (4usize, 9usize, 36usize);
+    fn metered_lane_kernels_match_the_scalar_meter() {
+        // the fused metering path: with the lane kernels engaged (wide
+        // outputs, ragged 70-column tail crossing lane groups and the
+        // 8-chain remainder), a metered engine must produce the same
+        // bits AND the same femtojoules (to summation-order rounding)
+        // as the scalar metered walk — for both the word and the lut
+        // engine, across KC panel boundaries that carry lane state
+        let (m, kk, nn) = (7usize, 13usize, 70usize);
         let a = ints(41, m * kk);
         let b = ints(42, kk * nn);
+        let bs = BlockSizes { mc: 4, kc: 5, nc: 70 };
+        for family in [Family::Proposed, Family::Loa] {
+            for k in [2u32, 3, 7] {
+                let cfg = PeConfig::new(8, true, family, k);
+                let Some(elut) = crate::energy::cached(&cfg) else {
+                    continue;
+                };
+                let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+                let mut lane = BlockedGemm::single_threaded(bs);
+                let mut scal = BlockedGemm::single_threaded(bs);
+                scal.set_lane_kernel(false);
+                lane.set_meter(Some(elut.clone()));
+                scal.set_meter(Some(elut.clone()));
+                for engine in ["word", "lut"] {
+                    let (got_l, got_s) = if engine == "word" {
+                        (lane.matmul_word(&cfg, &a, &b, m, kk, nn),
+                         scal.matmul_word(&cfg, &a, &b, m, kk, nn))
+                    } else {
+                        (lane.matmul(&cfg, &a, &b, m, kk, nn),
+                         scal.matmul(&cfg, &a, &b, m, kk, nn))
+                    };
+                    assert_eq!(got_l, want,
+                               "{engine} lanes {family:?} k={k}");
+                    assert_eq!(got_s, want,
+                               "{engine} scalar {family:?} k={k}");
+                    let (e_l, e_s) = (lane.take_energy_fj(),
+                                      scal.take_energy_fj());
+                    assert!(e_s > 0.0, "{engine} {family:?} k={k}");
+                    assert!((e_l - e_s).abs() <= 1e-9 * e_s,
+                            "{engine} {family:?} k={k}: lane {e_l} fJ \
+                             vs scalar {e_s} fJ");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metered_narrow_outputs_fall_back_to_the_scalar_walk() {
+        // below LANE_MIN_COLS the metered word path keeps the scalar
+        // 4-chain kernel — bits and a positive metered total either way
+        let (m, kk, nn) = (4usize, 9usize, 12usize);
+        let a = ints(43, m * kk);
+        let b = ints(44, kk * nn);
         let cfg = PeConfig::new(8, true, Family::Proposed, 3);
         let elut = crate::energy::cached(&cfg).expect("8-bit tabulates");
         let want = word_matmul(&cfg, &a, &b, m, kk, nn);
@@ -1119,6 +1273,29 @@ mod tests {
         eng.set_meter(Some(elut));
         assert_eq!(eng.matmul_word(&cfg, &a, &b, m, kk, nn), want);
         assert!(eng.take_energy_fj() > 0.0, "meter must still run");
+    }
+
+    #[test]
+    fn lut_lane_sweep_is_bit_identical_to_the_chain_sweep() {
+        // 64-chain vs 8-chain LUT sweeps over a width that exercises
+        // the lane sweep, the chain sweep and the scalar remainder in
+        // one block row (unmetered; the metered A/B lives in
+        // metered_lane_kernels_match_the_scalar_meter)
+        let (m, kk, nn) = (5usize, 23usize, 77usize);
+        let a = ints(45, m * kk);
+        let b = ints(46, kk * nn);
+        let bs = BlockSizes { mc: 3, kc: 7, nc: 77 };
+        for family in Family::ALL {
+            let cfg = PeConfig::new(8, true, family, 4);
+            let want = word_matmul(&cfg, &a, &b, m, kk, nn);
+            let mut on = BlockedGemm::single_threaded(bs);
+            let mut off = BlockedGemm::single_threaded(bs);
+            off.set_lane_kernel(false);
+            assert_eq!(on.matmul(&cfg, &a, &b, m, kk, nn), want,
+                       "lanes on: {family:?}");
+            assert_eq!(off.matmul(&cfg, &a, &b, m, kk, nn), want,
+                       "lanes off: {family:?}");
+        }
     }
 
     #[test]

@@ -81,8 +81,8 @@ const COMMANDS: &[Cmd] = &[
     Cmd { name: "serve",
           args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
                  [--app gemm|{APPS}] [--k K] [--slo SPEC] \
-                 [--block-sizes MCxKCxNC] [--listen ADDR] [--shards N] \
-                 [--max-inflight N] [--port-file PATH]",
+                 [--block-sizes MCxKCxNC] [--sw-tile RxC] [--listen ADDR] \
+                 [--shards N] [--max-inflight N] [--port-file PATH]",
           help: "run the GEMM coordinator on synthetic/app traffic, or \
                  serve it over TCP (--listen); --slo routes requests by \
                  accuracy (nmed=X and/or psnr=Y)" },
@@ -105,7 +105,7 @@ const COMMANDS: &[Cmd] = &[
                  at real workload activity" },
     Cmd { name: "bench-report",
           args: "[--size S] [--requests R] [--workers W] [--k K] \
-                 [--block-sizes MCxKCxNC] [--out PATH]",
+                 [--block-sizes MCxKCxNC] [--sw-tile RxC] [--out PATH]",
           help: "fixed perf suite (kernels + bandwidth roofline) -> \
                  BENCH_hotpath.json at the repo root" },
     Cmd { name: "emit-verilog", args: "[--out DIR]",
@@ -185,6 +185,33 @@ fn pin_block_sizes(rest: &[String]) -> Result<(), i32> {
         let bs = autotune_blocks();
         println!("  blocks: {}x{}x{} (startup autotune; pin with \
                   --block-sizes)", bs.mc, bs.kc, bs.nc);
+    }
+    Ok(())
+}
+
+/// Pin the process-wide fan-out tile shape: `--sw-tile RxC` wins,
+/// otherwise the startup autotune sweep measures it against live
+/// coordinator pools (cached per process). Runs after
+/// [`pin_block_sizes`] so candidate tiles align with the pinned
+/// blocking. Returns an exit code on a malformed value.
+fn pin_sw_tile(rest: &[String], workers: usize) -> Result<(), i32> {
+    use axsys::coordinator::{autotune_sw_tile, parse_sw_tile,
+                             set_sw_tile_override};
+    if let Some(v) = opt(rest, "--sw-tile") {
+        match parse_sw_tile(&v) {
+            Some(t) => {
+                set_sw_tile_override(t);
+                println!("  sw-tile: {}x{} (--sw-tile)", t.0, t.1);
+            }
+            None => {
+                eprintln!("--sw-tile expects RxC (e.g. 64x256, both >= 1)");
+                return Err(2);
+            }
+        }
+    } else {
+        let (tr, tc) = autotune_sw_tile(workers);
+        println!("  sw-tile: {tr}x{tc} (startup autotune; pin with \
+                  --sw-tile)");
     }
     Ok(())
 }
@@ -485,6 +512,11 @@ fn bench_report(rest: &[String]) -> i32 {
     if let Err(code) = pin_block_sizes(rest) {
         return code;
     }
+    if let Err(code) = pin_sw_tile(rest, rc.workers) {
+        return code;
+    }
+    let bm = axsys::coordinator::calibrate_batch_macs();
+    println!("  batch-macs: {bm} (metered-kernel calibration)");
     let doc = report::collect(&rc);
     if let Err(e) = report::write_report(&out, &doc) {
         eprintln!("cannot write {}: {e}", out.display());
@@ -760,6 +792,13 @@ fn serve(rest: &[String]) -> i32 {
     if let Err(code) = pin_block_sizes(rest) {
         return code;
     }
+    if let Err(code) = pin_sw_tile(rest, workers) {
+        return code;
+    }
+    // size the fan-out drain budget from the measured metered kernel
+    // rate, so metered and unmetered requests split identically
+    let bm = axsys::coordinator::calibrate_batch_macs();
+    println!("  batch-macs: {bm} (metered-kernel calibration)");
     if let Some(addr) = opt(rest, "--listen") {
         // network mode: expose this pool over the framed TCP protocol
         // instead of driving synthetic traffic at it

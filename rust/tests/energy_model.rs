@@ -100,6 +100,41 @@ fn blocked_meters_agree_with_systolic_replay_meter() {
 }
 
 #[test]
+fn metered_lane_lut_sweep_matches_scalar_lut_meter() {
+    // the 64-chain LUT lane sweep under the meter vs the 8-chain scalar
+    // sweep: identical bits and identical per-MAC energy-table reads
+    // (f64 summation order is the only tolerated difference). The
+    // column range straddles the 64-chain engagement width, so the
+    // sweep covers full lane groups, the ragged chain tail, and the
+    // narrow shapes that never reach the lane loop.
+    for (m, kk, nn) in [(6usize, 18usize, 96usize), (5, 9, 70), (4, 30, 12)] {
+        let a = ints(0x1A0E ^ nn as u64, m * kk);
+        let b = ints(0x52EE ^ nn as u64, kk * nn);
+        for k in [2u32, 4] {
+            let cfg = PeConfig::new(8, true, Family::Proposed, k);
+            let elut = energy::cached(&cfg).expect("tabulable");
+            let plut = lut::cached(&cfg).expect("compilable");
+            let mut lane = BlockedGemm::default();
+            let mut scalar = BlockedGemm::default();
+            scalar.set_lane_kernel(false);
+            lane.set_meter(Some(elut.clone()));
+            scalar.set_meter(Some(elut.clone()));
+            let out_lane = lane.matmul_lut(&plut, &a, &b, m, kk, nn);
+            let e_lane = lane.take_energy_fj();
+            let out_scalar = scalar.matmul_lut(&plut, &a, &b, m, kk, nn);
+            let e_scalar = scalar.take_energy_fj();
+            assert_eq!(out_lane, out_scalar, "{m}x{kk}x{nn} k={k}");
+            assert_eq!(out_lane,
+                       axsys::pe::word::matmul(&cfg, &a, &b, m, kk, nn),
+                       "{m}x{kk}x{nn} k={k} vs word");
+            assert!(e_scalar > 0.0, "{m}x{kk}x{nn} k={k}: meter idle");
+            assert!(close(e_lane, e_scalar, 1e-9),
+                    "{m}x{kk}x{nn} k={k}: lane {e_lane} vs scalar {e_scalar}");
+        }
+    }
+}
+
+#[test]
 fn served_energy_is_backend_independent_and_fully_covered() {
     let (m, kk, nn) = (16usize, 8usize, 16usize);
     let a = ints(51, m * kk);

@@ -249,6 +249,85 @@ fn fuzz_fanout_matches_single_threaded_blocked_and_naive() {
     }
 }
 
+#[test]
+fn fuzz_metered_lane_matches_metered_scalar() {
+    // The fused metered lane kernels (the 64-lane word kernel and the
+    // 64-chain LUT sweep) against the metered scalar walk, across
+    // families, signedness, and k: bits must be exact and the
+    // accumulated femtojoules within 1e-9 relative — both sides read
+    // the identical multiset of per-MAC energy-table entries, so f64
+    // summation order is the only admissible difference. Shapes from
+    // Case::draw straddle the 32-column lane gate in both directions
+    // (nn in 1..=48), so the sweep covers lane engagement, the narrow
+    // scalar fallback, and the ragged last lane group.
+    let master = master_seed();
+    let mut rng = XorShift::new(master.wrapping_add(5));
+    let cases = if cfg!(debug_assertions) { 40 } else { 150 };
+    // a ragged blocking (nc = 48 keeps panels above the lane gate) and
+    // the production default
+    let mut engines: Vec<(BlockedGemm, BlockedGemm)> =
+        [BlockSizes { mc: 5, kc: 7, nc: 48 }, BlockSizes::default()]
+        .into_iter()
+        .map(|bs| {
+            let lane = BlockedGemm::single_threaded(bs);
+            let mut scalar = BlockedGemm::single_threaded(bs);
+            scalar.set_lane_kernel(false);
+            (lane, scalar)
+        })
+        .collect();
+    let (mut metered, mut wide) = (0usize, 0usize);
+    for i in 0..cases {
+        let case = Case::draw(rng.next(), false);
+        let cfg = case.cfg();
+        // some drawn design points have no tabulable energy model —
+        // skip those, and assert below that the sweep still metered a
+        // meaningful share
+        let Some(meter) = energy::cached(&cfg) else { continue };
+        metered += 1;
+        wide += (case.nn >= 32) as usize;
+        let want = word_matmul(&cfg, &case.a, &case.b,
+                               case.m, case.kk, case.nn);
+        for (ei, (lane, scalar)) in engines.iter_mut().enumerate() {
+            lane.set_meter(Some(meter.clone()));
+            scalar.set_meter(Some(meter.clone()));
+            for word in [true, false] {
+                let run = |e: &mut BlockedGemm| if word {
+                    e.matmul_word(&cfg, &case.a, &case.b,
+                                  case.m, case.kk, case.nn)
+                } else {
+                    e.matmul(&cfg, &case.a, &case.b,
+                             case.m, case.kk, case.nn)
+                };
+                let got_l = run(lane);
+                let fj_l = lane.take_energy_fj();
+                let got_s = run(scalar);
+                let fj_s = scalar.take_energy_fj();
+                let eng = if word { "word" } else { "lut" };
+                assert_eq!(got_l, want,
+                           "metered lane({eng})[{ei}] != word [{i}] {}",
+                           case.describe(master));
+                assert_eq!(got_s, want,
+                           "metered scalar({eng})[{ei}] != word [{i}] {}",
+                           case.describe(master));
+                assert!(fj_s > 0.0, "scalar({eng})[{ei}] meter idle [{i}] {}",
+                        case.describe(master));
+                let tol = 1e-9 * fj_s.abs().max(1.0);
+                assert!((fj_l - fj_s).abs() < tol,
+                        "lane({eng})[{ei}] energy {fj_l} != scalar {fj_s} \
+                         [{i}] {}", case.describe(master));
+            }
+            lane.set_meter(None);
+            scalar.set_meter(None);
+        }
+    }
+    // the sweep must exercise both the lane gate and the fallback under
+    // any seed; the floors are conservative because tabulability varies
+    // across drawn (family, k) points
+    assert!(metered >= cases / 10 && wide > 0,
+            "sweep degenerate: {metered} metered / {wide} wide of {cases} \
+             (master PROP_SEED={master})");
+}
+
 /// The accuracy-router property fuzz: seeded random SLOs (and word
 /// shapes, and registry subsets) against the zoo's selection core.
 const ROUTER_CASES: usize = 256;
