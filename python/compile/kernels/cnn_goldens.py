@@ -1,0 +1,210 @@
+"""Golden logits generator for the served CNN classifier (``crate::nn``).
+
+``rust/src/nn/mod.rs`` builds a small int8-quantized classifier from a
+seeded weight set and serves it through the coordinator under per-layer
+approximation plans; ``rust/tests/nn_infer.rs`` pins the network's
+output logits to literals produced by this script (the repo's
+no-toolchain validation discipline: run twice, byte-identical).
+
+The script is a line-for-line mirror of the Rust subsystem:
+
+* weights — the shared xorshift64 stream (shifts 13/7/17, state seeded
+  ``seed | 1``), each value ``(next & 127) - 64``, one distinct seed per
+  GEMM-bearing layer;
+* eval batch — ``image.scene(16, 16)`` plus ``image.texture(16, 16,
+  0x5EED0 + i)`` (both already bit-exact mirrors of the Rust
+  generators), centered by -128;
+* graph — conv1 3x3 1->4 SAME s1 shift7, maxpool 2x2 s2, conv2 3x3
+  4->8 SAME s2 shift7, conv3 3x3 8->8 VALID s1 shift7, dense1 32->16
+  shift6 + relu, dense2 16->10 shift8; convs requantize via the bdcn
+  idiom (round-shift then clip to [0, 127]), dense layers round-shift
+  then clip to [-128, 127];
+* arithmetic — exact layers are plain integer matmuls (the k = 0 word
+  model is exact for these operand ranges), approximate layers run
+  through :func:`ref.matmul_scalar` (proposed family, n = 8, W = 24) —
+  the normative mirror of the Rust word kernel.
+
+Two plans are pinned: ``exact`` (every layer k = 0) and the default
+``mixed`` plan (exact first/last, interior at proposed k = 4 / 6 / 5 —
+``nn::InferPlan::mixed_default``).  Run it directly:
+
+    python3 -m compile.kernels.cnn_goldens        (from python/)
+    python3 python/compile/kernels/cnn_goldens.py (from the repo root)
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import image  # type: ignore
+    import kernels.ref as ref  # type: ignore
+else:
+    from .. import image
+    from . import ref
+
+N, W = 8, 24
+INPUT_SIDE = 16
+N_CLASSES = 10
+BATCH = 4
+MASK64 = (1 << 64) - 1
+
+# (name, seed, length) per GEMM-bearing layer — must match
+# nn::Network::seeded() exactly, in execution order.
+WEIGHTS = [
+    ("conv1", 0xD1CE01, 3 * 3 * 1 * 4),
+    ("conv2", 0xD1CE11, 3 * 3 * 4 * 8),
+    ("conv3", 0xD1CE21, 3 * 3 * 8 * 8),
+    ("dense1", 0xD1CE31, 32 * 16),
+    ("dense2", 0xD1CE41, 16 * 10),
+]
+
+# per-GEMM-layer approximation level per pinned plan (0 = exact);
+# mixed mirrors nn::InferPlan::mixed_default / nn::MIXED_KS
+PLANS = [("EXACT", [0, 0, 0, 0, 0]), ("MIXED", [0, 4, 6, 5, 0])]
+
+
+def seeded_weights(seed: int, n: int) -> np.ndarray:
+    """Mirror of bench::XorShift + nn::seeded_weights."""
+    x = (seed | 1) & MASK64
+    out = np.empty(n, dtype=np.int64)
+    for i in range(n):
+        x = (x ^ (x << 13)) & MASK64
+        x ^= x >> 7
+        x = (x ^ (x << 17)) & MASK64
+        out[i] = (x & 127) - 64
+    return out
+
+
+def im2col(x: np.ndarray, kh: int, kw: int, stride: int,
+           pad: bool) -> np.ndarray:
+    """Mirror of apps::im2col::im2col on an (h, w, cin) input."""
+    h, w, cin = x.shape
+    ph, pw = (kh // 2, kw // 2) if pad else (0, 0)
+    if pad:
+        oh, ow = -(-h // stride), -(-w // stride)
+    else:
+        oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    feat = kh * kw * cin
+    mat = np.zeros((oh * ow, feat), dtype=np.int64)
+    for dy in range(kh):
+        for dx in range(kw):
+            for y in range(oh):
+                sy = y * stride + dy - ph
+                if sy < 0 or sy >= h:
+                    continue
+                for xx in range(ow):
+                    sx = xx * stride + dx - pw
+                    if sx < 0 or sx >= w:
+                        continue
+                    t = (dy * kw + dx) * cin
+                    mat[y * ow + xx, t:t + cin] = x[sy, sx]
+    return mat
+
+
+def gemm(a: np.ndarray, b: np.ndarray, k: int) -> np.ndarray:
+    """Exact integer matmul at k = 0, proposed-PE word model otherwise."""
+    if k == 0:
+        return a.astype(np.int64) @ b.astype(np.int64)
+    return ref.matmul_scalar(a, b, k, n=N, w=W, signed=True,
+                             family="proposed")
+
+
+def requant(v: np.ndarray, shift: int) -> np.ndarray:
+    """bdcn::requant — ReLU-fused int8 requantization."""
+    return np.clip((v + (1 << (shift - 1))) >> shift, 0, 127)
+
+
+def rshift_round_clip8(v: np.ndarray, shift: int) -> np.ndarray:
+    """apps::rshift_round + apps::clip8 — signed int8 requantization."""
+    return np.clip((v + (1 << (shift - 1))) >> shift, -128, 127)
+
+
+def maxpool(x: np.ndarray, k: int, stride: int) -> np.ndarray:
+    """VALID channel-wise max-pooling on an (h, w, cin) input."""
+    h, w, cin = x.shape
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    out = np.zeros((oh, ow, cin), dtype=np.int64)
+    for y in range(oh):
+        for xx in range(ow):
+            win = x[y * stride:y * stride + k, xx * stride:xx * stride + k]
+            out[y, xx] = win.reshape(-1, cin).max(axis=0)
+    return out
+
+
+def forward(img: np.ndarray, ks: list[int],
+            wts: dict[str, np.ndarray]) -> np.ndarray:
+    """One image through the graph at per-layer levels ``ks``."""
+    x = img.astype(np.int64).reshape(INPUT_SIDE, INPUT_SIDE, 1) - 128
+
+    def conv(x, name, cin, cout, stride, pad, shift, k):
+        mat = im2col(x, 3, 3, stride, pad)
+        y = gemm(mat, wts[name].reshape(3 * 3 * cin, cout), k)
+        oh = int(round(np.sqrt(y.shape[0])))  # all convs here are square
+        return requant(y, shift).reshape(oh, -1, cout)
+
+    x = conv(x, "conv1", 1, 4, 1, True, 7, ks[0])       # 16x16x4
+    x = maxpool(x, 2, 2)                                # 8x8x4
+    x = conv(x, "conv2", 4, 8, 2, True, 7, ks[1])       # 4x4x8
+    x = conv(x, "conv3", 8, 8, 1, False, 7, ks[2])      # 2x2x8
+    a = x.reshape(1, -1)                                # flatten 32
+    a = rshift_round_clip8(gemm(a, wts["dense1"].reshape(32, 16), ks[3]), 6)
+    a = np.maximum(a, 0)                                # relu
+    a = rshift_round_clip8(gemm(a, wts["dense2"].reshape(16, 10), ks[4]), 8)
+    return a.reshape(N_CLASSES)
+
+
+def eval_batch() -> list[np.ndarray]:
+    """Mirror of nn::eval_batch(BATCH)."""
+    return [image.scene(INPUT_SIDE, INPUT_SIDE) if i == 0 else
+            image.texture(INPUT_SIDE, INPUT_SIDE, 0x5EED0 + i)
+            for i in range(BATCH)]
+
+
+def main() -> None:
+    wts = {name: seeded_weights(seed, n) for name, seed, n in WEIGHTS}
+    for name, _, _ in WEIGHTS:
+        lo, hi = int(wts[name].min()), int(wts[name].max())
+        assert -64 <= lo and hi <= 63, f"{name} weight range [{lo},{hi}]"
+
+    # spot-check: the k = 0 PE path equals the plain integer matmul on
+    # real layer operands (no W = 24 wrap at these ranges)
+    batch = eval_batch()
+    x0 = batch[0].astype(np.int64).reshape(INPUT_SIDE, INPUT_SIDE, 1) - 128
+    mat = im2col(x0, 3, 3, 1, True)[:8]
+    b0 = wts["conv1"].reshape(9, 4)
+    assert np.array_equal(ref.matmul_scalar(mat, b0, 0, n=N, w=W,
+                                            signed=True, family="proposed"),
+                          mat @ b0), "k=0 PE != exact matmul"
+    print("spot-check OK: k=0 matmul_scalar == exact matmul",
+          file=sys.stderr)
+
+    print("// Generated by python/compile/kernels/cnn_goldens.py — "
+          "do not hand-edit.")
+    print(f"// batch {BATCH}: scene(16,16) + texture(16,16, 0x5EED0+i); "
+          "plans: exact, mixed [0,4,6,5,0] (proposed)")
+    results = {}
+    for plan, ks in PLANS:
+        logits = np.concatenate([forward(img, ks, wts) for img in batch])
+        results[plan] = logits
+        vals = ", ".join(str(int(v)) for v in logits)
+        print(f"pub const {plan}_LOGITS: [i64; {BATCH * N_CLASSES}] = "
+              f"[{vals}];")
+        top1 = [int(np.argmax(logits[b * N_CLASSES:(b + 1) * N_CLASSES]))
+                for b in range(BATCH)]
+        print(f"// {plan.lower()} top-1 per image: {top1}")
+    for plan in ("EXACT", "MIXED"):
+        lo, hi = int(results[plan].min()), int(results[plan].max())
+        assert -128 <= lo and hi <= 127, f"{plan} logits [{lo},{hi}]"
+    match = sum(int(np.argmax(results["EXACT"][b * 10:(b + 1) * 10]) ==
+                    np.argmax(results["MIXED"][b * 10:(b + 1) * 10]))
+                for b in range(BATCH))
+    print(f"// mixed-vs-exact top-1 agreement: {match}/{BATCH}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -77,13 +77,15 @@ pub fn load_weights(path: &Path) -> anyhow::Result<Vec<Block>> {
 fn conv(g: &mut dyn Gemm, x: &[i64], h: usize, w: usize, wq: &Tensor)
         -> Vec<i64> {
     let [kh, kw, cin, cout] = wq.shape;
-    let mat = super::im2col::im2col(x, h, w, cin, kh, kw, true);
+    let mat = super::im2col::im2col(x, h, w, cin, kh, kw, 1, true);
     g.gemm(&mat, &wq.data, h * w, kh * kw * cin, cout)
 }
 
-/// Requantize an accumulator to a ReLU-clipped int8 activation.
+/// Requantize an accumulator to a ReLU-clipped int8 activation — the
+/// shared post-conv scale of every quantized CNN in the repo (this
+/// cascade and the served classifier in [`crate::nn`]).
 #[inline]
-fn requant(v: i64, shift: u32) -> i64 {
+pub fn requant(v: i64, shift: u32) -> i64 {
     ((v + (1i64 << (shift - 1))) >> shift).clamp(0, 127)
 }
 

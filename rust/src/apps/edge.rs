@@ -18,7 +18,7 @@ pub fn pipeline(g: &mut dyn Gemm, img: &Image) -> Image {
         img.data.iter().map(|&v| v as i64 - 128).collect();
     // VALID im2col: (P, 9) patches, column order (dy, dx) — matches
     // the oracle's _im2col3
-    let mat = im2col(&centered, h, w, 1, 3, 3, false);
+    let mat = im2col(&centered, h, w, 1, 3, 3, 1, false);
     let y = g.gemm(&mat, &LAPLACIAN, oh * ow, 9, 1);
     let mut out = Image::new(oh, ow);
     for (o, &v) in out.data.iter_mut().zip(y.iter()) {

@@ -1,38 +1,50 @@
 //! im2col lowering: convolutions → GEMM (paper §V-B).
 //!
-//! Both edge paths (the Laplacian kernel and the BDCN-lite CNN) lower
-//! their convolutions to a single `patches @ weights` product so they
-//! ride the same tiled GEMM hot path as every other workload — and,
-//! through [`super::CoordinatorGemm`], the coordinator's worker pool.
+//! Both edge paths (the Laplacian kernel and the BDCN-lite CNN) and the
+//! served CNN classifier ([`crate::nn`]) lower their convolutions to a
+//! single `patches @ weights` product so they ride the same tiled GEMM
+//! hot path as every other workload — and, through
+//! [`super::CoordinatorGemm`], the coordinator's worker pool.
 //!
 //! Patch layout (pinned by the Python oracle's `model._im2col3` and
 //! `bdcn._conv_q`): row `y*out_w + x` holds the receptive field of
 //! output pixel `(y, x)`; feature column `(dy*kw + dx)*cin + c`.
 
 /// Unfold a row-major `(h, w, cin)` input into an
-/// `(out_h*out_w, kh*kw*cin)` patch matrix.
+/// `(out_h*out_w, kh*kw*cin)` patch matrix, sampling output pixels on a
+/// `stride`-spaced grid.
 ///
-/// `pad = true` is SAME zero padding (`out = h x w`, the CNN path);
-/// `pad = false` is VALID (`out = (h-kh+1) x (w-kw+1)`, the kernel
-/// path). Out-of-image taps contribute zeros — for pre-centered inputs
-/// that is the 128-gray border the oracle uses.
+/// `pad = true` is SAME zero padding (`out = ceil(h/stride) x
+/// ceil(w/stride)`, top-left pad `kh/2` / `kw/2` — the CNN path; at
+/// `stride = 1` this is the historical `out = h x w` geometry);
+/// `pad = false` is VALID (`out = (h-kh)/stride+1 x (w-kw)/stride+1`,
+/// the kernel path). Out-of-image taps contribute zeros — for
+/// pre-centered inputs that is the 128-gray border the oracle uses.
+/// MaxPool and strided convolutions ([`crate::nn`]) use `stride > 1`;
+/// `stride = 1` callers are bit-for-bit unchanged.
 pub fn im2col(x: &[i64], h: usize, w: usize, cin: usize, kh: usize,
-              kw: usize, pad: bool) -> Vec<i64> {
+              kw: usize, stride: usize, pad: bool) -> Vec<i64> {
     assert_eq!(x.len(), h * w * cin, "input shape");
     assert!(kh <= h && kw <= w, "kernel larger than input");
+    assert!(stride >= 1, "stride must be >= 1");
     let (ph, pw) = if pad { (kh / 2, kw / 2) } else { (0, 0) };
-    let (oh, ow) = if pad { (h, w) } else { (h + 1 - kh, w + 1 - kw) };
+    let (oh, ow) = if pad {
+        (h.div_ceil(stride), w.div_ceil(stride))
+    } else {
+        ((h - kh) / stride + 1, (w - kw) / stride + 1)
+    };
     let feat = kh * kw * cin;
     let mut mat = vec![0i64; oh * ow * feat];
     for dy in 0..kh {
         for dx in 0..kw {
             for y in 0..oh {
-                let sy = y as isize + dy as isize - ph as isize;
+                let sy = (y * stride) as isize + dy as isize - ph as isize;
                 if sy < 0 || sy >= h as isize {
                     continue; // zero padding
                 }
                 for xx in 0..ow {
-                    let sx = xx as isize + dx as isize - pw as isize;
+                    let sx = (xx * stride) as isize + dx as isize
+                        - pw as isize;
                     if sx < 0 || sx >= w as isize {
                         continue;
                     }
@@ -46,6 +58,18 @@ pub fn im2col(x: &[i64], h: usize, w: usize, cin: usize, kh: usize,
     mat
 }
 
+/// Output spatial dimensions of [`im2col`] for the given geometry —
+/// exported so conv layers and their callers agree on the grid without
+/// re-deriving it.
+pub fn out_dims(h: usize, w: usize, kh: usize, kw: usize, stride: usize,
+                pad: bool) -> (usize, usize) {
+    if pad {
+        (h.div_ceil(stride), w.div_ceil(stride))
+    } else {
+        ((h - kh) / stride + 1, (w - kw) / stride + 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,8 +78,9 @@ mod tests {
     fn valid_3x3_matches_direct_patch_extraction() {
         let (h, w) = (5usize, 6usize);
         let x: Vec<i64> = (0..(h * w) as i64).collect();
-        let mat = im2col(&x, h, w, 1, 3, 3, false);
+        let mat = im2col(&x, h, w, 1, 3, 3, 1, false);
         let (oh, ow) = (h - 2, w - 2);
+        assert_eq!((oh, ow), out_dims(h, w, 3, 3, 1, false));
         assert_eq!(mat.len(), oh * ow * 9);
         for y in 0..oh {
             for xx in 0..ow {
@@ -74,7 +99,7 @@ mod tests {
     fn same_padding_zeros_the_border_taps() {
         let (h, w) = (3usize, 3usize);
         let x = vec![7i64; h * w];
-        let mat = im2col(&x, h, w, 1, 3, 3, true);
+        let mat = im2col(&x, h, w, 1, 3, 3, 1, true);
         assert_eq!(mat.len(), h * w * 9);
         // corner pixel (0,0): taps with dy<1 or dx<1 fall outside
         for dy in 0..3 {
@@ -93,11 +118,81 @@ mod tests {
         // (dy*kw + dx)*cin + c — channels contiguous per tap
         let (h, w, cin) = (3usize, 3usize, 2usize);
         let x: Vec<i64> = (0..(h * w * cin) as i64).collect();
-        let mat = im2col(&x, h, w, cin, 1, 1, false);
+        let mat = im2col(&x, h, w, cin, 1, 1, 1, false);
         assert_eq!(mat, x); // 1x1 kernel is the identity unfold
-        let mat3 = im2col(&x, h, w, cin, 3, 3, true);
+        let mat3 = im2col(&x, h, w, cin, 3, 3, 1, true);
         // centre tap (dy=1, dx=1) of output pixel (0,0) is input (0,0)
         let base = (3 + 1) * cin;
         assert_eq!(&mat3[base..base + cin], &x[0..cin]);
+    }
+
+    #[test]
+    fn strided_valid_geometry_and_taps() {
+        // 2x2 window, stride 2 on 6x6: the MaxPool unfold geometry
+        let (h, w) = (6usize, 6usize);
+        let x: Vec<i64> = (0..(h * w) as i64).collect();
+        let mat = im2col(&x, h, w, 1, 2, 2, 2, false);
+        assert_eq!(out_dims(h, w, 2, 2, 2, false), (3, 3));
+        assert_eq!(mat.len(), 3 * 3 * 4);
+        for y in 0..3 {
+            for xx in 0..3 {
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        assert_eq!(mat[(y * 3 + xx) * 4 + dy * 2 + dx],
+                                   x[(y * 2 + dy) * w + (xx * 2 + dx)],
+                                   "({y},{xx}) tap ({dy},{dx})");
+                    }
+                }
+            }
+        }
+        // non-divisible extent floors: 3x3 stride 2 on 6x6 -> 2x2
+        assert_eq!(out_dims(h, w, 3, 3, 2, false), (2, 2));
+        assert_eq!(im2col(&x, h, w, 1, 3, 3, 2, false).len(), 2 * 2 * 9);
+    }
+
+    #[test]
+    fn strided_same_geometry_and_padding() {
+        // SAME 3x3 stride 2 on 8x8 -> ceil(8/2) = 4x4, pad 1
+        let (h, w) = (8usize, 8usize);
+        let x: Vec<i64> = (1..=(h * w) as i64).collect();
+        let mat = im2col(&x, h, w, 1, 3, 3, 2, true);
+        assert_eq!(out_dims(h, w, 3, 3, 2, true), (4, 4));
+        assert_eq!(mat.len(), 4 * 4 * 9);
+        // output (0,0) samples input rows/cols -1..1: the (dy=0) and
+        // (dx=0) taps are zero padding, centre tap is input (0,0)
+        for dy in 0..3 {
+            for dx in 0..3 {
+                let want = if dy == 0 || dx == 0 {
+                    0
+                } else {
+                    x[(dy - 1) * w + (dx - 1)]
+                };
+                assert_eq!(mat[dy * 3 + dx], want, "tap ({dy},{dx})");
+            }
+        }
+        // output (1,1) is centred on input (2,2): fully interior
+        let base = (4 + 1) * 9;
+        for dy in 0..3 {
+            for dx in 0..3 {
+                assert_eq!(mat[base + dy * 3 + dx],
+                           x[(1 + dy) * w + (1 + dx)]);
+            }
+        }
+        // odd extent: SAME stride 2 on 7x7 -> ceil(7/2) = 4x4
+        let x7: Vec<i64> = (0..49).collect();
+        assert_eq!(out_dims(7, 7, 3, 3, 2, true), (4, 4));
+        assert_eq!(im2col(&x7, 7, 7, 1, 3, 3, 2, true).len(), 4 * 4 * 9);
+    }
+
+    #[test]
+    fn stride_one_same_keeps_the_historical_geometry() {
+        // the edge/bdcn callers pass stride 1: out = h x w (SAME) /
+        // (h-kh+1) x (w-kw+1) (VALID), exactly as before the stride
+        // parameter existed
+        assert_eq!(out_dims(16, 16, 3, 3, 1, true), (16, 16));
+        assert_eq!(out_dims(16, 16, 3, 3, 1, false), (14, 14));
+        let x: Vec<i64> = (0..25).collect();
+        let strided = im2col(&x, 5, 5, 1, 3, 3, 1, true);
+        assert_eq!(strided.len(), 5 * 5 * 9);
     }
 }

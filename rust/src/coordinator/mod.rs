@@ -77,7 +77,8 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::apps::image::{psnr, Image};
-use crate::apps::{bdcn, dct, edge, CoordinatorGemm};
+use crate::apps::{bdcn, dct, edge, CoordinatorGemm, Gemm};
+use crate::nn;
 use crate::energy::{self, EnergyLut};
 use crate::gemm::BlockedGemm;
 use crate::pe::lut::{self, ProductLut};
@@ -535,11 +536,15 @@ pub enum AppKind {
     Edge,
     /// BDCN-lite CNN edge cascade (paper §V-B; needs trained weights).
     Bdcn,
+    /// Quantized CNN classifier inference ([`crate::nn`]; seeded
+    /// checked-in weights, logits returned as a `batch x 10` image).
+    Nn,
 }
 
 impl AppKind {
     /// Every servable application, in CLI-advertised order.
-    pub const ALL: [AppKind; 3] = [AppKind::Dct, AppKind::Edge, AppKind::Bdcn];
+    pub const ALL: [AppKind; 4] =
+        [AppKind::Dct, AppKind::Edge, AppKind::Bdcn, AppKind::Nn];
 
     /// Stable lower-case name (CLI `--app` value).
     pub fn name(self) -> &'static str {
@@ -547,6 +552,7 @@ impl AppKind {
             AppKind::Dct => "dct",
             AppKind::Edge => "edge",
             AppKind::Bdcn => "bdcn",
+            AppKind::Nn => "nn",
         }
     }
 
@@ -555,7 +561,7 @@ impl AppKind {
         Self::ALL.into_iter().find(|a| a.name() == s)
     }
 
-    /// `"dct|edge|bdcn"` — for CLI error messages.
+    /// `"dct|edge|bdcn|nn"` — for CLI error messages.
     pub fn names() -> String {
         Self::ALL.map(|a| a.name()).join("|")
     }
@@ -785,6 +791,8 @@ pub struct ServiceStats {
     pub edge: AppStats,
     /// Per-app serving counters for `serve_bdcn` requests.
     pub bdcn: AppStats,
+    /// Per-app serving counters for `serve_nn` inference requests.
+    pub nn: AppStats,
     /// Recent per-request end-to-end GEMM latencies in µs (at most
     /// [`LATENCY_SAMPLE_CAP`], ring-buffered) — feeds
     /// [`Self::latency_percentile`].
@@ -840,6 +848,7 @@ impl ServiceStats {
             AppKind::Dct => &self.dct,
             AppKind::Edge => &self.edge,
             AppKind::Bdcn => &self.bdcn,
+            AppKind::Nn => &self.nn,
         }
     }
 
@@ -848,6 +857,7 @@ impl ServiceStats {
             AppKind::Dct => &mut self.dct,
             AppKind::Edge => &mut self.edge,
             AppKind::Bdcn => &mut self.bdcn,
+            AppKind::Nn => &mut self.nn,
         }
     }
 
@@ -897,6 +907,7 @@ impl ServiceStats {
         self.dct.merge(&o.dct);
         self.edge.merge(&o.edge);
         self.bdcn.merge(&o.bdcn);
+        self.nn.merge(&o.nn);
         self.latency.merge(&o.latency);
     }
 }
@@ -1200,14 +1211,104 @@ impl Coordinator {
         self.finish_app(AppKind::Bdcn, e, quality, t0, &[&ga, &ge, &gr])
     }
 
+    /// Serve one quantized CNN inference batch ([`crate::nn`]) under
+    /// `plan`: every GEMM-bearing layer runs at its own resolved design
+    /// point through the worker pool — one [`CoordinatorGemm`] per
+    /// layer, so each layer's metered energy is separable. SLO slots
+    /// route through [`Self::route_slo`] (counted in the SLO stats);
+    /// a malformed or unsatisfiable per-layer SLO refuses the whole
+    /// batch typed, before any GEMM runs.
+    ///
+    /// [`Network::forward`](nn::Network::forward) stacks the batch into
+    /// one GEMM per layer, so consecutive batch tiles share the layer's
+    /// B panel and coalesce in the workers
+    /// ([`ServiceStats::coalesced_calls`]).
+    ///
+    /// Returns the [`AppResponse`] (logits as a `batch x 10` image;
+    /// `sa_stats` additionally includes the exact reference run, like
+    /// the other served apps) and the per-layer [`nn::NnStats`]
+    /// breakdown, whose `total_energy_fj` covers the plan's own run
+    /// only.
+    pub fn serve_nn(&self, net: &nn::Network, batch: &[Image],
+                    plan: &nn::InferPlan)
+                    -> Result<(AppResponse, nn::NnStats), RouteError> {
+        let t0 = Instant::now();
+        let points = plan.resolve_with(&mut |s| self.route_slo(s))?;
+        let n = net.n_gemm_layers();
+        assert_eq!(points.len(), n, "plan/network slot mismatch");
+        let mut gs: Vec<CoordinatorGemm<'_>> = points
+            .iter()
+            .map(|&(f, k)| CoordinatorGemm::with_family(self, f, k))
+            .collect();
+        let mut geoms = vec![(0usize, 0usize, 0usize); n];
+        let logits = net.forward(batch, &mut |slot, a, b, m, kk, nc| {
+            geoms[slot] = (m, kk, nc);
+            gs[slot].gemm(a, b, m, kk, nc)
+        });
+        // quality vs the exact reference, served through the same path
+        // (family-independent: k = 0 is exact in every family)
+        let mut g0 = CoordinatorGemm::new(self, 0);
+        let (psnr_db, top1) = if points.iter().all(|&(_, k)| k == 0) {
+            (f64::INFINITY, 1.0)
+        } else {
+            let exact = net.forward(batch, &mut |_, a, b, m, kk, nc| {
+                g0.gemm(a, b, m, kk, nc)
+            });
+            nn::quality(&logits, &exact)
+        };
+        let names = net.gemm_layer_names();
+        let mut layers = Vec::with_capacity(n);
+        let mut total_energy_fj = 0.0f64;
+        for (i, g) in gs.iter().enumerate() {
+            let (m, kk, nc) = geoms[i];
+            total_energy_fj += g.stats.energy_fj;
+            layers.push(nn::LayerStat {
+                name: names[i],
+                family: points[i].0,
+                k: points[i].1,
+                m,
+                kk,
+                nn: nc,
+                macs: g.stats.macs,
+                energy_fj: g.stats.energy_fj,
+                metered_macs: g.stats.metered_macs,
+            });
+        }
+        let nstats = nn::NnStats {
+            plan: plan.name.clone(),
+            batch: batch.len(),
+            layers,
+            total_energy_fj,
+            logits: logits.clone(),
+            logit_psnr_db: psnr_db,
+            top1_match: top1,
+        };
+        let out = nn::logits_image(&logits, batch.len());
+        let mut grefs: Vec<&CoordinatorGemm<'_>> = gs.iter().collect();
+        grefs.push(&g0);
+        let resp = self.finish_app(AppKind::Nn, out, psnr_db, t0, &grefs);
+        Ok((resp, nstats))
+    }
+
     /// Dispatch by [`AppKind`] for the weight-free apps (`Bdcn` needs
-    /// its trained blocks — use [`Self::serve_bdcn`]).
+    /// its trained blocks — use [`Self::serve_bdcn`]). `Nn` serves the
+    /// checked-in [`nn::default_network`] on a single-image batch under
+    /// the [`nn::InferPlan::hybrid_k`] plan (exact first/last, interior
+    /// at `k` — the wire semantics of a plain-`k` inference request).
     pub fn call_app(&self, app: AppKind, img: &Image, k: u32)
                     -> Option<AppResponse> {
         match app {
             AppKind::Dct => Some(self.serve_dct(img, k)),
             AppKind::Edge => Some(self.serve_edge(img, k)),
             AppKind::Bdcn => None,
+            AppKind::Nn => {
+                let net = nn::default_network();
+                let plan = nn::InferPlan::hybrid_k(k, net.n_gemm_layers());
+                let (resp, _) = self
+                    .serve_nn(net, std::slice::from_ref(img), &plan)
+                    .expect("SLO-free plan cannot fail routing");
+                Some(resp)
+            }
         }
     }
 
@@ -1225,6 +1326,15 @@ impl Coordinator {
                 // stay uniform
                 self.route_slo(slo)?;
                 Ok(None)
+            }
+            AppKind::Nn => {
+                // per-layer SLO plan: exact first/last, every interior
+                // layer routed (and counted) independently
+                let net = nn::default_network();
+                let plan =
+                    nn::InferPlan::slo_mixed(*slo, net.n_gemm_layers());
+                self.serve_nn(net, std::slice::from_ref(img), &plan)
+                    .map(|(resp, _)| Some(resp))
             }
         }
     }

@@ -30,6 +30,7 @@
 //! | [`apps`]      | DCT / edge / BDCN pipelines (+ [`apps::im2col`] conv→GEMM lowering, [`apps::CoordinatorGemm`] serving adapter) + image I/O + PSNR/SSIM |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` (feature `pjrt`) |
 //! | [`coordinator`]| GEMM request router: tiler, batched+coalesced dispatch, worker pool — plus the app endpoints (`serve_dct`/`serve_edge`/`serve_bdcn`) with per-app stats and latency percentiles |
+//! | [`nn`]        | served quantized CNN inference: int8 [`nn::Layer`] graph, seeded [`nn::Network`], per-layer approximation plans ([`nn::InferPlan`]) resolved through the zoo router, batch-stacked conv→GEMM lowering, per-layer [`nn::NnStats`] energy/accuracy |
 //! | [`net`]       | framed TCP serving layer: versioned wire protocol, sharded `poll(2)` event-loop server (readiness-backoff admission gate, resolver pool) fronting the coordinator, blocking client + [`net::client::RemoteGemm`], load generator with a ≥1k-connection scale mode |
 //! | [`zoo`]       | design-point registry (families × k with oracle-pinned energy/error columns) + the [`zoo::AccuracySlo`] router that picks the cheapest point meeting a per-request accuracy SLO |
 //! | [`bench`]     | tiny criterion-free measurement harness + the `bench-report` JSON emitter |
@@ -156,6 +157,7 @@ pub mod gemm;
 pub mod hw;
 pub mod net;
 pub mod netlist;
+pub mod nn;
 pub mod pe;
 pub mod runtime;
 pub mod systolic;

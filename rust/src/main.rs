@@ -27,11 +27,13 @@ fn main() {
         "dct" => app_dct(rest),
         "edge" => app_edge(rest),
         "cnn" => app_cnn(rest),
+        "infer" => infer(rest),
         "serve" => serve(rest),
         "loadgen" => loadgen(rest),
         "apps-report" => apps_report(rest),
         "lut-report" => lut_report(),
         "zoo-report" => zoo_report(rest),
+        "nn-report" => nn_report(rest),
         "energy-report" => energy_report(rest),
         "bench-report" => bench_report(rest),
         "emit-verilog" => emit_verilog(rest),
@@ -78,6 +80,12 @@ const COMMANDS: &[Cmd] = &[
           help: "Laplacian edge detection (coordinator-served)" },
     Cmd { name: "cnn", args: "[--k K] [--out DIR]",
           help: "BDCN-lite CNN edge detection (coordinator-served)" },
+    Cmd { name: "infer",
+          args: "[--plan exact|uniform|hybrid|mixed|slo] [--k K] \
+                 [--batch N] [--slo SPEC]",
+          help: "quantized CNN classifier inference on the seeded eval \
+                 batch, each layer at its plan-assigned design point \
+                 (coordinator-served)" },
     Cmd { name: "serve",
           args: "[--backend {BACKENDS}] [--workers N] [--requests R] \
                  [--app gemm|{APPS}] [--k K] [--slo SPEC] \
@@ -100,6 +108,10 @@ const COMMANDS: &[Cmd] = &[
     Cmd { name: "zoo-report", args: "[--out PATH]",
           help: "design-point zoo: oracle-pinned energy/error columns per \
                  entry + per-tier cheapest table -> ZOO_report.json" },
+    Cmd { name: "nn-report", args: "[--batch N] [--out PATH]",
+          help: "network-level CNN energy/accuracy table: exact vs \
+                 uniform-k vs mixed per-layer plans, per-layer fJ \
+                 breakdown -> NN_report.json" },
     Cmd { name: "energy-report", args: "[--size S] [--k K] [--out PATH]",
           help: "array-level energy savings + accuracy-vs-energy scatter \
                  at real workload activity" },
@@ -448,6 +460,79 @@ fn app_cnn(rest: &[String]) -> i32 {
     0
 }
 
+/// `infer`: serve the checked-in quantized CNN classifier
+/// ([`axsys::nn`]) on its deterministic eval batch under a named
+/// per-layer plan — every GEMM-bearing layer runs at its plan-assigned
+/// design point through the coordinator, with the per-layer energy
+/// breakdown and output quality printed.
+fn infer(rest: &[String]) -> i32 {
+    use axsys::nn::{self, InferPlan};
+    let k = opt_k(rest);
+    let batch_n: usize = opt(rest, "--batch")
+        .and_then(|v| v.parse().ok()).unwrap_or(4);
+    if batch_n == 0 {
+        eprintln!("infer: --batch must be >= 1");
+        return 2;
+    }
+    let net = nn::default_network();
+    let slots = net.n_gemm_layers();
+    let plan_name = opt(rest, "--plan").unwrap_or_else(|| "mixed".into());
+    let plan = match plan_name.as_str() {
+        "exact" => InferPlan::exact(slots),
+        "uniform" => InferPlan::uniform(Some(Family::Proposed), k, slots),
+        "hybrid" => InferPlan::hybrid_k(k, slots),
+        "mixed" => InferPlan::mixed_default(slots),
+        "slo" => {
+            let spec = opt(rest, "--slo")
+                .unwrap_or_else(|| "nmed=2.5e-3".into());
+            match axsys::zoo::AccuracySlo::parse(&spec) {
+                Ok(s) => InferPlan::slo_mixed(s, slots),
+                Err(e) => {
+                    eprintln!("infer: bad --slo '{spec}': {e}");
+                    return 2;
+                }
+            }
+        }
+        other => {
+            eprintln!("infer: unknown --plan '{other}' \
+                       (exact|uniform|hybrid|mixed|slo)");
+            return 2;
+        }
+    };
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Lut, ..Default::default()
+    });
+    let batch = nn::eval_batch(batch_n);
+    let (resp, st) = match c.serve_nn(net, &batch, &plan) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("infer: SLO routing failed: {e}");
+            return 1;
+        }
+    };
+    println!("CNN inference: {}x{} x{batch_n} batch, plan '{}' \
+              (coordinator, lut backend)",
+             nn::INPUT_SIDE, nn::INPUT_SIDE, st.plan);
+    println!("  {:<8} {:<14} | {:>5} x {:<3} x {:<3} | {:>9} {:>12}",
+             "layer", "point", "m", "kk", "nn", "MACs", "fJ");
+    for l in &st.layers {
+        println!("  {:<8} {:<14} | {:>5} x {:<3} x {:<3} | {:>9} {:>12.1}",
+                 l.name, l.point_label(), l.m, l.kk, l.nn, l.macs,
+                 l.energy_fj);
+    }
+    println!("  total {:.4} µJ over {} GEMM sub-requests ({:.1} µs)",
+             st.total_energy_uj(), resp.gemm_requests, resp.latency_us);
+    println!("  quality vs exact: logit PSNR {:.2} dB, top-1 match {:.0}%",
+             st.logit_psnr_db, st.top1_match * 100.0);
+    for b in 0..st.batch {
+        let row = &st.logits[b * nn::N_CLASSES..(b + 1) * nn::N_CLASSES];
+        println!("  image {b}: class {} | logits {row:?}",
+                 nn::top1_of(row));
+    }
+    c.shutdown();
+    0
+}
+
 fn emit_verilog(rest: &[String]) -> i32 {
     use axsys::cells::CellKind;
     use axsys::netlist::verilog::to_verilog;
@@ -615,7 +700,107 @@ fn zoo_report(rest: &[String]) -> i32 {
             None => println!("  {:<5} | {:>2} entries", t.name(), pool.len()),
         }
     }
+    println!("  note: per-MAC columns rank single design points; for \
+              per-layer mixed plans on conv traffic see NN_report.json \
+              (`axsys nn-report`)");
     let doc = report_json();
+    if let Err(e) = std::fs::write(&out, doc.pretty()) {
+        eprintln!("cannot write {}: {e}", out.display());
+        return 1;
+    }
+    println!("  wrote {}", out.display());
+    0
+}
+
+/// Default artifact location for `nn-report`: repo root, next to the
+/// other report artifacts (a CI artifact like `ZOO_report.json`, not
+/// checked in).
+fn nn_report_default_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("NN_report.json")
+}
+
+/// `nn-report`: the network-level energy/accuracy table for the served
+/// CNN classifier — the exact plan vs uniform-k plans vs the mixed
+/// per-layer plan, each row with total energy, the per-layer breakdown
+/// and output quality vs exact — printed and written to
+/// `NN_report.json`. The per-layer rows are what the zoo's per-MAC
+/// columns cannot express: the cross-reference both artifacts carry.
+fn nn_report(rest: &[String]) -> i32 {
+    use axsys::bench::Json;
+    use axsys::nn::{self, InferPlan};
+    let batch_n: usize = opt(rest, "--batch")
+        .and_then(|v| v.parse().ok()).unwrap_or(4);
+    if batch_n == 0 {
+        eprintln!("nn-report: --batch must be >= 1");
+        return 2;
+    }
+    let out = opt(rest, "--out").map(PathBuf::from)
+        .unwrap_or_else(nn_report_default_path);
+    let net = nn::default_network();
+    let slots = net.n_gemm_layers();
+    let plans = [
+        InferPlan::exact(slots),
+        InferPlan::uniform(Some(Family::Proposed), 2, slots),
+        InferPlan::uniform(Some(Family::Proposed), 4, slots),
+        InferPlan::uniform(Some(Family::Proposed), 6, slots),
+        InferPlan::mixed_default(slots),
+    ];
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 4, backend: BackendKind::Lut, ..Default::default()
+    });
+    let batch = nn::eval_batch(batch_n);
+    println!("== CNN network-level energy/accuracy (batch {batch_n}, \
+              lut backend) ==");
+    println!("  {:<20} | {:>10} {:>7} | {:>8} {:>6}",
+             "plan", "energy µJ", "saving", "psnr dB", "top-1");
+    let mut rows = Vec::new();
+    let mut exact_fj = f64::NAN;
+    for plan in &plans {
+        let (_, st) = c.serve_nn(net, &batch, plan)
+            .expect("pinned plans carry no SLO and cannot fail routing");
+        if st.plan == "exact" {
+            exact_fj = st.total_energy_fj;
+        }
+        let saving = (1.0 - st.total_energy_fj / exact_fj) * 100.0;
+        println!("  {:<20} | {:>10.4} {:>6.1}% | {:>8.2} {:>5.0}%",
+                 st.plan, st.total_energy_uj(), saving, st.logit_psnr_db,
+                 st.top1_match * 100.0);
+        let layers: Vec<Json> = st.layers.iter().map(|l| {
+            Json::obj()
+                .set("layer", Json::Str(l.name.into()))
+                .set("point", Json::Str(l.point_label()))
+                .set("m", Json::Int(l.m as i64))
+                .set("kk", Json::Int(l.kk as i64))
+                .set("nn", Json::Int(l.nn as i64))
+                .set("macs", Json::Int(l.macs as i64))
+                .set("energy_fj", Json::Num(l.energy_fj))
+                .set("metered_macs", Json::Int(l.metered_macs as i64))
+        }).collect();
+        rows.push(Json::obj()
+            .set("plan", Json::Str(st.plan.clone()))
+            .set("total_energy_fj", Json::Num(st.total_energy_fj))
+            .set("total_energy_uj", Json::Num(st.total_energy_uj()))
+            .set("saving_vs_exact_pct", Json::Num(saving))
+            .set("logit_psnr_db", Json::Num(st.logit_psnr_db))
+            .set("top1_match", Json::Num(st.top1_match))
+            .set("layers", Json::Arr(layers)));
+    }
+    c.shutdown();
+    let doc = Json::obj()
+        .set("schema", Json::Str("axsys-nn-report/v1".into()))
+        .set("batch", Json::Int(batch_n as i64))
+        .set("input_side", Json::Int(nn::INPUT_SIDE as i64))
+        .set("n_classes", Json::Int(nn::N_CLASSES as i64))
+        .set("gemm_layers",
+             Json::Arr(net.gemm_layer_names().iter()
+                 .map(|n| Json::Str((*n).into())).collect()))
+        .set("see_also",
+             Json::Str("ZOO_report.json (zoo-report: per-MAC \
+                        design-point columns the SLO router reads)".into()))
+        .set("plans", Json::Arr(rows));
     if let Err(e) = std::fs::write(&out, doc.pretty()) {
         eprintln!("cannot write {}: {e}", out.display());
         return 1;
@@ -1208,12 +1393,13 @@ mod tests {
                 "unexpanded placeholder: {md}");
         // every dispatched command is documented and vice versa
         for name in ["selftest", "hw-report", "error-sweep", "dct", "edge",
-                     "cnn", "serve", "loadgen", "apps-report", "lut-report",
-                     "zoo-report", "energy-report", "bench-report",
-                     "emit-verilog", "help"] {
+                     "cnn", "infer", "serve", "loadgen", "apps-report",
+                     "lut-report", "zoo-report", "nn-report",
+                     "energy-report", "bench-report", "emit-verilog",
+                     "help"] {
             assert!(COMMANDS.iter().any(|c| c.name == name),
                     "{name} missing from COMMANDS");
         }
-        assert_eq!(COMMANDS.len(), 15, "new commands must be dispatched too");
+        assert_eq!(COMMANDS.len(), 17, "new commands must be dispatched too");
     }
 }

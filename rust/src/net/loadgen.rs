@@ -127,12 +127,14 @@ fn worker(addr: String, n: usize, seed: u64, k_max: u32, apps: bool,
         // with --slo, every other request is SLO-routed by the server
         let rslo = if i % 2 == 0 { slo.as_ref() } else { None };
         if apps && i % 8 == 7 {
-            // every 8th request exercises an app pipeline end-to-end
-            // (dct and edge alternate; both image sizes are 8-aligned)
-            let (app, img) = if i % 16 == 7 {
-                (AppKind::Dct, scene(32, 32))
-            } else {
-                (AppKind::Edge, texture(24, 24, seed ^ i as u64))
+            // every 8th request exercises an app pipeline end-to-end,
+            // cycling nn inference -> dct -> edge. The cycle starts at
+            // nn so even the shortest smoke run (one app request per
+            // client) sends CNN classifier traffic over the wire.
+            let (app, img) = match (i / 8) % 3 {
+                0 => (AppKind::Nn, scene(16, 16)),
+                1 => (AppKind::Dct, scene(32, 32)),
+                _ => (AppKind::Edge, texture(24, 24, seed ^ i as u64)),
             };
             let t0 = Instant::now();
             let r = client.app_slo(app, &img, k, rslo)?;

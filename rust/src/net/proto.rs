@@ -1008,7 +1008,7 @@ mod tests {
                 })
             }
             2 => Frame::AppReq(AppReq {
-                app: AppKind::ALL[(x.next_u64() % 3) as usize],
+                app: AppKind::ALL[x.next_u64() as usize % AppKind::ALL.len()],
                 k: (x.next_u64() % 9) as u32,
                 pgm: (0..(x.next_u64() % 300) as usize)
                     .map(|_| x.next_u64() as u8)
@@ -1019,7 +1019,7 @@ mod tests {
                 let h = (x.next_u64() % 10) as u32;
                 let w = (x.next_u64() % 10) as u32;
                 Frame::AppResp(AppResp {
-                    app: AppKind::ALL[(x.next_u64() % 3) as usize],
+                    app: AppKind::ALL[x.next_u64() as usize % AppKind::ALL.len()],
                     psnr_db: if x.next_u64() % 8 == 0 {
                         f64::INFINITY
                     } else {

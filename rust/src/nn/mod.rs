@@ -1,0 +1,770 @@
+//! Served quantized CNN inference with per-layer approximation plans.
+//!
+//! The paper's pitch — approximate PEs keep "competitive output quality"
+//! on error-resilient vision workloads — is only measurable end-to-end
+//! on a real multi-layer network, and the per-layer selection literature
+//! (e.g. positive/negative approximate multipliers for DNN accelerators,
+//! arXiv 2107.09366) shows the payoff comes from choosing the
+//! approximation *per layer*. This module is that workload: a small
+//! int8-quantized CNN classifier with
+//!
+//! * a [`Layer`] graph (`Conv2d`/`Relu`/`MaxPool`/`Dense`) with int8
+//!   weights, i32-range accumulators, and requantize scales reusing
+//!   [`crate::apps::bdcn::requant`] (convolutions) and the shared
+//!   [`rshift_round`]`/`[`clip8`] helpers (dense layers);
+//! * a seeded, checked-in weight set ([`Network::seeded`]) and a tiny
+//!   deterministic eval batch ([`eval_batch`]) — both mirrored
+//!   bit-for-bit by `python/compile/kernels/cnn_goldens.py`;
+//! * an [`InferPlan`] assigning each GEMM-bearing layer its own design
+//!   point `(family, k)` or a per-layer [`AccuracySlo`] resolved through
+//!   the zoo router ([`zoo::route`]) — the default plan keeps the first
+//!   and last layers exact and approximates the middle
+//!   ([`InferPlan::mixed_default`]).
+//!
+//! Every convolution lowers through the shared [`im2col`] pass onto the
+//! GEMM path. [`Network::forward`] stacks the whole batch's patch
+//! matrices row-wise into **one** GEMM per layer, so the batch shares a
+//! single weight B panel and consecutive batch tiles coalesce in the
+//! coordinator's worker pool (asserted against
+//! `ServiceStats::coalesced_calls` in `tests/nn_infer.rs`). The serving
+//! entrypoint is [`crate::coordinator::Coordinator::serve_nn`], which
+//! threads per-layer metered energy into [`NnStats`]; `axsys infer` and
+//! `axsys nn-report` (→ `NN_report.json`) expose it on the CLI.
+
+use std::sync::OnceLock;
+
+use crate::apps::bdcn::{requant, Tensor};
+use crate::apps::im2col::{im2col, out_dims};
+use crate::apps::image::{psnr, scene, texture, Image};
+use crate::apps::{clip8, rshift_round, Gemm, WordGemm};
+use crate::bench::XorShift;
+use crate::pe::word::PeConfig;
+use crate::zoo::{self, AccuracySlo, DesignEntry, RouteError, ZOO_N_BITS};
+use crate::Family;
+
+/// Network input is a fixed `INPUT_SIDE x INPUT_SIDE` grayscale image
+/// (larger/smaller wire images are nearest-resampled by [`input_from`]).
+pub const INPUT_SIDE: usize = 16;
+
+/// Number of output classes (logits per image).
+pub const N_CLASSES: usize = 10;
+
+/// One node of the quantized network graph.
+///
+/// All activations are int8-range `i64` values; GEMM accumulators stay
+/// in the i32 range (the widest layer sums 72 products of
+/// `[0,127] x [-64,63]`, far inside the blocked engines' W=24
+/// carry-save accumulator).
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// Strided 2-D convolution, lowered to GEMM via [`im2col`]. The
+    /// accumulators requantize through [`requant`]`(·, shift)` — the
+    /// bdcn idiom, which fuses the ReLU clamp into the int8 scale
+    /// (`[0, 127]` activations).
+    Conv2d {
+        /// Stable layer name (stats keys, report rows).
+        name: &'static str,
+        /// HWIO weight tensor `(kh, kw, cin, cout)`, int8 values.
+        w: Tensor,
+        /// Output-grid stride (≥ 1).
+        stride: usize,
+        /// SAME zero padding when true, VALID when false.
+        pad: bool,
+        /// Right-shift requantization scale.
+        shift: u32,
+    },
+    /// Standalone `max(0, x)` — used after a dense layer whose requant
+    /// keeps the full signed int8 range.
+    Relu,
+    /// VALID max-pooling over a `k x k` window (unfolded through the
+    /// same strided [`im2col`] pass the convolutions use).
+    MaxPool {
+        /// Window side.
+        k: usize,
+        /// Window stride.
+        stride: usize,
+    },
+    /// Fully-connected layer on the flattened `(y, x, c)` activation.
+    /// Requantizes symmetrically ([`rshift_round`] + [`clip8`]), so
+    /// logits keep their sign.
+    Dense {
+        /// Stable layer name (stats keys, report rows).
+        name: &'static str,
+        /// Row-major `(d_in, d_out)` weight matrix, int8 values.
+        w: Vec<i64>,
+        /// Input features.
+        d_in: usize,
+        /// Output features.
+        d_out: usize,
+        /// Right-shift requantization scale.
+        shift: u32,
+    },
+}
+
+/// The quantized network: an ordered [`Layer`] graph.
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+/// Deterministic int8 weights from the shared xorshift stream
+/// (`python/compile/kernels/cnn_goldens.py` mirrors this exactly).
+/// Range `[-64, 63]` keeps deep-layer accumulators comfortably inside
+/// the requant scales.
+fn seeded_weights(seed: u64, len: usize) -> Vec<i64> {
+    let mut x = XorShift::new(seed);
+    (0..len).map(|_| (x.next_u64() & 127) as i64 - 64).collect()
+}
+
+impl Network {
+    /// The checked-in classifier: 16x16x1 input → 10 logits.
+    ///
+    /// ```text
+    /// conv1  3x3  1→4  SAME  s1 shift7   (GEMM 256B x 9 x 4)
+    /// pool   2x2 VALID s2               → 8x8x4
+    /// conv2  3x3  4→8  SAME  s2 shift7   (GEMM 16B x 36 x 8) → 4x4x8
+    /// conv3  3x3  8→8  VALID s1 shift7   (GEMM 4B  x 72 x 8) → 2x2x8
+    /// dense1 32→16 shift6 + relu         (GEMM B x 32 x 16)
+    /// dense2 16→10 shift8                (GEMM B x 16 x 10) → logits
+    /// ```
+    ///
+    /// Weight seeds are fixed and layer-distinct; the same seeds drive
+    /// the Python oracle, so every weight is cross-language pinned.
+    pub fn seeded() -> Network {
+        Network {
+            layers: vec![
+                Layer::Conv2d {
+                    name: "conv1",
+                    w: Tensor { shape: [3, 3, 1, 4],
+                                data: seeded_weights(0xD1CE01, 36) },
+                    stride: 1,
+                    pad: true,
+                    shift: 7,
+                },
+                Layer::MaxPool { k: 2, stride: 2 },
+                Layer::Conv2d {
+                    name: "conv2",
+                    w: Tensor { shape: [3, 3, 4, 8],
+                                data: seeded_weights(0xD1CE11, 288) },
+                    stride: 2,
+                    pad: true,
+                    shift: 7,
+                },
+                Layer::Conv2d {
+                    name: "conv3",
+                    w: Tensor { shape: [3, 3, 8, 8],
+                                data: seeded_weights(0xD1CE21, 576) },
+                    stride: 1,
+                    pad: false,
+                    shift: 7,
+                },
+                Layer::Dense {
+                    name: "dense1",
+                    w: seeded_weights(0xD1CE31, 512),
+                    d_in: 32,
+                    d_out: 16,
+                    shift: 6,
+                },
+                Layer::Relu,
+                // shift 8 keeps the logits off the int8 rails for the
+                // seeded weights (saturated logits would blunt the
+                // PSNR/top-1 quality metrics)
+                Layer::Dense {
+                    name: "dense2",
+                    w: seeded_weights(0xD1CE41, 160),
+                    d_in: 16,
+                    d_out: N_CLASSES,
+                    shift: 8,
+                },
+            ],
+        }
+    }
+
+    /// Names of the GEMM-bearing layers, in execution order — the slots
+    /// an [`InferPlan`] assigns design points to.
+    pub fn gemm_layer_names(&self) -> Vec<&'static str> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv2d { name, .. } | Layer::Dense { name, .. } => {
+                    Some(*name)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of GEMM-bearing layers (= [`InferPlan`] slots).
+    pub fn n_gemm_layers(&self) -> usize {
+        self.gemm_layer_names().len()
+    }
+
+    /// Run the batch through the graph. `exec(slot, a, b, m, kk, nn)`
+    /// computes each layer's GEMM (`slot` is the GEMM-bearing layer
+    /// index) — plug in per-layer [`WordGemm`]s for the single-threaded
+    /// reference or per-layer `CoordinatorGemm`s for the served path;
+    /// both see identical operands, so the serving tiler is the only
+    /// thing between them (and it cannot change the bits).
+    ///
+    /// The whole batch goes through **one** `exec` call per layer: the
+    /// patch matrices are stacked row-wise (`m = batch * out_pixels`)
+    /// against the layer's single weight matrix `b`, which is what lets
+    /// the coordinator share one B panel across the batch and coalesce
+    /// consecutive batch tiles.
+    ///
+    /// Returns the flattened logits, `batch * N_CLASSES` values.
+    pub fn forward(
+        &self,
+        batch: &[Image],
+        exec: &mut dyn FnMut(usize, &[i64], &[i64], usize, usize, usize)
+            -> Vec<i64>,
+    ) -> Vec<i64> {
+        assert!(!batch.is_empty(), "empty inference batch");
+        let mut xs: Vec<Vec<i64>> = batch.iter().map(input_from).collect();
+        let (mut h, mut w, mut c) = (INPUT_SIDE, INPUT_SIDE, 1usize);
+        let mut slot = 0usize;
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv2d { w: wq, stride, pad, shift, .. } => {
+                    let [kh, kw, cin, cout] = wq.shape;
+                    assert_eq!(cin, c, "channel mismatch entering conv");
+                    let (oh, ow) = out_dims(h, w, kh, kw, *stride, *pad);
+                    let feat = kh * kw * cin;
+                    let mut a =
+                        Vec::with_capacity(batch.len() * oh * ow * feat);
+                    for x in &xs {
+                        a.extend(im2col(x, h, w, cin, kh, kw, *stride, *pad));
+                    }
+                    let m = batch.len() * oh * ow;
+                    let y = exec(slot, &a, &wq.data, m, feat, cout);
+                    assert_eq!(y.len(), m * cout, "conv GEMM output shape");
+                    slot += 1;
+                    let per = oh * ow * cout;
+                    xs = (0..batch.len())
+                        .map(|b| {
+                            y[b * per..(b + 1) * per]
+                                .iter()
+                                .map(|&v| requant(v, *shift))
+                                .collect()
+                        })
+                        .collect();
+                    h = oh;
+                    w = ow;
+                    c = cout;
+                }
+                Layer::MaxPool { k, stride } => {
+                    xs = xs
+                        .iter()
+                        .map(|x| maxpool(x, h, w, c, *k, *stride))
+                        .collect();
+                    let (oh, ow) = out_dims(h, w, *k, *k, *stride, false);
+                    h = oh;
+                    w = ow;
+                }
+                Layer::Dense { w: wd, d_in, d_out, shift, .. } => {
+                    let mut a = Vec::with_capacity(batch.len() * d_in);
+                    for x in &xs {
+                        assert_eq!(x.len(), *d_in, "flatten size into dense");
+                        a.extend(x);
+                    }
+                    let y = exec(slot, &a, wd, batch.len(), *d_in, *d_out);
+                    assert_eq!(y.len(), batch.len() * d_out,
+                               "dense GEMM output shape");
+                    slot += 1;
+                    xs = (0..batch.len())
+                        .map(|b| {
+                            y[b * d_out..(b + 1) * d_out]
+                                .iter()
+                                .map(|&v| clip8(rshift_round(v, *shift)))
+                                .collect()
+                        })
+                        .collect();
+                }
+                Layer::Relu => {
+                    for x in xs.iter_mut() {
+                        for v in x.iter_mut() {
+                            *v = (*v).max(0);
+                        }
+                    }
+                }
+            }
+        }
+        let logits = xs.concat();
+        assert_eq!(logits.len(), batch.len() * N_CLASSES,
+                   "graph must end in {N_CLASSES} logits per image");
+        logits
+    }
+}
+
+/// The process-wide default network (seeded weights are deterministic,
+/// so every pool and every server sees identical parameters).
+pub fn default_network() -> &'static Network {
+    static NET: OnceLock<Network> = OnceLock::new();
+    NET.get_or_init(Network::seeded)
+}
+
+/// Center a grayscale image to `[-128, 127]` on the fixed
+/// `INPUT_SIDE x INPUT_SIDE` grid. Exact-size images pass through
+/// unchanged (the oracle path); other sizes are nearest-neighbour
+/// resampled so any wire image is servable.
+pub fn input_from(img: &Image) -> Vec<i64> {
+    assert!(img.h > 0 && img.w > 0, "empty input image");
+    let s = INPUT_SIDE;
+    if img.h == s && img.w == s {
+        return img.data.iter().map(|&v| v as i64 - 128).collect();
+    }
+    (0..s * s)
+        .map(|i| {
+            let (y, x) = (i / s, i % s);
+            img.data[(y * img.h / s) * img.w + x * img.w / s] as i64 - 128
+        })
+        .collect()
+}
+
+/// The deterministic eval batch: one structured scene plus seeded
+/// textures, all at the network's input size. Mirrored by the Python
+/// oracle for the cross-language goldens.
+pub fn eval_batch(n: usize) -> Vec<Image> {
+    (0..n)
+        .map(|i| {
+            if i == 0 {
+                scene(INPUT_SIDE, INPUT_SIDE)
+            } else {
+                texture(INPUT_SIDE, INPUT_SIDE, 0x5EED0 + i as u64)
+            }
+        })
+        .collect()
+}
+
+/// VALID max-pooling via the strided [`im2col`] unfold: per output
+/// pixel, the channel-wise max over the window taps.
+pub fn maxpool(x: &[i64], h: usize, w: usize, cin: usize, k: usize,
+               stride: usize) -> Vec<i64> {
+    let mat = im2col(x, h, w, cin, k, k, stride, false);
+    let (oh, ow) = out_dims(h, w, k, k, stride, false);
+    let taps = k * k;
+    let feat = taps * cin;
+    let mut out = vec![0i64; oh * ow * cin];
+    for p in 0..oh * ow {
+        for c in 0..cin {
+            out[p * cin + c] = (0..taps)
+                .map(|t| mat[p * feat + t * cin + c])
+                .max()
+                .unwrap();
+        }
+    }
+    out
+}
+
+/// Per-layer approximation assignment for one GEMM-bearing layer.
+#[derive(Clone, Debug)]
+pub enum LayerPlan {
+    /// Bit-exact arithmetic (`k = 0`, family-independent).
+    Exact,
+    /// A pinned design point; `family = None` keeps the serving pool's
+    /// configured family.
+    Point {
+        /// Multiplier family (`None` = pool default).
+        family: Option<Family>,
+        /// Approximation level.
+        k: u32,
+    },
+    /// Route this layer through the zoo: the cheapest registered design
+    /// point satisfying the SLO runs the layer (typed refusal when
+    /// unsatisfiable — a layer is never silently served degraded).
+    Slo(AccuracySlo),
+}
+
+/// A full inference plan: one [`LayerPlan`] per GEMM-bearing layer, in
+/// execution order.
+#[derive(Clone, Debug)]
+pub struct InferPlan {
+    /// Human-readable plan label (report rows, stats).
+    pub name: String,
+    /// Per-GEMM-layer assignments (`len == Network::n_gemm_layers`).
+    pub layers: Vec<LayerPlan>,
+}
+
+/// The default mixed plan's middle-layer approximation levels, cycled
+/// over the interior layers (proposed family). Graded: the layer right
+/// after the exact stem is the most conservative, the deepest interior
+/// conv the most aggressive — approximation error injected early passes
+/// through every later layer, so tolerance grows with depth.
+pub const MIXED_KS: [u32; 3] = [4, 6, 5];
+
+impl InferPlan {
+    /// Every layer bit-exact (the reference row of `nn-report`).
+    pub fn exact(n: usize) -> InferPlan {
+        InferPlan { name: "exact".into(), layers: vec![LayerPlan::Exact; n] }
+    }
+
+    /// Every layer at the same design point (`family = None` keeps the
+    /// pool's family) — the "uniform-k" rows of `nn-report`.
+    pub fn uniform(family: Option<Family>, k: u32, n: usize) -> InferPlan {
+        let name = match family {
+            Some(f) => format!("uniform {}/k{k}", f.name()),
+            None => format!("uniform k{k}"),
+        };
+        InferPlan {
+            name,
+            layers: vec![LayerPlan::Point { family, k }; n],
+        }
+    }
+
+    /// First and last layers exact, interior at level `k` on the pool's
+    /// family — the wire semantics of an `AppKind::Nn` request carrying
+    /// a plain `k` (the bdcn hybrid idiom generalized). `k = 0` is the
+    /// exact plan.
+    pub fn hybrid_k(k: u32, n: usize) -> InferPlan {
+        let mut p = InferPlan::exact(n);
+        p.name = format!("hybrid k{k}");
+        if k > 0 {
+            for lp in p.layers.iter_mut().take(n.saturating_sub(1)).skip(1) {
+                *lp = LayerPlan::Point { family: None, k };
+            }
+        }
+        p
+    }
+
+    /// The default served plan: exact first/last, interior layers on
+    /// pinned proposed-family points cycling [`MIXED_KS`]. Pinned (not
+    /// SLO-routed) so the Python oracle can mirror it literally.
+    pub fn mixed_default(n: usize) -> InferPlan {
+        let mut p = InferPlan::exact(n);
+        p.name = "mixed".into();
+        for (i, lp) in
+            p.layers.iter_mut().enumerate().take(n.saturating_sub(1)).skip(1)
+        {
+            *lp = LayerPlan::Point {
+                family: Some(Family::Proposed),
+                k: MIXED_KS[(i - 1) % MIXED_KS.len()],
+            };
+        }
+        p
+    }
+
+    /// Exact first/last with every interior layer routed through the
+    /// zoo at `slo` — the wire semantics of an `AppKind::Nn` request
+    /// carrying an accuracy SLO.
+    pub fn slo_mixed(slo: AccuracySlo, n: usize) -> InferPlan {
+        let mut p = InferPlan::exact(n);
+        p.name = format!("mixed slo {slo}");
+        for lp in p.layers.iter_mut().take(n.saturating_sub(1)).skip(1) {
+            *lp = LayerPlan::Slo(slo);
+        }
+        p
+    }
+
+    /// Resolve every slot to a concrete `(family, k)` design point,
+    /// routing SLO slots through `route` (the coordinator passes its
+    /// counted `route_slo`; [`Self::resolve`] uses the bare zoo router).
+    /// `family = None` means "pool default" and is exact-equivalent
+    /// when `k = 0`.
+    pub fn resolve_with(
+        &self,
+        route: &mut dyn FnMut(&AccuracySlo)
+            -> Result<&'static DesignEntry, RouteError>,
+    ) -> Result<Vec<(Option<Family>, u32)>, RouteError> {
+        self.layers
+            .iter()
+            .map(|lp| match lp {
+                LayerPlan::Exact => Ok((None, 0)),
+                LayerPlan::Point { family, k } => Ok((*family, *k)),
+                LayerPlan::Slo(s) => {
+                    route(s).map(|e| (Some(e.design.family), e.design.k))
+                }
+            })
+            .collect()
+    }
+
+    /// [`Self::resolve_with`] against the process-wide zoo registry
+    /// (8-bit signed — the network's operand shape).
+    pub fn resolve(
+        &self,
+    ) -> Result<Vec<(Option<Family>, u32)>, RouteError> {
+        self.resolve_with(&mut |s| zoo::route(ZOO_N_BITS, true, s))
+    }
+}
+
+/// Run the single-threaded reference: one [`WordGemm`] per GEMM-bearing
+/// layer at the resolved design points (`default_family` substitutes
+/// for `None` slots — pass the serving pool's configured family for
+/// differential tests). The served path must be bit-identical to this.
+pub fn reference_logits(net: &Network, batch: &[Image],
+                        points: &[(Option<Family>, u32)],
+                        default_family: Family) -> Vec<i64> {
+    assert_eq!(points.len(), net.n_gemm_layers(), "plan/network mismatch");
+    let mut gs: Vec<WordGemm> = points
+        .iter()
+        .map(|&(f, k)| WordGemm {
+            cfg: PeConfig::new(ZOO_N_BITS, true, f.unwrap_or(default_family),
+                               k),
+        })
+        .collect();
+    net.forward(batch,
+                &mut |slot, a, b, m, kk, nn| gs[slot].gemm(a, b, m, kk, nn))
+}
+
+/// Render a logits vector as a `batch x N_CLASSES` u8 image (logit +
+/// 128; lossless for int8 logits) — the `out` payload of a served
+/// [`crate::coordinator::AppResponse`], so inference rides the existing
+/// application wire frames unchanged.
+pub fn logits_image(logits: &[i64], batch: usize) -> Image {
+    assert_eq!(logits.len(), batch * N_CLASSES);
+    let mut img = Image::new(batch, N_CLASSES);
+    for (o, &v) in img.data.iter_mut().zip(logits.iter()) {
+        *o = (v + 128).clamp(0, 255) as u8;
+    }
+    img
+}
+
+/// Index of the first maximal logit of one row (ties break low — the
+/// numpy `argmax` convention the oracle shares).
+pub fn top1_of(row: &[i64]) -> usize {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Output quality of `logits` against the exact reference: PSNR over
+/// the u8-mapped logit vectors (infinite when bit-identical) and the
+/// fraction of batch images whose top-1 class matches.
+pub fn quality(logits: &[i64], exact: &[i64]) -> (f64, f64) {
+    assert_eq!(logits.len(), exact.len());
+    let to_u8 = |l: &[i64]| -> Vec<u8> {
+        l.iter().map(|&v| (v + 128).clamp(0, 255) as u8).collect()
+    };
+    let p = psnr(&to_u8(exact), &to_u8(logits));
+    let n = logits.len() / N_CLASSES;
+    let hits = (0..n)
+        .filter(|&b| {
+            top1_of(&logits[b * N_CLASSES..(b + 1) * N_CLASSES])
+                == top1_of(&exact[b * N_CLASSES..(b + 1) * N_CLASSES])
+        })
+        .count();
+    (p, hits as f64 / n as f64)
+}
+
+/// Per-GEMM-layer serving record: the resolved design point, the
+/// layer's GEMM geometry, and its metered share of the network energy.
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    /// Layer name (`conv1` … `dense2`).
+    pub name: &'static str,
+    /// Resolved family override (`None` = pool default).
+    pub family: Option<Family>,
+    /// Resolved approximation level.
+    pub k: u32,
+    /// GEMM rows (batch * output pixels).
+    pub m: usize,
+    /// GEMM inner dimension (receptive-field features).
+    pub kk: usize,
+    /// GEMM columns (output channels / features).
+    pub nn: usize,
+    /// MACs executed for this layer.
+    pub macs: u64,
+    /// Metered data-dependent energy of this layer, femtojoules.
+    pub energy_fj: f64,
+    /// MACs covered by an energy meter (`== macs` when fully metered).
+    pub metered_macs: u64,
+}
+
+impl LayerStat {
+    /// Resolved design-point label (`exact`, `proposed/k6`, `pool/k4`).
+    pub fn point_label(&self) -> String {
+        match (self.family, self.k) {
+            (_, 0) => "exact".into(),
+            (Some(f), k) => format!("{}/k{k}", f.name()),
+            (None, k) => format!("pool/k{k}"),
+        }
+    }
+}
+
+/// Network-level result of one served inference batch: the logits, the
+/// per-layer energy breakdown, and output quality vs the exact
+/// reference (served through the same path).
+#[derive(Clone, Debug)]
+pub struct NnStats {
+    /// The plan that ran (its [`InferPlan::name`]).
+    pub plan: String,
+    /// Images in the batch.
+    pub batch: usize,
+    /// Per-GEMM-layer records, in execution order.
+    pub layers: Vec<LayerStat>,
+    /// Total metered energy of the plan's run, femtojoules. Computed by
+    /// folding the per-layer stats in order, so it equals the sum of
+    /// `layers[i].energy_fj` *exactly* (pinned in `tests/nn_infer.rs`).
+    pub total_energy_fj: f64,
+    /// Flattened logits (`batch * N_CLASSES`).
+    pub logits: Vec<i64>,
+    /// PSNR of the u8-mapped logits vs the exact reference (infinite
+    /// when the plan itself is exact).
+    pub logit_psnr_db: f64,
+    /// Fraction of the batch whose top-1 class matches the exact
+    /// reference (1.0 when exact).
+    pub top1_match: f64,
+}
+
+impl NnStats {
+    /// Total metered energy in microjoules.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.total_energy_fj * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact_exec(
+    ) -> impl FnMut(usize, &[i64], &[i64], usize, usize, usize) -> Vec<i64>
+    {
+        |_, a: &[i64], b: &[i64], m: usize, kk: usize, nn: usize| {
+            let mut y = vec![0i64; m * nn];
+            for i in 0..m {
+                for j in 0..nn {
+                    y[i * nn + j] = (0..kk)
+                        .map(|t| a[i * kk + t] * b[t * nn + j])
+                        .sum();
+                }
+            }
+            y
+        }
+    }
+
+    #[test]
+    fn seeded_network_is_deterministic_and_shaped() {
+        let n1 = Network::seeded();
+        let n2 = Network::seeded();
+        assert_eq!(n1.n_gemm_layers(), 5);
+        assert_eq!(n1.gemm_layer_names(),
+                   ["conv1", "conv2", "conv3", "dense1", "dense2"]);
+        for (a, b) in n1.layers.iter().zip(n2.layers.iter()) {
+            match (a, b) {
+                (Layer::Conv2d { w: wa, .. }, Layer::Conv2d { w: wb, .. }) => {
+                    assert_eq!(wa.data, wb.data);
+                    assert!(wa.data.iter().all(|&v| (-64..=63).contains(&v)));
+                }
+                (Layer::Dense { w: wa, .. }, Layer::Dense { w: wb, .. }) => {
+                    assert_eq!(wa, wb);
+                }
+                _ => {}
+            }
+        }
+        // layer seeds are distinct: conv1 and conv2 streams differ
+        let (w1, w2) = (seeded_weights(0xD1CE01, 36),
+                        seeded_weights(0xD1CE11, 36));
+        assert_ne!(w1, w2);
+    }
+
+    #[test]
+    fn forward_reaches_logits_with_exact_math() {
+        let net = Network::seeded();
+        let batch = eval_batch(2);
+        let logits = net.forward(&batch, &mut exact_exec());
+        assert_eq!(logits.len(), 2 * N_CLASSES);
+        assert!(logits.iter().all(|&v| (-128..=127).contains(&v)),
+                "dense2 requant must clip logits to int8: {logits:?}");
+        // exact plan through the word backend gives the same bits
+        let pts = InferPlan::exact(net.n_gemm_layers()).resolve().unwrap();
+        let r = reference_logits(&net, &batch, &pts, Family::Proposed);
+        assert_eq!(logits, r, "word model at k=0 must equal plain matmul");
+    }
+
+    #[test]
+    fn maxpool_picks_the_channelwise_window_max() {
+        // 2 channels, 4x4 -> 2x2 with 2x2/s2 windows
+        let mut x = vec![0i64; 4 * 4 * 2];
+        // channel 0: value = linear index; channel 1: negated
+        for y in 0..4 {
+            for xx in 0..4 {
+                x[(y * 4 + xx) * 2] = (y * 4 + xx) as i64;
+                x[(y * 4 + xx) * 2 + 1] = -((y * 4 + xx) as i64);
+            }
+        }
+        let p = maxpool(&x, 4, 4, 2, 2, 2);
+        assert_eq!(p.len(), 2 * 2 * 2);
+        // window (0,0) covers indices {0,1,4,5}: max 5 (c0), 0 (c1)
+        assert_eq!(&p[0..2], &[5, 0]);
+        // window (1,1) covers {10,11,14,15}: max 15 (c0), -10 (c1)
+        assert_eq!(&p[6..8], &[15, -10]);
+    }
+
+    #[test]
+    fn input_from_centers_and_resamples() {
+        let exact = scene(INPUT_SIDE, INPUT_SIDE);
+        let x = input_from(&exact);
+        assert_eq!(x.len(), INPUT_SIDE * INPUT_SIDE);
+        assert_eq!(x[0], exact.data[0] as i64 - 128);
+        // a larger image resamples deterministically onto the grid
+        let big = scene(64, 64);
+        let xb = input_from(&big);
+        assert_eq!(xb.len(), INPUT_SIDE * INPUT_SIDE);
+        assert_eq!(xb[0], big.data[0] as i64 - 128); // (0,0) maps to (0,0)
+        assert_eq!(xb[1], big.data[4] as i64 - 128); // x=1 -> src x=4
+    }
+
+    #[test]
+    fn plans_resolve_as_documented() {
+        let n = 5;
+        let exact = InferPlan::exact(n).resolve().unwrap();
+        assert!(exact.iter().all(|&(f, k)| f.is_none() && k == 0));
+
+        let hy = InferPlan::hybrid_k(6, n).resolve().unwrap();
+        assert_eq!(hy[0], (None, 0));
+        assert_eq!(hy[n - 1], (None, 0));
+        assert!(hy[1..n - 1].iter().all(|&(f, k)| f.is_none() && k == 6));
+        // k = 0 hybrid is the exact plan
+        let hy0 = InferPlan::hybrid_k(0, n).resolve().unwrap();
+        assert!(hy0.iter().all(|&(_, k)| k == 0));
+
+        let mx = InferPlan::mixed_default(n).resolve().unwrap();
+        assert_eq!(mx[0], (None, 0));
+        assert_eq!(mx[n - 1], (None, 0));
+        assert_eq!(mx[1], (Some(Family::Proposed), MIXED_KS[0]));
+        assert_eq!(mx[2], (Some(Family::Proposed), MIXED_KS[1]));
+        assert_eq!(mx[3], (Some(Family::Proposed), MIXED_KS[2]));
+
+        // SLO slots route through the zoo and honour the bound
+        let slo = AccuracySlo { max_nmed: Some(2.5e-3), min_psnr_db: None };
+        let sm = InferPlan::slo_mixed(slo, n).resolve().unwrap();
+        assert_eq!(sm[0], (None, 0));
+        for &(f, k) in &sm[1..n - 1] {
+            let e = zoo::registry()
+                .iter()
+                .find(|e| Some(e.design.family) == f && e.design.k == k)
+                .expect("routed point is registered");
+            assert!(e.nmed <= 2.5e-3, "routed point violates the SLO");
+        }
+        // an unsatisfiable per-layer SLO is a typed refusal
+        let bad = AccuracySlo { max_nmed: None, min_psnr_db: Some(1e6) };
+        assert!(InferPlan::slo_mixed(bad, n).resolve().is_err());
+    }
+
+    #[test]
+    fn top1_breaks_ties_low_and_quality_is_exactly_one_for_identical() {
+        assert_eq!(top1_of(&[3, 7, 7, 1]), 1);
+        assert_eq!(top1_of(&[-5, -5, -5]), 0);
+        let l = vec![1i64; 2 * N_CLASSES];
+        let (p, t) = quality(&l, &l);
+        assert!(p.is_infinite());
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn logits_image_round_trips_int8_logits() {
+        let logits: Vec<i64> = (0..N_CLASSES as i64)
+            .map(|v| v * 20 - 100)
+            .collect();
+        let img = logits_image(&logits, 1);
+        assert_eq!((img.h, img.w), (1, N_CLASSES));
+        let back: Vec<i64> =
+            img.data.iter().map(|&v| v as i64 - 128).collect();
+        assert_eq!(back, logits);
+    }
+}

@@ -447,6 +447,13 @@ pub fn report_json() -> Json {
         .set("n_bits", Json::Int(ZOO_N_BITS as i64))
         .set("signed", Json::Bool(true))
         .set("psnr_scene_side", Json::Int(PSNR_SIDE as i64))
+        // per-MAC columns rank single design points; for *per-layer*
+        // mixed plans on conv traffic the network-level report is
+        // authoritative (`axsys nn-report` -> NN_report.json), so the
+        // two artifacts never silently disagree about "cheapest"
+        .set("see_also",
+             Json::Str("NN_report.json (nn-report: network-level \
+                        per-layer mixed-plan energy/accuracy)".into()))
         .set("entries", Json::Arr(entries))
         .set("tiers", Json::Arr(tiers))
 }
